@@ -1,0 +1,59 @@
+//! Quickstart: generate a tiny corpus, run the full preprocessing
+//! pipeline with hybrid placement, and train a small CNN for a handful of
+//! steps — the 60-second tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` to have produced artifacts/.)
+
+use dpp::config::{Method, Placement, RunConfig};
+use dpp::coordinator;
+use dpp::dataset::GenConfig;
+
+fn main() -> anyhow::Result<()> {
+    let data_dir = std::env::temp_dir().join("dpp-quickstart");
+
+    // 1. Offline phase: synthesize a labeled corpus and pack record shards
+    //    (the paper's Fig. 1 offline steps).
+    let layout = coordinator::prepare_data(
+        &data_dir,
+        &GenConfig { n_images: 128, ..Default::default() },
+        2,
+    )?;
+    println!(
+        "corpus: {} images in {} record shards",
+        layout.entries.len(),
+        layout.shards.len()
+    );
+
+    // 2. Online phase: record-file loading, hybrid placement (CPU entropy
+    //    decode -> accelerator dequant+IDCT+augment), then train.
+    let cfg = RunConfig {
+        data_dir,
+        artifact_dir: "artifacts".into(),
+        method: Method::Record,
+        placement: Placement::Hybrid,
+        model: "resnet_t".into(),
+        batch_size: 8,
+        cpu_workers: 2,
+        steps: 10,
+        lr: 0.2,
+        ..Default::default()
+    };
+    let report = coordinator::run(&cfg)?;
+    report.print_summary("quickstart");
+
+    let first = report.losses.first().expect("losses recorded").1;
+    let last = report.losses.last().unwrap().1;
+    println!("loss: {first:.3} -> {last:.3} over {} steps", report.steps);
+
+    // 3. The same scenario at the paper's scale, via the simulator.
+    let scen = dpp::sim::Scenario {
+        model: "resnet50".into(),
+        ..Default::default()
+    };
+    println!(
+        "paper-scale sim (resnet50 record-hybrid, 8xV100): {:.0} img/s",
+        dpp::sim::analytic_throughput(&scen)
+    );
+    Ok(())
+}

@@ -1,0 +1,190 @@
+"""AOT compiler: lower every L2 graph to HLO TEXT + manifest for the rust runtime.
+
+Run once at build time (`make artifacts`); python is never on the request
+path.  Interchange format is HLO *text*, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (in --out, default ../artifacts):
+  <name>.hlo.txt          one per artifact (see ARTIFACTS below)
+  params_<model>.bin      initial parameters, raw little-endian f32 in
+                          flatten order (jax.tree_util.tree_leaves)
+  manifest.json           arg/output specs per artifact + param schemas
+
+Usage:  cd python && python -m compile.aot [--out DIR] [--only NAME_PREFIX]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH_MAIN = 32
+BATCH_TEST = 8
+PARAM_SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big constants as `constant({...})`, which the XLA 0.5.1 text
+    # parser silently reads back as ZEROS (e.g. the 8x8 DCT matrices in
+    # the decode kernel) — caught by rust/tests/artifact_parity.rs.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _leaf_paths(params):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    names = []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path).replace("'", "").strip("[]").replace("][", "."))
+    return names, [leaf for _, leaf in flat]
+
+
+def build_artifacts():
+    """Return {name: (fn, arg_specs, arg_names)} plus model param schemas."""
+    arts = {}
+    models = {}
+
+    for b in (BATCH_TEST, BATCH_MAIN):
+        coefs = _sds((b, 3, 8, 8, 8, 8))
+        q = _sds((8, 8))
+        imgs = _sds((b, 3, M.IMG_HW, M.IMG_HW))
+        aug = _sds((b, 6))
+        arts[f"decode_b{b}"] = (
+            lambda c, qt: (M.decode_batch(c, qt),),
+            [coefs, q],
+            ["coefs", "qtable"],
+        )
+        arts[f"augment_b{b}"] = (
+            lambda i, a: (M.augment_batch(i, a),),
+            [imgs, aug],
+            ["images", "aug_params"],
+        )
+        arts[f"fused_pre_b{b}"] = (
+            lambda c, qt, a: (M.fused_preprocess(c, qt, a),),
+            [coefs, q, aug],
+            ["coefs", "qtable", "aug_params"],
+        )
+
+    key = jax.random.PRNGKey(PARAM_SEED)
+    for mi, (mname, (init_fn, apply_fn)) in enumerate(sorted(M.MODELS.items())):
+        params = init_fn(jax.random.fold_in(key, mi))
+        names, leaves = _leaf_paths(params)
+        treedef = jax.tree_util.tree_structure(params)
+        models[mname] = {"params": params, "names": names, "treedef": treedef}
+
+        step = M.make_train_step(apply_fn)
+        nleaf = len(leaves)
+
+        def train_flat(*args, _treedef=treedef, _n=nleaf, _step=step):
+            p = jax.tree_util.tree_unflatten(_treedef, args[:_n])
+            images, labels, lr = args[_n], args[_n + 1], args[_n + 2]
+            loss, newp = _step(p, images, labels, lr)
+            return (loss, *jax.tree_util.tree_leaves(newp))
+
+        def predict_flat(*args, _treedef=treedef, _n=nleaf, _apply=apply_fn):
+            p = jax.tree_util.tree_unflatten(_treedef, args[:_n])
+            return (_apply(p, args[_n]),)
+
+        leaf_specs = [_sds(l.shape) for l in leaves]
+        batches = (BATCH_MAIN, BATCH_TEST) if mname == "resnet_t" else (BATCH_MAIN,)
+        for b in batches:
+            x = _sds((b, 3, M.OUT_HW, M.OUT_HW))
+            y = _sds((b,), jnp.int32)
+            lr = _sds((), jnp.float32)
+            arts[f"train_{mname}_b{b}"] = (
+                train_flat,
+                leaf_specs + [x, y, lr],
+                names + ["images", "labels", "lr"],
+            )
+        xm = _sds((BATCH_MAIN, 3, M.OUT_HW, M.OUT_HW))
+        arts[f"predict_{mname}_b{BATCH_MAIN}"] = (
+            predict_flat,
+            leaf_specs + [xm],
+            names + ["images"],
+        )
+
+    return arts, models
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="prefix filter for artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts, models = build_artifacts()
+    manifest = {"format": 1, "batch_main": BATCH_MAIN, "batch_test": BATCH_TEST,
+                "img_hw": M.IMG_HW, "out_hw": M.OUT_HW, "num_classes": M.NUM_CLASSES,
+                "param_seed": PARAM_SEED, "artifacts": {}, "models": {}}
+
+    for name, (fn, specs, argnames) in sorted(arts.items()):
+        if args.only and not name.startswith(args.only):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = [_spec(o.shape, "f32" if o.dtype == jnp.float32 else str(o.dtype))
+                     for o in jax.eval_shape(fn, *specs)]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [{"name": n, **_spec(s.shape,
+                      "i32" if s.dtype == jnp.int32 else "f32")}
+                     for n, s in zip(argnames, specs)],
+            "outs": out_specs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  lowered {name}: {len(text)} chars")
+
+    for mname, info in sorted(models.items()):
+        leaves = jax.tree_util.tree_leaves(info["params"])
+        blob = b"".join(np.asarray(l, np.float32).tobytes() for l in leaves)
+        pfile = f"params_{mname}.bin"
+        with open(os.path.join(args.out, pfile), "wb") as f:
+            f.write(blob)
+        off = 0
+        schema = []
+        for n, l in zip(info["names"], leaves):
+            size = int(np.prod(l.shape)) * 4
+            schema.append({"name": n, "shape": list(l.shape), "offset": off, "bytes": size})
+            off += size
+        manifest["models"][mname] = {
+            "param_file": pfile,
+            "param_count": M.param_count(info["params"]),
+            "leaves": schema,
+        }
+        print(f"  params {mname}: {off} bytes, {M.param_count(info['params'])} params")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused augmentation (crop + flip + bilinear resize + normalize).
+
+Fig. 3 of the paper shows crop/resize/flip/normalize together cost ~47% of
+per-image preprocessing (everything except decode and read).  DALI fuses
+them into one GPU stage; we fuse them into one Pallas kernel so the whole
+augmentation is a single VMEM-resident pass per image.
+
+Layout: grid over the batch dimension; each grid step holds one [C,H,W]
+image in VMEM (64x64x3 f32 = 48 KiB) plus its [6] parameter row, and writes
+a [C,OH,OW] normalized tile.  Sampling coordinates are computed in-kernel
+from the parameter row (y0, x0, crop_h, crop_w, flip); randomness lives in
+the *coordinator* (rust samples the crop/flip), which keeps the compiled
+artifact deterministic -- the same trick DALI uses for reproducible runs.
+
+interpret=True: see kernels/dct.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _augment_kernel(img_ref, par_ref, norm_ref, out_ref, *, out_hw):
+    img = img_ref[...][0]  # [C, H, W]
+    par = par_ref[...][0]  # [6]
+    norm = norm_ref[...]  # [2, C] = (mean; std)
+    c, h, w = img.shape
+    oh, ow = out_hw
+    y0, x0, ch_, cw_, flip = par[0], par[1], par[2], par[3], par[4]
+
+    iy = (jnp.arange(oh, dtype=img.dtype) + 0.5) * ch_ / oh - 0.5
+    ix = (jnp.arange(ow, dtype=img.dtype) + 0.5) * cw_ / ow - 0.5
+    ix = jnp.where(flip > 0.5, (cw_ - 1.0) - ix, ix)
+    # Clamp inside the crop window (no bleed), then into the image.
+    sy = jnp.clip(jnp.clip(iy, 0.0, ch_ - 1.0) + y0, 0.0, h - 1.0)
+    sx = jnp.clip(jnp.clip(ix, 0.0, cw_ - 1.0) + x0, 0.0, w - 1.0)
+
+    y0i = jnp.floor(sy).astype(jnp.int32)
+    x0i = jnp.floor(sx).astype(jnp.int32)
+    y1i = jnp.minimum(y0i + 1, h - 1)
+    x1i = jnp.minimum(x0i + 1, w - 1)
+    wy = (sy - y0i.astype(img.dtype))[:, None]
+    wx = (sx - x0i.astype(img.dtype))[None, :]
+
+    # Bilinear gather: one flattened take per corner keeps this a dense
+    # vector op (VPU-friendly) instead of 4*OH*OW scalar loads.
+    flat = img.reshape(c, h * w)
+
+    def gather(yi, xi):
+        idx = (yi[:, None] * w + xi[None, :]).reshape(-1)  # [OH*OW]
+        g = jnp.take(flat, idx, axis=1)
+        return g.reshape(c, *out_hw)
+
+    v00 = gather(y0i, x0i)
+    v01 = gather(y0i, x1i)
+    v10 = gather(y1i, x0i)
+    v11 = gather(y1i, x1i)
+    top = v00 * (1 - wx) + v01 * wx
+    bot = v10 * (1 - wx) + v11 * wx
+    out = top * (1 - wy) + bot * wy
+
+    mean = norm[0][:, None, None]
+    std = norm[1][:, None, None]
+    out_ref[...] = ((out - mean) / std)[None]
+
+
+def augment_batch(imgs: jax.Array, params: jax.Array, out_hw=(56, 56)) -> jax.Array:
+    """Fused crop+flip+resize+normalize over a batch.
+
+    Args:
+      imgs: [B, C, H, W] float32 pixels in [0, 255].
+      params: [B, 6] float32 rows (y0, x0, crop_h, crop_w, flip, _pad),
+        sampled by the rust coordinator's RNG.
+      out_hw: static output spatial size.
+
+    Returns:
+      [B, C, OH, OW] float32, ImageNet-normalized.
+    """
+    b, c, h, w = imgs.shape
+    oh, ow = out_hw
+    kernel = functools.partial(_augment_kernel, out_hw=(oh, ow))
+    norm = jnp.stack(
+        [jnp.asarray(_ref.NORM_MEAN, imgs.dtype), jnp.asarray(_ref.NORM_STD, imgs.dtype)]
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 6), lambda i: (i, 0)),
+            pl.BlockSpec((2, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, oh, ow), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, oh, ow), imgs.dtype),
+        interpret=True,
+    )(imgs, params, norm)

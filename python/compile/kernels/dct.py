@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: MJX block decode = dequantize + 8x8 inverse DCT.
+
+This is the paper's "hybrid decode" hot spot (Fig. 3: image decoding is
+47.7% of per-image preprocessing time; DALI offloads it to the GPU).  The
+MJX codec (rust/src/codec) entropy-decodes on the CPU -- exactly like
+nvJPEG's CPU Huffman stage -- and ships *quantized coefficient blocks* to
+the accelerator, where this kernel performs dequant + IDCT.
+
+Hardware adaptation (paper targets CUDA threadblocks): the 8x8 IDCT is
+expressed as two batched 8x8 matmuls, X = C^T (F*Q) C, the MXU-friendly
+systolic-array form.  The grid streams BLOCK_N coefficient blocks per step
+through VMEM (BLOCK_N*8*8*4 B = 48 KiB at BLOCK_N=192, well under VMEM);
+the quant table is broadcast and stays resident.
+
+Pallas is lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls.  Structure (BlockSpec/grid) is still the TPU schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Number of 8x8 coefficient blocks processed per grid step.  One 64x64 RGB
+# image is 3*8*8 = 192 blocks, so BLOCK_N=192 keeps whole images per step.
+BLOCK_N = 192
+
+
+def dct_matrix(dtype=jnp.float32) -> jax.Array:
+    """Orthonormal 8x8 DCT-II matrix C, so fwd F = C X C^T, inv X = C^T F C."""
+    k = np.arange(8)[:, None].astype(np.float64)
+    n = np.arange(8)[None, :].astype(np.float64)
+    c = np.cos((2 * n + 1) * k * np.pi / 16.0)
+    c *= np.where(k == 0, np.sqrt(1.0 / 8.0), np.sqrt(2.0 / 8.0))
+    return jnp.asarray(c, dtype=dtype)
+
+
+def _dequant_idct_kernel(coef_ref, q_ref, c_ref, out_ref):
+    """coef_ref: [BLOCK_N,8,8] quantized coeffs; q_ref: [8,8] quant table;
+    c_ref: [8,8] DCT matrix (kept VMEM-resident across the grid)."""
+    cmat = c_ref[...]
+    f = coef_ref[...] * q_ref[...][None, :, :]  # dequantize
+    # X = C^T F C as two batched matmuls (MXU form).
+    x = jnp.matmul(cmat.T, f)  # [8,8]x[N,8,8] -> [N,8,8]
+    x = jnp.matmul(x, cmat)
+    # Level shift and clamp to pixel range.
+    out_ref[...] = jnp.clip(x + 128.0, 0.0, 255.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dequant_idct(coefs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """Dequantize + inverse-DCT a stream of 8x8 blocks.
+
+    Args:
+      coefs: [N, 8, 8] float32 -- quantized DCT coefficients (natural row
+        order, i.e. already inverse-zigzagged by the entropy decoder).
+        N must be a multiple of BLOCK_N (the AOT artifacts use padded,
+        fixed batch shapes).
+      qtable: [8, 8] float32 quantization table.
+
+    Returns:
+      [N, 8, 8] float32 pixel blocks in [0, 255].
+    """
+    n = coefs.shape[0]
+    if n % BLOCK_N != 0:
+        raise ValueError(f"N={n} must be a multiple of BLOCK_N={BLOCK_N}")
+    cmat = dct_matrix(coefs.dtype)
+    return pl.pallas_call(
+        _dequant_idct_kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 8, 8), coefs.dtype),
+        interpret=True,
+    )(coefs, qtable, cmat)
+
+
+def decode_images(coefs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """Decode a batch of coefficient tensors into images.
+
+    Args:
+      coefs: [B, C, H/8, W/8, 8, 8] quantized coefficients.
+      qtable: [8, 8].
+
+    Returns:
+      [B, C, H, W] float32 pixels in [0, 255].
+    """
+    b, c, bh, bw, _, _ = coefs.shape
+    flat = coefs.reshape(b * c * bh * bw, 8, 8)
+    # Pad the block stream to a BLOCK_N multiple for the kernel grid.
+    n = flat.shape[0]
+    pad = (-n) % BLOCK_N
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, 8, 8), flat.dtype)], 0)
+    pix = dequant_idct(flat, qtable)[:n]
+    # [B,C,bh,bw,8,8] -> [B,C,bh,8,bw,8] -> [B,C,H,W]
+    pix = pix.reshape(b, c, bh, bw, 8, 8).transpose(0, 1, 2, 4, 3, 5)
+    return pix.reshape(b, c, bh * 8, bw * 8)

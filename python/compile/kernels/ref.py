@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops and no Pallas.  python/tests asserts
+allclose(kernel, ref) across shape/parameter sweeps (hypothesis), and the
+rust integration tests compare the AOT artifacts against the rust CPU
+implementations of the same operators.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ImageNet-style normalization constants, scaled to the 0..255 pixel range.
+NORM_MEAN = np.array([0.485, 0.456, 0.406], np.float32) * 255.0
+NORM_STD = np.array([0.229, 0.224, 0.225], np.float32) * 255.0
+
+
+def dct_matrix_np() -> np.ndarray:
+    k = np.arange(8)[:, None].astype(np.float64)
+    n = np.arange(8)[None, :].astype(np.float64)
+    c = np.cos((2 * n + 1) * k * np.pi / 16.0)
+    c *= np.where(k == 0, np.sqrt(1.0 / 8.0), np.sqrt(2.0 / 8.0))
+    return c.astype(np.float32)
+
+
+def fdct_blocks(blocks: np.ndarray) -> np.ndarray:
+    """Forward DCT of [N,8,8] level-shifted pixel blocks (test helper)."""
+    c = dct_matrix_np()
+    return np.einsum("ij,njk,lk->nil", c, blocks, c)
+
+
+def dequant_idct_ref(coefs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """Reference for kernels.dct.dequant_idct: [N,8,8] -> [N,8,8]."""
+    c = jnp.asarray(dct_matrix_np(), coefs.dtype)
+    f = coefs * qtable[None, :, :]
+    x = jnp.einsum("ji,njk,kl->nil", c, f, c)  # C^T F C
+    return jnp.clip(x + 128.0, 0.0, 255.0)
+
+
+def decode_images_ref(coefs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """Reference for kernels.dct.decode_images."""
+    b, ch, bh, bw, _, _ = coefs.shape
+    flat = coefs.reshape(b * ch * bh * bw, 8, 8)
+    pix = dequant_idct_ref(flat, qtable)
+    pix = pix.reshape(b, ch, bh, bw, 8, 8).transpose(0, 1, 2, 4, 3, 5)
+    return pix.reshape(b, ch, bh * 8, bw * 8)
+
+
+def augment_ref(img: jax.Array, params: jax.Array, out_hw: tuple) -> jax.Array:
+    """Reference for kernels.augment.augment_batch, one image.
+
+    img: [C, H, W] pixels in [0,255].
+    params: [6] = (y0, x0, crop_h, crop_w, flip, _pad) as float32.
+    out_hw: static (OH, OW).
+
+    Crop the window, optionally horizontally flip it, bilinear-resize to
+    out_hw, then normalize with ImageNet mean/std.
+    """
+    c, h, w = img.shape
+    oh, ow = out_hw
+    y0, x0, ch_, cw_, flip = params[0], params[1], params[2], params[3], params[4]
+
+    iy = (jnp.arange(oh, dtype=img.dtype) + 0.5) * ch_ / oh - 0.5
+    ix = (jnp.arange(ow, dtype=img.dtype) + 0.5) * cw_ / ow - 0.5
+    # Horizontal flip mirrors the sample coordinate inside the crop window.
+    ix = jnp.where(flip > 0.5, (cw_ - 1.0) - ix, ix)
+    # Clamp inside the crop window so the crop never bleeds neighbours,
+    # then into the image (defensive; a valid window is already inside).
+    sy = jnp.clip(jnp.clip(iy, 0.0, ch_ - 1.0) + y0, 0.0, h - 1.0)
+    sx = jnp.clip(jnp.clip(ix, 0.0, cw_ - 1.0) + x0, 0.0, w - 1.0)
+
+    y0i = jnp.floor(sy).astype(jnp.int32)
+    x0i = jnp.floor(sx).astype(jnp.int32)
+    y1i = jnp.minimum(y0i + 1, h - 1)
+    x1i = jnp.minimum(x0i + 1, w - 1)
+    wy = (sy - y0i.astype(img.dtype))[:, None]
+    wx = (sx - x0i.astype(img.dtype))[None, :]
+
+    def gather(yi, xi):
+        return img[:, yi, :][:, :, xi]  # [C, OH, OW]
+
+    v00 = gather(y0i, x0i)
+    v01 = gather(y0i, x1i)
+    v10 = gather(y1i, x0i)
+    v11 = gather(y1i, x1i)
+    top = v00 * (1 - wx) + v01 * wx
+    bot = v10 * (1 - wx) + v11 * wx
+    out = top * (1 - wy) + bot * wy
+
+    mean = jnp.asarray(NORM_MEAN, img.dtype)[:, None, None]
+    std = jnp.asarray(NORM_STD, img.dtype)[:, None, None]
+    return (out - mean) / std
+
+
+def augment_batch_ref(imgs: jax.Array, params: jax.Array, out_hw: tuple) -> jax.Array:
+    """Reference for the batched fused augment: [B,C,H,W],[B,6] -> [B,C,OH,OW]."""
+    return jax.vmap(lambda i, p: augment_ref(i, p, out_hw))(imgs, params)

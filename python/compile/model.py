@@ -1,0 +1,263 @@
+"""L2: JAX compute graphs — tiny CNN models, fwd/bwd train step, fused preprocess.
+
+These are the training-side compute graphs of the paper's end-to-end
+pipeline (Fig. 1 "DNN model" stage).  The paper trains AlexNet /
+ShuffleNet / ResNet{18,50,152} on V100s; here the same *roles* are played
+by scaled-down pure-JAX models (see DESIGN.md Substitutions):
+
+  alexnet_t    — the "fast data consumer" (shallow, cheap per step)
+  shufflenet_t — grouped 1x1 convs + channel shuffle, mid-speed
+  resnet_t     — residual stages, the "slow, GPU-bound consumer"
+
+Everything is a pure function over an explicit parameter pytree; no
+framework state.  `train_step` does softmax cross-entropy + plain SGD so
+the AOT artifact is (params..., images, labels, lr) -> (loss, params'...),
+which the rust runtime keeps fully on-device between steps.
+
+The preprocessing graphs (`fused_preprocess`) chain the L1 Pallas kernels
+so the hybrid/gpu placement executes decode+augment as ONE artifact with
+no host round-trip — the DALI "GPU stage" equivalent.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import augment as _augment
+from .kernels import dct as _dct
+
+NUM_CLASSES = 16
+IMG_HW = 64  # decoded image side
+OUT_HW = 56  # post-augment side fed to the models
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout, groups=1):
+    fan_in = kh * kw * cin // groups
+    scale = np.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (cout, cin // groups, kh, kw), jnp.float32) * scale
+
+
+def _fc_init(key, cin, cout, scale=None):
+    scale = np.sqrt(2.0 / cin) if scale is None else scale
+    k1, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _gap(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# alexnet_t — shallow & cheap: the paper's fast data consumer
+# ---------------------------------------------------------------------------
+
+def alexnet_t_init(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": _conv_init(ks[0], 5, 5, 3, 32),
+        "c2": _conv_init(ks[1], 3, 3, 32, 64),
+        "c3": _conv_init(ks[2], 3, 3, 64, 96),
+        "fc1": _fc_init(ks[3], 96 * 7 * 7, 256),
+        "fc2": _fc_init(ks[4], 256, NUM_CLASSES, scale=0.01),
+    }
+
+
+def alexnet_t_apply(params, x):
+    x = jax.nn.relu(_conv(x, params["c1"], stride=2))   # 56 -> 28
+    x = _maxpool2(x)                                    # -> 14
+    x = jax.nn.relu(_conv(x, params["c2"]))
+    x = _maxpool2(x)                                    # -> 7
+    x = jax.nn.relu(_conv(x, params["c3"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# resnet_t — residual stages: the slow, training-bound consumer
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cin, cout, downsample):
+    ks = jax.random.split(key, 3)
+    p = {
+        "c1": _conv_init(ks[0], 3, 3, cin, cout),
+        "c2": _conv_init(ks[1], 3, 3, cout, cout),
+    }
+    if downsample:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+_RES_SCALE = 0.3  # residual branch scaling; stabilizes the norm-free net
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_conv(x, p["c1"], stride=stride))
+    h = _conv(h, p["c2"])
+    if "proj" in p:
+        x = _conv(x, p["proj"], stride=stride)
+    return jax.nn.relu(x + _RES_SCALE * h)
+
+
+def resnet_t_init(key):
+    ks = jax.random.split(key, 8)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, 3, 16),
+        "s1b1": _block_init(ks[1], 16, 16, False),
+        "s1b2": _block_init(ks[2], 16, 16, False),
+        "s2b1": _block_init(ks[3], 16, 32, True),
+        "s2b2": _block_init(ks[4], 32, 32, False),
+        "s3b1": _block_init(ks[5], 32, 64, True),
+        "s3b2": _block_init(ks[6], 64, 64, False),
+        "fc": _fc_init(ks[7], 64, NUM_CLASSES, scale=0.01),
+    }
+
+
+def resnet_t_apply(params, x):
+    x = jax.nn.relu(_conv(x, params["stem"]))           # 56
+    x = _block_apply(params["s1b1"], x, 1)
+    x = _block_apply(params["s1b2"], x, 1)
+    x = _block_apply(params["s2b1"], x, 2)              # -> 28
+    x = _block_apply(params["s2b2"], x, 1)
+    x = _block_apply(params["s3b1"], x, 2)              # -> 14
+    x = _block_apply(params["s3b2"], x, 1)
+    x = _gap(x)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# shufflenet_t — grouped 1x1 + channel shuffle + depthwise 3x3
+# ---------------------------------------------------------------------------
+
+_SHUF_GROUPS = 4
+
+
+def _shuffle(x, groups):
+    b, c, h, w = x.shape
+    x = x.reshape(b, groups, c // groups, h, w)
+    x = x.transpose(0, 2, 1, 3, 4)
+    return x.reshape(b, c, h, w)
+
+
+def _sunit_init(key, cin, cout):
+    ks = jax.random.split(key, 3)
+    return {
+        "g1": _conv_init(ks[0], 1, 1, cin, cout, groups=_SHUF_GROUPS),
+        "dw": _conv_init(ks[1], 3, 3, cout, cout, groups=cout),
+        "g2": _conv_init(ks[2], 1, 1, cout, cout, groups=_SHUF_GROUPS),
+    }
+
+
+def _sunit_apply(p, x, stride):
+    h = jax.nn.relu(_conv(x, p["g1"], groups=_SHUF_GROUPS))
+    h = _shuffle(h, _SHUF_GROUPS)
+    h = _conv(h, p["dw"], stride=stride, groups=h.shape[1])
+    h = _conv(h, p["g2"], groups=_SHUF_GROUPS)
+    if stride == 1 and x.shape == h.shape:
+        h = h + x
+    return jax.nn.relu(h)
+
+
+def shufflenet_t_init(key):
+    ks = jax.random.split(key, 6)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, 3, 32),
+        "u1": _sunit_init(ks[1], 32, 64),
+        "u2": _sunit_init(ks[2], 64, 64),
+        "u3": _sunit_init(ks[3], 64, 128),
+        "u4": _sunit_init(ks[4], 128, 128),
+        "fc": _fc_init(ks[5], 128, NUM_CLASSES, scale=0.01),
+    }
+
+
+def shufflenet_t_apply(params, x):
+    x = jax.nn.relu(_conv(x, params["stem"], stride=2))  # 56 -> 28
+    x = _sunit_apply(params["u1"], x, 2)                 # -> 14
+    x = _sunit_apply(params["u2"], x, 1)
+    x = _sunit_apply(params["u3"], x, 2)                 # -> 7
+    x = _sunit_apply(params["u4"], x, 1)
+    x = _gap(x)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+MODELS = {
+    "alexnet_t": (alexnet_t_init, alexnet_t_apply),
+    "resnet_t": (resnet_t_init, resnet_t_apply),
+    "shufflenet_t": (shufflenet_t_init, shufflenet_t_apply),
+}
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_train_step(apply_fn):
+    """(params, images, labels, lr) -> (loss, new_params) — plain SGD."""
+
+    def loss_fn(params, images, labels):
+        return cross_entropy(apply_fn(params, images), labels)
+
+    def step(params, images, labels, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, images, labels)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return loss, new_params
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing graphs (call the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def decode_batch(coefs, qtable):
+    """[B,C,8,8,8,8] coeffs -> [B,C,64,64] pixels (hybrid decode GPU half)."""
+    return _dct.decode_images(coefs, qtable)
+
+
+def augment_batch(imgs, aug_params):
+    """[B,C,64,64] pixels + [B,6] params -> [B,C,56,56] normalized."""
+    return _augment.augment_batch(imgs, aug_params, (OUT_HW, OUT_HW))
+
+
+def fused_preprocess(coefs, qtable, aug_params):
+    """Full accelerator-side preprocessing: dequant+IDCT then fused augment.
+
+    One artifact, no host round-trip between the stages — the 'gpu'
+    placement in the paper's terms (everything after entropy decode is on
+    the accelerator).
+    """
+    return augment_batch(decode_batch(coefs, qtable), aug_params)

@@ -1,0 +1,80 @@
+"""AOT pipeline tests: artifact specs are consistent and lowerable,
+and lowered HLO text is accepted by the XLA text parser contract
+(non-empty, ENTRY present, correct parameter count)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built():
+    return aot.build_artifacts()
+
+
+def test_artifact_inventory(built):
+    arts, models = built
+    for b in (aot.BATCH_TEST, aot.BATCH_MAIN):
+        for stem in ("decode", "augment", "fused_pre"):
+            assert f"{stem}_b{b}" in arts
+    for m in M.MODELS:
+        assert f"train_{m}_b{aot.BATCH_MAIN}" in arts
+        assert f"predict_{m}_b{aot.BATCH_MAIN}" in arts
+    assert set(models) == set(M.MODELS)
+
+
+def test_arg_names_match_specs(built):
+    arts, _ = built
+    for name, (fn, specs, argnames) in arts.items():
+        assert len(specs) == len(argnames), name
+        assert len(set(argnames)) == len(argnames), f"dup arg names in {name}"
+
+
+def test_train_artifact_roundtrips_params(built):
+    """train outputs = (loss, new leaves) with shapes identical to inputs."""
+    arts, models = built
+    name = f"train_resnet_t_b{aot.BATCH_TEST}"
+    fn, specs, argnames = arts[name]
+    outs = jax.eval_shape(fn, *specs)
+    nleaf = len(models["resnet_t"]["names"])
+    assert len(outs) == 1 + nleaf
+    assert outs[0].shape == ()
+    for o, s in zip(outs[1:], specs[:nleaf]):
+        assert o.shape == s.shape
+
+
+def test_lowered_hlo_text_is_wellformed(built):
+    arts, _ = built
+    name = f"decode_b{aot.BATCH_TEST}"
+    fn, specs, _ = arts[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "HloModule" in text
+    # At least one HLO parameter per positional arg (fusion subcomputations
+    # contribute additional parameter() lines).
+    assert text.count("parameter(") >= len(specs)
+
+
+def test_lowered_decode_executes_like_direct_call(built):
+    arts, _ = built
+    fn, specs, _ = arts[f"decode_b{aot.BATCH_TEST}"]
+    rng = np.random.default_rng(0)
+    coefs = jnp.asarray(np.round(rng.normal(0, 10, specs[0].shape)).astype(np.float32))
+    q = jnp.asarray((1 + np.arange(64).reshape(8, 8)).astype(np.float32))
+    direct = fn(coefs, q)[0]
+    jitted = jax.jit(fn)(coefs, q)[0]
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(jitted), atol=1e-4)
+
+
+def test_param_schema_offsets_contiguous(built):
+    _, models = built
+    for mname, info in models.items():
+        leaves = jax.tree_util.tree_leaves(info["params"])
+        off = 0
+        for leaf, nm in zip(leaves, info["names"]):
+            nbytes = int(np.prod(leaf.shape)) * 4
+            off += nbytes
+        total = sum(int(np.prod(l.shape)) for l in leaves)
+        assert total == M.param_count(info["params"])

@@ -1,0 +1,79 @@
+"""Kernel-vs-ref correctness for the fused augmentation kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import augment, ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+H = W = 64
+OUT = (56, 56)
+
+
+def _params(rng, b, h=H, w=W):
+    rows = []
+    for _ in range(b):
+        ch = rng.integers(8, h + 1)
+        cw = rng.integers(8, w + 1)
+        y0 = rng.integers(0, h - ch + 1)
+        x0 = rng.integers(0, w - cw + 1)
+        flip = rng.integers(0, 2)
+        rows.append([y0, x0, ch, cw, flip, 0])
+    return np.asarray(rows, np.float32)
+
+
+@given(b=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+def test_augment_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    imgs = rng.uniform(0, 255, (b, 3, H, W)).astype(np.float32)
+    par = _params(rng, b)
+    got = augment.augment_batch(jnp.asarray(imgs), jnp.asarray(par), OUT)
+    want = ref.augment_batch_ref(jnp.asarray(imgs), jnp.asarray(par), OUT)
+    assert got.shape == (b, 3, *OUT)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_identity_crop_on_constant_image():
+    """Full-window crop of a constant image is the normalized constant."""
+    v = 100.0
+    imgs = np.full((1, 3, H, W), v, np.float32)
+    par = np.asarray([[0, 0, H, W, 0, 0]], np.float32)
+    out = np.asarray(augment.augment_batch(jnp.asarray(imgs), jnp.asarray(par), OUT))
+    expect = (v - ref.NORM_MEAN) / ref.NORM_STD
+    for c in range(3):
+        np.testing.assert_allclose(out[0, c], expect[c], atol=1e-4)
+
+
+def test_flip_mirrors_output():
+    """Flipped sample of a symmetric-size crop equals reversed unflipped."""
+    rng = np.random.default_rng(3)
+    imgs = rng.uniform(0, 255, (1, 3, H, W)).astype(np.float32)
+    base = np.asarray([[4, 6, 48, 48, 0, 0]], np.float32)
+    flip = base.copy()
+    flip[0, 4] = 1.0
+    o0 = np.asarray(augment.augment_batch(jnp.asarray(imgs), jnp.asarray(base), OUT))
+    o1 = np.asarray(augment.augment_batch(jnp.asarray(imgs), jnp.asarray(flip), OUT))
+    np.testing.assert_allclose(o1, o0[:, :, :, ::-1], atol=1e-3)
+
+
+def test_crop_selects_window():
+    """Cropping a quadrant picks pixels only from that quadrant."""
+    imgs = np.zeros((1, 3, H, W), np.float32)
+    imgs[:, :, :32, :32] = 200.0  # bright top-left
+    par = np.asarray([[0, 0, 32, 32, 0, 0]], np.float32)
+    out = np.asarray(augment.augment_batch(jnp.asarray(imgs), jnp.asarray(par), OUT))
+    expect = (200.0 - ref.NORM_MEAN) / ref.NORM_STD
+    for c in range(3):
+        np.testing.assert_allclose(out[0, c], expect[c], atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_output_is_finite(seed):
+    rng = np.random.default_rng(seed)
+    imgs = rng.uniform(0, 255, (2, 3, H, W)).astype(np.float32)
+    par = _params(rng, 2)
+    out = np.asarray(augment.augment_batch(jnp.asarray(imgs), jnp.asarray(par), OUT))
+    assert np.isfinite(out).all()

@@ -1,0 +1,119 @@
+//! `cargo bench --bench ablations` — ablations over the design choices
+//! DESIGN.md calls out: record chunk size, shuffle-buffer size, codec
+//! quality, and cache budget.
+
+use dpp::codec;
+use dpp::dataset;
+use dpp::pipeline::shuffle::ShuffleBuffer;
+use dpp::record::{parse_shard, ShardWriter};
+use dpp::storage::{CachedStore, MemStore, Storage};
+use dpp::util::rng::Rng;
+use std::io::Cursor;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("dpp-abl-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Shared corpus: 256 encoded images.
+    let payloads: Vec<Vec<u8>> = (0..256)
+        .map(|i| {
+            codec::encode(&dataset::gen_image(&mut Rng::new(i), (i % 16) as u16, 3, 64, 64), 85)
+                .unwrap()
+        })
+        .collect();
+
+    // ---- ablation 1: record chunk size vs streaming rate -----------------
+    println!("== ablation: record chunk size (sequential streaming rate) ==");
+    let shard_path = dir.join("abl.rec");
+    {
+        let mut w = ShardWriter::create(&shard_path).unwrap();
+        for (i, p) in payloads.iter().enumerate() {
+            w.append(i as u64, 0, p).unwrap();
+        }
+        w.finish().unwrap();
+    }
+    let bytes = std::fs::read(&shard_path).unwrap();
+    for chunk in [4 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+        let t = Instant::now();
+        let mut n = 0;
+        for _ in 0..20 {
+            let mut r = dpp::record::ShardReader::new(Cursor::new(&bytes[..]), chunk);
+            while r.next_record().unwrap().is_some() {
+                n += 1;
+            }
+        }
+        let rate = (bytes.len() * 20) as f64 / t.elapsed().as_secs_f64() / 1e6;
+        println!("  chunk {:>9}: {rate:>8.0} MB/s ({n} records)", dpp::util::human_bytes(chunk as u64));
+    }
+
+    // ---- ablation 2: shuffle-buffer size vs randomness --------------------
+    println!("== ablation: shuffle-buffer size vs randomness (mean displacement, n=4096) ==");
+    let n = 4096usize;
+    for cap in [1usize, 16, 64, 256, 1024] {
+        let mut sb = ShuffleBuffer::new(cap, Rng::new(1));
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            if let Some(v) = sb.push(i) {
+                out.push(v);
+            }
+        }
+        out.extend(sb.drain());
+        let disp: f64 = out
+            .iter()
+            .enumerate()
+            .map(|(pos, &v)| (pos as f64 - v as f64).abs())
+            .sum::<f64>()
+            / n as f64;
+        println!("  cap {cap:>5}: mean displacement {disp:>8.1} (uniform would be ~{:.0})", n as f64 / 3.0);
+    }
+
+    // ---- ablation 3: codec quality vs size & decode time ------------------
+    println!("== ablation: MJX quality vs compressed size & decode time ==");
+    let img = dataset::gen_image(&mut Rng::new(7), 3, 3, 64, 64);
+    for q in [30u8, 50, 70, 85, 95] {
+        let enc = codec::encode(&img, q).unwrap();
+        let t = Instant::now();
+        for _ in 0..200 {
+            codec::decode_cpu(&enc).unwrap();
+        }
+        let us = t.elapsed().as_secs_f64() / 200.0 * 1e6;
+        let dec = codec::decode_cpu(&enc).unwrap();
+        let mse: f64 = img
+            .data
+            .iter()
+            .zip(&dec.data)
+            .map(|(&a, &b)| ((a as f64) - (b as f64)).powi(2))
+            .sum::<f64>()
+            / img.data.len() as f64;
+        println!(
+            "  q{q:>3}: {:>6} B ({:>4.1}% of raw)  decode {us:>6.1} µs  mse {mse:>6.1}",
+            enc.len(),
+            enc.len() as f64 / img.data.len() as f64 * 100.0
+        );
+    }
+
+    // ---- ablation 4: cache budget vs hit rate (2 epochs, raw reads) -------
+    println!("== ablation: cache budget vs hit rate (2 epochs over 256 objects) ==");
+    let total: usize = payloads.iter().map(|p| p.len()).sum();
+    for frac in [0.25, 0.5, 1.0, 2.0] {
+        let budget = (total as f64 * frac) as usize;
+        let m = MemStore::new();
+        for (i, p) in payloads.iter().enumerate() {
+            m.write(&format!("img/{i:06}.mjx"), p.clone());
+        }
+        let c = CachedStore::new(m, budget);
+        for _ in 0..2 {
+            for i in 0..payloads.len() {
+                c.read(&format!("img/{i:06}.mjx")).unwrap();
+            }
+        }
+        println!(
+            "  budget {:>9} ({frac:>4.2}x dataset): hit rate {:>5.1}%",
+            dpp::util::human_bytes(budget as u64),
+            c.hit_rate() * 100.0
+        );
+    }
+
+    std::fs::remove_dir_all(dir).ok();
+}

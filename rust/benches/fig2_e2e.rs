@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig2_e2e` — regenerates the paper's Fig. 2 
+//! via the shared harness in dpp::bench::figures (also: `dpp reproduce`).
+
+fn main() {
+    dpp::bench::figures::fig2().expect("fig2 harness failed");
+}

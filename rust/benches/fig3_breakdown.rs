@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig3_breakdown` — Fig. 3: measured per-operator
+//! latency breakdown of CPU preprocessing on THIS host, printed next to
+//! the paper's percentages (also: `dpp reproduce --fig 3`).
+
+fn main() {
+    dpp::bench::figures::fig3(None).expect("fig3 harness failed");
+}

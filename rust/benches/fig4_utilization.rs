@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig4_utilization` — regenerates the paper's Fig. 4 
+//! via the shared harness in dpp::bench::figures (also: `dpp reproduce`).
+
+fn main() {
+    dpp::bench::figures::fig4().expect("fig4 harness failed");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig5_vcpu_sweep` — regenerates the paper's Fig. 5 
+//! via the shared harness in dpp::bench::figures (also: `dpp reproduce`).
+
+fn main() {
+    dpp::bench::figures::fig5().expect("fig5 harness failed");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig6_storage` — regenerates the paper's Fig. 6 
+//! via the shared harness in dpp::bench::figures (also: `dpp reproduce`).
+
+fn main() {
+    dpp::bench::figures::fig6().expect("fig6 harness failed");
+}

@@ -1,0 +1,123 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of every hot-path
+//! component (deliverable (e)): codec encode/decode, augmentation ops,
+//! record streaming, channel overhead, PJRT artifact execution, and the
+//! end-to-end train step.  §Perf of EXPERIMENTS.md tracks these numbers
+//! across optimization iterations.
+
+use dpp::bench::Bencher;
+use dpp::codec;
+use dpp::dataset;
+use dpp::ops;
+use dpp::record::ShardWriter;
+use dpp::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::with_budget(500);
+    let img = dataset::gen_image(&mut Rng::new(1), 4, 3, 64, 64);
+    let px = 3.0 * 64.0 * 64.0;
+
+    println!("== codec (one 3x64x64 image) ==");
+    let bytes = codec::encode(&img, 85).unwrap();
+    println!(
+        "  encoded size: {} ({}% of raw)",
+        bytes.len(),
+        bytes.len() * 100 / img.data.len()
+    );
+    b.run("encode q85", || codec::encode(&img, 85).unwrap()).print_rate(px, "px");
+    b.run("decode_cpu (entropy+dequant+idct)", || codec::decode_cpu(&bytes).unwrap())
+        .print_rate(px, "px");
+    b.run("entropy_decode only (hybrid CPU half)", || codec::entropy_decode(&bytes).unwrap())
+        .print_rate(px, "px");
+    let ci = codec::entropy_decode(&bytes).unwrap();
+    b.run("dequant+idct only (offloadable half)", || codec::coefs_to_image(&ci))
+        .print_rate(px, "px");
+
+    println!("== augmentation ops (3x64x64 -> 3x56x56) ==");
+    let f = img.to_f32();
+    let aug = ops::AugParams { y0: 2, x0: 3, crop_h: 58, crop_w: 60, flip: true };
+    let mut out = vec![0f32; 3 * 56 * 56];
+    b.run("augment_fused", || {
+        ops::augment_fused(&f, 3, 64, 64, &aug, 56, 56, &mut out);
+    })
+    .print_rate(px, "px");
+    let mut rng = Rng::new(2);
+    b.run("sample_aug_params", || ops::sample_aug_params(&mut rng, 64, 64)).print();
+
+    println!("== record format ==");
+    let dir = std::env::temp_dir().join(format!("dpp-hotpath-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let shard = dir.join("bench.rec");
+    let payloads: Vec<Vec<u8>> = (0..64).map(|i| {
+        codec::encode(&dataset::gen_image(&mut Rng::new(i), (i % 16) as u16, 3, 64, 64), 85)
+            .unwrap()
+    }).collect();
+    {
+        let mut w = ShardWriter::create(&shard).unwrap();
+        for (i, p) in payloads.iter().enumerate() {
+            w.append(i as u64, 0, p).unwrap();
+        }
+        w.finish().unwrap();
+    }
+    let shard_bytes = std::fs::read(&shard).unwrap();
+    let total = shard_bytes.len() as f64;
+    b.run("parse_shard (64 records)", || dpp::record::parse_shard(&shard_bytes).unwrap())
+        .print_rate(total, "B");
+
+    println!("== pipeline primitives ==");
+    let (tx, rx) = dpp::pipeline::channel::bounded::<u64>(1024);
+    b.run("channel send+recv (uncontended)", || {
+        tx.send(1).unwrap();
+        rx.recv().unwrap()
+    })
+    .print();
+    b.run("cpu_stage hybrid (entropy only)", || {
+        dpp::pipeline::cpu_stage(&payloads[0], dpp::config::Placement::Hybrid, aug, 56).unwrap()
+    })
+    .print_rate(1.0, "img");
+    b.run("cpu_stage cpu (full decode+augment)", || {
+        dpp::pipeline::cpu_stage(&payloads[0], dpp::config::Placement::Cpu, aug, 56).unwrap()
+    })
+    .print_rate(1.0, "img");
+
+    // PJRT path (skipped if artifacts are missing).
+    let adir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if adir.join("manifest.json").exists() {
+        println!("== PJRT runtime (CPU client) ==");
+        let mut eng = dpp::runtime::Engine::new(&adir).unwrap();
+        let bsz = eng.manifest.batch_test;
+        let bh = eng.manifest.img_hw / 8;
+        let coefs_v = vec![0.5f32; bsz * 3 * bh * bh * 64];
+        let q = [4.0f32; 64];
+        let aug_rows: Vec<f32> = (0..bsz).flat_map(|_| [2., 3., 58., 60., 1., 0.]).collect();
+        let fused = eng.manifest.fused_artifact(bsz);
+        eng.load(&fused).unwrap();
+        b.run("fused_pre_b8 execute (decode+augment HLO)", || {
+            let c = dpp::runtime::lit_f32(&[bsz, 3, bh, bh, 8, 8], &coefs_v).unwrap();
+            let ql = dpp::runtime::lit_f32(&[8, 8], &q).unwrap();
+            let a = dpp::runtime::lit_f32(&[bsz, 6], &aug_rows).unwrap();
+            eng.execute(&fused, &[c, ql, a]).unwrap()
+        })
+        .print_rate(bsz as f64, "img");
+
+        let mut sess =
+            dpp::trainer::TrainSession::new(&mut eng, "resnet_t", bsz, 0.1).unwrap();
+        let hw = eng.manifest.out_hw;
+        let imgs = vec![0.1f32; bsz * 3 * hw * hw];
+        let labels: Vec<i32> = (0..bsz as i32).map(|i| i % 16).collect();
+        b.run("train step resnet_t b8 (fwd+bwd+sgd HLO)", || {
+            let il = dpp::runtime::lit_f32(&[bsz, 3, hw, hw], &imgs).unwrap();
+            sess.step(&mut eng, il, &labels).unwrap()
+        })
+        .print_rate(bsz as f64, "img");
+    } else {
+        println!("(artifacts missing — run `make artifacts` for PJRT benches)");
+    }
+
+    println!("== simulator ==");
+    let scen = dpp::sim::Scenario { model: "resnet50".into(), seconds: 20.0, ..Default::default() };
+    b.run("analytic_throughput", || dpp::sim::analytic_throughput(&scen)).print();
+    let b2 = Bencher::with_budget(900);
+    b2.run("DES 20 sim-seconds (resnet50 hybrid)", || dpp::sim::simulate(&scen)).print();
+
+    std::fs::remove_dir_all(dir).ok();
+}

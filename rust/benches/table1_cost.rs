@@ -1,0 +1,6 @@
+//! `cargo bench --bench table1_cost` — regenerates the paper's table1 
+//! via the shared harness in dpp::bench::figures (also: `dpp reproduce`).
+
+fn main() {
+    dpp::bench::figures::table1().expect("table1 harness failed");
+}

@@ -1,0 +1,100 @@
+//! Table 1 of the paper: GPU VM instances on AWS EC2 and Google Cloud
+//! (all V100), with the flexible-pricing model of §4.
+
+/// Google Cloud fine-grained prices (paper §4): GPU 2.48 $/h,
+/// vCPU 0.033 $/h, memory 0.0044 $/GB·h.
+pub const GCLOUD_GPU_HOUR: f64 = 2.48;
+pub const GCLOUD_VCPU_HOUR: f64 = 0.033;
+pub const GCLOUD_MEM_GB_HOUR: f64 = 0.0044;
+
+/// DRAM-hosting the dataset needs extra memory (ImageNet ≈ 150 GB).
+pub const DATASET_DRAM_GB: f64 = 150.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Instance {
+    pub name: &'static str,
+    pub gpus: usize,
+    pub max_vcpus: usize,
+    /// Full price at max vCPUs (the "< $" column of Table 1).
+    pub max_price: f64,
+    /// Fine-grained pricing (Google Cloud style) vs fixed-cap (EC2).
+    pub fine_grained: bool,
+    /// Memory included, GB (affects the DRAM-storage option).
+    pub mem_gb: f64,
+    /// Fig. 6-style instance profile for the storage model.
+    pub p3dn: bool,
+}
+
+impl Instance {
+    /// $/hour at `vcpus`, optionally with the dataset held in DRAM.
+    ///
+    /// Fine-grained (Google Cloud): GPU + vCPU + memory itemized.
+    /// EC2: the cap price minus the vCPU discount for unallocated vCPUs
+    /// (the paper's "flexible node configuration" premise).
+    pub fn price_per_hour(&self, vcpus: usize, dram_dataset: bool) -> f64 {
+        let vcpus = vcpus.min(self.max_vcpus);
+        let extra_mem = if dram_dataset { DATASET_DRAM_GB } else { 0.0 };
+        if self.fine_grained {
+            self.gpus as f64 * GCLOUD_GPU_HOUR
+                + vcpus as f64 * GCLOUD_VCPU_HOUR
+                + (self.mem_gb + extra_mem) * GCLOUD_MEM_GB_HOUR
+        } else {
+            self.max_price - (self.max_vcpus - vcpus) as f64 * GCLOUD_VCPU_HOUR
+                + extra_mem * GCLOUD_MEM_GB_HOUR
+        }
+    }
+}
+
+/// Table 1 (top: AWS EC2; bottom: Google Cloud).
+pub const CATALOG: &[Instance] = &[
+    Instance { name: "p3.2xlarge", gpus: 1, max_vcpus: 8, max_price: 3.06, fine_grained: false, mem_gb: 61.0, p3dn: false },
+    Instance { name: "p3.16xlarge", gpus: 8, max_vcpus: 64, max_price: 24.48, fine_grained: false, mem_gb: 488.0, p3dn: false },
+    Instance { name: "p3dn.24xlarge", gpus: 8, max_vcpus: 96, max_price: 31.21, fine_grained: false, mem_gb: 768.0, p3dn: true },
+    Instance { name: "V100-1", gpus: 1, max_vcpus: 12, max_price: 3.22, fine_grained: true, mem_gb: 78.0, p3dn: false },
+    Instance { name: "V100-4", gpus: 4, max_vcpus: 48, max_price: 12.90, fine_grained: true, mem_gb: 312.0, p3dn: false },
+    Instance { name: "V100-8", gpus: 8, max_vcpus: 96, max_price: 25.80, fine_grained: true, mem_gb: 624.0, p3dn: false },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_prices_match_table1() {
+        // Fine-grained instances must price out below the "< $" cap.
+        for i in CATALOG {
+            let p = i.price_per_hour(i.max_vcpus, false);
+            assert!(
+                p <= i.max_price * 1.01,
+                "{}: computed {p:.2} vs cap {}",
+                i.name,
+                i.max_price
+            );
+        }
+    }
+
+    #[test]
+    fn fewer_vcpus_cost_less() {
+        for i in CATALOG {
+            let hi = i.price_per_hour(i.max_vcpus, false);
+            let lo = i.price_per_hour(2, false);
+            assert!(lo < hi, "{}", i.name);
+        }
+    }
+
+    #[test]
+    fn dram_dataset_costs_memory() {
+        let i = &CATALOG[3]; // V100-1
+        let base = i.price_per_hour(8, false);
+        let dram = i.price_per_hour(8, true);
+        assert!((dram - base - DATASET_DRAM_GB * GCLOUD_MEM_GB_HOUR).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gcloud_v100_8_price_formula() {
+        // 8×2.48 + 96×0.033 + 624×0.0044 = 19.84 + 3.168 + 2.7456 ≈ 25.75
+        let i = CATALOG.iter().find(|i| i.name == "V100-8").unwrap();
+        let p = i.price_per_hour(96, false);
+        assert!((p - 25.75).abs() < 0.1, "{p}");
+    }
+}

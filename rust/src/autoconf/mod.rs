@@ -1,0 +1,226 @@
+//! Auto-configurator — the tool the paper proposes as future work (§4/§5):
+//! "propose model-specific, fine-grained resource configurations for a
+//! model training workflow while maintaining high throughput performance."
+//!
+//! Given a model and an objective (max throughput, or min $ per image),
+//! it sweeps the instance catalog of Table 1 × vCPU counts × operator
+//! placements × storage options through the calibrated analytic model and
+//! returns the best configuration plus the runner-up table.
+
+pub mod catalog;
+
+pub use catalog::{Instance, CATALOG, GCLOUD_GPU_HOUR, GCLOUD_MEM_GB_HOUR, GCLOUD_VCPU_HOUR};
+
+use crate::config::{Method, Placement};
+use crate::sim::{analytic_throughput, calib, Scenario};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Maximize images/second.
+    Throughput,
+    /// Minimize $ per million images (throughput per dollar).
+    Cost,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "throughput" | "tput" => Ok(Objective::Throughput),
+            "cost" | "dollar" | "cost-per-image" => Ok(Objective::Cost),
+            _ => bail!("objective must be throughput|cost, got {s}"),
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub instance: &'static str,
+    pub gpus: usize,
+    pub vcpus: usize,
+    pub placement: Placement,
+    pub storage: String,
+    pub throughput_ips: f64,
+    pub price_per_hour: f64,
+    pub dollars_per_mimg: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub model: String,
+    pub objective: Objective,
+    pub best: Candidate,
+    pub top: Vec<Candidate>,
+}
+
+/// Evaluate every (instance × vcpus × placement × storage) configuration.
+pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
+    calib::model(model).with_context(|| format!("unknown model {model}"))?;
+    let mut out = Vec::new();
+    for inst in CATALOG {
+        // vCPU sweep at a 2-vCPU granularity (cloud consoles' step).
+        let mut v = 2;
+        while v <= inst.max_vcpus {
+            for placement in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
+                for storage in ["ebs", "dram"] {
+                    let s = Scenario {
+                        model: model.to_string(),
+                        gpus: inst.gpus,
+                        vcpus: v,
+                        method: Method::Record,
+                        placement,
+                        storage: storage.to_string(),
+                        p3dn: inst.p3dn,
+                        ..Default::default()
+                    };
+                    let t = analytic_throughput(&s);
+                    let price = inst.price_per_hour(v, storage == "dram");
+                    out.push(Candidate {
+                        instance: inst.name,
+                        gpus: inst.gpus,
+                        vcpus: v,
+                        placement,
+                        storage: storage.to_string(),
+                        throughput_ips: t,
+                        price_per_hour: price,
+                        dollars_per_mimg: price / (t * 3600.0) * 1e6,
+                    });
+                }
+            }
+            v += 2;
+        }
+    }
+    Ok(out)
+}
+
+/// Best configuration for the model under the objective and a $/h budget.
+pub fn recommend(model: &str, objective: Objective, budget_per_hour: f64) -> Result<Recommendation> {
+    let mut cands: Vec<Candidate> = enumerate(model)?
+        .into_iter()
+        .filter(|c| c.price_per_hour <= budget_per_hour)
+        .collect();
+    if cands.is_empty() {
+        bail!("no configuration fits budget {budget_per_hour}/h");
+    }
+    match objective {
+        Objective::Throughput => cands.sort_by(|a, b| {
+            b.throughput_ips
+                .partial_cmp(&a.throughput_ips)
+                .unwrap()
+                // Tie-break on price: cheapest config that achieves the rate.
+                .then(a.price_per_hour.partial_cmp(&b.price_per_hour).unwrap())
+        }),
+        Objective::Cost => {
+            cands.sort_by(|a, b| a.dollars_per_mimg.partial_cmp(&b.dollars_per_mimg).unwrap())
+        }
+    }
+    let top: Vec<Candidate> = cands.iter().take(8).cloned().collect();
+    Ok(Recommendation {
+        model: model.to_string(),
+        objective,
+        best: cands[0].clone(),
+        top,
+    })
+}
+
+impl Candidate {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<5} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
+            self.instance,
+            self.gpus,
+            self.vcpus,
+            self.placement.name(),
+            self.storage,
+            self.throughput_ips,
+            self.price_per_hour,
+            self.dollars_per_mimg,
+        )
+    }
+}
+
+impl Recommendation {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "auto-configuration for {} (objective: {:?})\n  BEST: {}\n  alternatives:\n",
+            self.model, self.objective, self.best.row()
+        );
+        for c in self.top.iter().skip(1) {
+            s.push_str(&format!("        {}\n", c.row()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_covers_catalog() {
+        let cands = enumerate("resnet50").unwrap();
+        assert!(cands.len() > 100);
+        for inst in CATALOG {
+            assert!(cands.iter().any(|c| c.instance == inst.name));
+        }
+        assert!(enumerate("vgg").is_err());
+    }
+
+    #[test]
+    fn throughput_objective_prefers_more_resources_for_fast_models() {
+        let rec = recommend("alexnet", Objective::Throughput, f64::INFINITY).unwrap();
+        // AlexNet is preprocessing-bound: best config wants many vCPUs
+        // and (per Fig. 6) DRAM-class storage.
+        assert!(rec.best.vcpus >= 32, "{:?}", rec.best);
+        assert!(rec.best.throughput_ips > 5000.0);
+    }
+
+    #[test]
+    fn cost_objective_recommends_fewer_vcpus_for_resnet50() {
+        // §4: ResNet50 needs only ~2 vCPUs/GPU under hybrid — cost-optimal
+        // configs should allocate far below the 8/GPU default.
+        let rec = recommend("resnet50", Objective::Cost, f64::INFINITY).unwrap();
+        let per_gpu = rec.best.vcpus as f64 / rec.best.gpus as f64;
+        assert!(per_gpu <= 4.0, "vCPUs/GPU = {per_gpu} ({:?})", rec.best);
+        // And the hybrid placement (cheapest way to feed the GPUs).
+        assert_eq!(rec.best.placement, Placement::Hybrid);
+    }
+
+    #[test]
+    fn paper_vcpu_reduction_claim_resnet50() {
+        // §1/§4: "75% reduction in CPU resource allocation for ResNet50
+        // with relatively comparable performance": 16 vs 64 vCPUs on the
+        // 8-GPU instance under hybrid.
+        let t = |v: usize| {
+            analytic_throughput(&Scenario {
+                model: "resnet50".into(),
+                gpus: 8,
+                vcpus: v,
+                ..Default::default()
+            })
+        };
+        let full = t(64);
+        // Paper: 16 vCPUs "can adequately feed the GPUs" — our calibration
+        // saturates slightly later (~21 vCPU; see EXPERIMENTS.md), so 16
+        // keeps most of the rate and 24 keeps essentially all of it.
+        assert!(t(16) / full > 0.70, "16 vCPU keeps {:.2} of 64-vCPU rate", t(16) / full);
+        assert!(t(24) / full > 0.98, "24 vCPU keeps {:.2} of 64-vCPU rate", t(24) / full);
+    }
+
+    #[test]
+    fn budget_filter_applies() {
+        let rec = recommend("resnet50", Objective::Throughput, 4.0).unwrap();
+        assert!(rec.best.price_per_hour <= 4.0);
+        assert!(rec.best.gpus == 1, "only 1-GPU instances fit $4/h");
+        assert!(recommend("resnet50", Objective::Throughput, 0.5).is_err());
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let rec = recommend("shufflenet", Objective::Cost, f64::INFINITY).unwrap();
+        let text = rec.render();
+        assert!(text.contains("BEST"));
+        assert!(text.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Micro-benchmark harness: warms up, auto-picks an iteration count for a
+//! target measurement budget, reports mean/std/p50/p95 and a derived rate.
+
+use crate::util::stats::{mean, percentile};
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    pub fn print(&self) {
+        println!(
+            "  {:<44} {:>12}  ±{:>10}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        );
+    }
+
+    /// Print with a throughput line, `units_per_iter` units per iteration.
+    pub fn print_rate(&self, units_per_iter: f64, unit: &str) {
+        let rate = units_per_iter / self.mean_secs();
+        println!(
+            "  {:<44} {:>12}  {:>16}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            crate::util::human_rate(rate, unit)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    budget: Duration,
+    warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_millis(700), warmup: Duration::from_millis(150) }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(budget_ms: u64) -> Self {
+        Bencher { budget: Duration::from_millis(budget_ms), warmup: Duration::from_millis(budget_ms / 5) }
+    }
+
+    /// Measure `f`, returning per-iteration stats.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        // Warmup + calibrate single-iteration cost.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters as f64;
+        let samples = 30usize;
+        let iters_per_sample =
+            ((self.budget.as_secs_f64() / samples as f64 / per_iter.max(1e-9)).ceil() as usize)
+                .max(1);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let m = mean(&times);
+        let var = times.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / times.len() as f64;
+        let mut sorted = times.clone();
+        BenchResult {
+            name: name.to_string(),
+            iters: samples * iters_per_sample,
+            mean_ns: m,
+            std_ns: var.sqrt(),
+            p50_ns: percentile(&mut sorted, 50.0),
+            p95_ns: percentile(&mut sorted, 95.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let b = Bencher::with_budget(120);
+        let r = b.run("sleep-2ms", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean_ns > 1.8e6 && r.mean_ns < 6e6, "{}", r.mean_ns);
+        assert!(r.iters >= 30);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1.5e3), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

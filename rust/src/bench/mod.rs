@@ -1,0 +1,8 @@
+//! Benchmark infrastructure: a criterion-style timing harness (criterion
+//! is unavailable offline) and the paper-figure reproduction harnesses
+//! shared by `cargo bench` targets and `dpp reproduce`.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::Bencher;

@@ -1,0 +1,251 @@
+//! 8x8 DCT-II / DCT-III via the orthonormal DCT matrix.
+//!
+//! Same math as `python/compile/kernels/dct.py`: forward F = C·X·Cᵀ,
+//! inverse X = Cᵀ·F·C.  Row-pass + column-pass keeps it cache-friendly;
+//! the inner loops are plain f32 FMA chains the compiler vectorizes.
+
+use once_cell::sync::Lazy;
+
+/// Orthonormal 8x8 DCT matrix, `DCT_MAT[k][n]`.
+pub static DCT_MAT: Lazy<[[f32; 8]; 8]> = Lazy::new(|| {
+    let mut c = [[0f32; 8]; 8];
+    for k in 0..8 {
+        let s = if k == 0 { (1.0f64 / 8.0).sqrt() } else { (2.0f64 / 8.0).sqrt() };
+        for n in 0..8 {
+            c[k][n] =
+                (s * ((2.0 * n as f64 + 1.0) * k as f64 * std::f64::consts::PI / 16.0).cos()) as f32;
+        }
+    }
+    c
+});
+
+#[inline]
+fn mat8_mul(a: &[[f32; 8]; 8], x: &[f32; 64], out: &mut [f32; 64], transpose_a: bool) {
+    // out = A · X (or Aᵀ · X), X row-major 8x8.
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                let aik = if transpose_a { a[k][i] } else { a[i][k] };
+                acc += aik * x[k * 8 + j];
+            }
+            out[i * 8 + j] = acc;
+        }
+    }
+}
+
+#[inline]
+fn mat8_mul_right(x: &[f32; 64], a: &[[f32; 8]; 8], out: &mut [f32; 64], transpose_a: bool) {
+    // out = X · A (or X · Aᵀ).
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                let akj = if transpose_a { a[j][k] } else { a[k][j] };
+                acc += x[i * 8 + k] * akj;
+            }
+            out[i * 8 + j] = acc;
+        }
+    }
+}
+
+/// Forward DCT of a level-shifted 8x8 block: `coef = C · block · Cᵀ`.
+pub fn fdct_block(block: &[f32; 64], coef: &mut [f32; 64]) {
+    let mut tmp = [0f32; 64];
+    mat8_mul(&DCT_MAT, block, &mut tmp, false);
+    mat8_mul_right(&tmp, &DCT_MAT, coef, true);
+}
+
+/// Inverse DCT: `block = Cᵀ · coef · C` (pixels still level-shifted).
+pub fn idct_block(coef: &[f32; 64], block: &mut [f32; 64]) {
+    let mut tmp = [0f32; 64];
+    mat8_mul(&DCT_MAT, coef, &mut tmp, true);
+    mat8_mul_right(&tmp, &DCT_MAT, block, false);
+}
+
+/// Fused dequantize + IDCT with a DC-only fast path — the decode hot path
+/// (§Perf): quantization zeroes most AC coefficients on natural images,
+/// so flat blocks skip both matrix passes entirely, and the general path
+/// folds the dequant multiply into the first pass with a contiguous,
+/// vectorizable inner loop.
+pub fn dequant_idct_block(coef: &[f32; 64], q: &[f32; 64], block: &mut [f32; 64]) {
+    // DC-only check: one pass over the ACs (cheap; usually succeeds on
+    // smooth content).
+    let mut any_ac = 0f32;
+    for i in 1..64 {
+        any_ac += coef[i].abs();
+    }
+    if any_ac == 0.0 {
+        // Orthonormal DCT: constant block = DC/8.
+        let v = coef[0] * q[0] * 0.125;
+        block.fill(v);
+        return;
+    }
+
+    let c = &*DCT_MAT;
+    // Dequantize once per row, tracking which rows are all-zero.
+    let mut fq = [0f32; 64];
+    let mut row_mask = 0u8;
+    for k in 0..8 {
+        let row = &coef[k * 8..k * 8 + 8];
+        if row.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        row_mask |= 1 << k;
+        let qrow = &q[k * 8..k * 8 + 8];
+        let out = &mut fq[k * 8..k * 8 + 8];
+        for j in 0..8 {
+            out[j] = row[j] * qrow[j];
+        }
+    }
+    // Pass 1: tmp = Cᵀ · fq, register accumulators, zero rows skipped.
+    let mut tmp = [0f32; 64];
+    for i in 0..8 {
+        let mut acc = [0f32; 8];
+        for k in 0..8 {
+            if row_mask & (1 << k) == 0 {
+                continue;
+            }
+            let a = c[k][i]; // Cᵀ[i][k]
+            let frow = &fq[k * 8..k * 8 + 8];
+            for j in 0..8 {
+                acc[j] += a * frow[j];
+            }
+        }
+        tmp[i * 8..i * 8 + 8].copy_from_slice(&acc);
+    }
+    // Pass 2: block = tmp · C, register accumulators.
+    for i in 0..8 {
+        let trow = &tmp[i * 8..i * 8 + 8];
+        let mut acc = [0f32; 8];
+        for (k, &t) in trow.iter().enumerate() {
+            let crow = &c[k];
+            for j in 0..8 {
+                acc[j] += t * crow[j];
+            }
+        }
+        block[i * 8..i * 8 + 8].copy_from_slice(&acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dct_matrix_orthonormal() {
+        let c = &*DCT_MAT;
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 = (0..8).map(|k| c[i][k] * c[j][k]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-6, "({i},{j}) -> {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn fdct_idct_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let mut block = [0f32; 64];
+            for v in block.iter_mut() {
+                *v = rng.uniform(-128.0, 127.0) as f32;
+            }
+            let mut coef = [0f32; 64];
+            let mut back = [0f32; 64];
+            fdct_block(&block, &mut coef);
+            idct_block(&coef, &mut back);
+            for i in 0..64 {
+                assert!((block[i] - back[i]).abs() < 1e-3, "{} vs {}", block[i], back[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn dc_coefficient_is_scaled_mean() {
+        let block = [24.0f32; 64];
+        let mut coef = [0f32; 64];
+        fdct_block(&block, &mut coef);
+        // Orthonormal DCT: DC = 8 * mean.
+        assert!((coef[0] - 8.0 * 24.0).abs() < 1e-3, "dc={}", coef[0]);
+        for (i, &c) in coef.iter().enumerate().skip(1) {
+            assert!(c.abs() < 1e-3, "AC[{i}]={c}");
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(2);
+        let mut block = [0f32; 64];
+        for v in block.iter_mut() {
+            *v = rng.uniform(-100.0, 100.0) as f32;
+        }
+        let mut coef = [0f32; 64];
+        fdct_block(&block, &mut coef);
+        let e1: f32 = block.iter().map(|v| v * v).sum();
+        let e2: f32 = coef.iter().map(|v| v * v).sum();
+        assert!((e1 - e2).abs() / e1 < 1e-4, "{e1} vs {e2}");
+    }
+}
+
+#[cfg(test)]
+mod perf_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dequant_idct_block_matches_reference_path() {
+        let mut rng = Rng::new(3);
+        for case in 0..100 {
+            let mut coef = [0f32; 64];
+            // Mix of dense, sparse and DC-only blocks.
+            let density = match case % 3 {
+                0 => 1.0,
+                1 => 0.15,
+                _ => 0.0,
+            };
+            coef[0] = rng.uniform(-500.0, 500.0).round() as f32;
+            for v in coef.iter_mut().skip(1) {
+                if rng.f64() < density {
+                    *v = rng.uniform(-200.0, 200.0).round() as f32;
+                }
+            }
+            let mut q = [0f32; 64];
+            for v in q.iter_mut() {
+                *v = rng.uniform(1.0, 60.0).round() as f32;
+            }
+            // Reference: explicit dequant then plain idct.
+            let mut freq = [0f32; 64];
+            for i in 0..64 {
+                freq[i] = coef[i] * q[i];
+            }
+            let mut want = [0f32; 64];
+            idct_block(&freq, &mut want);
+            // Fused fast path.
+            let mut got = [1234f32; 64]; // poison to catch missed writes
+            dequant_idct_block(&coef, &q, &mut got);
+            for i in 0..64 {
+                assert!(
+                    (want[i] - got[i]).abs() < 2e-2,
+                    "case {case} idx {i}: {} vs {}",
+                    want[i],
+                    got[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dc_only_fast_path_exact() {
+        let mut coef = [0f32; 64];
+        coef[0] = 24.0;
+        let q = [3.0f32; 64];
+        let mut out = [0f32; 64];
+        dequant_idct_block(&coef, &q, &mut out);
+        for &v in &out {
+            assert!((v - 24.0 * 3.0 / 8.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Entropy coding for quantized coefficient blocks: zigzag scan, zero-run
+//! RLE, signed varints.  This is the "CPU half" of hybrid decode (the role
+//! Huffman plays in nvJPEG): cheap, branchy, inherently serial per block —
+//! exactly the stage the paper leaves on the CPU.
+//!
+//! Per block (64 coeffs in zigzag order):
+//!   token 0x00..=0x3E : run of `token` zeros, then one signed-varint coeff
+//!   token 0x3F        : EOB — all remaining coefficients are zero
+//! Blocks are byte-aligned; the stream needs no global terminator.
+
+use super::quant::ZIGZAG;
+use anyhow::{bail, Result};
+
+pub const EOB: u8 = 0x3F;
+const MAX_RUN: u8 = 0x3E;
+
+/// ZigZag-encode a signed int into unsigned LEB128 space.
+#[inline]
+fn zz_enc(v: i32) -> u32 {
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+#[inline]
+fn zz_dec(u: u32) -> i32 {
+    ((u >> 1) as i32) ^ -((u & 1) as i32)
+}
+
+fn put_varint(out: &mut Vec<u8>, mut u: u32) {
+    loop {
+        let b = (u & 0x7F) as u8;
+        u >>= 7;
+        if u == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+pub struct EntropyWriter<'a> {
+    out: &'a mut Vec<u8>,
+}
+
+impl<'a> EntropyWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        EntropyWriter { out }
+    }
+
+    /// Write one quantized 8x8 block given in *natural* order.
+    pub fn write_block(&mut self, quantized: &[i32; 64]) -> Result<()> {
+        let mut run: u8 = 0;
+        // Find last nonzero in zigzag order for EOB placement.
+        let mut last_nz: i32 = -1;
+        for zi in (0..64).rev() {
+            if quantized[ZIGZAG[zi]] != 0 {
+                last_nz = zi as i32;
+                break;
+            }
+        }
+        for zi in 0..=last_nz.max(-1) {
+            let v = quantized[ZIGZAG[zi as usize]];
+            if v == 0 {
+                run += 1;
+                if run == MAX_RUN {
+                    // Emit max-run token with a literal zero to reset.
+                    self.out.push(MAX_RUN - 1);
+                    put_varint(self.out, zz_enc(0));
+                    run = 0;
+                }
+            } else {
+                self.out.push(run);
+                put_varint(self.out, zz_enc(v));
+                run = 0;
+            }
+        }
+        self.out.push(EOB);
+        Ok(())
+    }
+
+    pub fn finish(self) -> Result<()> {
+        Ok(())
+    }
+}
+
+pub struct EntropyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> EntropyReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        EntropyReader { buf, pos: 0 }
+    }
+
+    #[inline]
+    fn byte(&mut self) -> Result<u8> {
+        match self.buf.get(self.pos) {
+            Some(&b) => {
+                self.pos += 1;
+                Ok(b)
+            }
+            None => bail!("entropy stream truncated at {}", self.pos),
+        }
+    }
+
+    fn get_varint(&mut self) -> Result<u32> {
+        let mut u: u32 = 0;
+        let mut shift = 0;
+        loop {
+            let b = self.byte()?;
+            u |= ((b & 0x7F) as u32) << shift;
+            if b & 0x80 == 0 {
+                return Ok(u);
+            }
+            shift += 7;
+            if shift > 28 {
+                bail!("varint overflow");
+            }
+        }
+    }
+
+    /// Read one block into `quantized` (natural order, zigzag inverted
+    /// by the caller if it wants scan order — we fill natural directly).
+    pub fn read_block(&mut self, quantized: &mut [i32; 64]) -> Result<()> {
+        quantized.fill(0);
+        let mut zi = 0usize;
+        loop {
+            let tok = self.byte()?;
+            if tok == EOB {
+                return Ok(());
+            }
+            let run = tok as usize;
+            if run > MAX_RUN as usize {
+                bail!("bad entropy token {tok:#x}");
+            }
+            zi += run;
+            if zi >= 64 {
+                bail!("zero run past block end");
+            }
+            let v = zz_dec(self.get_varint()?);
+            quantized[zi] = v; // zigzag position; caller maps via ZIGZAG
+            zi += 1;
+            if zi > 64 {
+                bail!("block overflow");
+            }
+        }
+    }
+
+    pub fn bytes_consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(blocks: &[[i32; 64]]) {
+        let mut out = Vec::new();
+        {
+            let mut w = EntropyWriter::new(&mut out);
+            for b in blocks {
+                w.write_block(b).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let mut r = EntropyReader::new(&out);
+        for b in blocks {
+            let mut got = [0i32; 64];
+            r.read_block(&mut got).unwrap();
+            // Writer takes natural order; reader returns zigzag positions.
+            let mut expect = [0i32; 64];
+            for zi in 0..64 {
+                expect[zi] = b[ZIGZAG[zi]];
+            }
+            assert_eq!(got, expect);
+        }
+        assert_eq!(r.bytes_consumed(), out.len());
+    }
+
+    #[test]
+    fn zz_int_codec() {
+        for v in [0i32, 1, -1, 2, -2, 127, -128, 30_000, -30_000, i32::MAX / 2] {
+            assert_eq!(zz_dec(zz_enc(v)), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_zero_block() {
+        roundtrip(&[[0i32; 64]]);
+    }
+
+    #[test]
+    fn roundtrip_dense_block() {
+        let mut b = [0i32; 64];
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = (i as i32 - 32) * 3;
+        }
+        roundtrip(&[b]);
+    }
+
+    #[test]
+    fn roundtrip_sparse_random_blocks() {
+        let mut rng = Rng::new(5);
+        let mut blocks = Vec::new();
+        for _ in 0..200 {
+            let mut b = [0i32; 64];
+            for v in b.iter_mut() {
+                if rng.f64() < 0.15 {
+                    *v = rng.uniform(-500.0, 500.0) as i32;
+                }
+            }
+            blocks.push(b);
+        }
+        roundtrip(&blocks);
+    }
+
+    #[test]
+    fn trailing_zeros_cost_one_byte() {
+        let mut b = [0i32; 64];
+        b[0] = 5;
+        let mut out = Vec::new();
+        let mut w = EntropyWriter::new(&mut out);
+        w.write_block(&b).unwrap();
+        // run=0 token + 1-byte varint + EOB = 3 bytes.
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut out = Vec::new();
+        let mut w = EntropyWriter::new(&mut out);
+        let mut b = [0i32; 64];
+        b[63] = 9;
+        w.write_block(&b).unwrap();
+        let mut r = EntropyReader::new(&out[..out.len() - 2]);
+        let mut got = [0i32; 64];
+        assert!(r.read_block(&mut got).is_err());
+    }
+}

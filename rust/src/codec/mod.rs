@@ -1,0 +1,295 @@
+//! MJX: a JPEG-like block-DCT image codec built for this reproduction.
+//!
+//! The paper's preprocessing hot spot is JPEG decode (Fig. 3: 47.7 % of
+//! per-image CPU time), and DALI's key trick is *hybrid* decode: CPU
+//! entropy (Huffman) stage + GPU dequant/IDCT stage.  MJX mirrors that
+//! structure with a self-contained format:
+//!
+//! ```text
+//! encode:  pixels --level-shift--> fDCT (8x8) --quantize--> zigzag
+//!          --RLE+varint entropy code--> bitstream
+//! decode:  bitstream --entropy decode--> coefficients
+//!          --dequant + IDCT--> pixels            (decode_cpu: all on CPU)
+//!          `--> ship coefficients to accelerator (entropy_decode: hybrid)
+//! ```
+//!
+//! The accelerator half of the hybrid path is the Pallas kernel in
+//! `python/compile/kernels/dct.py`, compiled into `artifacts/decode_*.hlo.txt`;
+//! the CPU IDCT here implements the *same math* so both paths agree
+//! (cross-checked in `rust/tests/artifact_parity.rs`).
+
+mod dct;
+mod entropy;
+mod quant;
+
+pub use dct::{dequant_idct_block, fdct_block, idct_block, DCT_MAT};
+pub use entropy::{EntropyReader, EntropyWriter};
+pub use quant::{qtable_for_quality, BASE_QTABLE, ZIGZAG};
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"MJX1";
+
+/// A decoded planar image: `data[c*h*w + y*w + x]`, pixel range 0..=255.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Image { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    pub fn plane(&self, ch: usize) -> &[u8] {
+        &self.data[ch * self.h * self.w..(ch + 1) * self.h * self.w]
+    }
+
+    pub fn pixel(&self, ch: usize, y: usize, x: usize) -> u8 {
+        self.data[ch * self.h * self.w + y * self.w + x]
+    }
+
+    /// Convert to f32 pixels (same planar layout), for the augment ops.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&b| b as f32).collect()
+    }
+}
+
+/// Entropy-decoded (but not yet inverse-transformed) coefficients —
+/// what the CPU hands to the accelerator in hybrid decode.
+///
+/// `coefs` holds quantized coefficients in natural (row-major) block
+/// order, laid out `[c][by][bx][8][8]`, ready for the `decode_*` HLO
+/// artifact (shape `[B, C, H/8, W/8, 8, 8]` once batched).
+#[derive(Clone, Debug)]
+pub struct CoefImage {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub quality: u8,
+    pub coefs: Vec<f32>,
+    pub qtable: [f32; 64],
+}
+
+/// Encode a planar image into an MJX bitstream.
+///
+/// Header: MAGIC, version-free (quality determines the qtable), then
+/// `h:u16 w:u16 c:u8 quality:u8`, then entropy-coded blocks channel-major.
+pub fn encode(img: &Image, quality: u8) -> Result<Vec<u8>> {
+    ensure!(img.h % 8 == 0 && img.w % 8 == 0, "MJX requires 8-aligned dims");
+    ensure!(img.h <= u16::MAX as usize && img.w <= u16::MAX as usize, "image too large");
+    ensure!((1..=100).contains(&quality), "quality must be 1..=100");
+    let q = qtable_for_quality(quality);
+    let mut out = Vec::with_capacity(img.data.len() / 4 + 16);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(img.h as u16).to_le_bytes());
+    out.extend_from_slice(&(img.w as u16).to_le_bytes());
+    out.push(img.c as u8);
+    out.push(quality);
+
+    let mut writer = EntropyWriter::new(&mut out);
+    let (bh, bw) = (img.h / 8, img.w / 8);
+    let mut block = [0f32; 64];
+    let mut coef = [0f32; 64];
+    let mut quantized = [0i32; 64];
+    for ch in 0..img.c {
+        let plane = img.plane(ch);
+        for by in 0..bh {
+            for bx in 0..bw {
+                // Gather + level shift.
+                for y in 0..8 {
+                    let row = &plane[(by * 8 + y) * img.w + bx * 8..][..8];
+                    for x in 0..8 {
+                        block[y * 8 + x] = row[x] as f32 - 128.0;
+                    }
+                }
+                fdct_block(&block, &mut coef);
+                for i in 0..64 {
+                    quantized[i] = (coef[i] / q[i]).round() as i32;
+                }
+                writer.write_block(&quantized)?;
+            }
+        }
+    }
+    writer.finish()?;
+    Ok(out)
+}
+
+fn parse_header(bytes: &[u8]) -> Result<(usize, usize, usize, u8, usize)> {
+    ensure!(bytes.len() >= 10, "truncated MJX header");
+    if &bytes[..4] != MAGIC {
+        bail!("bad MJX magic {:02x?}", &bytes[..4]);
+    }
+    let h = u16::from_le_bytes([bytes[4], bytes[5]]) as usize;
+    let w = u16::from_le_bytes([bytes[6], bytes[7]]) as usize;
+    let c = bytes[8] as usize;
+    let quality = bytes[9];
+    ensure!(h % 8 == 0 && w % 8 == 0 && h > 0 && w > 0, "bad dims {h}x{w}");
+    ensure!(c >= 1 && c <= 4, "bad channel count {c}");
+    ensure!((1..=100).contains(&quality), "bad quality {quality}");
+    Ok((h, w, c, quality, 10))
+}
+
+/// Stage 1 of decode: entropy decode only (the CPU half of hybrid decode).
+pub fn entropy_decode(bytes: &[u8]) -> Result<CoefImage> {
+    let (h, w, c, quality, off) = parse_header(bytes)?;
+    let q = qtable_for_quality(quality);
+    let nblocks = c * (h / 8) * (w / 8);
+    let mut coefs = vec![0f32; nblocks * 64];
+    let mut reader = EntropyReader::new(&bytes[off..]);
+    let mut quantized = [0i32; 64];
+    for b in 0..nblocks {
+        reader.read_block(&mut quantized).with_context(|| format!("block {b}"))?;
+        let dst = &mut coefs[b * 64..][..64];
+        // Inverse zigzag into natural order, as f32 (artifact input format).
+        for (zi, &nat) in ZIGZAG.iter().enumerate() {
+            dst[nat] = quantized[zi] as f32;
+        }
+    }
+    Ok(CoefImage { c, h, w, quality, coefs, qtable: q })
+}
+
+/// Stage 2 of decode on the CPU: dequantize + IDCT (mirror of the Pallas
+/// kernel's math).  Shared by `decode_cpu`.
+pub fn coefs_to_image(ci: &CoefImage) -> Image {
+    let mut img = Image::new(ci.c, ci.h, ci.w);
+    let (bh, bw) = (ci.h / 8, ci.w / 8);
+    let mut pix = [0f32; 64];
+    for ch in 0..ci.c {
+        for by in 0..bh {
+            for bx in 0..bw {
+                let b = (ch * bh + by) * bw + bx;
+                let src: &[f32; 64] = ci.coefs[b * 64..][..64].try_into().unwrap();
+                dequant_idct_block(src, &ci.qtable, &mut pix);
+                let base = ch * ci.h * ci.w + by * 8 * ci.w + bx * 8;
+                for y in 0..8 {
+                    let prow = &pix[y * 8..y * 8 + 8];
+                    let orow = &mut img.data[base + y * ci.w..base + y * ci.w + 8];
+                    for x in 0..8 {
+                        orow[x] = (prow[x] + 128.0).clamp(0.0, 255.0).round() as u8;
+                    }
+                }
+            }
+        }
+    }
+    img
+}
+
+/// Full CPU decode (entropy + dequant + IDCT) — the `cpu` placement path.
+pub fn decode_cpu(bytes: &[u8]) -> Result<Image> {
+    let ci = entropy_decode(bytes)?;
+    Ok(coefs_to_image(&ci))
+}
+
+/// Peek image dims without decoding.
+pub fn probe(bytes: &[u8]) -> Result<(usize, usize, usize, u8)> {
+    let (h, w, c, q, _) = parse_header(bytes)?;
+    Ok((c, h, w, q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn smooth_image(seed: u64, c: usize, h: usize, w: usize) -> Image {
+        // Smooth content compresses like natural images (codec-friendly).
+        let mut img = Image::new(c, h, w);
+        let mut rng = Rng::new(seed);
+        let fx = rng.uniform(0.02, 0.2);
+        let fy = rng.uniform(0.02, 0.2);
+        for ch in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    let v = 128.0
+                        + 80.0 * ((x as f64 * fx).sin() * (y as f64 * fy).cos())
+                        + 20.0 * ((ch + 1) as f64);
+                    img.data[ch * h * w + y * w + x] = v.clamp(0.0, 255.0) as u8;
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn roundtrip_high_quality_is_close() {
+        let img = smooth_image(1, 3, 64, 64);
+        let bytes = encode(&img, 95).unwrap();
+        let dec = decode_cpu(&bytes).unwrap();
+        assert_eq!((dec.c, dec.h, dec.w), (3, 64, 64));
+        let max_err = img
+            .data
+            .iter()
+            .zip(&dec.data)
+            .map(|(&a, &b)| (a as i32 - b as i32).abs())
+            .max()
+            .unwrap();
+        assert!(max_err <= 12, "max pixel error {max_err}");
+    }
+
+    #[test]
+    fn roundtrip_error_grows_as_quality_drops() {
+        let img = smooth_image(2, 3, 64, 64);
+        let err = |q: u8| {
+            let dec = decode_cpu(&encode(&img, q).unwrap()).unwrap();
+            img.data
+                .iter()
+                .zip(&dec.data)
+                .map(|(&a, &b)| (a as i64 - b as i64).pow(2))
+                .sum::<i64>() as f64
+                / img.data.len() as f64
+        };
+        let (e95, e50, e10) = (err(95), err(50), err(10));
+        assert!(e95 <= e50 && e50 <= e10, "{e95} {e50} {e10}");
+        assert!(e95 < 20.0, "high quality MSE too big: {e95}");
+    }
+
+    #[test]
+    fn lower_quality_compresses_smaller() {
+        let img = smooth_image(3, 3, 64, 64);
+        let hi = encode(&img, 95).unwrap().len();
+        let lo = encode(&img, 20).unwrap().len();
+        assert!(lo < hi, "q20 {lo} >= q95 {hi}");
+        assert!(hi < img.data.len(), "no compression at q95: {hi}");
+    }
+
+    #[test]
+    fn hybrid_path_equals_cpu_path() {
+        let img = smooth_image(4, 3, 64, 64);
+        let bytes = encode(&img, 80).unwrap();
+        let full = decode_cpu(&bytes).unwrap();
+        let staged = coefs_to_image(&entropy_decode(&bytes).unwrap());
+        assert_eq!(full, staged);
+    }
+
+    #[test]
+    fn probe_reads_header() {
+        let img = smooth_image(5, 1, 16, 24);
+        let bytes = encode(&img, 70).unwrap();
+        assert_eq!(probe(&bytes).unwrap(), (1, 16, 24, 70));
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let img = smooth_image(6, 1, 16, 16);
+        let mut bytes = encode(&img, 70).unwrap();
+        assert!(decode_cpu(&bytes[..5]).is_err());
+        bytes[0] = b'X';
+        assert!(decode_cpu(&bytes).is_err());
+    }
+
+    #[test]
+    fn random_noise_roundtrips_dims() {
+        // Noise is worst-case for the codec but must still round-trip shape.
+        let mut rng = Rng::new(7);
+        let mut img = Image::new(2, 32, 40);
+        for b in img.data.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let dec = decode_cpu(&encode(&img, 50).unwrap()).unwrap();
+        assert_eq!((dec.c, dec.h, dec.w), (2, 32, 40));
+    }
+}

@@ -1,0 +1,85 @@
+//! Quantization tables and zigzag scan order (JPEG Annex K conventions).
+
+/// JPEG luminance base quantization table (natural row-major order).
+pub const BASE_QTABLE: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61,
+    12, 12, 14, 19, 26, 58, 60, 55,
+    14, 13, 16, 24, 40, 57, 69, 56,
+    14, 17, 22, 29, 51, 87, 80, 62,
+    18, 22, 37, 56, 68, 109, 103, 77,
+    24, 35, 55, 64, 81, 104, 113, 92,
+    49, 64, 78, 87, 103, 121, 120, 101,
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// Zigzag order: `ZIGZAG[zi]` = natural index of the zi-th scanned coeff.
+pub const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10,
+    17, 24, 32, 25, 18, 11, 4, 5,
+    12, 19, 26, 33, 40, 48, 41, 34,
+    27, 20, 13, 6, 7, 14, 21, 28,
+    35, 42, 49, 56, 57, 50, 43, 36,
+    29, 22, 15, 23, 30, 37, 44, 51,
+    58, 59, 52, 45, 38, 31, 39, 46,
+    53, 60, 61, 54, 47, 55, 62, 63,
+];
+
+/// Scale the base table by quality 1..=100 (libjpeg convention), returned
+/// in natural order as f32 (the dequant factor used by CPU and kernel).
+pub fn qtable_for_quality(quality: u8) -> [f32; 64] {
+    let q = quality.clamp(1, 100) as i32;
+    let scale = if q < 50 { 5000 / q } else { 200 - 2 * q };
+    let mut out = [0f32; 64];
+    for i in 0..64 {
+        let v = (BASE_QTABLE[i] as i32 * scale + 50) / 100;
+        out[i] = v.clamp(1, 255) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for &i in &ZIGZAG {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn zigzag_first_entries() {
+        assert_eq!(&ZIGZAG[..6], &[0, 1, 8, 16, 9, 2]);
+    }
+
+    #[test]
+    fn quality_50_is_base() {
+        let q = qtable_for_quality(50);
+        for i in 0..64 {
+            assert_eq!(q[i], BASE_QTABLE[i] as f32);
+        }
+    }
+
+    #[test]
+    fn quality_monotone() {
+        // Higher quality -> smaller (or equal) quantization steps.
+        let q90 = qtable_for_quality(90);
+        let q30 = qtable_for_quality(30);
+        for i in 0..64 {
+            assert!(q90[i] <= q30[i]);
+        }
+        assert!(qtable_for_quality(100).iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn table_clamped() {
+        for q in [1u8, 5, 25, 50, 75, 100] {
+            for v in qtable_for_quality(q) {
+                assert!((1.0..=255.0).contains(&v));
+            }
+        }
+    }
+}

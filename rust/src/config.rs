@@ -1,0 +1,262 @@
+//! Run configuration: the paper's experimental axes as a first-class
+//! config object (JSON-serializable, CLI-overridable).
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Loading method (paper §2.2): raw files vs record shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Raw,
+    Record,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "raw" => Ok(Method::Raw),
+            "record" => Ok(Method::Record),
+            _ => bail!("method must be raw|record, got {s}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Raw => "raw",
+            Method::Record => "record",
+        }
+    }
+}
+
+/// Operator placement (paper §2.2.3, §4):
+/// * `Cpu`     — whole pipeline on CPU (the frameworks' built-in loaders).
+/// * `Hybrid`  — entropy decode on CPU, dequant+IDCT+augment on the device
+///               (DALI's hybrid decode).
+/// * `Hybrid0` — full decode on CPU, only augmentation on the device
+///               (the paper's "hybrid-0" that saves device cycles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    Cpu,
+    Hybrid,
+    Hybrid0,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s {
+            "cpu" => Ok(Placement::Cpu),
+            "hybrid" => Ok(Placement::Hybrid),
+            "hybrid0" | "hybrid-0" => Ok(Placement::Hybrid0),
+            _ => bail!("placement must be cpu|hybrid|hybrid0, got {s}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Cpu => "cpu",
+            Placement::Hybrid => "hybrid",
+            Placement::Hybrid0 => "hybrid0",
+        }
+    }
+
+    /// Does this placement run anything on the device before training?
+    pub fn uses_device_preproc(&self) -> bool {
+        !matches!(self, Placement::Cpu)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory holding the raw corpus (img/*.mjx + metadata.tsv) and/or
+    /// the `records/` subdirectory with shards.
+    pub data_dir: PathBuf,
+    /// Directory with AOT artifacts (manifest.json + *.hlo.txt).
+    pub artifact_dir: PathBuf,
+    pub method: Method,
+    pub placement: Placement,
+    /// Storage emulation: "local" (no throttle), "ebs", "nvme", "dram".
+    pub storage: String,
+    /// Scale factor on emulated storage delays (test speed knob).
+    pub time_scale: f64,
+    pub model: String,
+    pub batch_size: usize,
+    /// CPU worker threads for read+decode+augment.
+    pub cpu_workers: usize,
+    /// Bounded queue depth, in batches, between stages (prefetch depth).
+    pub queue_depth: usize,
+    /// Stop after this many train steps (0 = run exactly one epoch).
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Ideal mode: preload one batch and train on it repeatedly (the
+    /// paper's "ideal" upper-bound line in Fig. 2).
+    pub ideal: bool,
+    /// If false, run preprocessing only (Fig. 3 breakdown mode).
+    pub train: bool,
+    /// Record-method chunk size in bytes (sequential read unit).
+    pub record_chunk: usize,
+    /// Shuffle-buffer size (in samples) for record streaming.
+    pub shuffle_buffer: usize,
+    /// Utilization sampling period in seconds (0 = no trace).
+    pub sample_period: f64,
+    /// Epochs to run when `steps == 0` (each is a full pass).
+    pub epochs: usize,
+    /// DRAM cache budget over the storage backend, MiB (0 = no cache) —
+    /// the OneAccess/HiPC'19-style cache from the paper's related work.
+    pub cache_mb: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            data_dir: PathBuf::from("data"),
+            artifact_dir: PathBuf::from("artifacts"),
+            method: Method::Record,
+            placement: Placement::Hybrid,
+            storage: "local".into(),
+            time_scale: 1.0,
+            model: "resnet_t".into(),
+            batch_size: 32,
+            cpu_workers: 2,
+            queue_depth: 4,
+            steps: 0,
+            lr: 0.05,
+            seed: 42,
+            ideal: false,
+            train: true,
+            record_chunk: 1 << 20,
+            shuffle_buffer: 256,
+            sample_period: 0.0,
+            epochs: 1,
+            cache_mb: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 {
+            bail!("batch_size must be > 0");
+        }
+        if self.cpu_workers == 0 {
+            bail!("cpu_workers must be > 0");
+        }
+        if self.epochs == 0 {
+            bail!("epochs must be >= 1");
+        }
+        if self.train && self.model.is_empty() {
+            bail!("train=true requires a model");
+        }
+        if !matches!(self.storage.as_str(), "local" | "ebs" | "nvme" | "dram") {
+            bail!("storage must be local|ebs|nvme|dram, got {}", self.storage);
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (--model, --method, --placement, ...).
+    pub fn apply_args(&mut self, args: &crate::util::cli::Args) -> Result<()> {
+        if let Some(v) = args.get("data-dir") {
+            self.data_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("method") {
+            self.method = Method::parse(v)?;
+        }
+        if let Some(v) = args.get("placement") {
+            self.placement = Placement::parse(v)?;
+        }
+        if let Some(v) = args.get("storage") {
+            self.storage = v.to_string();
+        }
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        self.time_scale = args.get_f64("time-scale", self.time_scale);
+        self.batch_size = args.get_usize("batch", self.batch_size);
+        self.cpu_workers = args.get_usize("workers", self.cpu_workers);
+        self.queue_depth = args.get_usize("queue-depth", self.queue_depth);
+        self.steps = args.get_usize("steps", self.steps);
+        self.lr = args.get_f64("lr", self.lr as f64) as f32;
+        self.seed = args.get_u64("seed", self.seed);
+        self.epochs = args.get_usize("epochs", self.epochs).max(1);
+        self.cache_mb = args.get_usize("cache-mb", self.cache_mb);
+        if args.has_flag("ideal") {
+            self.ideal = true;
+        }
+        if args.has_flag("no-train") {
+            self.train = false;
+        }
+        self.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("data_dir", Json::str(&self.data_dir.to_string_lossy())),
+            ("method", Json::str(self.method.name())),
+            ("placement", Json::str(self.placement.name())),
+            ("storage", Json::str(&self.storage)),
+            ("model", Json::str(&self.model)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("cpu_workers", Json::num(self.cpu_workers as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("ideal", Json::Bool(self.ideal)),
+            ("train", Json::Bool(self.train)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Method::parse("raw").unwrap(), Method::Raw);
+        assert!(Method::parse("zip").is_err());
+        assert_eq!(Placement::parse("hybrid-0").unwrap(), Placement::Hybrid0);
+        assert!(Placement::Cpu.uses_device_preproc() == false);
+        assert!(Placement::Hybrid.uses_device_preproc());
+    }
+
+    #[test]
+    fn args_override() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "run --model alexnet_t --method raw --placement cpu --workers 4 --steps 7 --ideal"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.model, "alexnet_t");
+        assert_eq!(cfg.method, Method::Raw);
+        assert_eq!(cfg.placement, Placement::Cpu);
+        assert_eq!(cfg.cpu_workers, 4);
+        assert_eq!(cfg.steps, 7);
+        assert!(cfg.ideal);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = RunConfig::default();
+        cfg.batch_size = 0;
+        assert!(cfg.validate().is_err());
+        cfg = RunConfig::default();
+        cfg.storage = "tape".into();
+        assert!(cfg.validate().is_err());
+        assert!(RunConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn json_dump_contains_axes() {
+        let j = RunConfig::default().to_json().dump();
+        assert!(j.contains("\"method\":\"record\""));
+        assert!(j.contains("\"placement\":\"hybrid\""));
+    }
+}

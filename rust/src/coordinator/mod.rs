@@ -1,0 +1,9 @@
+//! The run coordinator: builds the whole pipeline from a `RunConfig`,
+//! spawns the stage threads, runs one epoch (or `steps` train steps), and
+//! assembles the `RunReport`.  This is the L3 entry point used by the CLI,
+//! the examples and the benches.
+
+pub mod runner;
+pub mod shard_plan;
+
+pub use runner::{prepare_data, run, DataLayout};

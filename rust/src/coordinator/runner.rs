@@ -1,0 +1,395 @@
+//! Pipeline assembly and execution.
+
+use crate::config::{Method, Placement, RunConfig};
+use crate::dataset::{self, GenConfig, MetaEntry};
+use crate::metrics::{BusyClock, Counters, RunReport, UtilSampler};
+use crate::ops::sample_aug_params;
+use crate::pipeline::channel::{bounded, Receiver};
+use crate::pipeline::shuffle::ShuffleBuffer;
+use crate::pipeline::source::{list_shards, stream_shards, WorkItem};
+use crate::pipeline::{collate, cpu_stage, Batch, Sample};
+use crate::runtime::{lit_f32, Engine};
+use crate::storage::{CachedStore, DirStore, MemStore, Storage, StorageProfile, ThrottledStore};
+use crate::trainer::TrainSession;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Where a corpus lives on disk after `prepare_data`.
+#[derive(Clone, Debug)]
+pub struct DataLayout {
+    pub entries: Vec<MetaEntry>,
+    pub shards: Vec<String>,
+}
+
+/// Generate the synthetic corpus + record shards under `dir` (idempotent:
+/// re-generates only when missing).  The offline phase of the paper.
+pub fn prepare_data(dir: &std::path::Path, gen: &GenConfig, n_shards: usize) -> Result<DataLayout> {
+    let store = DirStore::new(dir)?;
+    let entries = if dir.join(dataset::META_FILE).exists() {
+        dataset::parse_metadata(std::str::from_utf8(&store.read(dataset::META_FILE)?)?)?
+    } else {
+        dataset::generate_raw(&store, gen)?
+    };
+    let rec_dir = dir.join("records");
+    let shards = if rec_dir.exists() {
+        list_shards(&store, "records/")?
+    } else {
+        dataset::build_records(&store, &entries, &rec_dir, n_shards)?
+            .into_iter()
+            .map(|s| format!("records/{s}"))
+            .collect()
+    };
+    Ok(DataLayout { entries, shards })
+}
+
+fn build_storage(cfg: &RunConfig) -> Result<Arc<dyn Storage>> {
+    let base = DirStore::new(&cfg.data_dir)?;
+    let store: Arc<dyn Storage> = match cfg.storage.as_str() {
+        "local" => Arc::new(base),
+        "dram" => Arc::new(MemStore::preload_from(&base)?),
+        name => {
+            let prof = StorageProfile::by_name(name)
+                .with_context(|| format!("unknown storage {name}"))?;
+            Arc::new(ThrottledStore::with_time_scale(base, prof, cfg.time_scale))
+        }
+    };
+    Ok(if cfg.cache_mb > 0 {
+        Arc::new(CachedStore::new(store, cfg.cache_mb << 20))
+    } else {
+        store
+    })
+}
+
+/// Run the full pipeline per the config; returns the run report.
+pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    cfg.validate()?;
+    let storage = build_storage(cfg)?;
+    let meta = dataset::parse_metadata(std::str::from_utf8(
+        &storage.read(dataset::META_FILE)?,
+    )?)?;
+    ensure!(!meta.is_empty(), "empty dataset at {:?}", cfg.data_dir);
+
+    let counters = Arc::new(Counters::default());
+    let cpu_clock = BusyClock::new(cfg.cpu_workers);
+    let dev_clock = BusyClock::new(1);
+
+    let (work_tx, work_rx) = bounded::<WorkItem>(cfg.cpu_workers * 2 + cfg.batch_size);
+    let (sample_tx, sample_rx) = bounded::<Sample>(cfg.queue_depth * cfg.batch_size);
+    let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_depth.max(1));
+
+    let t0 = Instant::now();
+    let mut threads: Vec<std::thread::JoinHandle<Result<()>>> = Vec::new();
+
+    // ---- source ---------------------------------------------------------
+    {
+        let cfg = cfg.clone();
+        let storage = storage.clone();
+        let meta = meta.clone();
+        let counters = counters.clone();
+        threads.push(std::thread::Builder::new().name("source".into()).spawn(move || {
+            'epochs: for epoch in 0..cfg.epochs as u64 {
+                match cfg.method {
+                    Method::Raw => {
+                        let sampler = dataset::EpochSampler::new(
+                            meta.iter().map(|e| e.id).collect(),
+                            cfg.batch_size * 4,
+                            cfg.seed,
+                        );
+                        for id in sampler.epoch_order(epoch) {
+                            let e = &meta[id as usize];
+                            let item = WorkItem::RawRef {
+                                id: e.id,
+                                label: e.label,
+                                path: e.path.clone(),
+                            };
+                            if work_tx.send(item).is_err() {
+                                break 'epochs; // downstream hit its budget
+                            }
+                        }
+                    }
+                    Method::Record => {
+                        let mut shards = list_shards(storage.as_ref(), "records/")?;
+                        ensure!(!shards.is_empty(), "no record shards under {:?}", cfg.data_dir);
+                        let mut rng = Rng::new(cfg.seed).fork(epoch);
+                        rng.shuffle(&mut shards);
+                        let mut sb = ShuffleBuffer::new(cfg.shuffle_buffer, rng.fork(1));
+                        let mut open = true;
+                        stream_shards(storage.clone(), &shards, cfg.record_chunk, |rec| {
+                            counters.images_read(1);
+                            if let Some(evicted) = sb.push(rec) {
+                                let item = WorkItem::Bytes {
+                                    id: evicted.id,
+                                    label: evicted.label,
+                                    payload: evicted.payload,
+                                };
+                                if work_tx.send(item).is_err() {
+                                    open = false;
+                                    return Ok(false);
+                                }
+                            }
+                            Ok(true)
+                        })?;
+                        if open {
+                            for rec in sb.drain() {
+                                let item = WorkItem::Bytes {
+                                    id: rec.id,
+                                    label: rec.label,
+                                    payload: rec.payload,
+                                };
+                                if work_tx.send(item).is_err() {
+                                    break 'epochs;
+                                }
+                            }
+                        } else {
+                            break 'epochs;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?);
+    }
+
+    // ---- cpu workers ------------------------------------------------------
+    for w in 0..cfg.cpu_workers {
+        let cfg = cfg.clone();
+        let storage = storage.clone();
+        let counters = counters.clone();
+        let cpu_clock = cpu_clock.clone();
+        let work_rx = work_rx.clone();
+        let sample_tx = sample_tx.clone();
+        threads.push(std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
+            let out_hw = 56; // manifest.out_hw; validated on the device side
+            while let Some(item) = work_rx.recv() {
+                let (id, label, bytes) = match item {
+                    WorkItem::RawRef { id, label, path } => {
+                        let b = storage.read(&path)?;
+                        counters.images_read(1);
+                        (id, label, b)
+                    }
+                    WorkItem::Bytes { id, label, payload } => (id, label, payload),
+                };
+                let mut rng = Rng::new(cfg.seed ^ 0x5EED).fork(id);
+                let (c, h, wid, _q) = crate::codec::probe(&bytes)?;
+                ensure!(c == 3, "expected RGB, got {c} channels");
+                let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
+                let payload =
+                    cpu_clock.track(|| cpu_stage(&bytes, cfg.placement, aug, out_hw))?;
+                counters.images_decoded(1);
+                if matches!(cfg.placement, Placement::Cpu) {
+                    counters.images_augmented(1);
+                }
+                if sample_tx.send(Sample { id, label, payload }).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        })?);
+    }
+    drop(work_rx);
+    drop(sample_tx);
+
+    // ---- batcher ----------------------------------------------------------
+    {
+        let b = cfg.batch_size;
+        let counters = counters.clone();
+        threads.push(std::thread::Builder::new().name("batcher".into()).spawn(move || {
+            let mut acc: Vec<Sample> = Vec::with_capacity(b);
+            while let Some(s) = sample_rx.recv() {
+                acc.push(s);
+                if acc.len() == b {
+                    let batch = collate(std::mem::take(&mut acc))
+                        .map_err(|_| anyhow::anyhow!("mixed payload kinds in batch"))?;
+                    counters.batches_built(1);
+                    if batch_tx.send(batch).is_err() {
+                        return Ok(());
+                    }
+                    acc = Vec::with_capacity(b);
+                }
+            }
+            // Partial trailing batch is dropped (standard drop_last=True).
+            Ok(())
+        })?);
+    }
+
+    // ---- utilization sampler ---------------------------------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let trace = Arc::new(Mutex::new(UtilSampler::new()));
+    if cfg.sample_period > 0.0 {
+        let stop = stop.clone();
+        let trace = trace.clone();
+        let cpu_clock = cpu_clock.clone();
+        let dev_clock = dev_clock.clone();
+        let storage = storage.clone();
+        let period = cfg.sample_period;
+        std::thread::Builder::new().name("sampler".into()).spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_secs_f64(period));
+                trace.lock().unwrap().sample(&cpu_clock, &dev_clock, storage.stats().0);
+            }
+        })?;
+    }
+
+    // ---- device thread (runs inline on this thread) -----------------------
+    let device_out = device_loop(cfg, batch_rx, &dev_clock, &counters)?;
+    stop.store(true, Ordering::Relaxed);
+
+    for t in threads {
+        match t.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                // Source/worker errors after device stop are expected closes.
+                if !device_out.finished_early {
+                    return Err(e);
+                }
+            }
+            Err(_) => bail!("pipeline thread panicked"),
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = counters.snapshot();
+    let (io_bytes, _) = storage.stats();
+    let trained_images = device_out.steps * cfg.batch_size as u64;
+    let util_trace = std::mem::take(&mut trace.lock().unwrap().samples);
+    Ok(RunReport {
+        images: snap.images_decoded,
+        steps: device_out.steps,
+        wall_secs: wall,
+        preproc_ips: snap.images_decoded as f64 / wall,
+        train_ips: trained_images as f64 / wall,
+        cpu_util: cpu_clock.utilization(wall),
+        device_util: dev_clock.utilization(wall),
+        io_bytes,
+        losses: device_out.losses,
+        util_trace,
+        producer_blocked_secs: device_out.producer_blocked_secs,
+        consumer_starved_secs: device_out.consumer_starved_secs,
+    })
+}
+
+struct DeviceOut {
+    steps: u64,
+    losses: Vec<(u64, f32)>,
+    finished_early: bool,
+    producer_blocked_secs: f64,
+    consumer_starved_secs: f64,
+}
+
+/// Consume batches: run device-side preprocessing artifacts as needed,
+/// then the train step.  Owns the PJRT engine (single-threaded).
+fn device_loop(
+    cfg: &RunConfig,
+    batch_rx: Receiver<Batch>,
+    dev_clock: &BusyClock,
+    counters: &Counters,
+) -> Result<DeviceOut> {
+    let mut engine = Engine::new(&cfg.artifact_dir)?;
+    let m = &engine.manifest;
+    let b = cfg.batch_size;
+    let (img_hw, out_hw) = (m.img_hw, m.out_hw);
+    let fused = m.fused_artifact(b);
+    let augment = m.augment_artifact(b);
+    if cfg.placement.uses_device_preproc() {
+        let name = if cfg.placement == Placement::Hybrid { &fused } else { &augment };
+        m.artifact(name).with_context(|| {
+            format!("placement {} needs artifact {name}", cfg.placement.name())
+        })?;
+    }
+    let mut session = if cfg.train {
+        Some(TrainSession::new(&mut engine, &cfg.model, b, cfg.lr)?)
+    } else {
+        None
+    };
+
+    let mut steps = 0u64;
+    let mut finished_early = false;
+
+    // Ideal mode: take one batch, drop the pipeline, spin on it.
+    if cfg.ideal {
+        ensure!(cfg.train, "ideal mode requires train=true");
+        ensure!(cfg.steps > 0, "ideal mode requires an explicit --steps");
+        let first = batch_rx.recv().context("no batch for ideal mode")?;
+        let starved = batch_rx.recv_wait_secs();
+        drop(batch_rx);
+        let (images, labels) =
+            device_preprocess(&mut engine, cfg, &first, &fused, &augment, dev_clock, img_hw, out_hw)?;
+        let pixels = crate::runtime::to_vec_f32(&images)?;
+        let shape = [b, 3, out_hw, out_hw];
+        let sess = session.as_mut().unwrap();
+        for _ in 0..cfg.steps {
+            let img = lit_f32(&shape, &pixels)?;
+            dev_clock.track(|| sess.step(&mut engine, img, &labels))?;
+            steps += 1;
+        }
+        return Ok(DeviceOut {
+            steps,
+            losses: session.map(|s| s.losses).unwrap_or_default(),
+            finished_early: true,
+            producer_blocked_secs: 0.0,
+            consumer_starved_secs: starved,
+        });
+    }
+
+    while let Some(batch) = batch_rx.recv() {
+        let (images, labels) =
+            device_preprocess(&mut engine, cfg, &batch, &fused, &augment, dev_clock, img_hw, out_hw)?;
+        counters.images_augmented(batch.len() as u64);
+        if let Some(sess) = session.as_mut() {
+            dev_clock.track(|| sess.step(&mut engine, images, &labels))?;
+            counters.train_steps(1);
+        }
+        steps += 1;
+        if cfg.steps > 0 && steps >= cfg.steps as u64 {
+            finished_early = true;
+            break;
+        }
+    }
+    let consumer_starved_secs = batch_rx.recv_wait_secs();
+    Ok(DeviceOut {
+        steps,
+        losses: session.map(|s| s.losses).unwrap_or_default(),
+        finished_early,
+        producer_blocked_secs: 0.0,
+        consumer_starved_secs,
+    })
+}
+
+/// Turn a batch into the `[B,3,OUT,OUT]` images literal, running the
+/// device-side preprocessing artifact when the placement calls for it.
+#[allow(clippy::too_many_arguments)]
+fn device_preprocess(
+    engine: &mut Engine,
+    cfg: &RunConfig,
+    batch: &Batch,
+    fused: &str,
+    augment: &str,
+    dev_clock: &BusyClock,
+    img_hw: usize,
+    out_hw: usize,
+) -> Result<(xla::Literal, Vec<i32>)> {
+    let b = batch.len();
+    ensure!(b == cfg.batch_size, "partial batch reached device");
+    let labels = batch.labels().to_vec();
+    let images = match batch {
+        Batch::Ready { data, .. } => lit_f32(&[b, 3, out_hw, out_hw], data)?,
+        Batch::Coefs { data, qtable, aug, .. } => {
+            let bh = img_hw / 8;
+            let coefs = lit_f32(&[b, 3, bh, bh, 8, 8], data)?;
+            let q = lit_f32(&[8, 8], qtable)?;
+            let a = lit_f32(&[b, 6], aug)?;
+            let mut outs = dev_clock.track(|| engine.execute(fused, &[coefs, q, a]))?;
+            outs.remove(0)
+        }
+        Batch::Pixels { data, aug, .. } => {
+            let imgs = lit_f32(&[b, 3, img_hw, img_hw], data)?;
+            let a = lit_f32(&[b, 6], aug)?;
+            let mut outs = dev_clock.track(|| engine.execute(augment, &[imgs, a]))?;
+            outs.remove(0)
+        }
+    };
+    Ok((images, labels))
+}

@@ -1,0 +1,134 @@
+//! Leader-side shard planning for multi-worker (data-parallel) ingestion.
+//!
+//! The paper's pipeline runs per training node; at multiple nodes the
+//! record shards must be partitioned so every worker streams a disjoint,
+//! size-balanced subset per epoch (and rotation across epochs so every
+//! worker eventually sees all data — the MXNet/DALI convention).
+//!
+//! Balancing is greedy LPT (longest-processing-time first) over shard
+//! byte sizes, which is within 4/3 of optimal makespan.
+
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardAssignment {
+    pub worker: usize,
+    pub shards: Vec<String>,
+    pub bytes: u64,
+}
+
+/// Partition `shards` (name, bytes) across `workers`, balancing bytes.
+pub fn plan(shards: &[(String, u64)], workers: usize) -> Result<Vec<ShardAssignment>> {
+    ensure!(workers >= 1, "need at least one worker");
+    ensure!(
+        shards.len() >= workers,
+        "cannot split {} shards across {workers} workers — reshard the dataset",
+        shards.len()
+    );
+    let mut sorted: Vec<(String, u64)> = shards.to_vec();
+    sorted.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let mut out: Vec<ShardAssignment> = (0..workers)
+        .map(|w| ShardAssignment { worker: w, shards: Vec::new(), bytes: 0 })
+        .collect();
+    for (name, bytes) in sorted {
+        let tgt = out.iter_mut().min_by_key(|a| (a.bytes, a.worker)).unwrap();
+        tgt.shards.push(name);
+        tgt.bytes += bytes;
+    }
+    Ok(out)
+}
+
+/// Rotate a plan for `epoch`: worker w takes the assignment of
+/// `(w + epoch) % workers`, so every worker cycles through all subsets.
+pub fn rotate(plan: &[ShardAssignment], epoch: u64) -> Vec<ShardAssignment> {
+    let n = plan.len();
+    (0..n)
+        .map(|w| ShardAssignment {
+            worker: w,
+            shards: plan[(w + epoch as usize) % n].shards.clone(),
+            bytes: plan[(w + epoch as usize) % n].bytes,
+        })
+        .collect()
+}
+
+/// Max/min byte imbalance of a plan (1.0 = perfectly balanced).
+pub fn imbalance(plan: &[ShardAssignment]) -> f64 {
+    let max = plan.iter().map(|a| a.bytes).max().unwrap_or(0) as f64;
+    let min = plan.iter().map(|a| a.bytes).min().unwrap_or(0).max(1) as f64;
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn mk(n: usize, seed: u64) -> Vec<(String, u64)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| (format!("records/shard-{i:05}.rec"), 1_000_000 + rng.gen_range(9_000_000)))
+            .collect()
+    }
+
+    #[test]
+    fn covers_all_shards_disjointly() {
+        let shards = mk(13, 1);
+        let plan = plan(&shards, 4).unwrap();
+        let mut seen: Vec<&str> = plan.iter().flat_map(|a| a.shards.iter().map(|s| s.as_str())).collect();
+        seen.sort();
+        let mut want: Vec<&str> = shards.iter().map(|(n, _)| n.as_str()).collect();
+        want.sort();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn balanced_within_lpt_bound() {
+        let shards = mk(40, 2);
+        let p = plan(&shards, 8).unwrap();
+        assert!(imbalance(&p) < 1.5, "imbalance {}", imbalance(&p));
+    }
+
+    #[test]
+    fn rejects_more_workers_than_shards() {
+        assert!(plan(&mk(3, 3), 4).is_err());
+        assert!(plan(&mk(3, 3), 0).is_err());
+    }
+
+    #[test]
+    fn rotation_cycles_assignments() {
+        let shards = mk(9, 4);
+        let p = plan(&shards, 3).unwrap();
+        let e1 = rotate(&p, 1);
+        assert_eq!(e1[0].shards, p[1].shards);
+        assert_eq!(e1[2].shards, p[0].shards);
+        // Full cycle returns to the original.
+        let e3 = rotate(&p, 3);
+        assert_eq!(e3, p);
+    }
+
+    #[test]
+    fn prop_every_worker_sees_every_shard_across_a_cycle() {
+        check(
+            "rotation-coverage",
+            PropConfig { cases: 25, ..Default::default() },
+            |rng, size| {
+                let workers = 1 + rng.gen_range(6) as usize;
+                let shards = workers + rng.gen_range(3 * size as u64 + 1) as usize;
+                (workers, shards, rng.next_u64())
+            },
+            |&(workers, nshards, seed)| {
+                let shards = mk(nshards, seed);
+                let p = plan(&shards, workers).unwrap();
+                // Over `workers` epochs, worker 0 must see every shard.
+                let mut seen: Vec<String> = (0..workers as u64)
+                    .flat_map(|e| rotate(&p, e)[0].shards.clone())
+                    .collect();
+                seen.sort();
+                let mut want: Vec<String> = shards.iter().map(|(n, _)| n.clone()).collect();
+                want.sort();
+                seen == want
+            },
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! # dpp — data preprocessing pipeline framework + testbed simulator
+//!
+//! Reproduction of *"Understand Data Preprocessing for Effective
+//! End-to-End Training of Deep Neural Networks"* (Gong et al., 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: storage, codec entropy stage,
+//!   staged preprocessing pipeline with placement control, PJRT runtime,
+//!   trainer, metrics, the testbed simulator, and the auto-configurator.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (tiny CNNs,
+//!   fused preprocessing), AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: dequant+IDCT
+//!   decode and fused augmentation.
+//!
+//! Python never runs on the request path; the `dpp` binary is
+//! self-contained once `make artifacts` has produced the HLO files.
+
+pub mod autoconf;
+pub mod bench;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod metrics;
+pub mod nlp;
+pub mod ops;
+pub mod pipeline;
+pub mod record;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod testing;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,153 @@
+//! `dpp` — CLI launcher for the data-preprocessing-pipeline framework.
+//!
+//! Subcommands:
+//!   gen-data    generate the synthetic corpus + record shards
+//!   run         run the real pipeline (optionally training) per config
+//!   sim         run the calibrated testbed simulator for one scenario
+//!   reproduce   regenerate a paper figure/table (--fig 2|3|4|5|6|t1)
+//!   autoconf    search resource configurations for a model/objective
+//!   inspect     print manifest/artifact info
+
+use anyhow::{bail, Result};
+use dpp::config::RunConfig;
+use dpp::dataset::GenConfig;
+use dpp::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("gen-data") => gen_data(args),
+        Some("run") => run(args),
+        Some("sim") => sim(args),
+        Some("reproduce") => reproduce(args),
+        Some("autoconf") => autoconf(args),
+        Some("inspect") => inspect(args),
+        Some(other) => bail!("unknown subcommand {other}; see --help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "dpp — data preprocessing pipeline framework\n\
+         \n\
+         USAGE: dpp <subcommand> [--key value ...]\n\
+         \n\
+         SUBCOMMANDS\n\
+           gen-data   --data-dir D [--images N] [--classes K] [--quality Q] [--shards S]\n\
+           run        --data-dir D [--model M] [--method raw|record]\n\
+                      [--placement cpu|hybrid|hybrid0] [--storage local|ebs|nvme|dram]\n\
+                      [--workers N] [--steps N] [--batch B] [--ideal] [--no-train]\n\
+           sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]\n\
+                      [--storage ..] [--seconds S]\n\
+           reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)\n\
+           autoconf   --model M [--objective throughput|cost] [--budget $/h]\n\
+           inspect    [--artifacts DIR]\n"
+    );
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("data-dir", "data"));
+    let gen = GenConfig {
+        n_images: args.get_usize("images", 512),
+        classes: args.get_usize("classes", 16) as u16,
+        img_hw: args.get_usize("img-hw", 64),
+        quality: args.get_usize("quality", 85) as u8,
+        seed: args.get_u64("seed", 1234),
+    };
+    let shards = args.get_usize("shards", 4);
+    let layout = dpp::coordinator::prepare_data(&dir, &gen, shards)?;
+    println!(
+        "corpus ready: {} images, {} classes, {} shards at {dir:?}",
+        layout.entries.len(),
+        gen.classes,
+        layout.shards.len()
+    );
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    let report = dpp::coordinator::run(&cfg)?;
+    report.print_summary(&format!(
+        "{} {}/{} {}",
+        cfg.model,
+        cfg.method.name(),
+        cfg.placement.name(),
+        cfg.storage
+    ));
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, report.to_json().pretty())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let scenario = dpp::sim::Scenario::from_args(args)?;
+    let out = dpp::sim::simulate(&scenario);
+    println!("{}", out.summary_line(&scenario));
+    if args.has_flag("trace") {
+        for s in &out.util_trace {
+            println!(
+                "t={:.1}s cpu={:.2} gpu={:.2} io={:.1}MB/s",
+                s.t, s.cpu, s.device, s.io_mbps
+            );
+        }
+    }
+    Ok(())
+}
+
+fn reproduce(args: &Args) -> Result<()> {
+    match args.get_or("fig", "") {
+        "2" => dpp::bench::figures::fig2(),
+        "3" => dpp::bench::figures::fig3(args.get("data-dir").map(PathBuf::from)),
+        "4" => dpp::bench::figures::fig4(),
+        "5" => dpp::bench::figures::fig5(),
+        "6" => dpp::bench::figures::fig6(),
+        "t1" | "table1" => dpp::bench::figures::table1(),
+        other => bail!("--fig must be 2|3|4|5|6|t1 (got {other:?})"),
+    }
+}
+
+fn autoconf(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet50");
+    let objective = dpp::autoconf::Objective::parse(args.get_or("objective", "throughput"))?;
+    let budget = args.get_f64("budget", f64::INFINITY);
+    let rec = dpp::autoconf::recommend(model, objective, budget)?;
+    println!("{}", rec.render());
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let m = dpp::runtime::Manifest::load(&dir)?;
+    println!(
+        "manifest: {} artifacts, {} models, batch sizes {}/{}, img {} -> {}",
+        m.artifacts.len(),
+        m.models.len(),
+        m.batch_test,
+        m.batch_main,
+        m.img_hw,
+        m.out_hw
+    );
+    for (name, a) in &m.artifacts {
+        println!("  {name}: {} args -> {} outs [{}]", a.args.len(), a.outs.len(), a.file);
+    }
+    for (name, s) in &m.models {
+        println!("  model {name}: {} params in {} leaves", s.param_count, s.leaves.len());
+    }
+    Ok(())
+}

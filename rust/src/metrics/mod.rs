@@ -1,0 +1,269 @@
+//! Metrics: counters, busy-time tracking, utilization time series, and the
+//! run report — the instrumentation behind the paper's Figs. 2–4.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pipeline-wide event counters (all monotonic).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub images_read: AtomicU64,
+    pub images_decoded: AtomicU64,
+    pub images_augmented: AtomicU64,
+    pub batches_built: AtomicU64,
+    pub batches_preprocessed_device: AtomicU64,
+    pub train_steps: AtomicU64,
+    pub bytes_read: AtomicU64,
+}
+
+macro_rules! counter_fns {
+    ($($field:ident),*) => {
+        impl Counters {
+            $(pub fn $field(&self, n: u64) { self.$field.fetch_add(n, Ordering::Relaxed); })*
+            pub fn snapshot(&self) -> CounterSnapshot {
+                CounterSnapshot {
+                    $($field: self.$field.load(Ordering::Relaxed),)*
+                }
+            }
+        }
+        #[derive(Clone, Copy, Debug, Default, PartialEq)]
+        pub struct CounterSnapshot {
+            $(pub $field: u64,)*
+        }
+    };
+}
+
+counter_fns!(
+    images_read,
+    images_decoded,
+    images_augmented,
+    batches_built,
+    batches_preprocessed_device,
+    train_steps,
+    bytes_read
+);
+
+/// Busy-time accumulator for a pool of workers (one per resource class).
+/// Utilization over a window = busy_time / (window * n_workers).
+#[derive(Debug)]
+pub struct BusyClock {
+    busy_ns: AtomicU64,
+    pub workers: usize,
+}
+
+impl BusyClock {
+    pub fn new(workers: usize) -> Arc<Self> {
+        Arc::new(BusyClock { busy_ns: AtomicU64::new(0), workers: workers.max(1) })
+    }
+
+    pub fn track<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.busy_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        r
+    }
+
+    pub fn add_secs(&self, secs: f64) {
+        self.busy_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Mean utilization of the pool over `elapsed` seconds, in [0,1].
+    pub fn utilization(&self, elapsed: f64) -> f64 {
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            (self.busy_secs() / (elapsed * self.workers as f64)).min(1.0)
+        }
+    }
+}
+
+/// One utilization sample (Fig. 4 row): time, cpu util, device util, I/O MB/s.
+#[derive(Clone, Copy, Debug)]
+pub struct UtilSample {
+    pub t: f64,
+    pub cpu: f64,
+    pub device: f64,
+    pub io_mbps: f64,
+}
+
+/// Collects utilization samples by diffing busy clocks + byte counters.
+pub struct UtilSampler {
+    t0: Instant,
+    last_t: f64,
+    last_cpu_busy: f64,
+    last_dev_busy: f64,
+    last_bytes: u64,
+    pub samples: Vec<UtilSample>,
+}
+
+impl UtilSampler {
+    pub fn new() -> Self {
+        UtilSampler {
+            t0: Instant::now(),
+            last_t: 0.0,
+            last_cpu_busy: 0.0,
+            last_dev_busy: 0.0,
+            last_bytes: 0,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn sample(&mut self, cpu: &BusyClock, device: &BusyClock, bytes_read: u64) {
+        let t = self.t0.elapsed().as_secs_f64();
+        let dt = (t - self.last_t).max(1e-9);
+        let cpu_busy = cpu.busy_secs();
+        let dev_busy = device.busy_secs();
+        self.samples.push(UtilSample {
+            t,
+            cpu: ((cpu_busy - self.last_cpu_busy) / (dt * cpu.workers as f64)).min(1.0),
+            device: ((dev_busy - self.last_dev_busy) / (dt * device.workers as f64)).min(1.0),
+            io_mbps: (bytes_read - self.last_bytes) as f64 / dt / 1e6,
+        });
+        self.last_t = t;
+        self.last_cpu_busy = cpu_busy;
+        self.last_dev_busy = dev_busy;
+        self.last_bytes = bytes_read;
+    }
+}
+
+impl Default for UtilSampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a pipeline run reports (printed and/or JSON-exported).
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub images: u64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    /// Preprocessing throughput (images fully preprocessed / sec).
+    pub preproc_ips: f64,
+    /// End-to-end training throughput (images trained / sec).
+    pub train_ips: f64,
+    pub cpu_util: f64,
+    pub device_util: f64,
+    pub io_bytes: u64,
+    pub losses: Vec<(u64, f32)>,
+    pub util_trace: Vec<UtilSample>,
+    /// Backpressure: seconds producers blocked / consumers starved.
+    pub producer_blocked_secs: f64,
+    pub consumer_starved_secs: f64,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("images", Json::num(self.images as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("preproc_ips", Json::num(self.preproc_ips)),
+            ("train_ips", Json::num(self.train_ips)),
+            ("cpu_util", Json::num(self.cpu_util)),
+            ("device_util", Json::num(self.device_util)),
+            ("io_bytes", Json::num(self.io_bytes as f64)),
+            ("producer_blocked_secs", Json::num(self.producer_blocked_secs)),
+            ("consumer_starved_secs", Json::num(self.consumer_starved_secs)),
+            (
+                "losses",
+                Json::arr(self.losses.iter().map(|(s, l)| {
+                    Json::arr(vec![Json::num(*s as f64), Json::num(*l as f64)])
+                })),
+            ),
+            (
+                "util_trace",
+                Json::arr(self.util_trace.iter().map(|u| {
+                    Json::obj(vec![
+                        ("t", Json::num(u.t)),
+                        ("cpu", Json::num(u.cpu)),
+                        ("device", Json::num(u.device)),
+                        ("io_mbps", Json::num(u.io_mbps)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn print_summary(&self, tag: &str) {
+        println!(
+            "[{tag}] images={} steps={} wall={:.2}s preproc={:.1} img/s train={:.1} img/s \
+             cpu={:.0}% dev={:.0}% io={} blocked={:.2}s starved={:.2}s",
+            self.images,
+            self.steps,
+            self.wall_secs,
+            self.preproc_ips,
+            self.train_ips,
+            self.cpu_util * 100.0,
+            self.device_util * 100.0,
+            crate::util::human_bytes(self.io_bytes),
+            self.producer_blocked_secs,
+            self.consumer_starved_secs,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::default();
+        c.images_read(3);
+        c.images_read(2);
+        c.train_steps(1);
+        let s = c.snapshot();
+        assert_eq!(s.images_read, 5);
+        assert_eq!(s.train_steps, 1);
+        assert_eq!(s.images_decoded, 0);
+    }
+
+    #[test]
+    fn busy_clock_tracks_time() {
+        let b = BusyClock::new(2);
+        b.track(|| std::thread::sleep(Duration::from_millis(30)));
+        let busy = b.busy_secs();
+        assert!(busy >= 0.028, "{busy}");
+        // Pool of 2 workers over 0.1s elapsed: utilization ~ busy/(0.1*2).
+        let u = b.utilization(0.1);
+        assert!((u - busy / 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_diffs_windows() {
+        let cpu = BusyClock::new(1);
+        let dev = BusyClock::new(1);
+        let mut s = UtilSampler::new();
+        cpu.add_secs(0.5);
+        std::thread::sleep(Duration::from_millis(10));
+        s.sample(&cpu, &dev, 1_000_000);
+        assert_eq!(s.samples.len(), 1);
+        assert!(s.samples[0].cpu > 0.0);
+        assert_eq!(s.samples[0].device, 0.0);
+        assert!(s.samples[0].io_mbps > 0.0);
+        // Second window with no new activity reads ~zero.
+        std::thread::sleep(Duration::from_millis(10));
+        s.sample(&cpu, &dev, 1_000_000);
+        assert!(s.samples[1].cpu < 0.2);
+        assert_eq!(s.samples[1].io_mbps, 0.0);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut r = RunReport::default();
+        r.images = 10;
+        r.losses.push((1, 2.5));
+        let j = r.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.req("images").as_usize(), Some(10));
+        assert_eq!(parsed.req("losses").idx(0).unwrap().idx(1).unwrap().as_f64(), Some(2.5));
+    }
+}

@@ -1,0 +1,227 @@
+//! NLP preprocessing pipeline — the paper's §5 future work ("we will
+//! extend our performance analysis to both NLP and video processing
+//! models"), implemented as a second front-end over the same substrates:
+//! the record format, storage backends, shuffle buffer and batcher are
+//! shared; only the per-sample CPU stage differs (tokenize+encode+pad
+//! instead of decode+augment).
+//!
+//! Pipeline: raw text / record shards → normalize (lowercase, strip
+//! punctuation) → tokenize (whitespace) → vocabulary lookup → pad or
+//! truncate to a fixed length → `[B, L]` i32 batches.
+
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+
+pub const PAD_ID: i32 = 0;
+pub const UNK_ID: i32 = 1;
+pub const FIRST_WORD_ID: i32 = 2;
+
+/// Normalization: lowercase, keep alphanumerics, everything else → space.
+pub fn normalize(text: &str) -> String {
+    text.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() {
+                c.to_ascii_lowercase()
+            } else {
+                ' '
+            }
+        })
+        .collect()
+}
+
+/// Whitespace tokenizer over normalized text.
+pub fn tokenize(text: &str) -> Vec<&str> {
+    text.split_whitespace().collect()
+}
+
+/// Frequency-built vocabulary with a max size; ties broken alphabetically
+/// so builds are deterministic.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    map: HashMap<String, i32>,
+    pub size: usize,
+}
+
+impl Vocab {
+    pub fn build<'a>(docs: impl IntoIterator<Item = &'a str>, max_words: usize) -> Vocab {
+        let mut freq: HashMap<String, u64> = HashMap::new();
+        for d in docs {
+            let norm = normalize(d);
+            for t in tokenize(&norm) {
+                *freq.entry(t.to_string()).or_default() += 1;
+            }
+        }
+        let mut words: Vec<(String, u64)> = freq.into_iter().collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        words.truncate(max_words);
+        let mut map = HashMap::new();
+        for (i, (w, _)) in words.into_iter().enumerate() {
+            map.insert(w, FIRST_WORD_ID + i as i32);
+        }
+        let size = map.len() + 2; // + PAD, UNK
+        Vocab { map, size }
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        *self.map.get(token).unwrap_or(&UNK_ID)
+    }
+
+    /// Encode a document: normalize → tokenize → ids, padded/truncated to
+    /// `seq_len` (the NLP analogue of crop+resize to a fixed shape).
+    pub fn encode(&self, text: &str, seq_len: usize) -> Vec<i32> {
+        let norm = normalize(text);
+        let mut ids: Vec<i32> =
+            tokenize(&norm).into_iter().take(seq_len).map(|t| self.id(t)).collect();
+        ids.resize(seq_len, PAD_ID);
+        ids
+    }
+}
+
+/// Collate encoded sequences into a `[B, L]` row-major batch.
+pub fn collate_text(seqs: Vec<Vec<i32>>, labels: Vec<i32>) -> Result<(Vec<i32>, Vec<i32>)> {
+    ensure!(!seqs.is_empty(), "empty text batch");
+    let l = seqs[0].len();
+    ensure!(seqs.iter().all(|s| s.len() == l), "ragged batch");
+    ensure!(seqs.len() == labels.len(), "labels/seqs length mismatch");
+    let mut flat = Vec::with_capacity(seqs.len() * l);
+    for s in seqs {
+        flat.extend_from_slice(&s);
+    }
+    Ok((flat, labels))
+}
+
+/// Synthetic labeled text corpus: each class has a signature word
+/// distribution (topic words occur far more often), so classes are
+/// learnable — mirrors dataset::gen_image.
+pub fn gen_document(rng: &mut Rng, class: u16, words: usize) -> String {
+    const TOPICS: [&[&str]; 4] = [
+        &["storage", "disk", "bandwidth", "iops", "ebs"],
+        &["gpu", "kernel", "tensor", "cuda", "batch"],
+        &["cache", "memory", "dram", "latency", "hit"],
+        &["decode", "image", "crop", "resize", "flip"],
+    ];
+    const COMMON: &[&str] =
+        &["the", "a", "of", "and", "to", "in", "is", "for", "with", "on", "at", "we"];
+    let topic = TOPICS[class as usize % TOPICS.len()];
+    let mut out = String::new();
+    for i in 0..words {
+        if i > 0 {
+            out.push(' ');
+        }
+        // Class-dependent mix: 40% topic words (+ class-salted suffix word).
+        if rng.f64() < 0.4 {
+            out.push_str(topic[rng.gen_range(topic.len() as u64) as usize]);
+            if rng.f64() < 0.3 {
+                out.push_str(&format!(" c{class}"));
+            }
+        } else {
+            out.push_str(COMMON[rng.gen_range(COMMON.len() as u64) as usize]);
+        }
+    }
+    out
+}
+
+/// Per-sample CPU stage timing hooks, mirroring ops::* for the Fig. 3
+/// style breakdown of the text pipeline.
+pub struct TextStageTimes {
+    pub normalize_ns: u64,
+    pub tokenize_ns: u64,
+    pub encode_ns: u64,
+}
+
+pub fn timed_encode(vocab: &Vocab, text: &str, seq_len: usize) -> (Vec<i32>, TextStageTimes) {
+    let t0 = std::time::Instant::now();
+    let norm = normalize(text);
+    let t1 = std::time::Instant::now();
+    let toks = tokenize(&norm);
+    let t2 = std::time::Instant::now();
+    let mut ids: Vec<i32> = toks.into_iter().take(seq_len).map(|t| vocab.id(t)).collect();
+    ids.resize(seq_len, PAD_ID);
+    let t3 = std::time::Instant::now();
+    (
+        ids,
+        TextStageTimes {
+            normalize_ns: (t1 - t0).as_nanos() as u64,
+            tokenize_ns: (t2 - t1).as_nanos() as u64,
+            encode_ns: (t3 - t2).as_nanos() as u64,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_and_tokenize() {
+        let n = normalize("Hello, GPU-World!  42x");
+        assert_eq!(n, "hello  gpu world   42x");
+        assert_eq!(tokenize(&n), vec!["hello", "gpu", "world", "42x"]);
+    }
+
+    #[test]
+    fn vocab_build_deterministic_and_frequency_ordered() {
+        let docs = ["b b b a a c", "a b"];
+        let v = Vocab::build(docs.iter().copied(), 10);
+        // b (4) before a (3) before c (1).
+        assert_eq!(v.id("b"), FIRST_WORD_ID);
+        assert_eq!(v.id("a"), FIRST_WORD_ID + 1);
+        assert_eq!(v.id("c"), FIRST_WORD_ID + 2);
+        assert_eq!(v.id("zzz"), UNK_ID);
+        assert_eq!(v.size, 5);
+        let v2 = Vocab::build(docs.iter().copied(), 10);
+        assert_eq!(v2.id("c"), v.id("c"));
+    }
+
+    #[test]
+    fn vocab_max_words_truncates() {
+        let v = Vocab::build(["a a a b b c"].into_iter(), 2);
+        assert_ne!(v.id("a"), UNK_ID);
+        assert_ne!(v.id("b"), UNK_ID);
+        assert_eq!(v.id("c"), UNK_ID);
+    }
+
+    #[test]
+    fn encode_pads_and_truncates() {
+        let v = Vocab::build(["alpha beta gamma"].into_iter(), 10);
+        let short = v.encode("alpha beta", 5);
+        assert_eq!(short.len(), 5);
+        assert_eq!(&short[2..], &[PAD_ID; 3]);
+        let long = v.encode("alpha beta gamma alpha beta gamma", 4);
+        assert_eq!(long.len(), 4);
+        assert!(long.iter().all(|&id| id != PAD_ID));
+    }
+
+    #[test]
+    fn collate_checks_shapes() {
+        let (flat, labels) =
+            collate_text(vec![vec![1, 2], vec![3, 4]], vec![0, 1]).unwrap();
+        assert_eq!(flat, vec![1, 2, 3, 4]);
+        assert_eq!(labels, vec![0, 1]);
+        assert!(collate_text(vec![vec![1], vec![2, 3]], vec![0, 1]).is_err());
+        assert!(collate_text(vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn documents_are_class_separable() {
+        let mut rng = Rng::new(3);
+        let a1 = gen_document(&mut rng, 0, 200);
+        let a2 = gen_document(&mut rng, 0, 200);
+        let b = gen_document(&mut rng, 1, 200);
+        let overlap = |x: &str, y: &str| {
+            let xs: std::collections::HashSet<&str> = tokenize(x).into_iter().collect();
+            let ys: std::collections::HashSet<&str> = tokenize(y).into_iter().collect();
+            xs.intersection(&ys).count()
+        };
+        assert!(overlap(&a1, &a2) > overlap(&a1, &b));
+    }
+
+    #[test]
+    fn timed_encode_matches_encode() {
+        let v = Vocab::build(["x y z"].into_iter(), 10);
+        let (ids, t) = timed_encode(&v, "x q z", 4);
+        assert_eq!(ids, v.encode("x q z", 4));
+        assert!(t.normalize_ns > 0 || t.tokenize_ns > 0 || t.encode_ns > 0);
+    }
+}

@@ -1,0 +1,320 @@
+//! CPU augmentation operators: random crop, horizontal flip, bilinear
+//! resize, normalize — the paper's preprocessing pipeline steps 4 (Fig. 1),
+//! implemented exactly like the Pallas kernel / jnp oracle so the `cpu`
+//! and `hybrid`/`gpu` placements produce identical tensors.
+//!
+//! Two APIs:
+//!   * [`augment_fused`] — the production hot path, one pass per image.
+//!   * `crop` / `hflip` / `resize_bilinear` / `normalize` — discrete steps
+//!     used by the Fig. 3 latency-breakdown bench (the paper times each
+//!     operator separately).
+
+use crate::util::rng::Rng;
+
+/// ImageNet normalization constants scaled to the 0..255 pixel range
+/// (must match python/compile/kernels/ref.py).
+pub const NORM_MEAN: [f32; 3] = [0.485 * 255.0, 0.456 * 255.0, 0.406 * 255.0];
+pub const NORM_STD: [f32; 3] = [0.229 * 255.0, 0.224 * 255.0, 0.225 * 255.0];
+
+/// Augmentation parameters, sampled by the coordinator's RNG.
+/// Serialized to the `[6]` f32 row consumed by the augment HLO artifact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AugParams {
+    pub y0: u32,
+    pub x0: u32,
+    pub crop_h: u32,
+    pub crop_w: u32,
+    pub flip: bool,
+}
+
+impl AugParams {
+    /// The identity transform for an `h`x`w` image (full window, no flip).
+    pub fn identity(h: u32, w: u32) -> Self {
+        AugParams { y0: 0, x0: 0, crop_h: h, crop_w: w, flip: false }
+    }
+
+    /// Row layout consumed by the AOT augment artifact: [y0,x0,ch,cw,flip,0].
+    pub fn to_row(&self) -> [f32; 6] {
+        [
+            self.y0 as f32,
+            self.x0 as f32,
+            self.crop_h as f32,
+            self.crop_w as f32,
+            if self.flip { 1.0 } else { 0.0 },
+            0.0,
+        ]
+    }
+}
+
+/// RandomResizedCrop-style sampling: area scale in [0.35, 1.0], aspect
+/// ratio in [3/4, 4/3], uniform placement, fair-coin flip.
+pub fn sample_aug_params(rng: &mut Rng, h: u32, w: u32) -> AugParams {
+    for _ in 0..10 {
+        let area = (h * w) as f64 * rng.uniform(0.35, 1.0);
+        let log_ratio = rng.uniform((3f64 / 4.0).ln(), (4f64 / 3.0).ln());
+        let ratio = log_ratio.exp();
+        let cw = ((area * ratio).sqrt().round() as u32).max(8);
+        let ch = ((area / ratio).sqrt().round() as u32).max(8);
+        if cw <= w && ch <= h {
+            let y0 = rng.gen_range((h - ch + 1) as u64) as u32;
+            let x0 = rng.gen_range((w - cw + 1) as u64) as u32;
+            return AugParams { y0, x0, crop_h: ch, crop_w: cw, flip: rng.bool() };
+        }
+    }
+    // Fallback: central 87.5% crop.
+    let ch = h * 7 / 8;
+    let cw = w * 7 / 8;
+    AugParams {
+        y0: (h - ch) / 2,
+        x0: (w - cw) / 2,
+        crop_h: ch,
+        crop_w: cw,
+        flip: rng.bool(),
+    }
+}
+
+/// Fused crop+flip+bilinear-resize+normalize. `img` is planar `[C,H,W]`
+/// f32 pixels 0..255; output planar `[C,OH,OW]` normalized.
+///
+/// Math mirrors ref.py `augment_ref` exactly: half-pixel centers, sample
+/// coords clamped inside the crop window, then inside the image.
+pub fn augment_fused(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    p: &AugParams,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(img.len(), c * h * w);
+    assert_eq!(out.len(), c * oh * ow);
+    let chf = p.crop_h as f32;
+    let cwf = p.crop_w as f32;
+
+    // Precompute per-row/col source coords and lerp weights.
+    let mut ys = vec![(0usize, 0usize, 0f32); oh];
+    for (i, e) in ys.iter_mut().enumerate() {
+        let iy = ((i as f32 + 0.5) * chf / oh as f32 - 0.5).clamp(0.0, chf - 1.0);
+        let sy = (iy + p.y0 as f32).clamp(0.0, (h - 1) as f32);
+        let y0 = sy.floor() as usize;
+        let y1 = (y0 + 1).min(h - 1);
+        *e = (y0, y1, sy - y0 as f32);
+    }
+    let mut xs = vec![(0usize, 0usize, 0f32); ow];
+    for (j, e) in xs.iter_mut().enumerate() {
+        let mut ix = (j as f32 + 0.5) * cwf / ow as f32 - 0.5;
+        if p.flip {
+            ix = (cwf - 1.0) - ix;
+        }
+        let ix = ix.clamp(0.0, cwf - 1.0);
+        let sx = (ix + p.x0 as f32).clamp(0.0, (w - 1) as f32);
+        let x0 = sx.floor() as usize;
+        let x1 = (x0 + 1).min(w - 1);
+        *e = (x0, x1, sx - x0 as f32);
+    }
+
+    for ch in 0..c {
+        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        let mean = NORM_MEAN[ch.min(2)];
+        let istd = 1.0 / NORM_STD[ch.min(2)];
+        let oplane = &mut out[ch * oh * ow..(ch + 1) * oh * ow];
+        for (i, &(y0, y1, wy)) in ys.iter().enumerate() {
+            let r0 = &plane[y0 * w..y0 * w + w];
+            let r1 = &plane[y1 * w..y1 * w + w];
+            let orow = &mut oplane[i * ow..(i + 1) * ow];
+            for (j, &(x0, x1, wx)) in xs.iter().enumerate() {
+                let top = r0[x0] * (1.0 - wx) + r0[x1] * wx;
+                let bot = r1[x0] * (1.0 - wx) + r1[x1] * wx;
+                let v = top * (1.0 - wy) + bot * wy;
+                orow[j] = (v - mean) * istd;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discrete operators (Fig. 3 breakdown instrumentation)
+// ---------------------------------------------------------------------------
+
+/// Crop `[C,H,W]` -> `[C,ch,cw]` (pixel copy, no resampling).
+pub fn crop(img: &[f32], c: usize, h: usize, w: usize, p: &AugParams) -> Vec<f32> {
+    let (ch_, cw_) = (p.crop_h as usize, p.crop_w as usize);
+    let mut out = vec![0f32; c * ch_ * cw_];
+    for ch in 0..c {
+        for y in 0..ch_ {
+            let src = &img[ch * h * w + (p.y0 as usize + y) * w + p.x0 as usize..][..cw_];
+            out[ch * ch_ * cw_ + y * cw_..][..cw_].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Horizontal flip in place, planar `[C,H,W]`.
+pub fn hflip(img: &mut [f32], c: usize, h: usize, w: usize) {
+    for ch in 0..c {
+        for y in 0..h {
+            img[ch * h * w + y * w..][..w].reverse();
+        }
+    }
+}
+
+/// Bilinear resize `[C,H,W]` -> `[C,OH,OW]` over the full image
+/// (half-pixel centers, edge clamp).
+pub fn resize_bilinear(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; c * oh * ow];
+    let p = AugParams::identity(h as u32, w as u32);
+    // Resizing the full window with no normalize = fused path with unit norm.
+    // Reuse the fused sampler but undo normalization.
+    augment_fused(img, c, h, w, &p, oh, ow, &mut out);
+    for ch in 0..c {
+        let mean = NORM_MEAN[ch.min(2)];
+        let std = NORM_STD[ch.min(2)];
+        for v in &mut out[ch * oh * ow..(ch + 1) * oh * ow] {
+            *v = *v * std + mean;
+        }
+    }
+    out
+}
+
+/// Normalize in place with the ImageNet constants.
+pub fn normalize(img: &mut [f32], c: usize, hw: usize) {
+    for ch in 0..c {
+        let mean = NORM_MEAN[ch.min(2)];
+        let istd = 1.0 / NORM_STD[ch.min(2)];
+        for v in &mut img[ch * hw..(ch + 1) * hw] {
+            *v = (*v - mean) * istd;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp_image(c: usize, h: usize, w: usize) -> Vec<f32> {
+        let mut v = vec![0f32; c * h * w];
+        for ch in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    v[ch * h * w + y * w + x] = ((ch * 31 + y * 3 + x * 2) % 256) as f32;
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn identity_augment_of_same_size_is_normalize() {
+        let (c, h, w) = (3, 56, 56);
+        let img = ramp_image(c, h, w);
+        let p = AugParams::identity(h as u32, w as u32);
+        let mut out = vec![0f32; c * h * w];
+        augment_fused(&img, c, h, w, &p, h, w, &mut out);
+        for ch in 0..c {
+            for i in 0..h * w {
+                let expect = (img[ch * h * w + i] - NORM_MEAN[ch]) / NORM_STD[ch];
+                assert!((out[ch * h * w + i] - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_image_any_crop_is_constant() {
+        let (c, h, w) = (3, 64, 64);
+        let img = vec![100.0f32; c * h * w];
+        let p = AugParams { y0: 5, x0: 9, crop_h: 33, crop_w: 47, flip: true };
+        let mut out = vec![0f32; c * 56 * 56];
+        augment_fused(&img, c, h, w, &p, 56, 56, &mut out);
+        for ch in 0..c {
+            let expect = (100.0 - NORM_MEAN[ch]) / NORM_STD[ch];
+            for &v in &out[ch * 56 * 56..(ch + 1) * 56 * 56] {
+                assert!((v - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn flip_mirrors_fused_output() {
+        let (c, h, w) = (1, 64, 64);
+        let img = ramp_image(c, h, w);
+        let base = AugParams { y0: 4, x0: 6, crop_h: 48, crop_w: 48, flip: false };
+        let flip = AugParams { flip: true, ..base };
+        let mut o0 = vec![0f32; 56 * 56];
+        let mut o1 = vec![0f32; 56 * 56];
+        augment_fused(&img, c, h, w, &base, 56, 56, &mut o0);
+        augment_fused(&img, c, h, w, &flip, 56, 56, &mut o1);
+        for y in 0..56 {
+            for x in 0..56 {
+                let a = o0[y * 56 + x];
+                let b = o1[y * 56 + (55 - x)];
+                assert!((a - b).abs() < 1e-3, "({y},{x}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn crop_extracts_window() {
+        let (c, h, w) = (2, 16, 16);
+        let img = ramp_image(c, h, w);
+        let p = AugParams { y0: 2, x0: 3, crop_h: 4, crop_w: 5, flip: false };
+        let out = crop(&img, c, h, w, &p);
+        assert_eq!(out.len(), 2 * 4 * 5);
+        assert_eq!(out[0], img[2 * w + 3]);
+        assert_eq!(out[4 * 5], img[h * w + 2 * w + 3]);
+    }
+
+    #[test]
+    fn hflip_involution() {
+        let (c, h, w) = (3, 8, 12);
+        let img = ramp_image(c, h, w);
+        let mut flipped = img.clone();
+        hflip(&mut flipped, c, h, w);
+        assert_ne!(img, flipped);
+        hflip(&mut flipped, c, h, w);
+        assert_eq!(img, flipped);
+    }
+
+    #[test]
+    fn resize_identity_when_same_size() {
+        let (c, h, w) = (1, 24, 24);
+        let img = ramp_image(c, h, w);
+        let out = resize_bilinear(&img, c, h, w, h, w);
+        for i in 0..img.len() {
+            assert!((img[i] - out[i]).abs() < 1e-3, "{i}: {} vs {}", img[i], out[i]);
+        }
+    }
+
+    #[test]
+    fn normalize_then_denormalize() {
+        let (c, hw) = (3, 64);
+        let img = ramp_image(c, 8, 8);
+        let mut n = img.clone();
+        normalize(&mut n, c, hw);
+        for ch in 0..c {
+            for i in 0..hw {
+                let back = n[ch * hw + i] * NORM_STD[ch] + NORM_MEAN[ch];
+                assert!((back - img[ch * hw + i]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_params_always_valid() {
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            let p = sample_aug_params(&mut rng, 64, 64);
+            assert!(p.crop_h >= 8 && p.crop_w >= 8);
+            assert!(p.y0 + p.crop_h <= 64, "{p:?}");
+            assert!(p.x0 + p.crop_w <= 64, "{p:?}");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Bounded MPMC channel with blocking send/recv — the pipeline's
+//! backpressure primitive (no crossbeam-channel offline).
+//!
+//! Bounded queues are what make the paper's producer/consumer story real:
+//! when the training stage is slow (ResNet50) the preprocessing stage
+//! blocks on `send` (CPU underutilized); when preprocessing is slow
+//! (AlexNet) the device blocks on `recv` (GPU starved).  Both wait times
+//! are counted and exported to the run report.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+struct State<T> {
+    q: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Inner<T> {
+    st: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Cumulative nanoseconds producers spent blocked on a full queue.
+    pub send_wait_ns: AtomicU64,
+    /// Cumulative nanoseconds consumers spent blocked on an empty queue.
+    pub recv_wait_ns: AtomicU64,
+}
+
+pub struct Sender<T>(Arc<Inner<T>>);
+pub struct Receiver<T>(Arc<Inner<T>>);
+
+/// Error: all receivers are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed<T>(pub T);
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        st: Mutex::new(State { q: VecDeque::new(), cap: cap.max(1), senders: 1, receivers: 1 }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        send_wait_ns: AtomicU64::new(0),
+        recv_wait_ns: AtomicU64::new(0),
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.st.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.st.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.st.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.st.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; returns `Err(Closed(v))` if all receivers dropped.
+    pub fn send(&self, v: T) -> Result<(), Closed<T>> {
+        let mut st = self.0.st.lock().unwrap();
+        let mut waited: Option<Instant> = None;
+        while st.q.len() >= st.cap {
+            if st.receivers == 0 {
+                return Err(Closed(v));
+            }
+            waited.get_or_insert_with(Instant::now);
+            st = self.0.not_full.wait(st).unwrap();
+        }
+        if let Some(t) = waited {
+            self.0.send_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        if st.receivers == 0 {
+            return Err(Closed(v));
+        }
+        st.q.push_back(v);
+        drop(st);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+
+    pub fn send_wait_secs(&self) -> f64 {
+        self.0.send_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` when the queue is empty and all senders
+    /// have dropped.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.0.st.lock().unwrap();
+        let mut waited: Option<Instant> = None;
+        loop {
+            if let Some(v) = st.q.pop_front() {
+                if let Some(t) = waited {
+                    self.0
+                        .recv_wait_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                drop(st);
+                self.0.not_full.notify_one();
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            waited.get_or_insert_with(Instant::now);
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn recv_wait_secs(&self) -> f64 {
+        self.0.recv_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.st.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn bounded_blocks_and_counts_backpressure() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until consumer drains
+            tx.send_wait_secs()
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        let waited = t.join().unwrap();
+        assert!(waited > 0.03, "send wait {waited}");
+    }
+
+    #[test]
+    fn mpmc_distributes_all_items() {
+        let (tx, rx) = bounded(8);
+        let n = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all.len(), n as usize);
+        all.dedup();
+        assert_eq!(all.len(), n as usize, "duplicates seen");
+    }
+
+    #[test]
+    fn send_fails_when_receivers_gone() {
+        let (tx, rx) = bounded(2);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(Closed(7)));
+    }
+
+    #[test]
+    fn recv_drains_after_senders_gone() {
+        let (tx, rx) = bounded(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+}

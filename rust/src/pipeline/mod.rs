@@ -1,0 +1,228 @@
+//! The staged preprocessing pipeline (Fig. 1 of the paper, made real).
+//!
+//! Thread topology (all queues bounded — backpressure is load-bearing):
+//!
+//! ```text
+//!  source ──work q──▶ cpu workers ×N ──sample q──▶ batcher ──batch q──▶ device
+//!  (epoch order /     (read, entropy/full         (collate B)          (fused HLO
+//!   shard streams)     decode, augment)                                 preproc +
+//!                                                                       train step)
+//! ```
+//!
+//! Placement decides how much work the CPU stage does per image:
+//! * `cpu`     — full decode + augment on CPU; device only trains.
+//! * `hybrid`  — entropy decode on CPU; dequant+IDCT+augment on device
+//!               (one fused artifact — DALI's hybrid decode).
+//! * `hybrid0` — full decode on CPU; augment on device.
+
+pub mod channel;
+pub mod shuffle;
+pub mod source;
+
+use crate::config::Placement;
+use crate::ops::{self, AugParams};
+
+/// What the CPU stage produced for one image, by placement.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Fully preprocessed, normalized `[C, OUT, OUT]` pixels (cpu placement).
+    Ready(Vec<f32>),
+    /// Entropy-decoded coefficients `[C, H/8, W/8, 8, 8]` + aug row (hybrid).
+    Coefs { coefs: Vec<f32>, qtable: [f32; 64], aug: [f32; 6] },
+    /// Decoded `[C, H, W]` pixels + aug row (hybrid0).
+    Pixels { pixels: Vec<f32>, aug: [f32; 6] },
+}
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub id: u64,
+    pub label: u16,
+    pub payload: Payload,
+}
+
+/// A collated batch, homogeneous in payload kind.
+#[derive(Clone, Debug)]
+pub struct BatchKindError;
+
+#[derive(Clone, Debug)]
+pub enum Batch {
+    Ready { data: Vec<f32>, labels: Vec<i32> },
+    Coefs { data: Vec<f32>, qtable: [f32; 64], aug: Vec<f32>, labels: Vec<i32> },
+    Pixels { data: Vec<f32>, aug: Vec<f32>, labels: Vec<i32> },
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Ready { labels, .. }
+            | Batch::Coefs { labels, .. }
+            | Batch::Pixels { labels, .. } => labels.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        match self {
+            Batch::Ready { labels, .. }
+            | Batch::Coefs { labels, .. }
+            | Batch::Pixels { labels, .. } => labels,
+        }
+    }
+}
+
+/// Collate `batch_size` samples into one `Batch`.  Samples must share the
+/// payload kind (guaranteed: placement is fixed per run).
+pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
+    let mut labels = Vec::with_capacity(samples.len());
+    match samples.first().map(|s| &s.payload) {
+        Some(Payload::Ready(_)) => {
+            let mut data = Vec::new();
+            for s in samples {
+                let Payload::Ready(v) = s.payload else { return Err(BatchKindError) };
+                data.extend_from_slice(&v);
+                labels.push(s.label as i32);
+            }
+            Ok(Batch::Ready { data, labels })
+        }
+        Some(Payload::Coefs { qtable, .. }) => {
+            let qtable = *qtable;
+            let mut data = Vec::new();
+            let mut aug = Vec::new();
+            for s in samples {
+                let Payload::Coefs { coefs, aug: a, .. } = s.payload else {
+                    return Err(BatchKindError);
+                };
+                data.extend_from_slice(&coefs);
+                aug.extend_from_slice(&a);
+                labels.push(s.label as i32);
+            }
+            Ok(Batch::Coefs { data, qtable, aug, labels })
+        }
+        Some(Payload::Pixels { .. }) => {
+            let mut data = Vec::new();
+            let mut aug = Vec::new();
+            for s in samples {
+                let Payload::Pixels { pixels, aug: a } = s.payload else {
+                    return Err(BatchKindError);
+                };
+                data.extend_from_slice(&pixels);
+                aug.extend_from_slice(&a);
+                labels.push(s.label as i32);
+            }
+            Ok(Batch::Pixels { data, aug, labels })
+        }
+        None => Err(BatchKindError),
+    }
+}
+
+/// The per-image CPU-stage work: decode `bytes` (an MJX bitstream) to the
+/// placement's hand-off format.  `aug` was sampled by the coordinator.
+pub fn cpu_stage(
+    bytes: &[u8],
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+) -> anyhow::Result<Payload> {
+    match placement {
+        Placement::Cpu => {
+            let img = crate::codec::decode_cpu(bytes)?;
+            let f = img.to_f32();
+            let mut out = vec![0f32; img.c * out_hw * out_hw];
+            ops::augment_fused(&f, img.c, img.h, img.w, &aug, out_hw, out_hw, &mut out);
+            Ok(Payload::Ready(out))
+        }
+        Placement::Hybrid => {
+            let ci = crate::codec::entropy_decode(bytes)?;
+            Ok(Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() })
+        }
+        Placement::Hybrid0 => {
+            let img = crate::codec::decode_cpu(bytes)?;
+            Ok(Payload::Pixels { pixels: img.to_f32(), aug: aug.to_row() })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec;
+    use crate::dataset;
+    use crate::util::rng::Rng;
+
+    fn encoded_image(seed: u64) -> Vec<u8> {
+        let img = dataset::gen_image(&mut Rng::new(seed), 3, 3, 64, 64);
+        codec::encode(&img, 85).unwrap()
+    }
+
+    #[test]
+    fn cpu_stage_shapes_per_placement() {
+        let bytes = encoded_image(1);
+        let aug = AugParams::identity(64, 64);
+        match cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap() {
+            Payload::Ready(v) => assert_eq!(v.len(), 3 * 56 * 56),
+            other => panic!("{other:?}"),
+        }
+        match cpu_stage(&bytes, Placement::Hybrid, aug, 56).unwrap() {
+            Payload::Coefs { coefs, .. } => assert_eq!(coefs.len(), 3 * 8 * 8 * 64),
+            other => panic!("{other:?}"),
+        }
+        match cpu_stage(&bytes, Placement::Hybrid0, aug, 56).unwrap() {
+            Payload::Pixels { pixels, .. } => assert_eq!(pixels.len(), 3 * 64 * 64),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn collate_ready_batch() {
+        let samples: Vec<Sample> = (0..4)
+            .map(|i| Sample {
+                id: i,
+                label: i as u16,
+                payload: Payload::Ready(vec![i as f32; 8]),
+            })
+            .collect();
+        let b = collate(samples).unwrap();
+        assert_eq!(b.len(), 4);
+        match b {
+            Batch::Ready { data, labels } => {
+                assert_eq!(data.len(), 32);
+                assert_eq!(labels, vec![0, 1, 2, 3]);
+                assert_eq!(data[8], 1.0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn collate_rejects_mixed_kinds() {
+        let samples = vec![
+            Sample { id: 0, label: 0, payload: Payload::Ready(vec![0.0]) },
+            Sample {
+                id: 1,
+                label: 0,
+                payload: Payload::Pixels { pixels: vec![0.0], aug: [0.0; 6] },
+            },
+        ];
+        assert!(collate(samples).is_err());
+        assert!(collate(vec![]).is_err());
+    }
+
+    #[test]
+    fn collate_coefs_carries_qtable_and_aug() {
+        let bytes = encoded_image(2);
+        let aug = AugParams { y0: 1, x0: 2, crop_h: 50, crop_w: 40, flip: true };
+        let p = cpu_stage(&bytes, Placement::Hybrid, aug, 56).unwrap();
+        let b = collate(vec![Sample { id: 0, label: 5, payload: p }]).unwrap();
+        match b {
+            Batch::Coefs { qtable, aug, labels, .. } => {
+                assert_eq!(qtable, codec::qtable_for_quality(85));
+                assert_eq!(&aug[..5], &[1.0, 2.0, 50.0, 40.0, 1.0]);
+                assert_eq!(labels, vec![5]);
+            }
+            _ => panic!(),
+        }
+    }
+}

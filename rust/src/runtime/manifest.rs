@@ -1,0 +1,249 @@
+//! Parse `artifacts/manifest.json` written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_file: String,
+    pub param_count: usize,
+    pub leaves: Vec<LeafSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub batch_main: usize,
+    pub batch_test: usize,
+    pub img_hw: usize,
+    pub out_hw: usize,
+    pub num_classes: usize,
+}
+
+fn parse_shape(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+fn parse_arg(j: &Json) -> Result<ArgSpec> {
+    Ok(ArgSpec {
+        name: j.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        shape: parse_shape(j.req("shape")),
+        dtype: DType::parse(j.req("dtype").as_str().context("dtype not a string")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts").as_obj().context("artifacts")? {
+            let args = a
+                .req("args")
+                .as_arr()
+                .context("args")?
+                .iter()
+                .map(parse_arg)
+                .collect::<Result<Vec<_>>>()?;
+            let outs = a
+                .req("outs")
+                .as_arr()
+                .context("outs")?
+                .iter()
+                .map(parse_arg)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.req("file").as_str().context("file")?.to_string(),
+                    args,
+                    outs,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().context("models")? {
+            let leaves = m
+                .req("leaves")
+                .as_arr()
+                .context("leaves")?
+                .iter()
+                .map(|l| {
+                    Ok(LeafSpec {
+                        name: l.req("name").as_str().context("leaf name")?.to_string(),
+                        shape: parse_shape(l.req("shape")),
+                        offset: l.req("offset").as_usize().context("offset")?,
+                        bytes: l.req("bytes").as_usize().context("bytes")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    param_file: m.req("param_file").as_str().context("param_file")?.to_string(),
+                    param_count: m.req("param_count").as_usize().context("param_count")?,
+                    leaves,
+                },
+            );
+        }
+        Ok(Manifest {
+            artifacts,
+            models,
+            batch_main: j.req("batch_main").as_usize().context("batch_main")?,
+            batch_test: j.req("batch_test").as_usize().context("batch_test")?,
+            img_hw: j.req("img_hw").as_usize().context("img_hw")?,
+            out_hw: j.req("out_hw").as_usize().context("out_hw")?,
+            num_classes: j.req("num_classes").as_usize().context("num_classes")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let p = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("read {p:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| format!("model {name} not in manifest"))
+    }
+
+    /// Artifact name helpers (naming scheme from aot.py).
+    pub fn train_artifact(&self, model: &str, batch: usize) -> String {
+        format!("train_{model}_b{batch}")
+    }
+
+    pub fn fused_artifact(&self, batch: usize) -> String {
+        format!("fused_pre_b{batch}")
+    }
+
+    pub fn augment_artifact(&self, batch: usize) -> String {
+        format!("augment_b{batch}")
+    }
+
+    pub fn decode_artifact(&self, batch: usize) -> String {
+        format!("decode_b{batch}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "decode_b8": {
+          "file": "decode_b8.hlo.txt",
+          "args": [
+            {"name": "coefs", "shape": [8,3,8,8,8,8], "dtype": "f32"},
+            {"name": "qtable", "shape": [8,8], "dtype": "f32"}
+          ],
+          "outs": [{"name": "", "shape": [8,3,64,64], "dtype": "f32"}],
+          "sha256": "ab"
+        }
+      },
+      "models": {
+        "resnet_t": {
+          "param_file": "params_resnet_t.bin",
+          "param_count": 100,
+          "leaves": [
+            {"name": "stem", "shape": [16,3,3,3], "offset": 0, "bytes": 1728}
+          ]
+        }
+      },
+      "batch_main": 32, "batch_test": 8,
+      "img_hw": 64, "out_hw": 56, "num_classes": 16,
+      "param_seed": 42, "format": 1
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("decode_b8").unwrap();
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[0].shape, vec![8, 3, 8, 8, 8, 8]);
+        assert_eq!(a.args[0].elems(), 8 * 3 * 8 * 8 * 8 * 8);
+        assert_eq!(a.outs[0].shape, vec![8, 3, 64, 64]);
+        let model = m.model("resnet_t").unwrap();
+        assert_eq!(model.leaves[0].bytes, 1728);
+        assert_eq!(m.batch_main, 32);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 10);
+            assert!(m.models.contains_key("resnet_t"));
+        }
+    }
+
+    #[test]
+    fn artifact_name_helpers() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_artifact("resnet_t", 32), "train_resnet_t_b32");
+        assert_eq!(m.fused_artifact(8), "fused_pre_b8");
+    }
+}

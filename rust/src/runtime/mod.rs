@@ -1,0 +1,220 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust hot path (the "accelerator" of this testbed).
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`, see aot.py) compiled
+//! on a `PjRtClient::cpu()`.  Every artifact is lowered with
+//! `return_tuple=True`, so execution yields one tuple buffer which we
+//! sync-copy to host and decompose.  The engine is deliberately
+//! single-threaded (wrapped types hold raw PJRT pointers): the pipeline
+//! gives it a dedicated *device thread*, which doubles as the contention
+//! model — preprocessing offload and training steps share the device,
+//! exactly the GPU-sharing effect the paper measures (§3.2, Fig. 5).
+
+pub mod manifest;
+
+pub use manifest::{ArgSpec, ArtifactSpec, DType, Manifest, ModelSpec};
+
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Wall-time accounting of device activity (feeds GPU-utilization metrics).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DeviceStats {
+    pub executions: u64,
+    pub busy_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    stats: DeviceStats,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+            stats: DeviceStats::default(),
+        })
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.stats
+    }
+
+    /// Compile (and cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.stats.compile_secs += t.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host literals; returns decomposed outputs.
+    pub fn execute(&mut self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.load(name)?;
+        let spec = self.manifest.artifact(name)?;
+        ensure!(
+            args.len() == spec.args.len(),
+            "{name}: got {} args, artifact wants {}",
+            args.len(),
+            spec.args.len()
+        );
+        let exe = self.cache.get(name).unwrap();
+        let t = Instant::now();
+        let out = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        self.stats.busy_secs += t.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        lit.decompose_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Load a model's initial parameters from `params_<model>.bin`.
+    pub fn load_params(&self, model: &str) -> Result<Vec<Literal>> {
+        let spec = self.manifest.model(model)?;
+        let blob = std::fs::read(self.dir.join(&spec.param_file))
+            .with_context(|| format!("read {}", spec.param_file))?;
+        let mut out = Vec::with_capacity(spec.leaves.len());
+        for leaf in &spec.leaves {
+            ensure!(
+                leaf.offset + leaf.bytes <= blob.len(),
+                "param blob too short for {}",
+                leaf.name
+            );
+            let bytes = &blob[leaf.offset..leaf.offset + leaf.bytes];
+            out.push(lit_f32_bytes(&leaf.shape, bytes)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal from raw little-endian bytes.
+pub fn lit_f32_bytes(shape: &[usize], bytes: &[u8]) -> Result<Literal> {
+    ensure!(
+        bytes.len() == shape.iter().product::<usize>() * 4,
+        "shape {shape:?} wants {} bytes, got {}",
+        shape.iter().product::<usize>() * 4,
+        bytes.len()
+    );
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal: {e:?}"))?)
+}
+
+/// f32 literal from a slice.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "shape {shape:?} wants {} elems, got {}",
+        shape.iter().product::<usize>(),
+        data.len()
+    );
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    lit_f32_bytes(shape, bytes)
+}
+
+/// i32 literal from a slice.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    ensure!(data.len() == shape.iter().product::<usize>(), "shape/elems mismatch");
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal: {e:?}"))?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal out as f32s.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        let i = lit_i32(&[3], &[7, 8, 9]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn engine_executes_decode_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::new(&artifact_dir()).unwrap();
+        let spec = eng.manifest.artifact("decode_b8").unwrap().clone();
+        let n: usize = spec.args[0].elems();
+        // All-zero coefficients decode to mid-gray 128.
+        let coefs = lit_f32(&spec.args[0].shape, &vec![0f32; n]).unwrap();
+        let q = lit_f32(&[8, 8], &[1f32; 64]).unwrap();
+        let outs = eng.execute("decode_b8", &[coefs, q]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let pix = to_vec_f32(&outs[0]).unwrap();
+        assert_eq!(pix.len(), 8 * 3 * 64 * 64);
+        assert!(pix.iter().all(|&p| (p - 128.0).abs() < 1e-3));
+        assert_eq!(eng.stats().executions, 1);
+    }
+
+    #[test]
+    fn engine_loads_params_with_manifest_schema() {
+        if !have_artifacts() {
+            return;
+        }
+        let eng = Engine::new(&artifact_dir()).unwrap();
+        let params = eng.load_params("resnet_t").unwrap();
+        let spec = eng.manifest.model("resnet_t").unwrap();
+        assert_eq!(params.len(), spec.leaves.len());
+        let total: usize = params.iter().map(|p| p.element_count()).sum();
+        assert_eq!(total, spec.param_count);
+    }
+}

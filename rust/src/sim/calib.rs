@@ -1,0 +1,210 @@
+//! Calibration of the testbed model (paper §3.1 hardware: AWS p3.16xlarge,
+//! 8×V100, 64 vCPU, EBS; §4 adds p3dn.24xlarge).
+//!
+//! Primary anchors from the paper:
+//! * Fig. 3 — preprocessing one image on one vCPU costs **14.26 ms**, with
+//!   decode = **47.7 %**; we split decode into an *entropy* part (serial,
+//!   stays on CPU under DALI's hybrid mode, like nvJPEG's Huffman stage)
+//!   and a *transform* part (offloadable dequant+IDCT).
+//! * Fig. 5a — AlexNet/4 GPU: hybrid saturates at 24 vCPU, hybrid-0 at 44,
+//!   hybrid-0 wins by 7.86 %.
+//! * Fig. 5b — ResNet50/8 GPU: hybrid saturates at 16 vCPU, cpu at 48,
+//!   cpu wins by 3.03 %.
+//! * Fig. 2 — AlexNet record-hybrid peaks at 23 % of ideal; hybrid beats
+//!   record-cpu by 98–114 % for the three fast consumers.
+//! * Fig. 6 — DRAM: 1.84× for AlexNet, +8.8 % for ResNet18 (p3dn, 4 GPU).
+//!
+//! The constants below were solved jointly from those anchors (see
+//! EXPERIMENTS.md for the residuals — e.g. hybrid-0's saturation lands at
+//! ~30 vCPU where the paper reads 44; everything else is within a few %).
+//! The model:
+//!
+//! ```text
+//!  T = min( gpus / (t_train + g_visible),        — device cap
+//!           eff(vcpus) / c_cpu,                  — CPU cap
+//!           storage_bandwidth / image_bytes,     — sequential I/O cap
+//!           iops                 [raw method] )  — random I/O cap
+//! ```
+//! with `g_visible = g · min(1, T_REF / t_train)` modelling how GPU-side
+//! preprocessing hides inside long training kernels (ResNet50 barely sees
+//! it; AlexNet pays it in full), and `eff(n)` a NUMA knee at 48 vCPUs.
+
+/// Full CPU preprocessing cost of one image on one vCPU (paper Fig. 3).
+pub const CPU_PREPROC_MS: f64 = 14.26;
+
+/// Fig. 3 operator shares of `CPU_PREPROC_MS` (sum = 1.0).
+pub const SHARE_READ: f64 = 0.050;
+/// Entropy (Huffman-like) half of decode — serial, CPU-resident in hybrid.
+pub const SHARE_ENTROPY: f64 = 0.402;
+/// Transform half of decode (dequant+IDCT) — offloaded in hybrid.
+pub const SHARE_XFORM: f64 = 0.075;
+pub const SHARE_CROP: f64 = 0.095;
+pub const SHARE_RESIZE: f64 = 0.173;
+pub const SHARE_FLIP: f64 = 0.065;
+pub const SHARE_NORM: f64 = 0.140;
+
+/// Decode share (entropy + transform) = 47.7 % (paper Fig. 3).
+pub const SHARE_DECODE: f64 = SHARE_ENTROPY + SHARE_XFORM;
+/// Augmentation share (crop+resize+flip+normalize).
+pub const SHARE_AUG: f64 = SHARE_CROP + SHARE_RESIZE + SHARE_FLIP + SHARE_NORM;
+
+/// GPU-side preprocessing cost per image, hybrid placement (xform + aug).
+pub const GPU_HYBRID_PRE_MS: f64 = 0.825;
+/// GPU-side preprocessing cost per image, hybrid-0 placement (aug only).
+pub const GPU_AUG_PRE_MS: f64 = 0.747;
+/// Reference training time for the preproc-overlap model (≈ AlexNet's).
+pub const OVERLAP_REF_MS: f64 = 0.25;
+
+/// Extra CPU cost per image for the raw method (per-file metadata lookup
+/// + open + random read issue) — 2× the read share.
+pub const RAW_EXTRA_CPU_MS: f64 = 2.0 * SHARE_READ * CPU_PREPROC_MS;
+
+/// Mean encoded image size (ImageNet-train JPEG average ≈ 110 KB).
+pub const IMG_BYTES: f64 = 110_000.0;
+
+/// vCPU scaling: linear to the NUMA knee, 0.3 marginal efficiency beyond
+/// (two-socket E5-2686v4; data-loading workers contend for memory bw).
+pub const VCPU_KNEE: f64 = 48.0;
+pub const VCPU_SLOPE_BEYOND: f64 = 0.3;
+
+pub fn eff_vcpus(n: f64) -> f64 {
+    if n <= VCPU_KNEE {
+        n
+    } else {
+        VCPU_KNEE + VCPU_SLOPE_BEYOND * (n - VCPU_KNEE)
+    }
+}
+
+/// Per-model calibration: training time per image per V100 (FP16, the
+/// paper's batch sizes).  Solved from the Fig. 2 ideal bars + Fig. 5/6
+/// anchors; relative speeds follow the models' FLOP counts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCalib {
+    pub name: &'static str,
+    pub t_train_ms: f64,
+    /// The paper's batch size for this model (§3.1).
+    pub batch: usize,
+    /// Approx GPU memory per sample at FP16+activations, MB — drives the
+    /// OOM model of §2.2.3.
+    pub mem_mb_per_sample: f64,
+}
+
+pub const MODELS: [ModelCalib; 5] = [
+    ModelCalib { name: "alexnet", t_train_ms: 0.25, batch: 512, mem_mb_per_sample: 9.0 },
+    ModelCalib { name: "shufflenet", t_train_ms: 0.32, batch: 512, mem_mb_per_sample: 12.0 },
+    ModelCalib { name: "resnet18", t_train_ms: 0.45, batch: 512, mem_mb_per_sample: 14.0 },
+    ModelCalib { name: "resnet50", t_train_ms: 2.38, batch: 192, mem_mb_per_sample: 58.0 },
+    ModelCalib { name: "resnet152", t_train_ms: 5.50, batch: 128, mem_mb_per_sample: 95.0 },
+];
+
+pub fn model(name: &str) -> Option<ModelCalib> {
+    MODELS.iter().find(|m| m.name == name).copied()
+}
+
+/// V100 memory (GB) for the OOM model.
+pub const GPU_MEM_GB: f64 = 16.0;
+/// GPU memory DALI's device-side preprocessing claims per sample (MB):
+/// decoded 224×224×3 FP32 intermediates ×4 pipeline stages.
+pub const HYBRID_MEM_MB_PER_SAMPLE: f64 = 2.4;
+
+/// Does (model, batch, placement-uses-device) fit in GPU memory?
+/// Reproduces §2.2.3: ResNet18 @ 512 FP32 with hybrid OOMs; 384 fits.
+pub fn fits_gpu_mem(m: &ModelCalib, batch: usize, hybrid: bool, fp32: bool) -> bool {
+    let scale = if fp32 { 2.0 } else { 1.0 };
+    let train = m.mem_mb_per_sample * scale * batch as f64;
+    let pre = if hybrid { HYBRID_MEM_MB_PER_SAMPLE * scale * batch as f64 } else { 0.0 };
+    let fixed = 1_500.0; // weights/optimizer/workspace
+    train + pre + fixed < GPU_MEM_GB * 1024.0
+}
+
+/// Storage device models at paper scale.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StorageCalib {
+    pub name: &'static str,
+    pub seq_bw_mbs: f64,
+    pub rand_iops: f64,
+}
+
+/// p3.16xlarge EBS (Figs. 2/4/5): sequential streaming can use the
+/// instance-level EBS throughput (14 Gbps ≈ 1750 MB/s); the random-IOPS
+/// number is the *effective* sustained rate for ~110 KB reads (the paper's
+/// raw method is I/O bound near this — Fig. 2 discussion).
+pub const EBS_P3: StorageCalib =
+    StorageCalib { name: "ebs", seq_bw_mbs: 1750.0, rand_iops: 3000.0 };
+/// p3dn.24xlarge volume (Fig. 6): a single gp2-class volume; the paper
+/// observes EBS ≈ NVMe there.  Calibrated to Fig. 6's ResNet18 +8.8 %.
+pub const EBS_P3DN: StorageCalib =
+    StorageCalib { name: "ebs", seq_bw_mbs: 445.0, rand_iops: 7500.0 };
+
+/// Fig. 6 calibration override: AlexNet's measured 1.84× DRAM speedup on
+/// p3dn implies a far lower visible GPU-preproc cost there than Fig. 5a
+/// implies on p3.16xlarge (the paper's figures are not jointly consistent
+/// under one linear model — see EXPERIMENTS.md §Deviations).  We scale
+/// AlexNet's GPU preprocessing cost on p3dn to match the measured ratio.
+pub fn p3dn_gpu_pre_scale(model: &str) -> f64 {
+    if model == "alexnet" {
+        0.348
+    } else {
+        1.0
+    }
+}
+pub const NVME_P3DN: StorageCalib =
+    StorageCalib { name: "nvme", seq_bw_mbs: 450.0, rand_iops: 200_000.0 };
+pub const DRAM: StorageCalib =
+    StorageCalib { name: "dram", seq_bw_mbs: 60_000.0, rand_iops: 50_000_000.0 };
+
+pub fn storage(name: &str, p3dn: bool) -> Option<StorageCalib> {
+    match (name, p3dn) {
+        ("ebs", false) => Some(EBS_P3),
+        ("ebs", true) => Some(EBS_P3DN),
+        ("nvme", _) => Some(NVME_P3DN),
+        ("dram", _) => Some(DRAM),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let s = SHARE_READ + SHARE_DECODE + SHARE_AUG;
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+        assert!((SHARE_DECODE - 0.477).abs() < 1e-9, "decode share must be 47.7%");
+    }
+
+    #[test]
+    fn eff_vcpus_knee() {
+        assert_eq!(eff_vcpus(16.0), 16.0);
+        assert_eq!(eff_vcpus(48.0), 48.0);
+        assert!((eff_vcpus(64.0) - 52.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_lookup() {
+        assert!(model("alexnet").is_some());
+        assert!(model("resnet50").unwrap().t_train_ms > model("resnet18").unwrap().t_train_ms);
+        assert!(model("vgg").is_none());
+    }
+
+    #[test]
+    fn oom_model_matches_paper_anecdote() {
+        // §2.2.3: ResNet18, batch 512, FP32 + hybrid => OOM; 384 fits.
+        let r18 = model("resnet18").unwrap();
+        assert!(!fits_gpu_mem(&r18, 512, true, true), "512 FP32 hybrid must OOM");
+        assert!(fits_gpu_mem(&r18, 384, true, true), "384 FP32 hybrid must fit");
+        // FP16 at the paper's Fig. 2 batch sizes always fits.
+        for m in &MODELS {
+            assert!(fits_gpu_mem(m, m.batch, true, false), "{} fig2 config OOMs", m.name);
+        }
+    }
+
+    #[test]
+    fn storage_lookup() {
+        assert_eq!(storage("ebs", false).unwrap().seq_bw_mbs, 1750.0);
+        assert_eq!(storage("ebs", true).unwrap().seq_bw_mbs, 445.0);
+        assert!(storage("dram", false).unwrap().seq_bw_mbs > 1000.0);
+        assert!(storage("tape", false).is_none());
+    }
+}

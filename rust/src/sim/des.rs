@@ -1,0 +1,326 @@
+//! Discrete-event simulation of the closed preprocessing→training pipeline.
+//!
+//! Entities are images flowing through three service stations:
+//!
+//! ```text
+//!   storage (1 device) → vCPU pool (k servers) → batcher → GPUs (g servers)
+//! ```
+//!
+//! The network is *closed*: a bounded population of in-flight images
+//! models the bounded prefetch queues of the real engine; an image
+//! re-enters at the source when it leaves the GPU.  Steady-state
+//! throughput converges to the analytic bottleneck model (tested), and
+//! the per-second busy-time samples give the Fig. 4 utilization traces,
+//! including the warm-up ramp.
+
+use super::{calib, Scenario, SimOutput};
+use crate::config::Method;
+use crate::metrics::UtilSample;
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ev {
+    ReadDone,
+    CpuDone,
+    GpuDone(usize), // images in the finished batch
+    Sample,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+struct Event {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Station {
+    servers: usize,
+    busy: usize,
+    queue: usize,
+    busy_time: f64,
+    last_change: f64,
+}
+
+impl Station {
+    fn new(servers: usize) -> Self {
+        Station { servers, busy: 0, queue: 0, busy_time: 0.0, last_change: 0.0 }
+    }
+
+    fn account(&mut self, now: f64) {
+        self.busy_time += self.busy as f64 * (now - self.last_change);
+        self.last_change = now;
+    }
+
+    /// Try to start one queued job; returns true if a server was grabbed.
+    fn try_start(&mut self, now: f64) -> bool {
+        if self.queue > 0 && self.busy < self.servers {
+            self.account(now);
+            self.queue -= 1;
+            self.busy += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn finish(&mut self, now: f64) {
+        self.account(now);
+        self.busy -= 1;
+    }
+
+    fn utilization(&self, elapsed: f64) -> f64 {
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            self.busy_time / (elapsed * self.servers as f64)
+        }
+    }
+}
+
+/// Run the DES for `scenario.seconds` of simulated time.
+pub fn simulate(s: &Scenario) -> SimOutput {
+    let m = calib::model(&s.model).expect("validated scenario");
+    let st = calib::storage(&s.storage, s.p3dn).expect("validated scenario");
+    let batch = m.batch;
+
+    // Service times (seconds), jittered ±10% for realism.
+    let read_base = match s.method {
+        Method::Record => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6),
+        Method::Raw => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6) + 1.0 / st.rand_iops,
+    };
+    // vCPU efficiency knee: inflate per-image cost so k nominal servers
+    // deliver eff(k) worth of capacity.
+    let cpu_scale = s.vcpus as f64 / calib::eff_vcpus(s.vcpus as f64);
+    let cpu_base = s.cpu_cost_ms() / 1000.0 * cpu_scale;
+    let gpu_img = s.gpu_cost_ms() / 1000.0;
+
+    // Closed population: enough in-flight images to keep every stage fed.
+    let population = batch * (s.gpus * 3) + s.vcpus * 2 + 32;
+
+    let mut rng = Rng::new(s.seed);
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<Event>>, t: f64, ev: Ev, seq: &mut u64| {
+        *seq += 1;
+        heap.push(Reverse(Event { t, seq: *seq, ev }));
+    };
+
+    let mut storage = Station::new(1);
+    let mut cpus = Station::new(s.vcpus);
+    let mut gpus = Station::new(s.gpus);
+    let mut ready: usize = 0; // images waiting at the batcher
+    let mut gpu_ready: VecDeque<usize> = VecDeque::new(); // queued batches
+    let mut done: u64 = 0;
+    let mut bytes_read: f64 = 0.0;
+    let mut trace: Vec<UtilSample> = Vec::new();
+    let (mut last_cpu, mut last_gpu, mut last_bytes, mut last_t) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+
+    let jitter = |rng: &mut Rng| 0.9 + 0.2 * rng.f64();
+
+    // Prime the closed network: all images start at the storage queue.
+    storage.queue = population;
+    if storage.try_start(0.0) {
+        push(&mut heap, read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
+    }
+    push(&mut heap, 1.0, Ev::Sample, &mut seq);
+
+    if s.ideal {
+        // Ideal mode: every GPU spins on one resident batch; nothing flows.
+        let t_batch = m.t_train_ms / 1000.0 * batch as f64;
+        let steps = (s.seconds / t_batch.max(1e-12)).floor() * s.gpus as f64;
+        return SimOutput {
+            images_done: (steps * batch as f64) as u64,
+            throughput_ips: steps * batch as f64 / s.seconds,
+            cpu_util: 0.0,
+            gpu_util: 1.0,
+            io_mbps: 0.0,
+            util_trace: vec![],
+        };
+    }
+
+    let horizon = s.seconds;
+    while let Some(Reverse(Event { t, ev, .. })) = heap.pop() {
+        if t > horizon {
+            break;
+        }
+        match ev {
+            Ev::ReadDone => {
+                storage.finish(t);
+                bytes_read += calib::IMG_BYTES;
+                cpus.queue += 1;
+                while cpus.try_start(t) {
+                    push(&mut heap, t + cpu_base * jitter(&mut rng), Ev::CpuDone, &mut seq);
+                }
+                if storage.try_start(t) {
+                    push(&mut heap, t + read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
+                }
+            }
+            Ev::CpuDone => {
+                cpus.finish(t);
+                // A server freed: start the next queued CPU job, if any.
+                while cpus.try_start(t) {
+                    push(&mut heap, t + cpu_base * jitter(&mut rng), Ev::CpuDone, &mut seq);
+                }
+                ready += 1;
+                if ready >= batch {
+                    ready -= batch;
+                    gpus.queue += 1;
+                    gpu_ready.push_back(batch);
+                    while gpus.try_start(t) {
+                        let b = gpu_ready.pop_front().unwrap_or(batch);
+                        push(
+                            &mut heap,
+                            t + gpu_img * b as f64 * jitter(&mut rng),
+                            Ev::GpuDone(b),
+                            &mut seq,
+                        );
+                    }
+                }
+            }
+            Ev::GpuDone(b) => {
+                gpus.finish(t);
+                done += b as u64;
+                // Closed loop: images re-enter at the storage stage.
+                storage.queue += b;
+                while storage.try_start(t) {
+                    push(&mut heap, t + read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
+                }
+                while gpus.try_start(t) {
+                    let nb = gpu_ready.pop_front().unwrap_or(batch);
+                    push(
+                        &mut heap,
+                        t + gpu_img * nb as f64 * jitter(&mut rng),
+                        Ev::GpuDone(nb),
+                        &mut seq,
+                    );
+                }
+            }
+            Ev::Sample => {
+                storage.account(t);
+                cpus.account(t);
+                gpus.account(t);
+                let dt = (t - last_t).max(1e-12);
+                trace.push(UtilSample {
+                    t,
+                    cpu: (cpus.busy_time - last_cpu) / (dt * cpus.servers as f64),
+                    device: (gpus.busy_time - last_gpu) / (dt * gpus.servers as f64),
+                    io_mbps: (bytes_read - last_bytes) / dt / 1e6,
+                });
+                last_cpu = cpus.busy_time;
+                last_gpu = gpus.busy_time;
+                last_bytes = bytes_read;
+                last_t = t;
+                if t + 1.0 <= horizon {
+                    push(&mut heap, t + 1.0, Ev::Sample, &mut seq);
+                }
+            }
+        }
+    }
+
+    storage.account(horizon);
+    cpus.account(horizon);
+    gpus.account(horizon);
+    SimOutput {
+        images_done: done,
+        throughput_ips: done as f64 / horizon,
+        cpu_util: cpus.utilization(horizon),
+        gpu_util: gpus.utilization(horizon),
+        io_mbps: bytes_read / horizon / 1e6,
+        util_trace: trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Placement;
+    use crate::sim::analytic_throughput;
+
+    fn run(model: &str, gpus: usize, vcpus: usize, pl: Placement) -> (f64, f64) {
+        let s = Scenario {
+            model: model.into(),
+            gpus,
+            vcpus,
+            placement: pl,
+            seconds: 40.0,
+            ..Default::default()
+        };
+        (simulate(&s).throughput_ips, analytic_throughput(&s))
+    }
+
+    #[test]
+    fn des_matches_analytic_within_tolerance() {
+        for (m, g, v, pl) in [
+            ("alexnet", 8, 64, Placement::Hybrid),
+            ("alexnet", 4, 24, Placement::Hybrid),
+            ("resnet50", 8, 64, Placement::Cpu),
+            ("resnet50", 8, 16, Placement::Hybrid),
+            ("shufflenet", 8, 64, Placement::Hybrid0),
+        ] {
+            let (des, ana) = run(m, g, v, pl);
+            let rel = (des - ana).abs() / ana;
+            assert!(rel < 0.15, "{m} {pl:?} g={g} v={v}: des {des:.0} vs ana {ana:.0}");
+        }
+    }
+
+    #[test]
+    fn des_utilization_identifies_bottleneck() {
+        // ResNet50 record-hybrid (Fig. 4 right): GPU ~saturated, CPU low.
+        let s = Scenario { model: "resnet50".into(), seconds: 40.0, ..Default::default() };
+        let out = simulate(&s);
+        assert!(out.gpu_util > 0.85, "gpu {:.2}", out.gpu_util);
+        assert!(out.cpu_util < 0.55, "cpu {:.2}", out.cpu_util);
+        // AlexNet record-hybrid (Fig. 4 left): CPU much busier than r50's.
+        let s2 = Scenario { model: "alexnet".into(), seconds: 40.0, ..Default::default() };
+        let out2 = simulate(&s2);
+        assert!(out2.cpu_util > out.cpu_util + 0.2, "al cpu {:.2}", out2.cpu_util);
+        assert!(out2.io_mbps > out.io_mbps, "al io should exceed r50 io");
+    }
+
+    #[test]
+    fn des_trace_has_per_second_samples() {
+        let s = Scenario { model: "resnet50".into(), seconds: 10.0, ..Default::default() };
+        let out = simulate(&s);
+        assert!(out.util_trace.len() >= 8, "{} samples", out.util_trace.len());
+        // Steady-state samples should be positive for all resources.
+        let last = out.util_trace.last().unwrap();
+        assert!(last.device > 0.5 && last.io_mbps > 0.0);
+    }
+
+    #[test]
+    fn des_ideal_mode_is_gpu_only() {
+        let s = Scenario { model: "alexnet".into(), ideal: true, seconds: 10.0, ..Default::default() };
+        let out = simulate(&s);
+        assert!(out.cpu_util == 0.0 && out.io_mbps == 0.0);
+        let ana = analytic_throughput(&s);
+        assert!((out.throughput_ips - ana).abs() / ana < 0.1);
+    }
+
+    #[test]
+    fn des_deterministic_per_seed() {
+        let s = Scenario { model: "resnet18".into(), seconds: 15.0, ..Default::default() };
+        let a = simulate(&s).images_done;
+        let b = simulate(&s).images_done;
+        assert_eq!(a, b);
+    }
+}

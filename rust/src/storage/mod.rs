@@ -1,0 +1,468 @@
+//! Storage backends + device emulation (paper §4, Fig. 6).
+//!
+//! The paper compares EBS, instance NVMe SSDs, and DRAM as training-data
+//! hosts.  We model a storage *device* as (sequential bandwidth, random
+//! IOPS ceiling, per-op latency) and throttle real reads to the profile
+//! with a token-bucket.  The same profiles drive both the real engine
+//! (sleep-based throttling here) and the discrete-event simulator
+//! (analytic service times in `sim/`).
+
+pub mod cache;
+
+pub use cache::CachedStore;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A storage device profile.  Numbers for EBS/NVMe follow the paper's
+/// setup (§3.1, §4: EBS "up to 7500 IOPS", "EBS ... offers similar I/O
+/// bandwidths as the attached NVMe SSDs"); DRAM is memory-speed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StorageProfile {
+    pub name: &'static str,
+    /// Sequential bandwidth, bytes/s.
+    pub seq_bw: f64,
+    /// Random-read operations/s ceiling.
+    pub rand_iops: f64,
+    /// Fixed per-operation latency, seconds.
+    pub latency: f64,
+}
+
+impl StorageProfile {
+    pub const fn ebs() -> Self {
+        StorageProfile { name: "ebs", seq_bw: 480e6, rand_iops: 7_500.0, latency: 500e-6 }
+    }
+
+    pub const fn nvme() -> Self {
+        StorageProfile { name: "nvme", seq_bw: 500e6, rand_iops: 200_000.0, latency: 80e-6 }
+    }
+
+    pub const fn dram() -> Self {
+        StorageProfile { name: "dram", seq_bw: 60e9, rand_iops: 50_000_000.0, latency: 0.2e-6 }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "ebs" => Some(Self::ebs()),
+            "nvme" => Some(Self::nvme()),
+            "dram" => Some(Self::dram()),
+            _ => None,
+        }
+    }
+
+    /// Analytic service time for a read of `len` bytes (used by `sim/`):
+    /// sequential = latency + transfer; random additionally pays the
+    /// IOPS token (seek/queue cost), which is what makes raw-file loading
+    /// slower than record streaming on disk-backed stores (paper §3.2).
+    pub fn service_time(&self, len: u64, sequential: bool) -> f64 {
+        let xfer = len as f64 / self.seq_bw;
+        let iop = if sequential { 0.0 } else { 1.0 / self.rand_iops };
+        self.latency + iop + xfer
+    }
+}
+
+/// Byte-level statistics every store keeps (feeds the Fig. 4 I/O trace).
+#[derive(Debug, Default)]
+pub struct IoStats {
+    pub bytes_read: AtomicU64,
+    pub reads: AtomicU64,
+}
+
+impl IoStats {
+    pub fn record(&self, bytes: u64) {
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.bytes_read.load(Ordering::Relaxed), self.reads.load(Ordering::Relaxed))
+    }
+}
+
+/// Object-store style interface over named blobs.  `read_range` is the
+/// random-access path (raw files / indexed records); `read` fetches a
+/// whole object (record chunks use ranged reads).
+pub trait Storage: Send + Sync {
+    fn read(&self, name: &str) -> Result<Vec<u8>>;
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+    fn len(&self, name: &str) -> Result<u64>;
+    fn list(&self) -> Result<Vec<String>>;
+    fn stats(&self) -> (u64, u64);
+}
+
+/// Forwarding impl so cache/throttle wrappers can stack over trait objects.
+impl<S: Storage + ?Sized> Storage for std::sync::Arc<S> {
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        (**self).read(name)
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        (**self).read_range(name, offset, len)
+    }
+
+    fn len(&self, name: &str) -> Result<u64> {
+        (**self).len(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        (**self).list()
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (**self).stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DirStore: real files in a directory
+// ---------------------------------------------------------------------------
+
+pub struct DirStore {
+    root: PathBuf,
+    stats: IoStats,
+}
+
+impl DirStore {
+    pub fn new(root: &Path) -> Result<Self> {
+        std::fs::create_dir_all(root).with_context(|| format!("mkdir {root:?}"))?;
+        Ok(DirStore { root: root.to_path_buf(), stats: IoStats::default() })
+    }
+
+    pub fn write(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let p = self.root.join(name);
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&p, bytes).with_context(|| format!("write {p:?}"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+impl Storage for DirStore {
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        let p = self.root.join(name);
+        let b = std::fs::read(&p).with_context(|| format!("read {p:?}"))?;
+        self.stats.record(b.len() as u64);
+        Ok(b)
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        use std::io::Seek;
+        let p = self.root.join(name);
+        let mut f = File::open(&p).with_context(|| format!("open {p:?}"))?;
+        f.seek(std::io::SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        let mut read = 0;
+        while read < buf.len() {
+            let n = f.read(&mut buf[read..])?;
+            if n == 0 {
+                break;
+            }
+            read += n;
+        }
+        buf.truncate(read);
+        self.stats.record(read as u64);
+        Ok(buf)
+    }
+
+    fn len(&self, name: &str) -> Result<u64> {
+        Ok(std::fs::metadata(self.root.join(name))?.len())
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        // Recursive walk, names relative to the root ("img/000001.mjx").
+        fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+            for e in std::fs::read_dir(dir)? {
+                let e = e?;
+                let ft = e.file_type()?;
+                if ft.is_dir() {
+                    walk(root, &e.path(), out)?;
+                } else if ft.is_file() {
+                    let rel = e.path().strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                    out.push(rel);
+                }
+            }
+            Ok(())
+        }
+        let mut names = Vec::new();
+        walk(&self.root, &self.root, &mut names)?;
+        names.sort();
+        Ok(names)
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        self.stats.snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemStore: DRAM-resident blobs
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct MemStore {
+    blobs: Mutex<HashMap<String, Vec<u8>>>,
+    stats: IoStats,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write(&self, name: &str, bytes: Vec<u8>) {
+        self.blobs.lock().unwrap().insert(name.to_string(), bytes);
+    }
+
+    /// Preload every blob of another store (the paper's "load data to
+    /// DRAM first" configuration).
+    pub fn preload_from(src: &dyn Storage) -> Result<Self> {
+        let m = MemStore::new();
+        for name in src.list()? {
+            let data = src.read(&name)?;
+            m.write(&name, data);
+        }
+        Ok(m)
+    }
+}
+
+impl Storage for MemStore {
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        let b = self
+            .blobs
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no blob {name}"))?;
+        self.stats.record(b.len() as u64);
+        Ok(b)
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let g = self.blobs.lock().unwrap();
+        let b = g.get(name).with_context(|| format!("no blob {name}"))?;
+        let start = (offset as usize).min(b.len());
+        let end = (start + len as usize).min(b.len());
+        self.stats.record((end - start) as u64);
+        Ok(b[start..end].to_vec())
+    }
+
+    fn len(&self, name: &str) -> Result<u64> {
+        let g = self.blobs.lock().unwrap();
+        Ok(g.get(name).with_context(|| format!("no blob {name}"))?.len() as u64)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut names: Vec<String> = self.blobs.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        Ok(names)
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        self.stats.snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThrottledStore: token-bucket device emulation over any inner store
+// ---------------------------------------------------------------------------
+
+struct Bucket {
+    /// Time at which the device becomes free (monotonic seconds from t0).
+    busy_until: f64,
+}
+
+pub struct ThrottledStore<S: Storage> {
+    inner: S,
+    profile: StorageProfile,
+    t0: Instant,
+    bucket: Mutex<Bucket>,
+    /// Scale factor on emulated delays (1.0 = real-time emulation;
+    /// smaller speeds tests up while keeping relative costs).
+    time_scale: f64,
+}
+
+impl<S: Storage> ThrottledStore<S> {
+    pub fn new(inner: S, profile: StorageProfile) -> Self {
+        Self::with_time_scale(inner, profile, 1.0)
+    }
+
+    pub fn with_time_scale(inner: S, profile: StorageProfile, time_scale: f64) -> Self {
+        ThrottledStore {
+            inner,
+            profile,
+            t0: Instant::now(),
+            bucket: Mutex::new(Bucket { busy_until: 0.0 }),
+            time_scale,
+        }
+    }
+
+    pub fn profile(&self) -> StorageProfile {
+        self.profile
+    }
+
+    fn throttle(&self, len: u64, sequential: bool) {
+        let service = self.profile.service_time(len, sequential) * self.time_scale;
+        let now = self.t0.elapsed().as_secs_f64();
+        let wake;
+        {
+            let mut b = self.bucket.lock().unwrap();
+            let start = b.busy_until.max(now);
+            b.busy_until = start + service;
+            wake = b.busy_until;
+        }
+        let sleep = wake - now;
+        if sleep > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(sleep));
+        }
+    }
+}
+
+impl<S: Storage> Storage for ThrottledStore<S> {
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        let len = self.inner.len(name)?;
+        self.throttle(len, true);
+        self.inner.read(name)
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        // Ranged reads are random I/O unless they are large chunks.
+        let sequential = len >= 1 << 20;
+        self.throttle(len, sequential);
+        self.inner.read_range(name, offset, len)
+    }
+
+    fn len(&self, name: &str) -> Result<u64> {
+        self.inner.len(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_sane() {
+        let ebs = StorageProfile::ebs();
+        let nvme = StorageProfile::nvme();
+        let dram = StorageProfile::dram();
+        assert!(dram.seq_bw > nvme.seq_bw && nvme.seq_bw >= ebs.seq_bw * 0.9);
+        assert!(nvme.rand_iops > ebs.rand_iops);
+        assert_eq!(StorageProfile::by_name("ebs").unwrap().name, "ebs");
+        assert!(StorageProfile::by_name("floppy").is_none());
+    }
+
+    #[test]
+    fn service_time_random_vs_sequential() {
+        let ebs = StorageProfile::ebs();
+        let small = 100_000u64; // 100 KB image
+        // Random read of a small object is IOPS-bound on EBS.
+        assert!(ebs.service_time(small, false) > ebs.service_time(small, true));
+        // Large sequential read is bandwidth-bound.
+        let t = ebs.service_time(64 << 20, true);
+        assert!((t - (64.0 * (1 << 20) as f64 / 480e6 + 500e-6)).abs() < 1e-6);
+        // The IOPS token is exactly the random/sequential gap.
+        let gap = ebs.service_time(small, false) - ebs.service_time(small, true);
+        assert!((gap - 1.0 / 7500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memstore_roundtrip_and_range() {
+        let m = MemStore::new();
+        m.write("a", vec![1, 2, 3, 4, 5]);
+        assert_eq!(m.read("a").unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(m.read_range("a", 1, 3).unwrap(), vec![2, 3, 4]);
+        assert_eq!(m.read_range("a", 3, 100).unwrap(), vec![4, 5]);
+        assert_eq!(m.len("a").unwrap(), 5);
+        assert!(m.read("b").is_err());
+        let (bytes, reads) = m.stats();
+        assert_eq!(reads, 3);
+        assert_eq!(bytes, 5 + 3 + 2);
+    }
+
+    #[test]
+    fn dirstore_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dpp-store-{}", std::process::id()));
+        let s = DirStore::new(&dir).unwrap();
+        s.write("x.bin", &[9u8; 1000]).unwrap();
+        s.write("y.bin", &[7u8; 10]).unwrap();
+        assert_eq!(s.read("x.bin").unwrap().len(), 1000);
+        assert_eq!(s.read_range("x.bin", 990, 100).unwrap().len(), 10);
+        assert_eq!(s.list().unwrap(), vec!["x.bin".to_string(), "y.bin".to_string()]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn preload_copies_everything() {
+        let dir = std::env::temp_dir().join(format!("dpp-preload-{}", std::process::id()));
+        let s = DirStore::new(&dir).unwrap();
+        s.write("a", &[1u8; 64]).unwrap();
+        s.write("b", &[2u8; 32]).unwrap();
+        let m = MemStore::preload_from(&s).unwrap();
+        assert_eq!(m.read("a").unwrap(), vec![1u8; 64]);
+        assert_eq!(m.read("b").unwrap(), vec![2u8; 32]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn throttled_store_enforces_bandwidth() {
+        // 1 MB/s profile, 100 KB read => >= ~90ms.
+        let prof = StorageProfile { name: "slow", seq_bw: 1e6, rand_iops: 1e9, latency: 0.0 };
+        let m = MemStore::new();
+        m.write("a", vec![0u8; 100_000]);
+        let t = ThrottledStore::new(m, prof);
+        let start = Instant::now();
+        t.read("a").unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(90));
+    }
+
+    #[test]
+    fn throttled_store_time_scale_speeds_up() {
+        let prof = StorageProfile { name: "slow", seq_bw: 1e6, rand_iops: 1e9, latency: 0.0 };
+        let m = MemStore::new();
+        m.write("a", vec![0u8; 100_000]);
+        let t = ThrottledStore::with_time_scale(m, prof, 0.01);
+        let start = Instant::now();
+        t.read("a").unwrap();
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn throttled_serializes_concurrent_readers() {
+        use std::sync::Arc;
+        let prof = StorageProfile { name: "slow", seq_bw: 10e6, rand_iops: 1e9, latency: 0.0 };
+        let m = MemStore::new();
+        m.write("a", vec![0u8; 100_000]); // 10ms each at 10MB/s
+        let t = Arc::new(ThrottledStore::new(m, prof));
+        let start = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || t.read("a").unwrap())
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 4 reads x 10ms serialized through one device >= ~35ms.
+        assert!(start.elapsed() >= Duration::from_millis(35));
+    }
+}

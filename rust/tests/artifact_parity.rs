@@ -1,0 +1,218 @@
+//! Cross-layer parity: the rust CPU implementations (codec + ops) and the
+//! AOT-compiled Pallas/JAX artifacts must compute the SAME functions, so
+//! the `cpu`, `hybrid` and `hybrid0` placements produce identical batches.
+//!
+//! This is the correctness keystone of the three-layer design: L1 kernels
+//! were checked against the jnp oracle in pytest; here the L3 CPU path is
+//! checked against the compiled L1/L2 artifacts through PJRT.
+
+use dpp::codec;
+use dpp::dataset;
+use dpp::ops;
+use dpp::runtime::{lit_f32, to_vec_f32, Engine};
+use dpp::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<Engine> {
+    if artifact_dir().join("manifest.json").exists() {
+        Some(Engine::new(&artifact_dir()).expect("engine"))
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Batch of encoded images + their entropy-decoded coefficients.
+fn test_batch(b: usize, quality: u8) -> (Vec<Vec<u8>>, Vec<codec::CoefImage>) {
+    let mut enc = Vec::new();
+    let mut cis = Vec::new();
+    for i in 0..b {
+        let img = dataset::gen_image(&mut Rng::new(100 + i as u64), (i % 16) as u16, 3, 64, 64);
+        let bytes = codec::encode(&img, quality).unwrap();
+        cis.push(codec::entropy_decode(&bytes).unwrap());
+        enc.push(bytes);
+    }
+    (enc, cis)
+}
+
+#[test]
+fn decode_artifact_matches_rust_cpu_decode() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let b = eng.manifest.batch_test;
+    let (enc, cis) = test_batch(b, 85);
+
+    // Assemble the artifact input [B, C, 8, 8, 8, 8].
+    let mut coefs = Vec::with_capacity(b * 3 * 64 * 64);
+    for ci in &cis {
+        coefs.extend_from_slice(&ci.coefs);
+    }
+    let q = cis[0].qtable;
+    let cl = lit_f32(&[b, 3, 8, 8, 8, 8], &coefs).unwrap();
+    let ql = lit_f32(&[8, 8], &q).unwrap();
+    let outs = eng.execute(&eng.manifest.decode_artifact(b).clone(), &[cl, ql]).unwrap();
+    let gpu_pixels = to_vec_f32(&outs[0]).unwrap();
+
+    // Rust CPU decode of the same bitstreams.
+    for (i, bytes) in enc.iter().enumerate() {
+        let cpu = codec::decode_cpu(bytes).unwrap();
+        let gpu = &gpu_pixels[i * 3 * 64 * 64..(i + 1) * 3 * 64 * 64];
+        // CPU path rounds to u8; artifact returns f32 — compare within 0.51.
+        let max = cpu
+            .data
+            .iter()
+            .zip(gpu)
+            .map(|(&c, &g)| (c as f32 - g).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max <= 0.51, "image {i}: max pixel diff {max}");
+    }
+}
+
+#[test]
+fn augment_artifact_matches_rust_ops() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let b = eng.manifest.batch_test;
+    let hw = eng.manifest.img_hw;
+    let out_hw = eng.manifest.out_hw;
+    let mut rng = Rng::new(7);
+
+    // Random pixel batch + random aug params.
+    let mut imgs = vec![0f32; b * 3 * hw * hw];
+    for v in imgs.iter_mut() {
+        *v = (rng.f32() * 255.0).round();
+    }
+    let params: Vec<ops::AugParams> =
+        (0..b).map(|_| ops::sample_aug_params(&mut rng, hw as u32, hw as u32)).collect();
+    let aug_rows: Vec<f32> = params.iter().flat_map(|p| p.to_row()).collect();
+
+    let il = lit_f32(&[b, 3, hw, hw], &imgs).unwrap();
+    let al = lit_f32(&[b, 6], &aug_rows).unwrap();
+    let outs = eng.execute(&eng.manifest.augment_artifact(b).clone(), &[il, al]).unwrap();
+    let got = to_vec_f32(&outs[0]).unwrap();
+
+    let mut want = vec![0f32; b * 3 * out_hw * out_hw];
+    for (i, p) in params.iter().enumerate() {
+        ops::augment_fused(
+            &imgs[i * 3 * hw * hw..(i + 1) * 3 * hw * hw],
+            3,
+            hw,
+            hw,
+            p,
+            out_hw,
+            out_hw,
+            &mut want[i * 3 * out_hw * out_hw..(i + 1) * 3 * out_hw * out_hw],
+        );
+    }
+    let max = max_abs_diff(&got, &want);
+    assert!(max < 1e-3, "augment parity: max diff {max}");
+}
+
+#[test]
+fn fused_artifact_equals_decode_then_augment() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let b = eng.manifest.batch_test;
+    let (_, cis) = test_batch(b, 70);
+    let mut coefs = Vec::new();
+    for ci in &cis {
+        coefs.extend_from_slice(&ci.coefs);
+    }
+    let q = cis[0].qtable;
+    let mut rng = Rng::new(9);
+    let params: Vec<ops::AugParams> =
+        (0..b).map(|_| ops::sample_aug_params(&mut rng, 64, 64)).collect();
+    let aug_rows: Vec<f32> = params.iter().flat_map(|p| p.to_row()).collect();
+
+    // Fused artifact.
+    let outs = eng
+        .execute(
+            &eng.manifest.fused_artifact(b).clone(),
+            &[
+                lit_f32(&[b, 3, 8, 8, 8, 8], &coefs).unwrap(),
+                lit_f32(&[8, 8], &q).unwrap(),
+                lit_f32(&[b, 6], &aug_rows).unwrap(),
+            ],
+        )
+        .unwrap();
+    let fused = to_vec_f32(&outs[0]).unwrap();
+
+    // Staged: decode artifact then augment artifact.
+    let outs = eng
+        .execute(
+            &eng.manifest.decode_artifact(b).clone(),
+            &[lit_f32(&[b, 3, 8, 8, 8, 8], &coefs).unwrap(), lit_f32(&[8, 8], &q).unwrap()],
+        )
+        .unwrap();
+    let pixels = to_vec_f32(&outs[0]).unwrap();
+    let outs = eng
+        .execute(
+            &eng.manifest.augment_artifact(b).clone(),
+            &[
+                lit_f32(&[b, 3, 64, 64], &pixels).unwrap(),
+                lit_f32(&[b, 6], &aug_rows).unwrap(),
+            ],
+        )
+        .unwrap();
+    let staged = to_vec_f32(&outs[0]).unwrap();
+
+    let max = max_abs_diff(&fused, &staged);
+    assert!(max < 1e-4, "fusion parity: max diff {max}");
+}
+
+#[test]
+fn hybrid_and_cpu_placements_produce_identical_batches() {
+    // End-to-end placement parity at the pipeline layer: the exact tensors
+    // the trainer would see, via dpp::pipeline::cpu_stage + artifacts.
+    use dpp::config::Placement;
+    use dpp::pipeline::{collate, cpu_stage, Batch, Sample};
+
+    let Some(mut eng) = engine_or_skip() else { return };
+    let b = eng.manifest.batch_test;
+    let (enc, _) = test_batch(b, 85);
+    let mut rng = Rng::new(11);
+    let params: Vec<ops::AugParams> =
+        (0..b).map(|_| ops::sample_aug_params(&mut rng, 64, 64)).collect();
+
+    let make = |pl: Placement| -> Vec<Sample> {
+        enc.iter()
+            .enumerate()
+            .map(|(i, bytes)| Sample {
+                id: i as u64,
+                label: 0,
+                payload: cpu_stage(bytes, pl, params[i], 56).unwrap(),
+            })
+            .collect()
+    };
+
+    // cpu placement: batch is final.
+    let Batch::Ready { data: cpu_data, .. } = collate(make(Placement::Cpu)).unwrap() else {
+        panic!()
+    };
+    // hybrid placement: run fused artifact.
+    let Batch::Coefs { data, qtable, aug, .. } = collate(make(Placement::Hybrid)).unwrap() else {
+        panic!()
+    };
+    let outs = eng
+        .execute(
+            &eng.manifest.fused_artifact(b).clone(),
+            &[
+                lit_f32(&[b, 3, 8, 8, 8, 8], &data).unwrap(),
+                lit_f32(&[8, 8], &qtable).unwrap(),
+                lit_f32(&[b, 6], &aug).unwrap(),
+            ],
+        )
+        .unwrap();
+    let hybrid_data = to_vec_f32(&outs[0]).unwrap();
+
+    // The CPU path rounds decoded pixels to u8 before augmenting, the
+    // artifact path keeps f32 — bounded by 0.5 pixel / NORM_STD ≈ 0.01.
+    let max = max_abs_diff(&cpu_data, &hybrid_data);
+    assert!(max < 0.02, "placement parity: max diff {max}");
+}

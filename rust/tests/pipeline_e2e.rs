@@ -1,0 +1,349 @@
+//! Integration tests over the full coordinator pipeline: every
+//! method × placement combination on a small real corpus, loss descent,
+//! epoch semantics, storage emulation, and property tests on the
+//! coordinator invariants (routing, batching, shuffling).
+
+use dpp::config::{Method, Placement, RunConfig};
+use dpp::coordinator::{self, prepare_data};
+use dpp::dataset::GenConfig;
+use dpp::testing::{check, PropConfig};
+use dpp::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// Shared corpus, generated once per test binary.
+fn corpus() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("dpp-it-{}", std::process::id()));
+        prepare_data(&dir, &GenConfig { n_images: 80, ..Default::default() }, 3).unwrap();
+        dir
+    })
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        data_dir: corpus().clone(),
+        artifact_dir: artifact_dir(),
+        model: "resnet_t".into(),
+        batch_size: 8,
+        cpu_workers: 2,
+        steps: 2,
+        lr: 0.2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_method_placement_combination_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for method in [Method::Raw, Method::Record] {
+        for placement in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
+            let cfg = RunConfig { method, placement, ..base_cfg() };
+            let r = coordinator::run(&cfg)
+                .unwrap_or_else(|e| panic!("{method:?}/{placement:?}: {e:#}"));
+            assert_eq!(r.steps, 2, "{method:?}/{placement:?}");
+            assert_eq!(r.losses.len(), 2);
+            assert!(r.losses.iter().all(|(_, l)| l.is_finite()));
+            assert!(r.images >= 16, "{method:?}/{placement:?}: {} images", r.images);
+        }
+    }
+}
+
+#[test]
+fn full_epoch_consumes_every_image_once() {
+    if !have_artifacts() {
+        return;
+    }
+    // 80 images, batch 8, no step limit => exactly 10 steps, all decoded.
+    let cfg = RunConfig { steps: 0, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 10);
+    assert_eq!(r.images, 80);
+}
+
+#[test]
+fn partial_trailing_batch_is_dropped() {
+    if !have_artifacts() {
+        return;
+    }
+    // Batch 32 over 80 images => 2 full batches, 16 leftover dropped.
+    let cfg = RunConfig { batch_size: 32, steps: 0, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 2);
+}
+
+#[test]
+fn loss_falls_within_one_epoch_of_repeats() {
+    if !have_artifacts() {
+        return;
+    }
+    // Train 8 steps on the small corpus: loss must move down on average.
+    let cfg = RunConfig { steps: 8, lr: 0.25, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    let first = r.losses.first().unwrap().1;
+    let last2: f32 = r.losses.iter().rev().take(2).map(|(_, l)| l).sum::<f32>() / 2.0;
+    assert!(last2 < first, "loss {first} -> {last2}");
+}
+
+#[test]
+fn ideal_mode_trains_without_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig { ideal: true, steps: 5, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 5);
+    // Ideal mode decodes at most ~one queue fill, far fewer than 5 batches.
+    assert!(r.images <= 80);
+    assert!(r.train_ips > 0.0);
+}
+
+#[test]
+fn preprocessing_only_mode_runs_without_model() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig { train: false, steps: 0, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.images, 80);
+    assert!(r.losses.is_empty());
+}
+
+#[test]
+fn emulated_storage_profiles_run_and_slow_down() {
+    if !have_artifacts() {
+        return;
+    }
+    // dram (memstore preload) must work end to end.
+    let dram = coordinator::run(&RunConfig { storage: "dram".into(), ..base_cfg() }).unwrap();
+    assert_eq!(dram.steps, 2);
+    // Identical configs except the throttle scale.  I/O overlaps with
+    // compute, so the throttle must be large enough that the serialized
+    // device time (~16 reads x ~0.4 s at scale 800) strictly exceeds the
+    // compute+compile time of the run even in debug builds.
+    let mk = |scale: f64| RunConfig {
+        storage: "ebs".into(),
+        method: Method::Raw,
+        time_scale: scale,
+        ..base_cfg()
+    };
+    let fast = coordinator::run(&mk(1e-6)).unwrap();
+    let slow = coordinator::run(&mk(800.0)).unwrap();
+    assert!(
+        slow.wall_secs > fast.wall_secs + 1.5,
+        "throttle had no effect: {:.3}s vs {:.3}s",
+        slow.wall_secs,
+        fast.wall_secs
+    );
+}
+
+#[test]
+fn deterministic_loss_curve_per_seed() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same seed + single worker => identical batch composition and losses.
+    let cfg = RunConfig { cpu_workers: 1, steps: 3, seed: 99, ..base_cfg() };
+    let a = coordinator::run(&cfg).unwrap();
+    let b = coordinator::run(&cfg).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+// ---------------------------------------------------------------------------
+// Property tests on coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_epoch_order_is_always_a_permutation() {
+    check(
+        "epoch-order-permutation",
+        PropConfig { cases: 40, ..Default::default() },
+        |rng, size| {
+            let n = 1 + rng.gen_range(20 * size as u64 + 1) as usize;
+            let seq = 1 + rng.gen_range(16) as usize;
+            let seed = rng.next_u64();
+            let epoch = rng.gen_range(4);
+            (n, seq, seed, epoch)
+        },
+        |&(n, seq, seed, epoch)| {
+            let s = dpp::dataset::EpochSampler::new((0..n as u64).collect(), seq, seed);
+            let mut order = s.epoch_order(epoch);
+            order.sort();
+            order == (0..n as u64).collect::<Vec<_>>()
+        },
+    );
+}
+
+#[test]
+fn prop_collate_preserves_labels_and_sizes() {
+    use dpp::pipeline::{collate, Batch, Payload, Sample};
+    check(
+        "collate-preserves",
+        PropConfig { cases: 40, ..Default::default() },
+        |rng, size| {
+            let b = 1 + rng.gen_range(size as u64 + 1) as usize;
+            let elems = 1 + rng.gen_range(64) as usize;
+            let labels: Vec<u16> = (0..b).map(|_| rng.gen_range(16) as u16).collect();
+            (elems, labels)
+        },
+        |(elems, labels)| {
+            let samples: Vec<Sample> = labels
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| Sample {
+                    id: i as u64,
+                    label: l,
+                    payload: Payload::Ready(vec![i as f32; *elems]),
+                })
+                .collect();
+            match collate(samples) {
+                Ok(Batch::Ready { data, labels: got }) => {
+                    data.len() == elems * labels.len()
+                        && got == labels.iter().map(|&l| l as i32).collect::<Vec<_>>()
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_record_roundtrip_any_payload() {
+    check(
+        "record-roundtrip",
+        PropConfig { cases: 30, ..Default::default() },
+        |rng, size| {
+            let n = 1 + rng.gen_range(size as u64 + 1) as usize;
+            let recs: Vec<(u64, u16, Vec<u8>)> = (0..n)
+                .map(|i| {
+                    let len = rng.gen_range(2048) as usize;
+                    let payload = (0..len).map(|_| rng.next_u32() as u8).collect();
+                    (i as u64 * 3, rng.gen_range(1 << 16) as u16, payload)
+                })
+                .collect();
+            recs
+        },
+        |recs| {
+            let dir = std::env::temp_dir()
+                .join(format!("dpp-prop-{}-{}", std::process::id(), recs.len()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let shard = dir.join("p.rec");
+            let mut w = dpp::record::ShardWriter::create(&shard).unwrap();
+            for (id, label, p) in recs {
+                w.append(*id, *label, p).unwrap();
+            }
+            w.finish().unwrap();
+            let parsed = dpp::record::parse_shard(&std::fs::read(&shard).unwrap()).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            parsed.len() == recs.len()
+                && parsed
+                    .iter()
+                    .zip(recs)
+                    .all(|(r, (id, label, p))| r.id == *id && r.label == *label && &r.payload == p)
+        },
+    );
+}
+
+#[test]
+fn prop_codec_roundtrip_bounded_error() {
+    check(
+        "codec-roundtrip-bounded",
+        PropConfig { cases: 20, ..Default::default() },
+        |rng, _| {
+            // Smooth-ish image + random quality >= 60.
+            let q = 60 + rng.gen_range(41) as u8;
+            let seed = rng.next_u64();
+            (seed, q)
+        },
+        |&(seed, q)| {
+            let img = dpp::dataset::gen_image(&mut Rng::new(seed), 3, 3, 32, 32);
+            let bytes = dpp::codec::encode(&img, q).unwrap();
+            let dec = dpp::codec::decode_cpu(&bytes).unwrap();
+            let mse = img
+                .data
+                .iter()
+                .zip(&dec.data)
+                .map(|(&a, &b)| ((a as f64) - (b as f64)).powi(2))
+                .sum::<f64>()
+                / img.data.len() as f64;
+            mse < 120.0 // generous bound; q>=60 on smooth content is ~<40
+        },
+    );
+}
+
+#[test]
+fn prop_shuffle_buffer_is_exactly_once_delivery() {
+    use dpp::pipeline::shuffle::ShuffleBuffer;
+    check(
+        "shuffle-once",
+        PropConfig { cases: 40, ..Default::default() },
+        |rng, size| {
+            let cap = 1 + rng.gen_range(32) as usize;
+            let n = rng.gen_range(20 * size as u64 + 1) as usize;
+            let seed = rng.next_u64();
+            (cap, n, seed)
+        },
+        |&(cap, n, seed)| {
+            let mut sb = ShuffleBuffer::new(cap, Rng::new(seed));
+            let mut out = Vec::new();
+            for i in 0..n as u32 {
+                if let Some(v) = sb.push(i) {
+                    out.push(v);
+                }
+            }
+            out.extend(sb.drain());
+            out.sort();
+            out == (0..n as u32).collect::<Vec<_>>()
+        },
+    );
+}
+
+#[test]
+fn multi_epoch_run_repeats_the_corpus() {
+    if !have_artifacts() {
+        return;
+    }
+    // 2 epochs x 80 images, batch 8 => 20 steps, 160 images decoded.
+    let cfg = RunConfig { steps: 0, epochs: 2, ..base_cfg() };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 20);
+    assert_eq!(r.images, 160);
+}
+
+#[test]
+fn cache_layer_serves_second_epoch_from_memory() {
+    if !have_artifacts() {
+        return;
+    }
+    // Raw method so every image is a whole-object read; cache fits all.
+    let cfg = RunConfig {
+        method: Method::Raw,
+        steps: 0,
+        epochs: 2,
+        cache_mb: 64,
+        ..base_cfg()
+    };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 20);
+    // The backing store must see each file ~once (metadata + 80 images),
+    // not twice: epoch 2 hits the cache.
+    let no_cache = coordinator::run(&RunConfig { cache_mb: 0, ..cfg }).unwrap();
+    assert!(
+        r.io_bytes < no_cache.io_bytes * 6 / 10,
+        "cache did not absorb epoch 2: {} vs {}",
+        r.io_bytes,
+        no_cache.io_bytes
+    );
+}
