@@ -10,6 +10,29 @@ pub const GCLOUD_MEM_GB_HOUR: f64 = 0.0044;
 /// DRAM-hosting the dataset needs extra memory (ImageNet ≈ 150 GB).
 pub const DATASET_DRAM_GB: f64 = 150.0;
 
+/// S3 Standard storage price, $/GB·month (the remote-tier alternative to
+/// paying the DRAM premium for the dataset).
+pub const S3_GB_MONTH: f64 = 0.023;
+
+/// S3 Standard-IA (cold) storage price, $/GB·month.
+pub const S3_COLD_GB_MONTH: f64 = 0.0125;
+
+/// Hours per month used to convert storage pricing to $/h.
+pub const HOURS_PER_MONTH: f64 = 730.0;
+
+/// $/hour to keep the ImageNet-class dataset in S3 instead of DRAM —
+/// ~0.005 $/h vs the ~0.66 $/h DRAM premium, which is why the
+/// auto-configurator's cost objective likes the remote tiers whenever
+/// enough connections keep the loader fed.
+pub fn s3_dataset_per_hour() -> f64 {
+    DATASET_DRAM_GB * S3_GB_MONTH / HOURS_PER_MONTH
+}
+
+/// $/hour for the cold tier: cheaper at rest, slower to first byte.
+pub fn s3_cold_dataset_per_hour() -> f64 {
+    DATASET_DRAM_GB * S3_COLD_GB_MONTH / HOURS_PER_MONTH
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct Instance {
     pub name: &'static str,
@@ -80,6 +103,14 @@ mod tests {
             let lo = i.price_per_hour(2, false);
             assert!(lo < hi, "{}", i.name);
         }
+    }
+
+    #[test]
+    fn s3_hosting_is_far_cheaper_than_dram_hosting() {
+        let s3 = s3_dataset_per_hour();
+        let dram = DATASET_DRAM_GB * GCLOUD_MEM_GB_HOUR;
+        assert!(s3 < 0.01, "{s3}");
+        assert!(dram / s3 > 50.0, "dram {dram} vs s3 {s3}");
     }
 
     #[test]

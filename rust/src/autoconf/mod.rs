@@ -41,6 +41,8 @@ pub struct Candidate {
     pub vcpus: usize,
     pub placement: Placement,
     pub storage: String,
+    /// Range-GET connections for remote tiers (0 = local tier).
+    pub net_conns: usize,
     pub throughput_ips: f64,
     pub price_per_hour: f64,
     pub dollars_per_mimg: f64,
@@ -54,7 +56,14 @@ pub struct Recommendation {
     pub top: Vec<Candidate>,
 }
 
-/// Evaluate every (instance × vcpus × placement × storage) configuration.
+/// Connection counts swept for the remote tiers (a conns choice is part
+/// of the recommendation, like a vCPU count).
+pub const REMOTE_CONNS_SWEEP: [usize; 5] = [4, 8, 16, 32, 64];
+
+/// Evaluate every (instance × vcpus × placement × storage[× conns])
+/// configuration.  Local tiers get `net_conns = 0`; the remote tiers
+/// sweep `REMOTE_CONNS_SWEEP` so the tool can recommend how many
+/// parallel range-GET connections the loader should open.
 pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
     calib::model(model).with_context(|| format!("unknown model {model}"))?;
     let mut out = Vec::new();
@@ -63,29 +72,43 @@ pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
         let mut v = 2;
         while v <= inst.max_vcpus {
             for placement in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
-                for storage in ["ebs", "dram"] {
-                    let s = Scenario {
-                        model: model.to_string(),
-                        gpus: inst.gpus,
-                        vcpus: v,
-                        method: Method::Record,
-                        placement,
-                        storage: storage.to_string(),
-                        p3dn: inst.p3dn,
-                        ..Default::default()
-                    };
-                    let t = analytic_throughput(&s);
-                    let price = inst.price_per_hour(v, storage == "dram");
-                    out.push(Candidate {
-                        instance: inst.name,
-                        gpus: inst.gpus,
-                        vcpus: v,
-                        placement,
-                        storage: storage.to_string(),
-                        throughput_ips: t,
-                        price_per_hour: price,
-                        dollars_per_mimg: price / (t * 3600.0) * 1e6,
-                    });
+                for (storage, conns_sweep) in [
+                    ("ebs", &[0usize][..]),
+                    ("dram", &[0][..]),
+                    ("s3", &REMOTE_CONNS_SWEEP[..]),
+                    ("s3-cold", &REMOTE_CONNS_SWEEP[..]),
+                ] {
+                    for &conns in conns_sweep {
+                        let s = Scenario {
+                            model: model.to_string(),
+                            gpus: inst.gpus,
+                            vcpus: v,
+                            method: Method::Record,
+                            placement,
+                            storage: storage.to_string(),
+                            net_conns: conns.max(1),
+                            p3dn: inst.p3dn,
+                            ..Default::default()
+                        };
+                        let t = analytic_throughput(&s);
+                        let mut price = inst.price_per_hour(v, storage == "dram");
+                        price += match storage {
+                            "s3" => catalog::s3_dataset_per_hour(),
+                            "s3-cold" => catalog::s3_cold_dataset_per_hour(),
+                            _ => 0.0,
+                        };
+                        out.push(Candidate {
+                            instance: inst.name,
+                            gpus: inst.gpus,
+                            vcpus: v,
+                            placement,
+                            storage: storage.to_string(),
+                            net_conns: conns,
+                            throughput_ips: t,
+                            price_per_hour: price,
+                            dollars_per_mimg: price / (t * 3600.0) * 1e6,
+                        });
+                    }
                 }
             }
             v += 2;
@@ -125,14 +148,24 @@ pub fn recommend(model: &str, objective: Objective, budget_per_hour: f64) -> Res
 }
 
 impl Candidate {
+    /// Storage column, with the recommended connection count for remote
+    /// tiers ("s3:c16").
+    pub fn storage_desc(&self) -> String {
+        if self.net_conns > 0 {
+            format!("{}:c{}", self.storage, self.net_conns)
+        } else {
+            self.storage.clone()
+        }
+    }
+
     pub fn row(&self) -> String {
         format!(
-            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<5} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
+            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
             self.instance,
             self.gpus,
             self.vcpus,
             self.placement.name(),
-            self.storage,
+            self.storage_desc(),
             self.throughput_ips,
             self.price_per_hour,
             self.dollars_per_mimg,
@@ -206,6 +239,63 @@ mod tests {
         // keeps most of the rate and 24 keeps essentially all of it.
         assert!(t(16) / full > 0.70, "16 vCPU keeps {:.2} of 64-vCPU rate", t(16) / full);
         assert!(t(24) / full > 0.98, "24 vCPU keeps {:.2} of 64-vCPU rate", t(24) / full);
+    }
+
+    #[test]
+    fn remote_candidates_sweep_connection_counts() {
+        let cands = enumerate("alexnet").unwrap();
+        let s3: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| c.storage == "s3" && c.instance == "V100-8" && c.vcpus == 48
+                && c.placement == Placement::Hybrid)
+            .collect();
+        assert_eq!(s3.len(), REMOTE_CONNS_SWEEP.len());
+        // More connections never hurt throughput (latency hiding is
+        // monotone until the caps bind).
+        for w in s3.windows(2) {
+            assert!(w[0].net_conns < w[1].net_conns);
+            assert!(w[1].throughput_ips >= w[0].throughput_ips - 1e-9);
+        }
+        // Few connections leave the loader latency-bound.
+        assert!(s3.last().unwrap().throughput_ips > s3[0].throughput_ips * 1.5);
+        // Remote candidates carry a conns count, local candidates none.
+        for c in &cands {
+            assert_eq!(c.net_conns > 0, c.storage.starts_with("s3"), "{c:?}");
+        }
+        // Both remote tiers are enumerated, and cold storage is cheaper
+        // at rest but slower at equal concurrency.
+        let cold: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| c.storage == "s3-cold" && c.instance == "V100-8" && c.vcpus == 48
+                && c.placement == Placement::Hybrid)
+            .collect();
+        assert_eq!(cold.len(), REMOTE_CONNS_SWEEP.len());
+        for (w, c) in s3.iter().zip(&cold) {
+            assert_eq!(w.net_conns, c.net_conns);
+            assert!(c.throughput_ips <= w.throughput_ips + 1e-9);
+            assert!(c.price_per_hour < w.price_per_hour);
+        }
+    }
+
+    #[test]
+    fn s3_hosting_prices_below_dram_hosting() {
+        let cands = enumerate("resnet50").unwrap();
+        let pick = |storage: &str| {
+            cands
+                .iter()
+                .find(|c| {
+                    c.instance == "V100-8"
+                        && c.vcpus == 16
+                        && c.placement == Placement::Hybrid
+                        && c.storage == storage
+                })
+                .unwrap()
+        };
+        let (s3, dram, ebs) = (pick("s3"), pick("dram"), pick("ebs"));
+        assert!(s3.price_per_hour < dram.price_per_hour);
+        // S3 costs only the object-storage rate over EBS-hosted data.
+        assert!(s3.price_per_hour - ebs.price_per_hour < 0.01);
+        assert!(s3.row().contains("s3:c"), "{}", s3.row());
     }
 
     #[test]

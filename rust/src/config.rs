@@ -75,8 +75,17 @@ pub struct RunConfig {
     pub artifact_dir: PathBuf,
     pub method: Method,
     pub placement: Placement,
-    /// Storage emulation: "local" (no throttle), "ebs", "nvme", "dram".
+    /// Storage emulation: "local" (no throttle), the local device tiers
+    /// ("ebs", "nvme", "dram"), or the remote object-store tiers
+    /// ("s3", "s3-cold") — see `RunConfig::accepted_storage`.
     pub storage: String,
+    /// Concurrent ranged-read connections for record streaming against a
+    /// remote tier (the parallel range-GET prefetcher; 1 = serial reads;
+    /// local tiers always stream serially).
+    pub net_conns: usize,
+    /// Prefetcher readahead window, MiB (bounds parts fetched ahead of
+    /// the consumer).
+    pub readahead_mb: usize,
     /// Scale factor on emulated storage delays (test speed knob).
     pub time_scale: f64,
     pub model: String,
@@ -115,6 +124,8 @@ impl Default for RunConfig {
             method: Method::Record,
             placement: Placement::Hybrid,
             storage: "local".into(),
+            net_conns: 8,
+            readahead_mb: 8,
             time_scale: 1.0,
             model: "resnet_t".into(),
             batch_size: 32,
@@ -135,6 +146,17 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Every storage name the engine accepts, derived from the actual
+    /// tier registries so this list cannot drift from what
+    /// `coordinator::build_storage` can construct: "local" plus
+    /// `StorageProfile::names()` plus `NetProfile::names()`.
+    pub fn accepted_storage() -> Vec<&'static str> {
+        let mut names = vec!["local"];
+        names.extend_from_slice(crate::storage::StorageProfile::names());
+        names.extend_from_slice(crate::storage::NetProfile::names());
+        names
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.batch_size == 0 {
             bail!("batch_size must be > 0");
@@ -148,8 +170,15 @@ impl RunConfig {
         if self.train && self.model.is_empty() {
             bail!("train=true requires a model");
         }
-        if !matches!(self.storage.as_str(), "local" | "ebs" | "nvme" | "dram") {
-            bail!("storage must be local|ebs|nvme|dram, got {}", self.storage);
+        let accepted = Self::accepted_storage();
+        if !accepted.contains(&self.storage.as_str()) {
+            bail!("storage must be {}, got {}", accepted.join("|"), self.storage);
+        }
+        if self.net_conns == 0 {
+            bail!("net_conns must be > 0");
+        }
+        if self.readahead_mb == 0 {
+            bail!("readahead_mb must be > 0");
         }
         Ok(())
     }
@@ -183,6 +212,8 @@ impl RunConfig {
         self.seed = args.get_u64("seed", self.seed);
         self.epochs = args.get_usize("epochs", self.epochs).max(1);
         self.cache_mb = args.get_usize("cache-mb", self.cache_mb);
+        self.net_conns = args.get_usize("net-conns", self.net_conns);
+        self.readahead_mb = args.get_usize("readahead-mb", self.readahead_mb);
         if args.has_flag("ideal") {
             self.ideal = true;
         }
@@ -198,6 +229,8 @@ impl RunConfig {
             ("method", Json::str(self.method.name())),
             ("placement", Json::str(self.placement.name())),
             ("storage", Json::str(&self.storage)),
+            ("net_conns", Json::num(self.net_conns as f64)),
+            ("readahead_mb", Json::num(self.readahead_mb as f64)),
             ("model", Json::str(&self.model)),
             ("batch_size", Json::num(self.batch_size as f64)),
             ("cpu_workers", Json::num(self.cpu_workers as f64)),
@@ -250,7 +283,61 @@ mod tests {
         cfg = RunConfig::default();
         cfg.storage = "tape".into();
         assert!(cfg.validate().is_err());
+        cfg = RunConfig::default();
+        cfg.net_conns = 0;
+        assert!(cfg.validate().is_err());
+        cfg = RunConfig::default();
+        cfg.readahead_mb = 0;
+        assert!(cfg.validate().is_err());
         assert!(RunConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn storage_validation_matches_tier_lookup_exactly() {
+        use crate::storage::{NetProfile, StorageProfile};
+        // Every accepted name must validate AND resolve through exactly
+        // one tier registry ("local" is the unthrottled passthrough).
+        for name in RunConfig::accepted_storage() {
+            let cfg = RunConfig { storage: name.into(), ..Default::default() };
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let resolvers = [
+                name == "local",
+                StorageProfile::by_name(name).is_some(),
+                NetProfile::by_name(name).is_some(),
+            ];
+            assert_eq!(
+                resolvers.iter().filter(|&&r| r).count(),
+                1,
+                "{name} must resolve via exactly one registry"
+            );
+        }
+        // Conversely: names no registry knows must fail validation.
+        for name in ["tape", "efs", "S3", "s3cold", ""] {
+            let cfg = RunConfig { storage: name.into(), ..Default::default() };
+            assert!(cfg.validate().is_err(), "{name:?} accepted");
+            assert!(StorageProfile::by_name(name).is_none());
+            assert!(NetProfile::by_name(name).is_none());
+        }
+        // The error message enumerates the full accepted set.
+        let cfg = RunConfig { storage: "tape".into(), ..Default::default() };
+        let msg = cfg.validate().unwrap_err().to_string();
+        for name in RunConfig::accepted_storage() {
+            assert!(msg.contains(name), "error message misses {name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn remote_tiers_accept_conn_flags() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "run --storage s3 --net-conns 16 --readahead-mb 32"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.storage, "s3");
+        assert_eq!(cfg.net_conns, 16);
+        assert_eq!(cfg.readahead_mb, 32);
     }
 
     #[test]
@@ -258,5 +345,20 @@ mod tests {
         let j = RunConfig::default().to_json().dump();
         assert!(j.contains("\"method\":\"record\""));
         assert!(j.contains("\"placement\":\"hybrid\""));
+    }
+
+    #[test]
+    fn json_roundtrips_remote_fields() {
+        use crate::util::json::Json;
+        let cfg = RunConfig {
+            storage: "s3-cold".into(),
+            net_conns: 24,
+            readahead_mb: 64,
+            ..Default::default()
+        };
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("storage").as_str(), Some("s3-cold"));
+        assert_eq!(parsed.req("net_conns").as_usize(), Some(24));
+        assert_eq!(parsed.req("readahead_mb").as_usize(), Some(64));
     }
 }

@@ -6,10 +6,13 @@ use crate::metrics::{BusyClock, Counters, RunReport, UtilSampler};
 use crate::ops::sample_aug_params;
 use crate::pipeline::channel::{bounded, Receiver};
 use crate::pipeline::shuffle::ShuffleBuffer;
-use crate::pipeline::source::{list_shards, stream_shards, WorkItem};
+use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
 use crate::pipeline::{collate, cpu_stage, Batch, Sample};
 use crate::runtime::{lit_f32, Engine};
-use crate::storage::{CachedStore, DirStore, MemStore, Storage, StorageProfile, ThrottledStore};
+use crate::storage::{
+    CachedStore, DirStore, MemStore, NetProfile, PrefetchPlan, RemoteStore, Storage,
+    StorageProfile, ThrottledStore,
+};
 use crate::trainer::TrainSession;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -45,28 +48,44 @@ pub fn prepare_data(dir: &std::path::Path, gen: &GenConfig, n_shards: usize) -> 
     Ok(DataLayout { entries, shards })
 }
 
-fn build_storage(cfg: &RunConfig) -> Result<Arc<dyn Storage>> {
+/// The assembled storage stack, plus a concrete handle onto the remote
+/// layer (when one exists) so the run report can surface its telemetry.
+struct StorageStack {
+    store: Arc<dyn Storage>,
+    remote: Option<Arc<RemoteStore<DirStore>>>,
+}
+
+fn build_storage(cfg: &RunConfig) -> Result<StorageStack> {
     let base = DirStore::new(&cfg.data_dir)?;
+    let mut remote = None;
     let store: Arc<dyn Storage> = match cfg.storage.as_str() {
         "local" => Arc::new(base),
         "dram" => Arc::new(MemStore::preload_from(&base)?),
         name => {
-            let prof = StorageProfile::by_name(name)
-                .with_context(|| format!("unknown storage {name}"))?;
-            Arc::new(ThrottledStore::with_time_scale(base, prof, cfg.time_scale))
+            if let Some(net) = NetProfile::by_name(name) {
+                // Remote object-store tier: latency/connection emulation.
+                let r = Arc::new(RemoteStore::with_time_scale(base, net, cfg.time_scale));
+                remote = Some(r.clone());
+                r
+            } else {
+                let prof = StorageProfile::by_name(name)
+                    .with_context(|| format!("unknown storage {name}"))?;
+                Arc::new(ThrottledStore::with_time_scale(base, prof, cfg.time_scale))
+            }
         }
     };
-    Ok(if cfg.cache_mb > 0 {
-        Arc::new(CachedStore::new(store, cfg.cache_mb << 20))
+    let store = if cfg.cache_mb > 0 {
+        Arc::new(CachedStore::new(store, cfg.cache_mb << 20)) as Arc<dyn Storage>
     } else {
         store
-    })
+    };
+    Ok(StorageStack { store, remote })
 }
 
 /// Run the full pipeline per the config; returns the run report.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     cfg.validate()?;
-    let storage = build_storage(cfg)?;
+    let StorageStack { store: storage, remote } = build_storage(cfg)?;
     let meta = dataset::parse_metadata(std::str::from_utf8(
         &storage.read(dataset::META_FILE)?,
     )?)?;
@@ -117,7 +136,24 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                         rng.shuffle(&mut shards);
                         let mut sb = ShuffleBuffer::new(cfg.shuffle_buffer, rng.fork(1));
                         let mut open = true;
-                        stream_shards(storage.clone(), &shards, cfg.record_chunk, |rec| {
+                        // Parallel range-GETs only pay off where latency
+                        // overlaps — the remote tiers.  Local tiers
+                        // serialize in one token bucket, so extra
+                        // connections would be pure thread overhead.
+                        let plan = if let Some(net) = NetProfile::by_name(&cfg.storage) {
+                            // Clamp to the pool size: beyond it, extra
+                            // worker threads would only queue on the
+                            // connection semaphore (the sim clamps the
+                            // same way).
+                            PrefetchPlan::new(
+                                cfg.net_conns.min(net.max_conns),
+                                cfg.record_chunk,
+                                cfg.readahead_mb << 20,
+                            )
+                        } else {
+                            PrefetchPlan::serial(cfg.record_chunk)
+                        };
+                        stream_shards_prefetched(storage.clone(), &shards, cfg.record_chunk, plan, |rec| {
                             counters.images_read(1);
                             if let Some(evicted) = sb.push(rec) {
                                 let item = WorkItem::Bytes {
@@ -268,6 +304,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         util_trace,
         producer_blocked_secs: device_out.producer_blocked_secs,
         consumer_starved_secs: device_out.consumer_starved_secs,
+        net_in_flight_peak: remote.map(|r| r.in_flight.peak()).unwrap_or(0),
     })
 }
 

@@ -47,10 +47,12 @@ fn print_help() {
          SUBCOMMANDS\n\
            gen-data   --data-dir D [--images N] [--classes K] [--quality Q] [--shards S]\n\
            run        --data-dir D [--model M] [--method raw|record]\n\
-                      [--placement cpu|hybrid|hybrid0] [--storage local|ebs|nvme|dram]\n\
+                      [--placement cpu|hybrid|hybrid0]\n\
+                      [--storage local|ebs|nvme|dram|s3|s3-cold]\n\
+                      [--net-conns N] [--readahead-mb M] (remote-tier prefetcher)\n\
                       [--workers N] [--steps N] [--batch B] [--ideal] [--no-train]\n\
            sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]\n\
-                      [--storage ..] [--seconds S]\n\
+                      [--storage ..] [--net-conns N] [--seconds S]\n\
            reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)\n\
            autoconf   --model M [--objective throughput|cost] [--budget $/h]\n\
            inspect    [--artifacts DIR]\n"

@@ -45,6 +45,47 @@ counter_fns!(
     bytes_read
 );
 
+/// Level gauge with peak tracking — e.g. in-flight remote connections or
+/// prefetch-queue depth.  `value` is the instantaneous level; `peak` is the
+/// high-water mark since creation (what the run report cares about: did the
+/// prefetcher actually keep N connections busy?).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment and return the new level.
+    pub fn inc(&self) -> u64 {
+        let v = self.value.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(v, Ordering::Relaxed);
+        v
+    }
+
+    pub fn dec(&self) {
+        self.value.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Set the level directly (for sampled depths like queue lengths).
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 /// Busy-time accumulator for a pool of workers (one per resource class).
 /// Utilization over a window = busy_time / (window * n_workers).
 #[derive(Debug)]
@@ -156,6 +197,9 @@ pub struct RunReport {
     /// Backpressure: seconds producers blocked / consumers starved.
     pub producer_blocked_secs: f64,
     pub consumer_starved_secs: f64,
+    /// High-water mark of in-flight remote-store connections (0 when the
+    /// run used a local tier) — did the prefetcher keep the pool busy?
+    pub net_in_flight_peak: u64,
 }
 
 impl RunReport {
@@ -171,6 +215,7 @@ impl RunReport {
             ("io_bytes", Json::num(self.io_bytes as f64)),
             ("producer_blocked_secs", Json::num(self.producer_blocked_secs)),
             ("consumer_starved_secs", Json::num(self.consumer_starved_secs)),
+            ("net_in_flight_peak", Json::num(self.net_in_flight_peak as f64)),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -206,6 +251,9 @@ impl RunReport {
             self.producer_blocked_secs,
             self.consumer_starved_secs,
         );
+        if self.net_in_flight_peak > 0 {
+            println!("  remote store: peak {} connections in flight", self.net_in_flight_peak);
+        }
     }
 }
 
@@ -224,6 +272,20 @@ mod tests {
         assert_eq!(s.images_read, 5);
         assert_eq!(s.train_steps, 1);
         assert_eq!(s.images_decoded, 0);
+    }
+
+    #[test]
+    fn gauge_tracks_level_and_peak() {
+        let g = Gauge::new();
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.inc(), 2);
+        g.dec();
+        assert_eq!(g.value(), 1);
+        assert_eq!(g.peak(), 2);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.value(), 3);
+        assert_eq!(g.peak(), 7);
     }
 
     #[test]

@@ -163,6 +163,20 @@ pub fn storage(name: &str, p3dn: bool) -> Option<StorageCalib> {
     }
 }
 
+/// Remote object-store tiers (`s3`, `s3-cold`) share one profile registry
+/// with the real engine (`storage/remote.rs`): the analytic service-time
+/// model and the sleep-based emulation are two views of the same numbers,
+/// which is what keeps real and simulated remote runs comparable.
+pub use crate::storage::remote::NetProfile;
+
+pub fn remote(name: &str) -> Option<NetProfile> {
+    NetProfile::by_name(name)
+}
+
+/// Ranged-GET part size the record loader issues against remote tiers
+/// (matches `RunConfig::record_chunk`'s default of 1 MiB).
+pub const REMOTE_PART_BYTES: f64 = (1u64 << 20) as f64;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +220,17 @@ mod tests {
         assert_eq!(storage("ebs", true).unwrap().seq_bw_mbs, 445.0);
         assert!(storage("dram", false).unwrap().seq_bw_mbs > 1000.0);
         assert!(storage("tape", false).is_none());
+    }
+
+    #[test]
+    fn remote_lookup_is_disjoint_from_local() {
+        assert_eq!(remote("s3").unwrap().name, "s3");
+        assert_eq!(remote("s3-cold").unwrap().name, "s3-cold");
+        for name in ["s3", "s3-cold"] {
+            assert!(storage(name, false).is_none(), "{name} must not be a local tier");
+        }
+        for name in ["ebs", "nvme", "dram"] {
+            assert!(remote(name).is_none(), "{name} must not be a remote tier");
+        }
     }
 }

@@ -100,13 +100,32 @@ impl Station {
 /// Run the DES for `scenario.seconds` of simulated time.
 pub fn simulate(s: &Scenario) -> SimOutput {
     let m = calib::model(&s.model).expect("validated scenario");
-    let st = calib::storage(&s.storage, s.p3dn).expect("validated scenario");
     let batch = m.batch;
 
-    // Service times (seconds), jittered ±10% for realism.
-    let read_base = match s.method {
-        Method::Record => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6),
-        Method::Raw => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6) + 1.0 / st.rand_iops,
+    // Service times (seconds), jittered ±10% for realism.  Local tiers
+    // are one device (1 server); remote tiers are a connection pool of
+    // `net_conns` servers whose per-request latency overlaps — the
+    // aggregate-bandwidth and request-rate ceilings are far from binding
+    // at part-sized GETs, so the pool model is the whole story.
+    let (read_base, storage_servers) = if let Some(net) = calib::remote(&s.storage) {
+        let conns = s.net_conns.max(1).min(net.max_conns.max(1));
+        let base = match s.method {
+            // Per-image share of a part-sized ranged GET on one connection.
+            Method::Record => {
+                net.request_time(calib::REMOTE_PART_BYTES as u64)
+                    * (calib::IMG_BYTES / calib::REMOTE_PART_BYTES)
+            }
+            // One GET per image.
+            Method::Raw => net.request_time(calib::IMG_BYTES as u64),
+        };
+        (base, conns)
+    } else {
+        let st = calib::storage(&s.storage, s.p3dn).expect("validated scenario");
+        let base = match s.method {
+            Method::Record => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6),
+            Method::Raw => calib::IMG_BYTES / (st.seq_bw_mbs * 1e6) + 1.0 / st.rand_iops,
+        };
+        (base, 1)
     };
     // vCPU efficiency knee: inflate per-image cost so k nominal servers
     // deliver eff(k) worth of capacity.
@@ -125,7 +144,7 @@ pub fn simulate(s: &Scenario) -> SimOutput {
         heap.push(Reverse(Event { t, seq: *seq, ev }));
     };
 
-    let mut storage = Station::new(1);
+    let mut storage = Station::new(storage_servers);
     let mut cpus = Station::new(s.vcpus);
     let mut gpus = Station::new(s.gpus);
     let mut ready: usize = 0; // images waiting at the batcher
@@ -137,9 +156,11 @@ pub fn simulate(s: &Scenario) -> SimOutput {
 
     let jitter = |rng: &mut Rng| 0.9 + 0.2 * rng.f64();
 
-    // Prime the closed network: all images start at the storage queue.
+    // Prime the closed network: all images start at the storage queue,
+    // and every storage server (1 device, or the remote connection pool)
+    // begins busy.
     storage.queue = population;
-    if storage.try_start(0.0) {
+    while storage.try_start(0.0) {
         push(&mut heap, read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
     }
     push(&mut heap, 1.0, Ev::Sample, &mut seq);
@@ -280,6 +301,28 @@ mod tests {
             let (des, ana) = run(m, g, v, pl);
             let rel = (des - ana).abs() / ana;
             assert!(rel < 0.15, "{m} {pl:?} g={g} v={v}: des {des:.0} vs ana {ana:.0}");
+        }
+    }
+
+    #[test]
+    fn des_remote_tier_matches_analytic() {
+        // Remote storage station = a connection pool: the DES must agree
+        // with the closed-form latency/conns overlap model across the
+        // storage-bound range.
+        for conns in [1usize, 4, 16] {
+            let s = Scenario {
+                model: "alexnet".into(),
+                gpus: 8,
+                vcpus: 64,
+                storage: "s3".into(),
+                net_conns: conns,
+                seconds: 60.0,
+                ..Default::default()
+            };
+            let des = simulate(&s).throughput_ips;
+            let ana = analytic_throughput(&s);
+            let rel = (des - ana).abs() / ana;
+            assert!(rel < 0.15, "s3 conns={conns}: des {des:.0} vs ana {ana:.0} ({rel:.3})");
         }
     }
 

@@ -27,7 +27,12 @@ pub struct Scenario {
     pub vcpus: usize,
     pub method: Method,
     pub placement: Placement,
+    /// Local device tier ("ebs"/"nvme"/"dram") or remote object-store
+    /// tier ("s3"/"s3-cold").
     pub storage: String,
+    /// Concurrent range-GET connections against a remote tier (ignored
+    /// for local tiers).
+    pub net_conns: usize,
     /// p3dn instance profile (Fig. 6) vs p3.16xlarge (Figs. 2/4/5).
     pub p3dn: bool,
     /// Ideal mode: single preloaded batch (no preprocessing at all).
@@ -46,6 +51,7 @@ impl Default for Scenario {
             method: Method::Record,
             placement: Placement::Hybrid,
             storage: "ebs".into(),
+            net_conns: 8,
             p3dn: false,
             ideal: false,
             seconds: 60.0,
@@ -71,6 +77,7 @@ impl Scenario {
         if let Some(v) = args.get("storage") {
             s.storage = v.to_string();
         }
+        s.net_conns = args.get_usize("net-conns", s.net_conns);
         s.p3dn = args.has_flag("p3dn");
         s.ideal = args.has_flag("ideal");
         s.seconds = args.get_f64("seconds", s.seconds);
@@ -81,9 +88,13 @@ impl Scenario {
 
     pub fn validate(&self) -> Result<()> {
         calib::model(&self.model).with_context(|| format!("unknown sim model {}", self.model))?;
-        calib::storage(&self.storage, self.p3dn)
-            .with_context(|| format!("unknown sim storage {}", self.storage))?;
+        if calib::storage(&self.storage, self.p3dn).is_none()
+            && calib::remote(&self.storage).is_none()
+        {
+            anyhow::bail!("unknown sim storage {}", self.storage);
+        }
         anyhow::ensure!(self.gpus >= 1 && self.vcpus >= 1, "need >=1 gpu and vcpu");
+        anyhow::ensure!(self.net_conns >= 1, "need >=1 net connection");
         Ok(())
     }
 
@@ -124,6 +135,29 @@ impl Scenario {
 
     /// Storage throughput ceiling, images/s.
     pub fn storage_cap_ips(&self) -> f64 {
+        if let Some(net) = calib::remote(&self.storage) {
+            return match self.method {
+                // Record shards stream as part-sized ranged GETs fanned
+                // across `net_conns` connections: latency overlaps until
+                // the aggregate-bandwidth or request-rate ceiling binds
+                // (same formula the real engine's emulation converges to).
+                Method::Record => {
+                    net.throughput_bps(self.net_conns, calib::REMOTE_PART_BYTES as u64)
+                        / calib::IMG_BYTES
+                }
+                // Raw method: one GET per image — every small request pays
+                // the full first-byte latency and the GET-rate cap binds,
+                // the remote analogue of being IOPS-bound.
+                Method::Raw => {
+                    let conns = self.net_conns.max(1).min(net.max_conns.max(1)) as f64;
+                    let mut ips = conns / net.request_time(calib::IMG_BYTES as u64);
+                    if net.max_rps > 0.0 {
+                        ips = ips.min(net.max_rps);
+                    }
+                    ips.min(net.agg_bw / calib::IMG_BYTES)
+                }
+            };
+        }
         let st = calib::storage(&self.storage, self.p3dn).expect("validated");
         let bw_cap = st.seq_bw_mbs * 1e6 / calib::IMG_BYTES;
         match self.method {
@@ -311,5 +345,78 @@ mod tests {
     fn scenario_validation() {
         assert!(Scenario { model: "vgg".into(), ..Default::default() }.validate().is_err());
         assert!(Scenario::default().validate().is_ok());
+        assert!(Scenario { storage: "s3".into(), ..Default::default() }.validate().is_ok());
+        assert!(Scenario { storage: "s3-cold".into(), ..Default::default() }
+            .validate()
+            .is_ok());
+        assert!(Scenario { storage: "s3".into(), net_conns: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(Scenario { storage: "efs".into(), ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn remote_cap_uses_shared_net_profile_formula() {
+        let s = Scenario { storage: "s3".into(), net_conns: 8, ..Default::default() };
+        let want = calib::remote("s3")
+            .unwrap()
+            .throughput_bps(8, calib::REMOTE_PART_BYTES as u64)
+            / calib::IMG_BYTES;
+        assert!((s.storage_cap_ips() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_conns_hide_latency_until_caps_bind() {
+        let cap = |conns| {
+            Scenario { storage: "s3".into(), net_conns: conns, ..Default::default() }
+                .storage_cap_ips()
+        };
+        // Below the ceilings the cap is linear in connections...
+        assert!((cap(8) / cap(1) - 8.0).abs() < 1e-6);
+        // ...and the cold tier is strictly slower at equal concurrency.
+        let cold = Scenario { storage: "s3-cold".into(), ..Default::default() };
+        let warm = Scenario { storage: "s3".into(), ..Default::default() };
+        assert!(cold.storage_cap_ips() < warm.storage_cap_ips());
+    }
+
+    #[test]
+    fn remote_raw_method_is_request_bound() {
+        // One GET per 110 KB image pays 30 ms latency each: raw loading
+        // from S3 must be far below record streaming at equal conns.
+        let raw = Scenario {
+            storage: "s3".into(),
+            method: Method::Raw,
+            ..Default::default()
+        };
+        let rec = Scenario {
+            storage: "s3".into(),
+            method: Method::Record,
+            ..Default::default()
+        };
+        assert!(raw.storage_cap_ips() < rec.storage_cap_ips() * 0.5);
+        // End-to-end: a fast consumer on s3 is storage-bound with few
+        // conns and recovers with many.
+        let t = |conns| {
+            analytic_throughput(&Scenario {
+                model: "alexnet".into(),
+                gpus: 8,
+                vcpus: 64,
+                storage: "s3".into(),
+                net_conns: conns,
+                ..Default::default()
+            })
+        };
+        assert_eq!(
+            bottleneck(&Scenario {
+                model: "alexnet".into(),
+                gpus: 8,
+                vcpus: 64,
+                storage: "s3".into(),
+                net_conns: 1,
+                ..Default::default()
+            }),
+            Bottleneck::Storage
+        );
+        assert!(t(32) > t(1) * 3.0, "conns must buy throughput: {} vs {}", t(32), t(1));
     }
 }

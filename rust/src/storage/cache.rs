@@ -115,7 +115,12 @@ impl<S: Storage> Storage for CachedStore<S> {
             return Ok(v);
         }
         let v = self.inner.read_range(name, offset, len)?;
-        self.admit(key, &v);
+        // A truncated read (range past EOF) must not be cached under the
+        // requested (name, offset, len) key: the entry would alias a
+        // different range than it holds.  Short reads bypass admission.
+        if v.len() as u64 == len {
+            self.admit(key, &v);
+        }
         Ok(v)
     }
 
@@ -185,6 +190,22 @@ mod tests {
         c.read_range("s", 0, 100).unwrap(); // hit
         assert_eq!(c.hits.load(Ordering::Relaxed), 1);
         assert_eq!(c.misses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn truncated_tail_reads_bypass_cache() {
+        let c = CachedStore::new(store_with(&[("s", 100)]), 1 << 20);
+        // Range runs past EOF: 20 of 50 requested bytes exist.
+        assert_eq!(c.read_range("s", 80, 50).unwrap().len(), 20);
+        assert_eq!(c.cached_bytes(), 0, "short read must not be admitted");
+        // The repeat is correct but never served from a short cache entry.
+        assert_eq!(c.read_range("s", 80, 50).unwrap().len(), 20);
+        assert_eq!(c.hits.load(Ordering::Relaxed), 0);
+        // Exact-length ranges still cache normally.
+        assert_eq!(c.read_range("s", 80, 20).unwrap().len(), 20);
+        assert_eq!(c.read_range("s", 80, 20).unwrap().len(), 20);
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.cached_bytes(), 20);
     }
 
     #[test]

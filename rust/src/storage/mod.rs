@@ -6,10 +6,18 @@
 //! with a token-bucket.  The same profiles drive both the real engine
 //! (sleep-based throttling here) and the discrete-event simulator
 //! (analytic service times in `sim/`).
+//!
+//! Remote object-store tiers (`s3`/`s3-cold`) live in `remote`, modeled
+//! as a network path (latency/connections) rather than a device, with the
+//! parallel range-GET prefetcher in `prefetch` hiding their latency.
 
 pub mod cache;
+pub mod prefetch;
+pub mod remote;
 
 pub use cache::CachedStore;
+pub use prefetch::{fetch_parallel, PrefetchPlan, PrefetchReader};
+pub use remote::{NetProfile, RemoteStore};
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -45,6 +53,12 @@ impl StorageProfile {
 
     pub const fn dram() -> Self {
         StorageProfile { name: "dram", seq_bw: 60e9, rand_iops: 50_000_000.0, latency: 0.2e-6 }
+    }
+
+    /// Every built-in local tier name (kept in sync with `by_name`;
+    /// `config::RunConfig` validation tests assert the parity).
+    pub fn names() -> &'static [&'static str] {
+        &["ebs", "nvme", "dram"]
     }
 
     pub fn by_name(name: &str) -> Option<Self> {
@@ -368,6 +382,9 @@ mod tests {
         assert!(nvme.rand_iops > ebs.rand_iops);
         assert_eq!(StorageProfile::by_name("ebs").unwrap().name, "ebs");
         assert!(StorageProfile::by_name("floppy").is_none());
+        for name in StorageProfile::names() {
+            assert_eq!(StorageProfile::by_name(name).unwrap().name, *name);
+        }
     }
 
     #[test]

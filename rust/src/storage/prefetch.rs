@@ -1,0 +1,380 @@
+//! Parallel range-GET prefetcher (s3bfg-style): split an object into
+//! aligned parts, fan the parts across N worker threads as concurrent
+//! ranged reads, and deliver the bytes *in order* through a bounded
+//! sliding window.
+//!
+//! On a remote tier (`storage/remote.rs`) each ranged read pays the
+//! network's first-byte latency; issuing `conns` of them concurrently
+//! hides latency behind transfer, which is the standard cure for fetch
+//! stalls when training data lives in object storage.  Two entry points:
+//!
+//! * [`PrefetchReader`] — `std::io::Read` adapter, drop-in for the serial
+//!   `StorageReader` in `pipeline/source.rs`; bounded readahead window.
+//! * [`fetch_parallel`] — whole-object fetch with an unbounded window.
+//!
+//! The scheduler is a Mutex+Condvar sliding window, not a channel: workers
+//! may finish parts out of order, and the reader must block on exactly the
+//! next part while the window bound keeps workers from racing ahead of the
+//! consumer by more than `window_parts` parts.
+
+use super::Storage;
+use crate::metrics::Gauge;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// How a shard/object stream is parallelized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefetchPlan {
+    /// Concurrent ranged reads (worker threads). 1 = serial.
+    pub conns: usize,
+    /// Aligned part size in bytes (one ranged GET per part).
+    pub part_size: usize,
+    /// Max parts fetched ahead of the consumer (>= conns to keep every
+    /// connection busy).
+    pub window_parts: usize,
+}
+
+impl PrefetchPlan {
+    /// Plan for `conns` connections reading `part_size`-byte parts with a
+    /// `readahead_bytes` window (clamped so the window covers the pool).
+    pub fn new(conns: usize, part_size: usize, readahead_bytes: usize) -> Self {
+        let conns = conns.max(1);
+        let part_size = part_size.max(1);
+        let window_parts = (readahead_bytes / part_size).max(conns);
+        PrefetchPlan { conns, part_size, window_parts }
+    }
+
+    /// Serial fallback: one connection, no readahead beyond one part.
+    pub fn serial(part_size: usize) -> Self {
+        PrefetchPlan { conns: 1, part_size: part_size.max(1), window_parts: 1 }
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.conns <= 1
+    }
+}
+
+struct State {
+    /// Next part index to hand to a worker.
+    next_issue: usize,
+    /// Next part index the reader will consume.
+    next_deliver: usize,
+    n_parts: usize,
+    /// Completed parts waiting for in-order delivery.
+    done: BTreeMap<usize, Vec<u8>>,
+    error: Option<String>,
+    cancelled: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Reader waits here for the next in-order part.
+    avail: Condvar,
+    /// Workers wait here for window space.
+    space: Condvar,
+    /// Completed-parts queue depth (level + peak).
+    depth: Gauge,
+}
+
+fn worker_loop(shared: &Shared, store: &dyn Storage, name: &str, plan: PrefetchPlan, len: u64) {
+    loop {
+        let idx = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.cancelled || st.error.is_some() || st.next_issue >= st.n_parts {
+                    return;
+                }
+                if st.next_issue < st.next_deliver + plan.window_parts {
+                    break;
+                }
+                st = shared.space.wait(st).unwrap();
+            }
+            let i = st.next_issue;
+            st.next_issue += 1;
+            i
+        };
+        let offset = idx as u64 * plan.part_size as u64;
+        let want = (plan.part_size as u64).min(len - offset);
+        match store.read_range(name, offset, want) {
+            Ok(bytes) => {
+                let short = (bytes.len() as u64) < want;
+                let mut st = shared.state.lock().unwrap();
+                if short && st.error.is_none() {
+                    st.error = Some(format!(
+                        "short read of {name}: part {idx} got {} of {want} bytes",
+                        bytes.len()
+                    ));
+                } else {
+                    st.done.insert(idx, bytes);
+                    shared.depth.set(st.done.len() as u64);
+                }
+                shared.avail.notify_all();
+                shared.space.notify_all();
+            }
+            Err(e) => {
+                let mut st = shared.state.lock().unwrap();
+                if st.error.is_none() {
+                    st.error = Some(format!("{e:#}"));
+                }
+                shared.avail.notify_all();
+                shared.space.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Ordered `Read` over an object fetched by concurrent ranged reads.
+pub struct PrefetchReader {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    current: Vec<u8>,
+    pos: usize,
+}
+
+impl PrefetchReader {
+    pub fn open(store: Arc<dyn Storage>, name: &str, plan: PrefetchPlan) -> Result<Self> {
+        let len = store.len(name).with_context(|| format!("len of {name}"))?;
+        let n_parts = (len as usize).div_ceil(plan.part_size);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                next_issue: 0,
+                next_deliver: 0,
+                n_parts,
+                done: BTreeMap::new(),
+                error: None,
+                cancelled: false,
+            }),
+            avail: Condvar::new(),
+            space: Condvar::new(),
+            depth: Gauge::new(),
+        });
+        let n_workers = plan.conns.min(n_parts.max(1));
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let shared_w = shared.clone();
+            let store = store.clone();
+            let name = name.to_string();
+            let spawned = std::thread::Builder::new()
+                .name(format!("prefetch-{w}"))
+                .spawn(move || worker_loop(&shared_w, store.as_ref(), &name, plan, len));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // A partial pool must not leak: cancel and reap the
+                    // workers already running before surfacing the error.
+                    shared.state.lock().unwrap().cancelled = true;
+                    shared.space.notify_all();
+                    shared.avail.notify_all();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(e).with_context(|| format!("spawn prefetch worker {w}"));
+                }
+            }
+        }
+        Ok(PrefetchReader { shared, workers, current: Vec::new(), pos: 0 })
+    }
+
+    /// Completed-parts queue depth gauge (level + high-water mark).
+    pub fn queue_depth(&self) -> &Gauge {
+        &self.shared.depth
+    }
+
+    /// Block until the next in-order part is ready; Ok(false) = EOF.
+    fn next_part(&mut self) -> std::io::Result<bool> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(bytes) = st.done.remove(&st.next_deliver) {
+                st.next_deliver += 1;
+                self.shared.depth.set(st.done.len() as u64);
+                drop(st);
+                self.shared.space.notify_all();
+                self.current = bytes;
+                self.pos = 0;
+                return Ok(true);
+            }
+            if let Some(e) = &st.error {
+                return Err(std::io::Error::other(e.clone()));
+            }
+            if st.next_deliver >= st.n_parts {
+                return Ok(false); // clean EOF
+            }
+            st = self.shared.avail.wait(st).unwrap();
+        }
+    }
+}
+
+impl Read for PrefetchReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        while self.pos >= self.current.len() {
+            if !self.next_part()? {
+                return Ok(0);
+            }
+        }
+        let n = buf.len().min(self.current.len() - self.pos);
+        buf[..n].copy_from_slice(&self.current[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl Drop for PrefetchReader {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.cancelled = true;
+        }
+        self.shared.space.notify_all();
+        self.shared.avail.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fetch a whole object with `conns` concurrent ranged reads (unbounded
+/// window, s3bfg's whole-file mode).  Returns the reassembled bytes.
+pub fn fetch_parallel(
+    store: Arc<dyn Storage>,
+    name: &str,
+    conns: usize,
+    part_size: usize,
+) -> Result<Vec<u8>> {
+    let len = store.len(name)? as usize;
+    let plan = PrefetchPlan { conns: conns.max(1), part_size: part_size.max(1), window_parts: usize::MAX / 2 };
+    let mut r = PrefetchReader::open(store, name, plan)?;
+    let mut out = Vec::with_capacity(len);
+    r.read_to_end(&mut out)?;
+    ensure!(out.len() == len, "fetched {} of {len} bytes of {name}", out.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn blob(n: usize) -> Vec<u8> {
+        // Position-dependent bytes so reordering bugs corrupt the data.
+        (0..n).map(|i| (i % 251) as u8 ^ (i / 7919) as u8).collect()
+    }
+
+    fn mem(name: &str, data: Vec<u8>) -> Arc<dyn Storage> {
+        let m = MemStore::new();
+        m.write(name, data);
+        Arc::new(m)
+    }
+
+    #[test]
+    fn reader_reassembles_in_order() {
+        // Odd length so the tail part is short.
+        let data = blob(1_000_003);
+        let store = mem("b", data.clone());
+        for (conns, part) in [(1, 4096), (4, 4096), (8, 65_536), (3, 1_000_003), (4, 2_000_000)] {
+            let plan = PrefetchPlan::new(conns, part, 8 * part);
+            let mut r = PrefetchReader::open(store.clone(), "b", plan).unwrap();
+            let mut out = Vec::new();
+            r.read_to_end(&mut out).unwrap();
+            assert_eq!(out, data, "conns={conns} part={part}");
+        }
+    }
+
+    #[test]
+    fn empty_object_is_clean_eof() {
+        let store = mem("e", Vec::new());
+        let mut r = PrefetchReader::open(store, "e", PrefetchPlan::new(4, 1024, 8192)).unwrap();
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fetch_parallel_roundtrips() {
+        let data = blob(777_777);
+        let store = mem("b", data.clone());
+        assert_eq!(fetch_parallel(store.clone(), "b", 8, 65_536).unwrap(), data);
+        assert_eq!(fetch_parallel(store, "b", 1, 1 << 20).unwrap(), data);
+    }
+
+    #[test]
+    fn window_bounds_readahead() {
+        // 100 parts, window 4: after the reader consumes nothing, at most
+        // window parts may complete.
+        let data = blob(100 * 1024);
+        let store = mem("b", data);
+        let plan = PrefetchPlan { conns: 4, part_size: 1024, window_parts: 4 };
+        let r = PrefetchReader::open(store, "b", plan).unwrap();
+        // Give workers ample time (even descheduled on a loaded CI box)
+        // to fill — and try to overfill — the window.
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        let depth = r.queue_depth().peak();
+        assert!(depth <= 4, "window overrun: {depth} parts buffered");
+        assert!(depth >= 1, "nothing prefetched");
+    }
+
+    #[test]
+    fn plan_window_covers_pool() {
+        let p = PrefetchPlan::new(8, 1 << 20, 2 << 20);
+        assert_eq!(p.window_parts, 8, "window must cover the connection pool");
+        let p = PrefetchPlan::new(2, 1 << 20, 8 << 20);
+        assert_eq!(p.window_parts, 8);
+        assert!(PrefetchPlan::serial(4096).is_serial());
+    }
+
+    /// Storage that fails every read past a byte offset.
+    struct FailAfter {
+        inner: MemStore,
+        limit: u64,
+        reads: AtomicU64,
+    }
+
+    impl Storage for FailAfter {
+        fn read(&self, name: &str) -> Result<Vec<u8>> {
+            self.inner.read(name)
+        }
+        fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+            self.reads.fetch_add(1, Ordering::Relaxed);
+            anyhow::ensure!(offset < self.limit, "connection reset at offset {offset}");
+            self.inner.read_range(name, offset, len)
+        }
+        fn len(&self, name: &str) -> Result<u64> {
+            self.inner.len(name)
+        }
+        fn list(&self) -> Result<Vec<String>> {
+            self.inner.list()
+        }
+        fn stats(&self) -> (u64, u64) {
+            self.inner.stats()
+        }
+    }
+
+    #[test]
+    fn worker_error_surfaces_to_reader() {
+        let inner = MemStore::new();
+        inner.write("b", blob(64 * 1024));
+        let store: Arc<dyn Storage> =
+            Arc::new(FailAfter { inner, limit: 16 * 1024, reads: AtomicU64::new(0) });
+        let mut r =
+            PrefetchReader::open(store, "b", PrefetchPlan::new(4, 4096, 16 * 4096)).unwrap();
+        let mut out = Vec::new();
+        let err = r.read_to_end(&mut out).unwrap_err();
+        assert!(err.to_string().contains("connection reset"), "{err}");
+    }
+
+    #[test]
+    fn dropping_mid_stream_does_not_hang() {
+        let data = blob(512 * 1024);
+        let store = mem("b", data);
+        let mut r =
+            PrefetchReader::open(store, "b", PrefetchPlan::new(4, 4096, 8 * 4096)).unwrap();
+        let mut buf = [0u8; 1000];
+        let n = r.read(&mut buf).unwrap();
+        assert!(n > 0);
+        drop(r); // must cancel workers and join without deadlock
+    }
+}

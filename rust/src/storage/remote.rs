@@ -1,0 +1,425 @@
+//! Emulated remote object store — the dominant real cloud deployment the
+//! local tiers (`ebs`/`nvme`/`dram`) cannot represent: training data in
+//! S3/GCS, where *per-request latency* and *connection parallelism*, not
+//! device IOPS, bound the loader (Mohan et al., "Analyzing and Mitigating
+//! Data Stalls in DNN Training").
+//!
+//! A [`NetProfile`] models the network path as (per-request first-byte
+//! latency, per-connection bandwidth, aggregate bandwidth, connection-pool
+//! size, request-rate ceiling).  [`RemoteStore`] enforces it over any inner
+//! [`Storage`]:
+//!
+//! * a connection **semaphore** caps in-flight requests at `max_conns` —
+//!   concurrency up to the cap genuinely overlaps latency, which is what
+//!   the parallel range-GET prefetcher (`prefetch.rs`) exploits;
+//! * a shared **token bucket** serializes the aggregate-bandwidth share of
+//!   each transfer (the latency share deliberately does *not* serialize);
+//! * a request-rate bucket spaces request admissions at `1/max_rps`.
+//!
+//! The same profile drives the simulator's analytic service-time model via
+//! [`NetProfile::throughput_bps`], so real and simulated remote runs stay
+//! comparable (tested to within 20% in `tests/remote_prefetch.rs`).
+
+use super::Storage;
+use crate::metrics::Gauge;
+use anyhow::Result;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Network path profile for an emulated object store.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetProfile {
+    pub name: &'static str,
+    /// Per-request time-to-first-byte, seconds.
+    pub latency: f64,
+    /// Per-connection bandwidth cap, bytes/s.
+    pub conn_bw: f64,
+    /// Aggregate bandwidth cap across all connections, bytes/s.
+    pub agg_bw: f64,
+    /// Maximum concurrent in-flight requests (connection-pool size).
+    pub max_conns: usize,
+    /// Request-rate throttle, requests/s (0 = unlimited).
+    pub max_rps: f64,
+}
+
+impl NetProfile {
+    /// Warm S3-class store: ~30 ms first byte, ~90 MB/s per connection,
+    /// instance-NIC-class aggregate, the 5500 GET/s per-prefix ceiling.
+    pub const fn s3() -> Self {
+        NetProfile {
+            name: "s3",
+            latency: 30e-3,
+            conn_bw: 90e6,
+            agg_bw: 2.0e9,
+            max_conns: 64,
+            max_rps: 5500.0,
+        }
+    }
+
+    /// Cold/infrequent-access S3-class store: ~150 ms first byte and a
+    /// slower, more contended per-connection path.
+    pub const fn s3_cold() -> Self {
+        NetProfile {
+            name: "s3-cold",
+            latency: 150e-3,
+            conn_bw: 40e6,
+            agg_bw: 1.0e9,
+            max_conns: 64,
+            max_rps: 2000.0,
+        }
+    }
+
+    /// Every built-in remote tier name (kept in sync with `by_name`;
+    /// `config::RunConfig` validation tests assert the parity).
+    pub fn names() -> &'static [&'static str] {
+        &["s3", "s3-cold"]
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "s3" => Some(Self::s3()),
+            "s3-cold" => Some(Self::s3_cold()),
+            _ => None,
+        }
+    }
+
+    /// Wall-clock of one ranged GET of `len` bytes on one idle connection.
+    pub fn request_time(&self, len: u64) -> f64 {
+        self.latency + len as f64 / self.conn_bw
+    }
+
+    /// Analytic steady-state byte throughput of `conns` connections
+    /// streaming parts of `part` bytes each: per-connection pipelining
+    /// overlaps latency across connections until the aggregate-bandwidth
+    /// or request-rate ceiling binds.  This is the service-time model the
+    /// simulator (`sim/`) uses for the remote tiers.
+    pub fn throughput_bps(&self, conns: usize, part: u64) -> f64 {
+        let conns = conns.max(1).min(self.max_conns.max(1)) as f64;
+        let part_f = (part.max(1)) as f64;
+        let per_conn = part_f / self.request_time(part.max(1));
+        let mut cap = (conns * per_conn).min(self.agg_bw);
+        if self.max_rps > 0.0 {
+            cap = cap.min(self.max_rps * part_f);
+        }
+        cap
+    }
+}
+
+/// Counting semaphore (std has none; no tokio offline).
+struct Semaphore {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Semaphore { free: Mutex::new(n.max(1)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut free = self.free.lock().unwrap();
+        while *free == 0 {
+            free = self.cv.wait(free).unwrap();
+        }
+        *free -= 1;
+    }
+
+    fn release(&self) {
+        *self.free.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Emulated S3-style object store over any inner backend.
+///
+/// Reads acquire a connection slot, pay the profile's latency + transfer
+/// time (sleep-based, like `ThrottledStore`), and release the slot; `len`
+/// and `list` are metadata operations and pass through unthrottled (HEAD
+/// results are cached by real clients).
+pub struct RemoteStore<S: Storage> {
+    inner: S,
+    profile: NetProfile,
+    t0: Instant,
+    /// Aggregate-bandwidth bucket: time the shared pipe is busy until
+    /// (scaled monotonic seconds from `t0`).
+    bw_busy_until: Mutex<f64>,
+    /// Request-rate bucket: earliest admissible next request start.
+    next_request_at: Mutex<f64>,
+    conns: Semaphore,
+    /// Scale factor on emulated delays (1.0 = real time; small values
+    /// speed tests up while keeping relative costs).
+    time_scale: f64,
+    /// In-flight request gauge (level + peak) — Fig. 4-style telemetry.
+    pub in_flight: Gauge,
+}
+
+impl<S: Storage> RemoteStore<S> {
+    pub fn new(inner: S, profile: NetProfile) -> Self {
+        Self::with_time_scale(inner, profile, 1.0)
+    }
+
+    pub fn with_time_scale(inner: S, profile: NetProfile, time_scale: f64) -> Self {
+        RemoteStore {
+            inner,
+            t0: Instant::now(),
+            bw_busy_until: Mutex::new(0.0),
+            next_request_at: Mutex::new(0.0),
+            conns: Semaphore::new(profile.max_conns),
+            profile,
+            time_scale,
+            in_flight: Gauge::new(),
+        }
+    }
+
+    pub fn profile(&self) -> NetProfile {
+        self.profile
+    }
+
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Emulate one GET that moved `len` bytes; the caller must already
+    /// hold a connection slot.
+    fn delay(&self, len: u64) {
+        let now = self.now();
+        // Request-rate admission: starts are spaced 1/max_rps apart.
+        let start = if self.profile.max_rps > 0.0 {
+            let mut next = self.next_request_at.lock().unwrap();
+            let s = next.max(now);
+            *next = s + self.time_scale / self.profile.max_rps;
+            s
+        } else {
+            now
+        };
+        // The transfer share serializes through the shared pipe; the
+        // latency share overlaps across connections (the whole point).
+        let xfer_agg = len as f64 / self.profile.agg_bw * self.time_scale;
+        let bw_done = {
+            let mut busy = self.bw_busy_until.lock().unwrap();
+            let s = busy.max(start);
+            *busy = s + xfer_agg;
+            *busy
+        };
+        let conn_done = start + self.profile.request_time(len) * self.time_scale;
+        let sleep = conn_done.max(bw_done) - self.now();
+        if sleep > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(sleep));
+        }
+    }
+
+    fn request<T>(&self, f: impl FnOnce() -> Result<T>, len_of: impl FnOnce(&T) -> u64) -> Result<T> {
+        self.conns.acquire();
+        self.in_flight.inc();
+        let out = f();
+        if let Ok(v) = &out {
+            self.delay(len_of(v));
+        }
+        self.in_flight.dec();
+        self.conns.release();
+        out
+    }
+}
+
+impl<S: Storage> Storage for RemoteStore<S> {
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        self.request(|| self.inner.read(name), |v| v.len() as u64)
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        // Charge the bytes actually moved (short near EOF), not requested.
+        self.request(|| self.inner.read_range(name, offset, len), |v| v.len() as u64)
+    }
+
+    fn len(&self, name: &str) -> Result<u64> {
+        self.inner.len(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use std::sync::Arc;
+
+    fn mem_with(name: &str, len: usize) -> MemStore {
+        let m = MemStore::new();
+        m.write(name, vec![5u8; len]);
+        m
+    }
+
+    #[test]
+    fn profiles_sane_and_lookup_matches_names() {
+        let s3 = NetProfile::s3();
+        let cold = NetProfile::s3_cold();
+        assert!(cold.latency > s3.latency);
+        assert!(cold.conn_bw < s3.conn_bw);
+        for name in NetProfile::names() {
+            assert_eq!(NetProfile::by_name(name).unwrap().name, *name);
+        }
+        assert!(NetProfile::by_name("ebs").is_none());
+        assert!(NetProfile::by_name("floppy").is_none());
+    }
+
+    #[test]
+    fn throughput_model_scales_with_conns_then_saturates() {
+        let p = NetProfile::s3();
+        let part = 1 << 20;
+        let one = p.throughput_bps(1, part);
+        let eight = p.throughput_bps(8, part);
+        assert!((eight / one - 8.0).abs() < 1e-6, "latency hiding is linear below the caps");
+        // Past the pool size the cap stops growing.
+        assert_eq!(p.throughput_bps(p.max_conns, part), p.throughput_bps(p.max_conns * 4, part));
+        // Tiny parts are request-rate bound.
+        let tiny = p.throughput_bps(64, 1024);
+        assert!(tiny <= p.max_rps * 1024.0 + 1e-6, "{tiny}");
+    }
+
+    #[test]
+    fn single_request_pays_latency_and_transfer() {
+        let prof = NetProfile {
+            name: "t",
+            latency: 40e-3,
+            conn_bw: 10e6,
+            agg_bw: 1e9,
+            max_conns: 8,
+            max_rps: 0.0,
+        };
+        let r = RemoteStore::new(mem_with("a", 100_000), prof);
+        let t = Instant::now();
+        r.read("a").unwrap();
+        // 40 ms latency + 10 ms transfer at 10 MB/s.
+        assert!(t.elapsed() >= Duration::from_millis(45), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn concurrent_requests_overlap_latency() {
+        // Latency-dominated profile: 8 concurrent reads should take ~1x
+        // the latency, not 8x.
+        let prof = NetProfile {
+            name: "t",
+            latency: 30e-3,
+            conn_bw: 1e9,
+            agg_bw: 8e9,
+            max_conns: 8,
+            max_rps: 0.0,
+        };
+        let m = MemStore::new();
+        for i in 0..8 {
+            m.write(&format!("f{i}"), vec![0u8; 10_000]);
+        }
+        let r = Arc::new(RemoteStore::new(m, prof));
+        let t = Instant::now();
+        let hs: Vec<_> = (0..8)
+            .map(|i| {
+                let r = r.clone();
+                std::thread::spawn(move || r.read(&format!("f{i}")).unwrap())
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let el = t.elapsed();
+        assert!(el >= Duration::from_millis(28), "{el:?}");
+        // Serialized latency would be ~240 ms; leave scheduling headroom.
+        assert!(el < Duration::from_millis(150), "latency did not overlap: {el:?}");
+        assert_eq!(r.in_flight.value(), 0);
+        assert!(r.in_flight.peak() >= 2, "peak {}", r.in_flight.peak());
+    }
+
+    #[test]
+    fn max_conns_serializes_excess_requests() {
+        let prof = NetProfile {
+            name: "t",
+            latency: 20e-3,
+            conn_bw: 1e9,
+            agg_bw: 8e9,
+            max_conns: 2,
+            max_rps: 0.0,
+        };
+        let m = MemStore::new();
+        for i in 0..8 {
+            m.write(&format!("f{i}"), vec![0u8; 1000]);
+        }
+        let r = Arc::new(RemoteStore::new(m, prof));
+        let t = Instant::now();
+        let hs: Vec<_> = (0..8)
+            .map(|i| {
+                let r = r.clone();
+                std::thread::spawn(move || r.read(&format!("f{i}")).unwrap())
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 8 requests through 2 slots >= 4 waves x 20 ms.
+        assert!(t.elapsed() >= Duration::from_millis(70), "{:?}", t.elapsed());
+        assert!(r.in_flight.peak() <= 2, "pool leaked: {}", r.in_flight.peak());
+    }
+
+    #[test]
+    fn aggregate_bandwidth_serializes_transfers() {
+        // Transfer-dominated: per-conn bw is huge but the shared pipe is
+        // 10 MB/s, so 4x 100 KB concurrent reads still take >= ~35 ms.
+        let prof = NetProfile {
+            name: "t",
+            latency: 0.0,
+            conn_bw: 1e12,
+            agg_bw: 10e6,
+            max_conns: 8,
+            max_rps: 0.0,
+        };
+        let m = MemStore::new();
+        for i in 0..4 {
+            m.write(&format!("f{i}"), vec![0u8; 100_000]);
+        }
+        let r = Arc::new(RemoteStore::new(m, prof));
+        let t = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let r = r.clone();
+                std::thread::spawn(move || r.read(&format!("f{i}")).unwrap())
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(t.elapsed() >= Duration::from_millis(35), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn time_scale_speeds_emulation_up() {
+        let r = RemoteStore::with_time_scale(mem_with("a", 1000), NetProfile::s3_cold(), 0.01);
+        let t = Instant::now();
+        r.read("a").unwrap();
+        // 150 ms cold latency scaled by 0.01 => ~1.5 ms (bound leaves
+        // scheduling headroom; unscaled would be >= 150 ms).
+        assert!(t.elapsed() < Duration::from_millis(100), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn short_tail_range_charged_for_actual_bytes() {
+        let prof = NetProfile {
+            name: "t",
+            latency: 0.0,
+            conn_bw: 1e6, // 1 MB/s => 1 ms per KB
+            agg_bw: 1e9,
+            max_conns: 4,
+            max_rps: 0.0,
+        };
+        let r = RemoteStore::new(mem_with("a", 2_000), prof);
+        let t = Instant::now();
+        // Request 100 KB at the tail; only 1 KB exists.
+        let v = r.read_range("a", 1_000, 100_000).unwrap();
+        assert_eq!(v.len(), 1_000);
+        assert!(t.elapsed() < Duration::from_millis(50), "charged requested len: {:?}", t.elapsed());
+    }
+}
