@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let mut verified = 0usize;
     stream_shards(store.clone(), &shard_names, 1 << 20, |rec| {
         let raw = store.read(&entries[rec.id as usize].path)?;
-        anyhow::ensure!(raw == rec.payload, "record {} differs from raw file", rec.id);
+        anyhow::ensure!(raw[..] == rec.payload[..], "record {} differs from raw file", rec.id);
         let img = codec::decode_cpu(&rec.payload)?;
         anyhow::ensure!(img.c == 3, "bad channels");
         verified += 1;

@@ -12,6 +12,7 @@ pub mod catalog;
 pub use catalog::{Instance, CATALOG, GCLOUD_GPU_HOUR, GCLOUD_MEM_GB_HOUR, GCLOUD_VCPU_HOUR};
 
 use crate::config::{Method, Placement};
+use crate::pipeline::prep_cache::PrepCachePolicy;
 use crate::sim::{analytic_throughput, calib, Scenario};
 use anyhow::{bail, Context, Result};
 
@@ -43,6 +44,10 @@ pub struct Candidate {
     pub storage: String,
     /// Range-GET connections for remote tiers (0 = local tier).
     pub net_conns: usize,
+    /// Decoded-sample cache size, GB (0 = none); DRAM for it is priced
+    /// at the fine-grained memory rate.
+    pub prep_cache_gb: f64,
+    pub prep_cache_policy: PrepCachePolicy,
     pub throughput_ips: f64,
     pub price_per_hour: f64,
     pub dollars_per_mimg: f64,
@@ -60,12 +65,28 @@ pub struct Recommendation {
 /// of the recommendation, like a vCPU count).
 pub const REMOTE_CONNS_SWEEP: [usize; 5] = [4, 8, 16, 32, 64];
 
-/// Evaluate every (instance × vcpus × placement × storage[× conns])
-/// configuration.  Local tiers get `net_conns = 0`; the remote tiers
-/// sweep `REMOTE_CONNS_SWEEP` so the tool can recommend how many
-/// parallel range-GET connections the loader should open.
+/// Decoded-sample cache sizes swept (GB of extra DRAM, priced at the
+/// fine-grained memory rate).  The decoded ImageNet corpus is ≈ 770 GB,
+/// so these are roughly third- and two-thirds-corpus caches.
+pub const PREP_CACHE_GB_SWEEP: [f64; 2] = [256.0, 512.0];
+
+/// Evaluate every (instance × vcpus × placement × storage[× conns] ×
+/// prep-cache) configuration.  Local tiers get `net_conns = 0`; the
+/// remote tiers sweep `REMOTE_CONNS_SWEEP`; the decoded-sample cache
+/// sweeps sizes × policies (plus the no-cache baseline).  Cache DRAM is
+/// modeled exactly like the `dram` storage option's dataset hosting:
+/// *additional* provisioned memory on top of the instance's own
+/// (already-priced) working set, charged at the fine-grained memory
+/// rate — so the tool prices a decoded cache against simply hosting the
+/// encoded data on a faster tier.
 pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
     calib::model(model).with_context(|| format!("unknown model {model}"))?;
+    let mut cache_opts = vec![(0.0, PrepCachePolicy::Minio)];
+    for gb in PREP_CACHE_GB_SWEEP {
+        for policy in [PrepCachePolicy::Lru, PrepCachePolicy::Minio] {
+            cache_opts.push((gb, policy));
+        }
+    }
     let mut out = Vec::new();
     for inst in CATALOG {
         // vCPU sweep at a 2-vCPU granularity (cloud consoles' step).
@@ -79,35 +100,42 @@ pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
                     ("s3-cold", &REMOTE_CONNS_SWEEP[..]),
                 ] {
                     for &conns in conns_sweep {
-                        let s = Scenario {
-                            model: model.to_string(),
-                            gpus: inst.gpus,
-                            vcpus: v,
-                            method: Method::Record,
-                            placement,
-                            storage: storage.to_string(),
-                            net_conns: conns.max(1),
-                            p3dn: inst.p3dn,
-                            ..Default::default()
-                        };
-                        let t = analytic_throughput(&s);
-                        let mut price = inst.price_per_hour(v, storage == "dram");
-                        price += match storage {
-                            "s3" => catalog::s3_dataset_per_hour(),
-                            "s3-cold" => catalog::s3_cold_dataset_per_hour(),
-                            _ => 0.0,
-                        };
-                        out.push(Candidate {
-                            instance: inst.name,
-                            gpus: inst.gpus,
-                            vcpus: v,
-                            placement,
-                            storage: storage.to_string(),
-                            net_conns: conns,
-                            throughput_ips: t,
-                            price_per_hour: price,
-                            dollars_per_mimg: price / (t * 3600.0) * 1e6,
-                        });
+                        for &(cache_gb, cache_policy) in &cache_opts {
+                            let s = Scenario {
+                                model: model.to_string(),
+                                gpus: inst.gpus,
+                                vcpus: v,
+                                method: Method::Record,
+                                placement,
+                                storage: storage.to_string(),
+                                net_conns: conns.max(1),
+                                p3dn: inst.p3dn,
+                                prep_cache_gb: cache_gb,
+                                prep_cache_policy: cache_policy,
+                                ..Default::default()
+                            };
+                            let t = analytic_throughput(&s);
+                            let mut price = inst.price_per_hour(v, storage == "dram");
+                            price += match storage {
+                                "s3" => catalog::s3_dataset_per_hour(),
+                                "s3-cold" => catalog::s3_cold_dataset_per_hour(),
+                                _ => 0.0,
+                            };
+                            price += cache_gb * GCLOUD_MEM_GB_HOUR;
+                            out.push(Candidate {
+                                instance: inst.name,
+                                gpus: inst.gpus,
+                                vcpus: v,
+                                placement,
+                                storage: storage.to_string(),
+                                net_conns: conns,
+                                prep_cache_gb: cache_gb,
+                                prep_cache_policy: cache_policy,
+                                throughput_ips: t,
+                                price_per_hour: price,
+                                dollars_per_mimg: price / (t * 3600.0) * 1e6,
+                            });
+                        }
                     }
                 }
             }
@@ -158,14 +186,24 @@ impl Candidate {
         }
     }
 
+    /// Prep-cache column ("pc:minio512" or "-").
+    pub fn cache_desc(&self) -> String {
+        if self.prep_cache_gb > 0.0 {
+            format!("pc:{}{:.0}", self.prep_cache_policy.name(), self.prep_cache_gb)
+        } else {
+            "-".to_string()
+        }
+    }
+
     pub fn row(&self) -> String {
         format!(
-            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
+            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:<11} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
             self.instance,
             self.gpus,
             self.vcpus,
             self.placement.name(),
             self.storage_desc(),
+            self.cache_desc(),
             self.throughput_ips,
             self.price_per_hour,
             self.dollars_per_mimg,
@@ -202,11 +240,71 @@ mod tests {
 
     #[test]
     fn throughput_objective_prefers_more_resources_for_fast_models() {
+        // AlexNet is preprocessing-bound: among cache-less configs the
+        // best wants many vCPUs and (per Fig. 6) DRAM-class storage.
+        let cands = enumerate("alexnet").unwrap();
+        let best_nocache = cands
+            .iter()
+            .filter(|c| c.prep_cache_gb == 0.0)
+            .max_by(|a, b| a.throughput_ips.partial_cmp(&b.throughput_ips).unwrap())
+            .unwrap();
+        assert!(best_nocache.vcpus >= 32, "{best_nocache:?}");
+        assert!(best_nocache.throughput_ips > 5000.0);
+        // The overall recommendation may spend DRAM on a decoded cache
+        // instead of vCPUs, but never does worse than the no-cache best —
+        // and if it caches, it uses the shuffle-proof minio policy.
         let rec = recommend("alexnet", Objective::Throughput, f64::INFINITY).unwrap();
-        // AlexNet is preprocessing-bound: best config wants many vCPUs
-        // and (per Fig. 6) DRAM-class storage.
-        assert!(rec.best.vcpus >= 32, "{:?}", rec.best);
-        assert!(rec.best.throughput_ips > 5000.0);
+        assert!(rec.best.throughput_ips >= best_nocache.throughput_ips - 1e-9);
+        if rec.best.prep_cache_gb > 0.0 {
+            assert_eq!(rec.best.prep_cache_policy, PrepCachePolicy::Minio);
+        }
+    }
+
+    #[test]
+    fn prep_cache_sweep_prices_dram_and_prefers_minio() {
+        let cands = enumerate("alexnet").unwrap();
+        // Fix every other axis; vary only the cache.
+        let slice: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| {
+                c.instance == "V100-8"
+                    && c.vcpus == 24
+                    && c.placement == Placement::Hybrid
+                    && c.storage == "ebs"
+            })
+            .collect();
+        assert_eq!(slice.len(), 1 + 2 * PREP_CACHE_GB_SWEEP.len());
+        let base = slice.iter().find(|c| c.prep_cache_gb == 0.0).unwrap();
+        for &gb in &PREP_CACHE_GB_SWEEP {
+            let pick = |policy: PrepCachePolicy| {
+                slice
+                    .iter()
+                    .find(|c| c.prep_cache_gb == gb && c.prep_cache_policy == policy)
+                    .unwrap()
+            };
+            let (minio, lru) = (pick(PrepCachePolicy::Minio), pick(PrepCachePolicy::Lru));
+            // DRAM for the cache is priced identically per GB...
+            let want = base.price_per_hour + gb * GCLOUD_MEM_GB_HOUR;
+            assert!((minio.price_per_hour - want).abs() < 1e-9);
+            assert!((lru.price_per_hour - want).abs() < 1e-9);
+            // ...but minio converts it into strictly more throughput, so
+            // lru candidates are dominated at every swept size.
+            assert!(minio.throughput_ips > lru.throughput_ips);
+            assert!(minio.throughput_ips > base.throughput_ips, "{gb} GB bought nothing");
+            assert!(minio.row().contains("pc:minio"), "{}", minio.row());
+        }
+        // Cache DRAM is priced like dataset-DRAM hosting: additional
+        // provisioned memory, identical $/GB on every instance class.
+        let p32: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| {
+                c.instance == "p3.2xlarge"
+                    && c.vcpus == 8
+                    && c.placement == Placement::Hybrid
+                    && c.storage == "ebs"
+            })
+            .collect();
+        assert_eq!(p32.len(), 1 + 2 * PREP_CACHE_GB_SWEEP.len());
     }
 
     #[test]
@@ -247,7 +345,7 @@ mod tests {
         let s3: Vec<&Candidate> = cands
             .iter()
             .filter(|c| c.storage == "s3" && c.instance == "V100-8" && c.vcpus == 48
-                && c.placement == Placement::Hybrid)
+                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0)
             .collect();
         assert_eq!(s3.len(), REMOTE_CONNS_SWEEP.len());
         // More connections never hurt throughput (latency hiding is
@@ -267,7 +365,7 @@ mod tests {
         let cold: Vec<&Candidate> = cands
             .iter()
             .filter(|c| c.storage == "s3-cold" && c.instance == "V100-8" && c.vcpus == 48
-                && c.placement == Placement::Hybrid)
+                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0)
             .collect();
         assert_eq!(cold.len(), REMOTE_CONNS_SWEEP.len());
         for (w, c) in s3.iter().zip(&cold) {
@@ -288,6 +386,7 @@ mod tests {
                         && c.vcpus == 16
                         && c.placement == Placement::Hybrid
                         && c.storage == storage
+                        && c.prep_cache_gb == 0.0
                 })
                 .unwrap()
         };

@@ -1,6 +1,7 @@
 //! Run configuration: the paper's experimental axes as a first-class
 //! config object (JSON-serializable, CLI-overridable).
 
+use crate::pipeline::prep_cache::PrepCachePolicy;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -114,6 +115,14 @@ pub struct RunConfig {
     /// DRAM cache budget over the storage backend, MiB (0 = no cache) —
     /// the OneAccess/HiPC'19-style cache from the paper's related work.
     pub cache_mb: usize,
+    /// Decoded-sample (post-decode, pre-augment) cache budget, MiB
+    /// (0 = disabled) — the CoorDL-style cache that lets epoch ≥ 2 skip
+    /// read+decode while keeping augmentation randomness fresh.
+    pub prep_cache_mb: usize,
+    /// Eviction policy of the decoded-sample cache: `minio`
+    /// (eviction-free, shuffle-proof) or `lru` (thrashes under
+    /// re-shuffled epochs; kept for comparison).
+    pub prep_cache_policy: PrepCachePolicy,
 }
 
 impl Default for RunConfig {
@@ -141,6 +150,8 @@ impl Default for RunConfig {
             sample_period: 0.0,
             epochs: 1,
             cache_mb: 0,
+            prep_cache_mb: 0,
+            prep_cache_policy: PrepCachePolicy::Minio,
         }
     }
 }
@@ -212,6 +223,10 @@ impl RunConfig {
         self.seed = args.get_u64("seed", self.seed);
         self.epochs = args.get_usize("epochs", self.epochs).max(1);
         self.cache_mb = args.get_usize("cache-mb", self.cache_mb);
+        self.prep_cache_mb = args.get_usize("prep-cache-mb", self.prep_cache_mb);
+        if let Some(v) = args.get("prep-cache-policy") {
+            self.prep_cache_policy = PrepCachePolicy::parse(v)?;
+        }
         self.net_conns = args.get_usize("net-conns", self.net_conns);
         self.readahead_mb = args.get_usize("readahead-mb", self.readahead_mb);
         if args.has_flag("ideal") {
@@ -240,6 +255,10 @@ impl RunConfig {
             ("seed", Json::num(self.seed as f64)),
             ("ideal", Json::Bool(self.ideal)),
             ("train", Json::Bool(self.train)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("cache_mb", Json::num(self.cache_mb as f64)),
+            ("prep_cache_mb", Json::num(self.prep_cache_mb as f64)),
+            ("prep_cache_policy", Json::str(self.prep_cache_policy.name())),
         ])
     }
 }
@@ -338,6 +357,31 @@ mod tests {
         assert_eq!(cfg.storage, "s3");
         assert_eq!(cfg.net_conns, 16);
         assert_eq!(cfg.readahead_mb, 32);
+    }
+
+    #[test]
+    fn prep_cache_flags_parse_validate_and_roundtrip() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.prep_cache_mb, 0);
+        assert_eq!(cfg.prep_cache_policy, PrepCachePolicy::Minio);
+        let args = Args::parse(
+            "run --prep-cache-mb 256 --prep-cache-policy lru"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.prep_cache_mb, 256);
+        assert_eq!(cfg.prep_cache_policy, PrepCachePolicy::Lru);
+        // Bad policy names are rejected at apply time.
+        let mut bad = RunConfig::default();
+        let args = Args::parse(
+            "run --prep-cache-policy fifo".split_whitespace().map(String::from),
+        );
+        assert!(bad.apply_args(&args).is_err());
+        // JSON round-trip carries both fields.
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("prep_cache_mb").as_usize(), Some(256));
+        assert_eq!(parsed.req("prep_cache_policy").as_str(), Some("lru"));
     }
 
     #[test]

@@ -2,12 +2,15 @@
 
 use crate::config::{Method, Placement, RunConfig};
 use crate::dataset::{self, GenConfig, MetaEntry};
-use crate::metrics::{BusyClock, Counters, RunReport, UtilSampler};
+use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, UtilSampler};
 use crate::ops::sample_aug_params;
 use crate::pipeline::channel::{bounded, Receiver};
+use crate::pipeline::prep_cache::PrepCache;
 use crate::pipeline::shuffle::ShuffleBuffer;
 use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
-use crate::pipeline::{collate, cpu_stage, Batch, Sample};
+use crate::pipeline::{
+    collate, cpu_stage, cpu_stage_admitting, cpu_stage_cached, Batch, Payload, Sample,
+};
 use crate::runtime::{lit_f32, Engine};
 use crate::storage::{
     CachedStore, DirStore, MemStore, NetProfile, PrefetchPlan, RemoteStore, Storage,
@@ -94,6 +97,12 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let counters = Arc::new(Counters::default());
     let cpu_clock = BusyClock::new(cfg.cpu_workers);
     let dev_clock = BusyClock::new(1);
+    let epoch_clock = EpochClock::new();
+    // Decoded-sample cache, shared across CPU workers and epochs: epoch
+    // N+1 skips read+decode for resident samples (augmentation stays
+    // fresh per epoch — only decode is amortized).
+    let prep_cache = (cfg.prep_cache_mb > 0)
+        .then(|| Arc::new(PrepCache::new(cfg.prep_cache_mb << 20, cfg.prep_cache_policy)));
 
     let (work_tx, work_rx) = bounded::<WorkItem>(cfg.cpu_workers * 2 + cfg.batch_size);
     let (sample_tx, sample_rx) = bounded::<Sample>(cfg.queue_depth * cfg.batch_size);
@@ -122,6 +131,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                             let item = WorkItem::RawRef {
                                 id: e.id,
                                 label: e.label,
+                                epoch,
                                 path: e.path.clone(),
                             };
                             if work_tx.send(item).is_err() {
@@ -159,6 +169,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                                 let item = WorkItem::Bytes {
                                     id: evicted.id,
                                     label: evicted.label,
+                                    epoch,
                                     payload: evicted.payload,
                                 };
                                 if work_tx.send(item).is_err() {
@@ -173,6 +184,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                                 let item = WorkItem::Bytes {
                                     id: rec.id,
                                     label: rec.label,
+                                    epoch,
                                     payload: rec.payload,
                                 };
                                 if work_tx.send(item).is_err() {
@@ -195,29 +207,64 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let storage = storage.clone();
         let counters = counters.clone();
         let cpu_clock = cpu_clock.clone();
+        let epoch_clock = epoch_clock.clone();
+        let prep_cache = prep_cache.clone();
         let work_rx = work_rx.clone();
         let sample_tx = sample_tx.clone();
         threads.push(std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
             let out_hw = 56; // manifest.out_hw; validated on the device side
             while let Some(item) = work_rx.recv() {
-                let (id, label, bytes) = match item {
-                    WorkItem::RawRef { id, label, path } => {
-                        let b = storage.read(&path)?;
-                        counters.images_read(1);
-                        (id, label, b)
+                let (id, label, epoch) = (item.id(), item.label(), item.epoch());
+                // The aug stream forks on (id, epoch): a prep-cache hit in
+                // epoch N+1 samples *fresh* params, and hit/miss paths draw
+                // identical params for the same sample.
+                let mut rng = Rng::new(cfg.seed ^ 0x5EED).fork(id).fork(epoch);
+
+                // Hit: skip the raw read (raw method) and the decode.
+                if let Some(sample) = prep_cache.as_ref().and_then(|c| c.get(id)) {
+                    let aug = sample_aug_params(&mut rng, sample.h as u32, sample.w as u32);
+                    let payload = cpu_clock
+                        .track(|| cpu_stage_cached(&sample, cfg.placement, aug, out_hw));
+                    counters.decode_skipped(1);
+                    counters.images_decoded(1);
+                    if matches!(cfg.placement, Placement::Cpu) {
+                        counters.images_augmented(1);
                     }
-                    WorkItem::Bytes { id, label, payload } => (id, label, payload),
+                    epoch_clock.mark(epoch as usize);
+                    if sample_tx.send(Sample { id, label, payload }).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+
+                // Keep whichever buffer the arm produced — both views
+                // borrow it as &[u8] with no copy.
+                let (raw_buf, rec_buf);
+                let bytes: &[u8] = match item {
+                    WorkItem::RawRef { path, .. } => {
+                        raw_buf = storage.read(&path)?;
+                        counters.images_read(1);
+                        &raw_buf
+                    }
+                    WorkItem::Bytes { payload, .. } => {
+                        rec_buf = payload;
+                        &rec_buf
+                    }
                 };
-                let mut rng = Rng::new(cfg.seed ^ 0x5EED).fork(id);
-                let (c, h, wid, _q) = crate::codec::probe(&bytes)?;
+                let (c, h, wid, _q) = crate::codec::probe(bytes)?;
                 ensure!(c == 3, "expected RGB, got {c} channels");
                 let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
-                let payload =
-                    cpu_clock.track(|| cpu_stage(&bytes, cfg.placement, aug, out_hw))?;
+                let payload = cpu_clock.track(|| match &prep_cache {
+                    Some(cache) => {
+                        cpu_stage_admitting(bytes, cfg.placement, aug, out_hw, cache, id)
+                    }
+                    None => cpu_stage(bytes, cfg.placement, aug, out_hw),
+                })?;
                 counters.images_decoded(1);
                 if matches!(cfg.placement, Placement::Cpu) {
                     counters.images_augmented(1);
                 }
+                epoch_clock.mark(epoch as usize);
                 if sample_tx.send(Sample { id, label, payload }).is_err() {
                     break;
                 }
@@ -233,20 +280,31 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let b = cfg.batch_size;
         let counters = counters.clone();
         threads.push(std::thread::Builder::new().name("batcher".into()).spawn(move || {
-            let mut acc: Vec<Sample> = Vec::with_capacity(b);
+            // One accumulator per payload kind: under the hybrid placement
+            // a prep-cache hit re-enters as a pixel payload, so the sample
+            // stream can interleave kinds while every collated batch must
+            // stay homogeneous.  Single-kind runs behave exactly as before.
+            fn kind(p: &Payload) -> usize {
+                match p {
+                    Payload::Ready(_) => 0,
+                    Payload::Coefs { .. } => 1,
+                    Payload::Pixels { .. } => 2,
+                }
+            }
+            let mut accs: [Vec<Sample>; 3] = Default::default();
             while let Some(s) = sample_rx.recv() {
-                acc.push(s);
-                if acc.len() == b {
-                    let batch = collate(std::mem::take(&mut acc))
+                let k = kind(&s.payload);
+                accs[k].push(s);
+                if accs[k].len() == b {
+                    let batch = collate(std::mem::take(&mut accs[k]))
                         .map_err(|_| anyhow::anyhow!("mixed payload kinds in batch"))?;
                     counters.batches_built(1);
                     if batch_tx.send(batch).is_err() {
                         return Ok(());
                     }
-                    acc = Vec::with_capacity(b);
                 }
             }
-            // Partial trailing batch is dropped (standard drop_last=True).
+            // Partial trailing batches are dropped (standard drop_last=True).
             Ok(())
         })?);
     }
@@ -305,6 +363,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         producer_blocked_secs: device_out.producer_blocked_secs,
         consumer_starved_secs: device_out.consumer_starved_secs,
         net_in_flight_peak: remote.map(|r| r.in_flight.peak()).unwrap_or(0),
+        prep_cache_hit_rate: prep_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0),
+        decode_skipped: snap.decode_skipped,
+        epoch_secs: epoch_clock.epoch_secs(),
     })
 }
 
@@ -335,6 +396,14 @@ fn device_loop(
         m.artifact(name).with_context(|| {
             format!("placement {} needs artifact {name}", cfg.placement.name())
         })?;
+        // Prep-cache hits under hybrid re-enter as pixel payloads, which
+        // the device augments with the hybrid0 artifact — require it up
+        // front rather than failing mid-epoch on the first warm batch.
+        if cfg.placement == Placement::Hybrid && cfg.prep_cache_mb > 0 {
+            m.artifact(&augment).with_context(|| {
+                format!("prep cache under hybrid needs artifact {augment}")
+            })?;
+        }
     }
     let mut session = if cfg.train {
         Some(TrainSession::new(&mut engine, &cfg.model, b, cfg.lr)?)

@@ -249,7 +249,7 @@ mod tests {
             let recs = crate::record::parse_shard(&buf).unwrap();
             for r in &recs {
                 let want = store.read(&entries[r.id as usize].path).unwrap();
-                assert_eq!(r.payload, want);
+                assert_eq!(r.payload[..], want[..]);
                 assert_eq!(r.label, entries[r.id as usize].label);
             }
             seen += recs.len();

@@ -50,9 +50,14 @@ fn print_help() {
                       [--placement cpu|hybrid|hybrid0]\n\
                       [--storage local|ebs|nvme|dram|s3|s3-cold]\n\
                       [--net-conns N] [--readahead-mb M] (remote-tier prefetcher)\n\
+                      [--epochs E] [--cache-mb M] (raw-byte DRAM cache)\n\
+                      [--prep-cache-mb M] [--prep-cache-policy lru|minio]\n\
+                      (decoded-sample cache: epoch >= 2 skips read+decode;\n\
+                       minio = eviction-free, shuffle-proof hit rate)\n\
                       [--workers N] [--steps N] [--batch B] [--ideal] [--no-train]\n\
            sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]\n\
                       [--storage ..] [--net-conns N] [--seconds S]\n\
+                      [--prep-cache-gb G] [--prep-cache-policy lru|minio]\n\
            reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)\n\
            autoconf   --model M [--objective throughput|cost] [--budget $/h]\n\
            inspect    [--artifacts DIR]\n"

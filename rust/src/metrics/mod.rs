@@ -11,6 +11,8 @@ use std::time::Instant;
 pub struct Counters {
     pub images_read: AtomicU64,
     pub images_decoded: AtomicU64,
+    /// Samples served from the decoded-sample cache (decode not paid).
+    pub decode_skipped: AtomicU64,
     pub images_augmented: AtomicU64,
     pub batches_built: AtomicU64,
     pub batches_preprocessed_device: AtomicU64,
@@ -38,6 +40,7 @@ macro_rules! counter_fns {
 counter_fns!(
     images_read,
     images_decoded,
+    decode_skipped,
     images_augmented,
     batches_built,
     batches_preprocessed_device,
@@ -124,6 +127,41 @@ impl BusyClock {
     }
 }
 
+/// Per-epoch wall-clock marks: each CPU worker stamps the epoch of every
+/// sample it finishes, so `marks[e]` converges to the time the *last*
+/// sample of epoch `e` left preprocessing.  The per-epoch durations are
+/// what the decoded-sample cache is expected to shrink from epoch 2 on.
+pub struct EpochClock {
+    t0: Instant,
+    marks: std::sync::Mutex<Vec<f64>>,
+}
+
+impl EpochClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(EpochClock { t0: Instant::now(), marks: std::sync::Mutex::new(Vec::new()) })
+    }
+
+    pub fn mark(&self, epoch: usize) {
+        let t = self.t0.elapsed().as_secs_f64();
+        let mut marks = self.marks.lock().unwrap();
+        if marks.len() <= epoch {
+            marks.resize(epoch + 1, 0.0);
+        }
+        marks[epoch] = marks[epoch].max(t);
+    }
+
+    /// Duration of each epoch: the gap between consecutive last-sample
+    /// times (epoch 0 is measured from the clock's creation).
+    pub fn epoch_secs(&self) -> Vec<f64> {
+        let marks = self.marks.lock().unwrap();
+        marks
+            .iter()
+            .enumerate()
+            .map(|(e, &t)| if e == 0 { t } else { (t - marks[e - 1]).max(0.0) })
+            .collect()
+    }
+}
+
 /// One utilization sample (Fig. 4 row): time, cpu util, device util, I/O MB/s.
 #[derive(Clone, Copy, Debug)]
 pub struct UtilSample {
@@ -200,6 +238,13 @@ pub struct RunReport {
     /// High-water mark of in-flight remote-store connections (0 when the
     /// run used a local tier) — did the prefetcher keep the pool busy?
     pub net_in_flight_peak: u64,
+    /// Decoded-sample cache hit rate over the whole run (0 when disabled).
+    pub prep_cache_hit_rate: f64,
+    /// Samples whose decode was skipped via the decoded-sample cache.
+    pub decode_skipped: u64,
+    /// Wall-clock per epoch (preprocessing completion times); the
+    /// decoded-sample cache should make entries 2+ beat entry 1.
+    pub epoch_secs: Vec<f64>,
 }
 
 impl RunReport {
@@ -216,6 +261,12 @@ impl RunReport {
             ("producer_blocked_secs", Json::num(self.producer_blocked_secs)),
             ("consumer_starved_secs", Json::num(self.consumer_starved_secs)),
             ("net_in_flight_peak", Json::num(self.net_in_flight_peak as f64)),
+            ("prep_cache_hit_rate", Json::num(self.prep_cache_hit_rate)),
+            ("decode_skipped", Json::num(self.decode_skipped as f64)),
+            (
+                "epoch_secs",
+                Json::arr(self.epoch_secs.iter().map(|&s| Json::num(s))),
+            ),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -253,6 +304,16 @@ impl RunReport {
         );
         if self.net_in_flight_peak > 0 {
             println!("  remote store: peak {} connections in flight", self.net_in_flight_peak);
+        }
+        if self.decode_skipped > 0 || self.prep_cache_hit_rate > 0.0 {
+            let epochs: Vec<String> =
+                self.epoch_secs.iter().map(|s| format!("{s:.2}s")).collect();
+            println!(
+                "  prep cache: hit rate {:.1}%, {} decodes skipped, epochs [{}]",
+                self.prep_cache_hit_rate * 100.0,
+                self.decode_skipped,
+                epochs.join(", ")
+            );
         }
     }
 }
@@ -316,6 +377,23 @@ mod tests {
         s.sample(&cpu, &dev, 1_000_000);
         assert!(s.samples[1].cpu < 0.2);
         assert_eq!(s.samples[1].io_mbps, 0.0);
+    }
+
+    #[test]
+    fn epoch_clock_tracks_last_sample_per_epoch() {
+        let c = EpochClock::new();
+        c.mark(0);
+        std::thread::sleep(Duration::from_millis(20));
+        c.mark(0); // later sample of the same epoch moves the mark
+        std::thread::sleep(Duration::from_millis(20));
+        c.mark(1);
+        let secs = c.epoch_secs();
+        assert_eq!(secs.len(), 2);
+        assert!(secs[0] >= 0.018, "{secs:?}");
+        assert!(secs[1] >= 0.018, "{secs:?}");
+        // Marks arriving out of order never produce negative durations.
+        c.mark(0);
+        assert!(c.epoch_secs().iter().all(|&s| s >= 0.0));
     }
 
     #[test]

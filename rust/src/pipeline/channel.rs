@@ -128,6 +128,15 @@ impl<T> Receiver<T> {
                 return Some(v);
             }
             if st.senders == 0 {
+                // End-of-epoch drain: the time spent blocked waiting for
+                // producers that never delivered still counts — dropping
+                // it here undercounted `recv_wait_ns` exactly when the
+                // consumer was starved at shutdown.
+                if let Some(t) = waited {
+                    self.0
+                        .recv_wait_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
                 return None;
             }
             waited.get_or_insert_with(Instant::now);
@@ -223,6 +232,23 @@ mod tests {
         let (tx, rx) = bounded(2);
         drop(rx);
         assert_eq!(tx.send(7), Err(Closed(7)));
+    }
+
+    /// Regression: block time accumulated while waiting on an empty
+    /// queue must be flushed into `recv_wait_ns` when the channel closes
+    /// (`None`), not dropped — it biases the GPU-starved metric exactly
+    /// at end-of-epoch drain.
+    #[test]
+    fn recv_wait_counted_when_senders_drop_without_sending() {
+        let (tx, rx) = bounded::<u32>(2);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            drop(tx); // close without ever sending
+        });
+        assert_eq!(rx.recv(), None);
+        t.join().unwrap();
+        let waited = rx.recv_wait_secs();
+        assert!(waited > 0.03, "drain wait dropped on None path: {waited}");
     }
 
     #[test]

@@ -16,11 +16,14 @@
 //! * `hybrid0` — full decode on CPU; augment on device.
 
 pub mod channel;
+pub mod prep_cache;
 pub mod shuffle;
 pub mod source;
 
 use crate::config::Placement;
 use crate::ops::{self, AugParams};
+use prep_cache::{DecodedSample, PrepCache};
+use std::sync::Arc;
 
 /// What the CPU stage produced for one image, by placement.
 #[derive(Clone, Debug)]
@@ -29,8 +32,9 @@ pub enum Payload {
     Ready(Vec<f32>),
     /// Entropy-decoded coefficients `[C, H/8, W/8, 8, 8]` + aug row (hybrid).
     Coefs { coefs: Vec<f32>, qtable: [f32; 64], aug: [f32; 6] },
-    /// Decoded `[C, H, W]` pixels + aug row (hybrid0).
-    Pixels { pixels: Vec<f32>, aug: [f32; 6] },
+    /// Decoded `[C, H, W]` pixels + aug row (hybrid0).  Shared, so a
+    /// prep-cache hit hands its resident buffer on as a refcount bump.
+    Pixels { pixels: std::sync::Arc<[f32]>, aug: [f32; 6] },
 }
 
 #[derive(Clone, Debug)]
@@ -140,7 +144,106 @@ pub fn cpu_stage(
         }
         Placement::Hybrid0 => {
             let img = crate::codec::decode_cpu(bytes)?;
-            Ok(Payload::Pixels { pixels: img.to_f32(), aug: aug.to_row() })
+            Ok(Payload::Pixels { pixels: img.to_f32().into(), aug: aug.to_row() })
+        }
+    }
+}
+
+/// Like [`cpu_stage`], but admits the decoded (pre-augment) pixels into
+/// the prep cache so later epochs skip the decode.  Under the hybrid
+/// placement the entropy path never produces full pixels, so the extra
+/// dequant+IDCT is run for admission only when the cache would accept the
+/// sample (one-time cost ≪ the per-epoch decode it amortizes away).
+pub fn cpu_stage_admitting(
+    bytes: &[u8],
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+    cache: &PrepCache,
+    id: u64,
+) -> anyhow::Result<Payload> {
+    let px_bytes = |c: usize, h: usize, w: usize| c * h * w * std::mem::size_of::<f32>();
+    match placement {
+        Placement::Cpu => {
+            let img = crate::codec::decode_cpu(bytes)?;
+            // Share one pixel buffer between cache and augment: the
+            // admission is a refcount bump, not a second full copy.
+            let pixels: Arc<[f32]> = img.to_f32().into();
+            if cache.would_admit(px_bytes(img.c, img.h, img.w)) {
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample {
+                        c: img.c,
+                        h: img.h,
+                        w: img.w,
+                        pixels: pixels.clone(),
+                    }),
+                );
+            }
+            let mut out = vec![0f32; img.c * out_hw * out_hw];
+            ops::augment_fused(&pixels, img.c, img.h, img.w, &aug, out_hw, out_hw, &mut out);
+            Ok(Payload::Ready(out))
+        }
+        Placement::Hybrid => {
+            let ci = crate::codec::entropy_decode(bytes)?;
+            if cache.would_admit(px_bytes(ci.c, ci.h, ci.w)) {
+                let img = crate::codec::coefs_to_image(&ci);
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample::new(img.c, img.h, img.w, img.to_f32())),
+                );
+            }
+            Ok(Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() })
+        }
+        Placement::Hybrid0 => {
+            let img = crate::codec::decode_cpu(bytes)?;
+            // Payload and cache share one buffer — admission is free.
+            let pixels: Arc<[f32]> = img.to_f32().into();
+            if cache.would_admit(px_bytes(img.c, img.h, img.w)) {
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample {
+                        c: img.c,
+                        h: img.h,
+                        w: img.w,
+                        pixels: pixels.clone(),
+                    }),
+                );
+            }
+            Ok(Payload::Pixels { pixels, aug: aug.to_row() })
+        }
+    }
+}
+
+/// The CPU-stage work for a prep-cache hit: read+decode are skipped.
+/// `cpu` placement augments the cached pixels in place; the device
+/// placements re-enter as a hybrid0-style pixel payload (the device runs
+/// the augment artifact), so a hybrid run's batches stay homogeneous per
+/// batch via the batcher's per-kind collation.
+pub fn cpu_stage_cached(
+    sample: &DecodedSample,
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+) -> Payload {
+    match placement {
+        Placement::Cpu => {
+            let mut out = vec![0f32; sample.c * out_hw * out_hw];
+            ops::augment_fused(
+                &sample.pixels,
+                sample.c,
+                sample.h,
+                sample.w,
+                &aug,
+                out_hw,
+                out_hw,
+                &mut out,
+            );
+            Payload::Ready(out)
+        }
+        Placement::Hybrid | Placement::Hybrid0 => {
+            // Refcount bump: the warm path never copies the pixels.
+            Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() }
         }
     }
 }
@@ -203,11 +306,63 @@ mod tests {
             Sample {
                 id: 1,
                 label: 0,
-                payload: Payload::Pixels { pixels: vec![0.0], aug: [0.0; 6] },
+                payload: Payload::Pixels { pixels: vec![0.0].into(), aug: [0.0; 6] },
             },
         ];
         assert!(collate(samples).is_err());
         assert!(collate(vec![]).is_err());
+    }
+
+    #[test]
+    fn cached_cpu_stage_matches_uncached_exactly() {
+        // Cache transparency: for the same aug params, a prep-cache hit
+        // must produce bit-identical tensors to the decode path.
+        let bytes = encoded_image(3);
+        let aug = AugParams { y0: 2, x0: 1, crop_h: 48, crop_w: 52, flip: true };
+        let img = crate::codec::decode_cpu(&bytes).unwrap();
+        let sample = prep_cache::DecodedSample::new(img.c, img.h, img.w, img.to_f32());
+        match (
+            cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap(),
+            cpu_stage_cached(&sample, Placement::Cpu, aug, 56),
+        ) {
+            (Payload::Ready(a), Payload::Ready(b)) => assert_eq!(a, b),
+            other => panic!("{other:?}"),
+        }
+        // Device placements re-enter as a hybrid0-style pixel payload.
+        for pl in [Placement::Hybrid, Placement::Hybrid0] {
+            match cpu_stage_cached(&sample, pl, aug, 56) {
+                Payload::Pixels { pixels, aug: row } => {
+                    assert_eq!(pixels[..], img.to_f32()[..]);
+                    assert_eq!(row, aug.to_row());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn admitting_stage_populates_cache_per_placement() {
+        let bytes = encoded_image(4);
+        let aug = AugParams::identity(64, 64);
+        for pl in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
+            let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+            let p = cpu_stage_admitting(&bytes, pl, aug, 56, &cache, 9).unwrap();
+            // Same hand-off format as the plain stage...
+            match (pl, &p) {
+                (Placement::Cpu, Payload::Ready(_))
+                | (Placement::Hybrid, Payload::Coefs { .. })
+                | (Placement::Hybrid0, Payload::Pixels { .. }) => {}
+                other => panic!("{other:?}"),
+            }
+            // ...and the decoded pixels are resident for the next epoch.
+            let s = cache.get(9).unwrap_or_else(|| panic!("{pl:?}: nothing admitted"));
+            assert_eq!((s.c, s.h, s.w), (3, 64, 64));
+            assert_eq!(s.pixels.len(), 3 * 64 * 64);
+        }
+        // A zero-budget cache admits nothing but the stage still works.
+        let cache = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
+        cpu_stage_admitting(&bytes, Placement::Cpu, aug, 56, &cache, 9).unwrap();
+        assert!(cache.is_empty());
     }
 
     #[test]

@@ -7,19 +7,33 @@ use anyhow::Result;
 use std::io::Read;
 use std::sync::Arc;
 
-/// One unit of work for the CPU stage.
+/// One unit of work for the CPU stage.  `epoch` rides along so the
+/// worker can sample *fresh* per-epoch augmentation parameters even when
+/// the decoded-sample cache (`pipeline/prep_cache.rs`) skips the decode.
 #[derive(Clone, Debug)]
 pub enum WorkItem {
     /// Raw method: the worker random-reads `path` itself (step ❸).
-    RawRef { id: u64, label: u16, path: String },
+    RawRef { id: u64, label: u16, epoch: u64, path: String },
     /// Record method: payload already streamed sequentially (steps ④–⑤).
-    Bytes { id: u64, label: u16, payload: Vec<u8> },
+    Bytes { id: u64, label: u16, epoch: u64, payload: Vec<u8> },
 }
 
 impl WorkItem {
     pub fn id(&self) -> u64 {
         match self {
             WorkItem::RawRef { id, .. } | WorkItem::Bytes { id, .. } => *id,
+        }
+    }
+
+    pub fn label(&self) -> u16 {
+        match self {
+            WorkItem::RawRef { label, .. } | WorkItem::Bytes { label, .. } => *label,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        match self {
+            WorkItem::RawRef { epoch, .. } | WorkItem::Bytes { epoch, .. } => *epoch,
         }
     }
 }
@@ -116,7 +130,7 @@ mod tests {
     #[test]
     fn storage_reader_behaves_like_file() {
         let m = MemStore::new();
-        m.write("blob", (0u8..200).collect());
+        m.write("blob", (0u8..200).collect::<Vec<u8>>());
         let mut r = StorageReader::open(Arc::new(m), "blob").unwrap();
         let mut buf = [0u8; 64];
         let mut total = Vec::new();

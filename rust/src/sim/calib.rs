@@ -62,6 +62,21 @@ pub const RAW_EXTRA_CPU_MS: f64 = 2.0 * SHARE_READ * CPU_PREPROC_MS;
 /// Mean encoded image size (ImageNet-train JPEG average ≈ 110 KB).
 pub const IMG_BYTES: f64 = 110_000.0;
 
+/// Decoded (post-decode, pre-augment) sample size at paper scale:
+/// 3×224×224 f32 pixels — what the decoded-sample cache holds per image.
+pub const DECODED_SAMPLE_BYTES: f64 = (3 * 224 * 224 * 4) as f64;
+
+/// ImageNet-1k train-set size — the corpus the paper's testbed trains on,
+/// and the denominator of the decoded-cache hit-rate model.
+pub const DATASET_IMAGES: f64 = 1_281_167.0;
+
+/// Decoded size of the full corpus (≈ 770 GB): a half-corpus decoded
+/// cache is a few hundred GB of DRAM, which the auto-configurator prices
+/// against simply hosting the *encoded* data on a faster storage tier.
+pub fn decoded_dataset_bytes() -> f64 {
+    DATASET_IMAGES * DECODED_SAMPLE_BYTES
+}
+
 /// vCPU scaling: linear to the NUMA knee, 0.3 marginal efficiency beyond
 /// (two-socket E5-2686v4; data-loading workers contend for memory bw).
 pub const VCPU_KNEE: f64 = 48.0;

@@ -5,12 +5,16 @@
 //! Byte-budgeted LRU with sharded admission (whole-object caching; record
 //! chunks are ranged reads and are cached per (name, offset, len) key —
 //! the access pattern is identical across epochs, so ranged keys hit).
+//!
+//! Internals: values are `Arc<[u8]>` so a hit is a refcount bump, not a
+//! buffer copy, and a tick-ordered `BTreeMap` index makes eviction
+//! O(log n) instead of a full-map scan under the global mutex.
 
 use super::Storage;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 enum Key {
@@ -19,7 +23,10 @@ enum Key {
 }
 
 struct Lru {
-    map: HashMap<Key, (Vec<u8>, u64)>, // value + last-use tick
+    map: HashMap<Key, (Arc<[u8]>, u64)>, // value + last-use tick
+    /// Tick-ordered eviction index (ticks are unique: every get/admit
+    /// takes a fresh one).  First entry = least recently used.
+    by_tick: BTreeMap<u64, Key>,
     bytes: usize,
     tick: u64,
 }
@@ -38,7 +45,12 @@ impl<S: Storage> CachedStore<S> {
         CachedStore {
             inner,
             budget: budget_bytes,
-            lru: Mutex::new(Lru { map: HashMap::new(), bytes: 0, tick: 0 }),
+            lru: Mutex::new(Lru {
+                map: HashMap::new(),
+                by_tick: BTreeMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -58,58 +70,78 @@ impl<S: Storage> CachedStore<S> {
         self.lru.lock().unwrap().bytes
     }
 
-    fn get(&self, key: &Key) -> Option<Vec<u8>> {
-        let mut lru = self.lru.lock().unwrap();
-        lru.tick += 1;
-        let tick = lru.tick;
-        if let Some((v, used)) = lru.map.get_mut(key) {
-            *used = tick;
-            let out = v.clone();
-            drop(lru);
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            Some(out)
-        } else {
-            drop(lru);
-            self.misses.fetch_add(1, Ordering::Relaxed);
-            None
-        }
+    /// Recompute resident bytes from the entries themselves.  The
+    /// accounting invariant (`cached_bytes == recount <= budget`) is what
+    /// the property test below drives; a drift means `bytes` went stale.
+    #[cfg(test)]
+    fn recount_bytes(&self) -> usize {
+        self.lru.lock().unwrap().map.values().map(|(v, _)| v.len()).sum()
     }
 
-    fn admit(&self, key: Key, value: &[u8]) {
+    fn get(&self, key: &Key) -> Option<Arc<[u8]>> {
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard; // split-borrow map and by_tick
+        lru.tick += 1;
+        let tick = lru.tick;
+        let out = if let Some((v, used)) = lru.map.get_mut(key) {
+            let out = v.clone(); // refcount bump, not a copy
+            let old = std::mem::replace(used, tick);
+            lru.by_tick.remove(&old);
+            lru.by_tick.insert(tick, key.clone());
+            Some(out)
+        } else {
+            None
+        };
+        drop(guard);
+        match &out {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        out
+    }
+
+    fn admit(&self, key: Key, value: Arc<[u8]>) {
         if value.len() > self.budget {
             return; // larger than the whole cache: never admit
         }
         let mut lru = self.lru.lock().unwrap();
         lru.tick += 1;
         let tick = lru.tick;
+        // Credit the entry being replaced (concurrent misses on one key
+        // race to admit) before sizing the eviction target, so `bytes`
+        // stays exact and the loop below never over-evicts.
+        if let Some((old, old_tick)) = lru.map.remove(&key) {
+            lru.by_tick.remove(&old_tick);
+            lru.bytes -= old.len();
+        }
         // Evict least-recently-used entries until the value fits.
         while lru.bytes + value.len() > self.budget {
-            let Some(victim) = lru.map.iter().min_by_key(|(_, (_, used))| *used).map(|(k, _)| k.clone())
-            else {
+            let Some((&victim_tick, _)) = lru.by_tick.iter().next() else {
                 break;
             };
+            let victim = lru.by_tick.remove(&victim_tick).expect("index entry");
             if let Some((v, _)) = lru.map.remove(&victim) {
                 lru.bytes -= v.len();
             }
         }
-        if lru.map.insert(key, (value.to_vec(), tick)).is_none() {
-            lru.bytes += value.len();
-        }
+        lru.bytes += value.len();
+        lru.map.insert(key.clone(), (value, tick));
+        lru.by_tick.insert(tick, key);
     }
 }
 
 impl<S: Storage> Storage for CachedStore<S> {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         let key = Key::Whole(name.to_string());
         if let Some(v) = self.get(&key) {
             return Ok(v);
         }
         let v = self.inner.read(name)?;
-        self.admit(key, &v);
+        self.admit(key, v.clone());
         Ok(v)
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         let key = Key::Range(name.to_string(), offset, len);
         if let Some(v) = self.get(&key) {
             return Ok(v);
@@ -119,7 +151,7 @@ impl<S: Storage> Storage for CachedStore<S> {
         // requested (name, offset, len) key: the entry would alias a
         // different range than it holds.  Short reads bypass admission.
         if v.len() as u64 == len {
-            self.admit(key, &v);
+            self.admit(key, v.clone());
         }
         Ok(v)
     }
@@ -141,11 +173,12 @@ impl<S: Storage> Storage for CachedStore<S> {
 mod tests {
     use super::*;
     use crate::storage::MemStore;
+    use crate::testing::{check, PropConfig};
 
     fn store_with(names: &[(&str, usize)]) -> MemStore {
         let m = MemStore::new();
         for (n, len) in names {
-            m.write(n, vec![7u8; *len]);
+            m.write(*n, vec![7u8; *len]);
         }
         m
     }
@@ -223,5 +256,130 @@ mod tests {
             }
         }
         assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    /// Regression (accounting bugfix): re-admitting an existing key with
+    /// a different length — the concurrent double-miss shape — must
+    /// credit the replaced entry, not leave `bytes` at the stale sum.
+    #[test]
+    fn replacing_admission_adjusts_byte_accounting() {
+        let c = CachedStore::new(store_with(&[("a", 60)]), 1 << 10);
+        let key = Key::Whole("a".into());
+        c.admit(key.clone(), vec![1u8; 60].into());
+        assert_eq!(c.cached_bytes(), 60);
+        c.admit(key.clone(), vec![2u8; 20].into());
+        assert_eq!(c.cached_bytes(), 20, "replacement must credit the old entry");
+        assert_eq!(c.get(&key).unwrap().len(), 20);
+        c.admit(key.clone(), vec![3u8; 90].into());
+        assert_eq!(c.cached_bytes(), 90);
+        assert_eq!(c.recount_bytes(), 90);
+    }
+
+    /// Regression (over-eviction half of the bugfix): replacing a key
+    /// only needs room for the size *delta*, so a cache that is exactly
+    /// full keeps its other entries when a resident key is re-admitted
+    /// at the same length.
+    #[test]
+    fn replacement_does_not_over_evict() {
+        let c = CachedStore::new(store_with(&[("a", 60), ("b", 60)]), 120);
+        c.read("a").unwrap();
+        c.read("b").unwrap(); // full: 120/120
+        c.admit(Key::Whole("a".into()), vec![9u8; 60].into());
+        assert!(c.get(&Key::Whole("b".into())).is_some(), "b was needlessly evicted");
+        assert_eq!(c.cached_bytes(), 120);
+    }
+
+    /// The harness that would have caught the accounting bug: a seeded
+    /// random read/read_range workload (run from several threads so
+    /// same-key misses race to admit, through an inner store whose
+    /// whole-object lengths vary per call) with the invariant
+    /// `cached_bytes == Σ resident entry lengths <= budget` checked after
+    /// every round.
+    #[test]
+    fn prop_byte_accounting_is_exact_under_random_workloads() {
+        use std::sync::atomic::AtomicU64 as Calls;
+
+        /// MemStore whose whole-object reads come back truncated by a
+        /// per-call amount — the deterministic stand-in for "the object
+        /// changed size between two racing misses".
+        struct VaryStore {
+            inner: MemStore,
+            calls: Calls,
+        }
+
+        impl Storage for VaryStore {
+            fn read(&self, name: &str) -> Result<Arc<[u8]>> {
+                let v = self.inner.read(name)?;
+                let cut = (self.calls.fetch_add(1, Ordering::Relaxed) % 7) as usize;
+                Ok(v[..v.len().saturating_sub(cut)].into())
+            }
+            fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
+                self.inner.read_range(name, offset, len)
+            }
+            fn len(&self, name: &str) -> Result<u64> {
+                self.inner.len(name)
+            }
+            fn list(&self) -> Result<Vec<String>> {
+                self.inner.list()
+            }
+            fn stats(&self) -> (u64, u64) {
+                self.inner.stats()
+            }
+        }
+
+        check(
+            "cache-byte-accounting",
+            PropConfig { cases: 24, ..Default::default() },
+            |rng, size| {
+                let budget = 64 + rng.gen_range(64 * size as u64 + 1) as usize;
+                let n_blobs = 1 + rng.gen_range(8) as usize;
+                let blob_lens: Vec<usize> =
+                    (0..n_blobs).map(|_| 8 + rng.gen_range(200) as usize).collect();
+                let ops: Vec<(usize, bool, u64, u64)> = (0..40 + 4 * size)
+                    .map(|_| {
+                        (
+                            rng.gen_range(n_blobs as u64) as usize,
+                            rng.bool(), // whole vs ranged
+                            rng.gen_range(64),
+                            1 + rng.gen_range(64),
+                        )
+                    })
+                    .collect();
+                (budget, blob_lens, ops)
+            },
+            |(budget, blob_lens, ops)| {
+                let inner = MemStore::new();
+                for (i, len) in blob_lens.iter().enumerate() {
+                    inner.write(&format!("b{i}"), vec![i as u8; *len]);
+                }
+                let cache = Arc::new(CachedStore::new(
+                    VaryStore { inner, calls: Calls::new(0) },
+                    *budget,
+                ));
+                // Three threads share the op list round-robin so misses on
+                // the same key can race to admit.
+                let hs: Vec<_> = (0..3)
+                    .map(|t| {
+                        let cache = cache.clone();
+                        let ops = ops.clone();
+                        std::thread::spawn(move || {
+                            for (blob, whole, off, len) in ops.into_iter().skip(t).step_by(3) {
+                                let name = format!("b{blob}");
+                                if whole {
+                                    cache.read(&name).unwrap();
+                                } else {
+                                    cache.read_range(&name, off, len).unwrap();
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    h.join().unwrap();
+                }
+                cache.cached_bytes() == cache.recount_bytes()
+                    && cache.cached_bytes() <= *budget
+            },
+        );
     }
 }

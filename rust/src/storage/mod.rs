@@ -25,7 +25,7 @@ use std::fs::File;
 use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A storage device profile.  Numbers for EBS/NVMe follow the paper's
@@ -102,9 +102,12 @@ impl IoStats {
 /// Object-store style interface over named blobs.  `read_range` is the
 /// random-access path (raw files / indexed records); `read` fetches a
 /// whole object (record chunks use ranged reads).
+///
+/// Reads return `Arc<[u8]>` so memory-resident tiers (`MemStore`, the
+/// caches) serve repeat reads as refcount bumps instead of buffer copies.
 pub trait Storage: Send + Sync {
-    fn read(&self, name: &str) -> Result<Vec<u8>>;
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+    fn read(&self, name: &str) -> Result<Arc<[u8]>>;
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>>;
     fn len(&self, name: &str) -> Result<u64>;
     fn list(&self) -> Result<Vec<String>>;
     fn stats(&self) -> (u64, u64);
@@ -112,11 +115,11 @@ pub trait Storage: Send + Sync {
 
 /// Forwarding impl so cache/throttle wrappers can stack over trait objects.
 impl<S: Storage + ?Sized> Storage for std::sync::Arc<S> {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         (**self).read(name)
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         (**self).read_range(name, offset, len)
     }
 
@@ -162,14 +165,14 @@ impl DirStore {
 }
 
 impl Storage for DirStore {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         let p = self.root.join(name);
         let b = std::fs::read(&p).with_context(|| format!("read {p:?}"))?;
         self.stats.record(b.len() as u64);
-        Ok(b)
+        Ok(b.into())
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         use std::io::Seek;
         let p = self.root.join(name);
         let mut f = File::open(&p).with_context(|| format!("open {p:?}"))?;
@@ -185,7 +188,7 @@ impl Storage for DirStore {
         }
         buf.truncate(read);
         self.stats.record(read as u64);
-        Ok(buf)
+        Ok(buf.into())
     }
 
     fn len(&self, name: &str) -> Result<u64> {
@@ -224,7 +227,7 @@ impl Storage for DirStore {
 
 #[derive(Default)]
 pub struct MemStore {
-    blobs: Mutex<HashMap<String, Vec<u8>>>,
+    blobs: Mutex<HashMap<String, Arc<[u8]>>>,
     stats: IoStats,
 }
 
@@ -233,8 +236,8 @@ impl MemStore {
         Self::default()
     }
 
-    pub fn write(&self, name: &str, bytes: Vec<u8>) {
-        self.blobs.lock().unwrap().insert(name.to_string(), bytes);
+    pub fn write(&self, name: &str, bytes: impl Into<Arc<[u8]>>) {
+        self.blobs.lock().unwrap().insert(name.to_string(), bytes.into());
     }
 
     /// Preload every blob of another store (the paper's "load data to
@@ -250,7 +253,8 @@ impl MemStore {
 }
 
 impl Storage for MemStore {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
+        // Whole-object reads are refcount bumps, not copies.
         let b = self
             .blobs
             .lock()
@@ -262,13 +266,13 @@ impl Storage for MemStore {
         Ok(b)
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         let g = self.blobs.lock().unwrap();
         let b = g.get(name).with_context(|| format!("no blob {name}"))?;
         let start = (offset as usize).min(b.len());
         let end = (start + len as usize).min(b.len());
         self.stats.record((end - start) as u64);
-        Ok(b[start..end].to_vec())
+        Ok(b[start..end].into())
     }
 
     fn len(&self, name: &str) -> Result<u64> {
@@ -343,13 +347,13 @@ impl<S: Storage> ThrottledStore<S> {
 }
 
 impl<S: Storage> Storage for ThrottledStore<S> {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         let len = self.inner.len(name)?;
         self.throttle(len, true);
         self.inner.read(name)
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         // Ranged reads are random I/O unless they are large chunks.
         let sequential = len >= 1 << 20;
         self.throttle(len, sequential);
@@ -404,10 +408,10 @@ mod tests {
     #[test]
     fn memstore_roundtrip_and_range() {
         let m = MemStore::new();
-        m.write("a", vec![1, 2, 3, 4, 5]);
-        assert_eq!(m.read("a").unwrap(), vec![1, 2, 3, 4, 5]);
-        assert_eq!(m.read_range("a", 1, 3).unwrap(), vec![2, 3, 4]);
-        assert_eq!(m.read_range("a", 3, 100).unwrap(), vec![4, 5]);
+        m.write("a", vec![1u8, 2, 3, 4, 5]);
+        assert_eq!(m.read("a").unwrap()[..], [1, 2, 3, 4, 5]);
+        assert_eq!(m.read_range("a", 1, 3).unwrap()[..], [2, 3, 4]);
+        assert_eq!(m.read_range("a", 3, 100).unwrap()[..], [4, 5]);
         assert_eq!(m.len("a").unwrap(), 5);
         assert!(m.read("b").is_err());
         let (bytes, reads) = m.stats();
@@ -434,8 +438,8 @@ mod tests {
         s.write("a", &[1u8; 64]).unwrap();
         s.write("b", &[2u8; 32]).unwrap();
         let m = MemStore::preload_from(&s).unwrap();
-        assert_eq!(m.read("a").unwrap(), vec![1u8; 64]);
-        assert_eq!(m.read("b").unwrap(), vec![2u8; 32]);
+        assert_eq!(m.read("a").unwrap()[..], [1u8; 64]);
+        assert_eq!(m.read("b").unwrap()[..], [2u8; 32]);
         std::fs::remove_dir_all(dir).ok();
     }
 

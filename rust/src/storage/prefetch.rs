@@ -64,7 +64,7 @@ struct State {
     next_deliver: usize,
     n_parts: usize,
     /// Completed parts waiting for in-order delivery.
-    done: BTreeMap<usize, Vec<u8>>,
+    done: BTreeMap<usize, Arc<[u8]>>,
     error: Option<String>,
     cancelled: bool,
 }
@@ -131,7 +131,7 @@ fn worker_loop(shared: &Shared, store: &dyn Storage, name: &str, plan: PrefetchP
 pub struct PrefetchReader {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
-    current: Vec<u8>,
+    current: Arc<[u8]>,
     pos: usize,
 }
 
@@ -176,7 +176,7 @@ impl PrefetchReader {
                 }
             }
         }
-        Ok(PrefetchReader { shared, workers, current: Vec::new(), pos: 0 })
+        Ok(PrefetchReader { shared, workers, current: Arc::from(&[][..]), pos: 0 })
     }
 
     /// Completed-parts queue depth gauge (level + high-water mark).
@@ -334,10 +334,10 @@ mod tests {
     }
 
     impl Storage for FailAfter {
-        fn read(&self, name: &str) -> Result<Vec<u8>> {
+        fn read(&self, name: &str) -> Result<Arc<[u8]>> {
             self.inner.read(name)
         }
-        fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
             self.reads.fetch_add(1, Ordering::Relaxed);
             anyhow::ensure!(offset < self.limit, "connection reset at offset {offset}");
             self.inner.read_range(name, offset, len)

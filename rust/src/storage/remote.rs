@@ -23,7 +23,7 @@
 use super::Storage;
 use crate::metrics::Gauge;
 use anyhow::Result;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Network path profile for an emulated object store.
@@ -222,11 +222,11 @@ impl<S: Storage> RemoteStore<S> {
 }
 
 impl<S: Storage> Storage for RemoteStore<S> {
-    fn read(&self, name: &str) -> Result<Vec<u8>> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         self.request(|| self.inner.read(name), |v| v.len() as u64)
     }
 
-    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
         // Charge the bytes actually moved (short near EOF), not requested.
         self.request(|| self.inner.read_range(name, offset, len), |v| v.len() as u64)
     }
