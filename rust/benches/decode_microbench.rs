@@ -1,0 +1,7 @@
+//! `cargo bench --bench decode_microbench` — counter-based decode
+//! microbench: blocks dequant+IDCT'd and ns/image for the full vs fused
+//! ROI vs fused+scaled paths (also: `dpp bench decode`).
+
+fn main() {
+    dpp::bench::decode::run(None).expect("decode microbench failed");
+}

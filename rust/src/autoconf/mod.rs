@@ -48,6 +48,9 @@ pub struct Candidate {
     /// at the fine-grained memory rate.
     pub prep_cache_gb: f64,
     pub prep_cache_policy: PrepCachePolicy,
+    /// Fused ROI decode on the CPU stage (bit-exact; free throughput on
+    /// decode-bound configs, a no-op on hybrid ones).
+    pub fused_decode: bool,
     pub throughput_ips: f64,
     pub price_per_hour: f64,
     pub dollars_per_mimg: f64,
@@ -71,11 +74,16 @@ pub const REMOTE_CONNS_SWEEP: [usize; 5] = [4, 8, 16, 32, 64];
 pub const PREP_CACHE_GB_SWEEP: [f64; 2] = [256.0, 512.0];
 
 /// Evaluate every (instance × vcpus × placement × storage[× conns] ×
-/// prep-cache) configuration.  Local tiers get `net_conns = 0`; the
-/// remote tiers sweep `REMOTE_CONNS_SWEEP`; the decoded-sample cache
-/// sweeps sizes × policies (plus the no-cache baseline).  Cache DRAM is
-/// modeled exactly like the `dram` storage option's dataset hosting:
-/// *additional* provisioned memory on top of the instance's own
+/// prep-cache × fused-decode) configuration.  Local tiers get
+/// `net_conns = 0`; the remote tiers sweep `REMOTE_CONNS_SWEEP`; the
+/// decoded-sample cache sweeps sizes × policies (plus the no-cache
+/// baseline); the fused ROI decode sweeps off/on where it can matter
+/// (skipped for `hybrid`, where it is a modeled no-op and would only
+/// duplicate rows).  The fractional decode *scale* is deliberately not an
+/// autoconf axis: it trades training-data fidelity for throughput, which
+/// a resource configurator has no business deciding silently.  Cache
+/// DRAM is modeled exactly like the `dram` storage option's dataset
+/// hosting: *additional* provisioned memory on top of the instance's own
 /// (already-priced) working set, charged at the fine-grained memory
 /// rate — so the tool prices a decoded cache against simply hosting the
 /// encoded data on a faster tier.
@@ -101,40 +109,51 @@ pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
                 ] {
                     for &conns in conns_sweep {
                         for &(cache_gb, cache_policy) in &cache_opts {
-                            let s = Scenario {
-                                model: model.to_string(),
-                                gpus: inst.gpus,
-                                vcpus: v,
-                                method: Method::Record,
-                                placement,
-                                storage: storage.to_string(),
-                                net_conns: conns.max(1),
-                                p3dn: inst.p3dn,
-                                prep_cache_gb: cache_gb,
-                                prep_cache_policy: cache_policy,
-                                ..Default::default()
-                            };
-                            let t = analytic_throughput(&s);
-                            let mut price = inst.price_per_hour(v, storage == "dram");
-                            price += match storage {
-                                "s3" => catalog::s3_dataset_per_hour(),
-                                "s3-cold" => catalog::s3_cold_dataset_per_hour(),
-                                _ => 0.0,
-                            };
-                            price += cache_gb * GCLOUD_MEM_GB_HOUR;
-                            out.push(Candidate {
-                                instance: inst.name,
-                                gpus: inst.gpus,
-                                vcpus: v,
-                                placement,
-                                storage: storage.to_string(),
-                                net_conns: conns,
-                                prep_cache_gb: cache_gb,
-                                prep_cache_policy: cache_policy,
-                                throughput_ips: t,
-                                price_per_hour: price,
-                                dollars_per_mimg: price / (t * 3600.0) * 1e6,
-                            });
+                            for fused in [false, true] {
+                                // Hybrid ships whole coefficient grids:
+                                // fused is a modeled no-op there, and
+                                // enumerating it would only duplicate
+                                // rows (crowding the top-8 table).
+                                if fused && placement == Placement::Hybrid {
+                                    continue;
+                                }
+                                let s = Scenario {
+                                    model: model.to_string(),
+                                    gpus: inst.gpus,
+                                    vcpus: v,
+                                    method: Method::Record,
+                                    placement,
+                                    storage: storage.to_string(),
+                                    net_conns: conns.max(1),
+                                    p3dn: inst.p3dn,
+                                    prep_cache_gb: cache_gb,
+                                    prep_cache_policy: cache_policy,
+                                    fused_decode: fused,
+                                    ..Default::default()
+                                };
+                                let t = analytic_throughput(&s);
+                                let mut price = inst.price_per_hour(v, storage == "dram");
+                                price += match storage {
+                                    "s3" => catalog::s3_dataset_per_hour(),
+                                    "s3-cold" => catalog::s3_cold_dataset_per_hour(),
+                                    _ => 0.0,
+                                };
+                                price += cache_gb * GCLOUD_MEM_GB_HOUR;
+                                out.push(Candidate {
+                                    instance: inst.name,
+                                    gpus: inst.gpus,
+                                    vcpus: v,
+                                    placement,
+                                    storage: storage.to_string(),
+                                    net_conns: conns,
+                                    prep_cache_gb: cache_gb,
+                                    prep_cache_policy: cache_policy,
+                                    fused_decode: fused,
+                                    throughput_ips: t,
+                                    price_per_hour: price,
+                                    dollars_per_mimg: price / (t * 3600.0) * 1e6,
+                                });
+                            }
                         }
                     }
                 }
@@ -197,13 +216,14 @@ impl Candidate {
 
     pub fn row(&self) -> String {
         format!(
-            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:<11} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
+            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:<11} {:<3} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
             self.instance,
             self.gpus,
             self.vcpus,
             self.placement.name(),
             self.storage_desc(),
             self.cache_desc(),
+            if self.fused_decode { "fd" } else { "-" },
             self.throughput_ips,
             self.price_per_hour,
             self.dollars_per_mimg,
@@ -271,6 +291,7 @@ mod tests {
                     && c.vcpus == 24
                     && c.placement == Placement::Hybrid
                     && c.storage == "ebs"
+                    && !c.fused_decode
             })
             .collect();
         assert_eq!(slice.len(), 1 + 2 * PREP_CACHE_GB_SWEEP.len());
@@ -302,6 +323,7 @@ mod tests {
                     && c.vcpus == 8
                     && c.placement == Placement::Hybrid
                     && c.storage == "ebs"
+                    && !c.fused_decode
             })
             .collect();
         assert_eq!(p32.len(), 1 + 2 * PREP_CACHE_GB_SWEEP.len());
@@ -345,7 +367,8 @@ mod tests {
         let s3: Vec<&Candidate> = cands
             .iter()
             .filter(|c| c.storage == "s3" && c.instance == "V100-8" && c.vcpus == 48
-                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0)
+                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0
+                && !c.fused_decode)
             .collect();
         assert_eq!(s3.len(), REMOTE_CONNS_SWEEP.len());
         // More connections never hurt throughput (latency hiding is
@@ -365,7 +388,8 @@ mod tests {
         let cold: Vec<&Candidate> = cands
             .iter()
             .filter(|c| c.storage == "s3-cold" && c.instance == "V100-8" && c.vcpus == 48
-                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0)
+                && c.placement == Placement::Hybrid && c.prep_cache_gb == 0.0
+                && !c.fused_decode)
             .collect();
         assert_eq!(cold.len(), REMOTE_CONNS_SWEEP.len());
         for (w, c) in s3.iter().zip(&cold) {
@@ -373,6 +397,36 @@ mod tests {
             assert!(c.throughput_ips <= w.throughput_ips + 1e-9);
             assert!(c.price_per_hour < w.price_per_hour);
         }
+    }
+
+    #[test]
+    fn fused_decode_axis_dominates_on_decode_bound_configs() {
+        let cands = enumerate("alexnet").unwrap();
+        let pick = |placement: Placement, fused: bool| {
+            cands
+                .iter()
+                .find(|c| {
+                    c.instance == "V100-8"
+                        && c.vcpus == 24
+                        && c.placement == placement
+                        && c.storage == "ebs"
+                        && c.prep_cache_gb == 0.0
+                        && c.fused_decode == fused
+                })
+                .unwrap()
+        };
+        // CPU-bound cpu-placement slice: fused wins strictly at equal price.
+        let (on, off) = (pick(Placement::Cpu, true), pick(Placement::Cpu, false));
+        assert!(on.throughput_ips > off.throughput_ips, "{} vs {}", on.throughput_ips, off.throughput_ips);
+        assert_eq!(on.price_per_hour, off.price_per_hour);
+        assert!(on.row().contains(" fd "), "{}", on.row());
+        assert!(on.dollars_per_mimg < off.dollars_per_mimg);
+        // Hybrid ships whole coefficient grids: fused is a modeled no-op
+        // there, so the sweep skips it entirely (no duplicate rows).
+        assert!(
+            cands.iter().filter(|c| c.placement == Placement::Hybrid).all(|c| !c.fused_decode),
+            "hybrid candidates must not carry the fused axis"
+        );
     }
 
     #[test]
@@ -387,6 +441,7 @@ mod tests {
                         && c.placement == Placement::Hybrid
                         && c.storage == storage
                         && c.prep_cache_gb == 0.0
+                        && !c.fused_decode
                 })
                 .unwrap()
         };

@@ -1,0 +1,145 @@
+//! `dpp bench decode` — counter-based decode microbench (CI smoke).
+//!
+//! Compares the full decoder against the fused ROI / fractional-scale
+//! paths on a representative RandomResizedCrop geometry and reports
+//! **blocks dequant+IDCT'd per image** (deterministic — what CI asserts)
+//! plus ns/image (informational; never asserted, so no wall-clock
+//! flakiness).  Writes the rows as JSON (`BENCH_decode.json`) for the CI
+//! artifact.
+
+use crate::bench::Bencher;
+use crate::codec::{self, DecodePlan};
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// One benched decode path.
+pub struct DecodeBenchRow {
+    pub name: &'static str,
+    pub blocks_idct: u64,
+    pub blocks_skipped: u64,
+    pub scale: usize,
+    pub ns_per_image: f64,
+}
+
+impl DecodeBenchRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("blocks_idct", Json::num(self.blocks_idct as f64)),
+            ("blocks_skipped", Json::num(self.blocks_skipped as f64)),
+            ("scale", Json::num(self.scale as f64)),
+            ("ns_per_image", Json::num(self.ns_per_image)),
+        ])
+    }
+}
+
+/// Run the microbench; optionally write `BENCH_decode.json` to `out`.
+///
+/// The representative geometry is the ISSUE's acceptance case: a 64×64
+/// image, a ~0.4-area (40×40) crop, out_hw = 56.  The counter-based
+/// acceptance — fused ROI must dequant+IDCT at most half the blocks of
+/// the full decode — is enforced here and in `tests/fused_decode.rs`.
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    let img = crate::dataset::gen_image(&mut crate::util::rng::Rng::new(7), 5, 3, 64, 64);
+    let bytes = codec::encode(&img, 85)?;
+    let b = Bencher::with_budget(250);
+
+    // Full decode: every block pays dequant+IDCT.
+    let full_blocks = 3 * 8 * 8u64;
+    let full = b.run("decode:full", || codec::decode_cpu(&bytes).unwrap());
+
+    // Fused ROI at full scale: the representative RandomResizedCrop.
+    let roi_plan = DecodePlan::new(3, 64, 64, (0, 0, 40, 40), 56, 0);
+    let (_, roi_stats) = codec::decode_cpu_planned(&bytes, &roi_plan)?;
+    let roi = b.run("decode:fused-roi", || codec::decode_cpu_planned(&bytes, &roi_plan).unwrap());
+
+    // Fused ROI + 1/2 scale (a 32×32 crop feeding a 16×16 output).
+    let scaled_plan = DecodePlan::new(3, 64, 64, (0, 0, 32, 32), 16, 3);
+    let (_, scaled_stats) = codec::decode_cpu_planned(&bytes, &scaled_plan)?;
+    let scaled = b.run("decode:fused-roi+scale", || {
+        codec::decode_cpu_planned(&bytes, &scaled_plan).unwrap()
+    });
+
+    let rows = [
+        DecodeBenchRow {
+            name: "full",
+            blocks_idct: full_blocks,
+            blocks_skipped: 0,
+            scale: 1,
+            ns_per_image: full.mean_ns,
+        },
+        DecodeBenchRow {
+            name: "fused-roi",
+            blocks_idct: roi_stats.blocks_idct,
+            blocks_skipped: roi_stats.blocks_skipped,
+            scale: 1,
+            ns_per_image: roi.mean_ns,
+        },
+        DecodeBenchRow {
+            name: "fused-roi+scale",
+            blocks_idct: scaled_stats.blocks_idct,
+            blocks_skipped: scaled_stats.blocks_skipped,
+            scale: 1 << scaled_plan.scale_log2,
+            ns_per_image: scaled.mean_ns,
+        },
+    ];
+
+    println!("== decode microbench (64x64 q85, crop 40x40 -> out 56) ==");
+    println!("{:<18} {:>12} {:>14} {:>7} {:>14}", "path", "blocks idct", "blocks skipped", "scale", "ns/image");
+    for r in &rows {
+        println!(
+            "{:<18} {:>12} {:>14} {:>6}x {:>14.0}",
+            r.name, r.blocks_idct, r.blocks_skipped, r.scale, r.ns_per_image
+        );
+    }
+    let ratio = full_blocks as f64 / roi_stats.blocks_idct.max(1) as f64;
+    println!("  fused ROI does {ratio:.2}x fewer dequant+IDCT block ops per image");
+    // The acceptance gate is counter-based, so CI cannot flake on timing.
+    ensure!(
+        roi_stats.blocks_idct * 2 <= full_blocks,
+        "fused ROI must halve block ops: {} vs {full_blocks}",
+        roi_stats.blocks_idct
+    );
+    ensure!(
+        roi_stats.blocks_idct + roi_stats.blocks_skipped == full_blocks,
+        "fused ROI must account for every block"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("decode")),
+        ("image", Json::str("64x64x3 q85")),
+        ("crop", Json::str("40x40@(0,0) out 56")),
+        ("roi_block_ratio", Json::num(ratio)),
+        ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_counters_hit_the_acceptance_ratio() {
+        // Counter math only, asserted straight off the decode stats so
+        // the test stays instant (the timed harness runs in CI's bench
+        // smoke step, not here): crop 40x40 at the origin covers 5x5 of
+        // the 8x8 block grid per channel.
+        let img =
+            crate::dataset::gen_image(&mut crate::util::rng::Rng::new(7), 5, 3, 64, 64);
+        let bytes = codec::encode(&img, 85).unwrap();
+        let roi_plan = DecodePlan::new(3, 64, 64, (0, 0, 40, 40), 56, 0);
+        let (_, roi) = codec::decode_cpu_planned(&bytes, &roi_plan).unwrap();
+        let full_blocks = 3 * 8 * 8u64;
+        assert_eq!(roi.blocks_idct, 3 * 25);
+        assert!(roi.blocks_idct * 2 <= full_blocks, "must halve block ops");
+        assert_eq!(roi.blocks_idct + roi.blocks_skipped, full_blocks);
+        let scaled_plan = DecodePlan::new(3, 64, 64, (0, 0, 32, 32), 16, 3);
+        assert_eq!(1 << scaled_plan.scale_log2, 2);
+    }
+}

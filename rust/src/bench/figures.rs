@@ -188,6 +188,22 @@ pub fn fig3(data_dir: Option<PathBuf>) -> Result<()> {
     println!("  decode share: {decode_pct:.1}%  (paper: 47.7%)");
     println!("  preprocessing ops (non-read) share: {:.1}%  (paper: ~95%)",
         (total - read.mean_ns) / total * 100.0);
+
+    // Extension row: the fused ROI decode against the very hot spot this
+    // figure identifies — only the crop's blocks pay dequant+IDCT.
+    let plan = crate::codec::DecodePlan::new(3, 64, 64, (0, 0, 40, 40), 56, 0);
+    let (_, stats) = crate::codec::decode_cpu_planned(&bytes, &plan)?;
+    let fused = b.run("fused-roi-decode", || {
+        crate::codec::decode_cpu_planned(&bytes, &plan).unwrap()
+    });
+    let total_blocks = stats.blocks_idct + stats.blocks_skipped;
+    println!(
+        "  fused ROI decode (40x40 crop): {} — {} of {} blocks IDCT'd ({:.2}x fewer block ops)",
+        super::harness::fmt_ns(fused.mean_ns),
+        stats.blocks_idct,
+        total_blocks,
+        total_blocks as f64 / stats.blocks_idct.max(1) as f64
+    );
     std::fs::remove_file(tmp_dir.join("probe.mjx")).ok();
     Ok(())
 }

@@ -6,18 +6,29 @@
 
 use once_cell::sync::Lazy;
 
-/// Orthonormal 8x8 DCT matrix, `DCT_MAT[k][n]`.
-pub static DCT_MAT: Lazy<[[f32; 8]; 8]> = Lazy::new(|| {
-    let mut c = [[0f32; 8]; 8];
-    for k in 0..8 {
-        let s = if k == 0 { (1.0f64 / 8.0).sqrt() } else { (2.0f64 / 8.0).sqrt() };
-        for n in 0..8 {
-            c[k][n] =
-                (s * ((2.0 * n as f64 + 1.0) * k as f64 * std::f64::consts::PI / 16.0).cos()) as f32;
+/// Orthonormal N-point DCT matrix, `mat[k][n]` (N = 8 for the full-size
+/// kernels; 4/2 for the fractional-scale decode).
+fn dct_matrix<const N: usize>() -> [[f32; N]; N] {
+    let mut c = [[0f32; N]; N];
+    for k in 0..N {
+        let s = if k == 0 { (1.0f64 / N as f64).sqrt() } else { (2.0f64 / N as f64).sqrt() };
+        for n in 0..N {
+            c[k][n] = (s
+                * ((2.0 * n as f64 + 1.0) * k as f64 * std::f64::consts::PI / (2.0 * N as f64))
+                    .cos()) as f32;
         }
     }
     c
-});
+}
+
+/// Orthonormal 8x8 DCT matrix, `DCT_MAT[k][n]`.
+pub static DCT_MAT: Lazy<[[f32; 8]; 8]> = Lazy::new(dct_matrix::<8>);
+
+/// 4-point basis for the 1/2-scale IDCT.
+static DCT_MAT4: Lazy<[[f32; 4]; 4]> = Lazy::new(dct_matrix::<4>);
+
+/// 2-point basis for the 1/4-scale IDCT.
+static DCT_MAT2: Lazy<[[f32; 2]; 2]> = Lazy::new(dct_matrix::<2>);
 
 #[inline]
 fn mat8_mul(a: &[[f32; 8]; 8], x: &[f32; 64], out: &mut [f32; 64], transpose_a: bool) {
@@ -125,6 +136,68 @@ pub fn dequant_idct_block(coef: &[f32; 64], q: &[f32; 64], block: &mut [f32; 64]
             }
         }
         block[i * 8..i * 8 + 8].copy_from_slice(&acc);
+    }
+}
+
+/// Fused dequantize + *scaled* IDCT: reconstruct an n×n pixel block
+/// (n = 8 >> scale_log2) from the top-left n×n corner of the quantized
+/// coefficients — libjpeg's fractional decode (`scaled_size`), the trick
+/// nvJPEG/DALI expose as decoder-side downscaling.
+///
+/// Math: an n-point inverse transform of the low-frequency corner,
+/// with each coefficient scaled by n/8 (once per dimension, √(n/8)²) so
+/// the orthonormal bases line up.  The result samples the block's cosine
+/// series at n half-pixel centers: exact for DC-only blocks, and within
+/// the quantization error of a box-downsample for natural content (the
+/// dropped coefficients are the frequencies a downsample would alias
+/// anyway).  `scale_log2 == 0` delegates to [`dequant_idct_block`].
+///
+/// `out` must hold exactly n·n values (row-major n×n block).
+pub fn dequant_idct_block_scaled(
+    coef: &[f32; 64],
+    q: &[f32; 64],
+    scale_log2: usize,
+    out: &mut [f32],
+) {
+    match scale_log2 {
+        0 => {
+            let buf: &mut [f32; 64] = out.try_into().expect("out must be 8x8");
+            dequant_idct_block(coef, q, buf);
+        }
+        1 => idct_corner::<4>(coef, q, &*DCT_MAT4, out),
+        2 => idct_corner::<2>(coef, q, &*DCT_MAT2, out),
+        3 => {
+            assert_eq!(out.len(), 1, "out must be 1x1");
+            // 1-point basis is [1], scale (1/8)² per dimension pair = 1/8
+            // overall: the block mean, exactly the DC fast path's value.
+            out[0] = coef[0] * q[0] * 0.125;
+        }
+        _ => panic!("scale_log2 must be 0..=3, got {scale_log2}"),
+    }
+}
+
+/// n-point inverse transform of the dequantized top-left n×n corner:
+/// `out = Cnᵀ · (s·F) · Cn` with `s = n/8`.  N is 4 or 2 — small enough
+/// that the naive quadruple loop beats setting up row/column passes.
+fn idct_corner<const N: usize>(coef: &[f32; 64], q: &[f32; 64], c: &[[f32; N]; N], out: &mut [f32]) {
+    assert_eq!(out.len(), N * N, "out must be {N}x{N}");
+    let s = N as f32 / 8.0;
+    let mut f = [[0f32; N]; N];
+    for u in 0..N {
+        for v in 0..N {
+            f[u][v] = coef[u * 8 + v] * q[u * 8 + v] * s;
+        }
+    }
+    for i in 0..N {
+        for j in 0..N {
+            let mut acc = 0f32;
+            for u in 0..N {
+                for v in 0..N {
+                    acc += c[u][i] * f[u][v] * c[v][j];
+                }
+            }
+            out[i * N + j] = acc;
+        }
     }
 }
 
@@ -246,6 +319,103 @@ mod perf_tests {
         dequant_idct_block(&coef, &q, &mut out);
         for &v in &out {
             assert!((v - 24.0 * 3.0 / 8.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scaled_bases_are_orthonormal() {
+        fn check<const N: usize>(c: &[[f32; N]; N]) {
+            for i in 0..N {
+                for j in 0..N {
+                    let dot: f32 = (0..N).map(|k| c[i][k] * c[j][k]).sum();
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!((dot - expect).abs() < 1e-6, "N={N} ({i},{j}) -> {dot}");
+                }
+            }
+        }
+        check::<4>(&DCT_MAT4);
+        check::<2>(&DCT_MAT2);
+    }
+
+    #[test]
+    fn scaled_idct_scale0_is_full_kernel() {
+        let mut rng = Rng::new(9);
+        let mut coef = [0f32; 64];
+        let mut q = [0f32; 64];
+        for v in coef.iter_mut() {
+            *v = rng.uniform(-80.0, 80.0).round() as f32;
+        }
+        for v in q.iter_mut() {
+            *v = rng.uniform(1.0, 40.0).round() as f32;
+        }
+        let mut full = [0f32; 64];
+        dequant_idct_block(&coef, &q, &mut full);
+        let mut via = [0f32; 64];
+        dequant_idct_block_scaled(&coef, &q, 0, &mut via);
+        assert_eq!(full, via);
+    }
+
+    #[test]
+    fn scaled_idct_dc_only_is_exact_block_mean_at_every_scale() {
+        let mut coef = [0f32; 64];
+        coef[0] = -40.0;
+        let q = [2.0f32; 64];
+        let want = -40.0 * 2.0 / 8.0;
+        for k in 0..=3usize {
+            let n = 8 >> k;
+            let mut out = vec![0f32; n * n];
+            dequant_idct_block_scaled(&coef, &q, k, &mut out);
+            for &v in &out {
+                assert!((v - want).abs() < 1e-4, "scale 1/{}: {v} vs {want}", 1 << k);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_idct_tracks_box_downsample_of_full_idct() {
+        // Low-frequency blocks (the post-quantization norm on natural
+        // images), confined to the 2x2 corner so every tested scale
+        // retains all content: the n-point corner transform must stay
+        // close to the box-downsampled full reconstruction.
+        let mut rng = Rng::new(10);
+        let q = [1.0f32; 64];
+        for _ in 0..50 {
+            let mut coef = [0f32; 64];
+            for u in 0..2 {
+                for v in 0..2 {
+                    coef[u * 8 + v] = rng.uniform(-60.0, 60.0).round() as f32;
+                }
+            }
+            let mut full = [0f32; 64];
+            dequant_idct_block(&coef, &q, &mut full);
+            for k in [1usize, 2] {
+                let n = 8 >> k;
+                let step = 8 / n;
+                let mut out = vec![0f32; n * n];
+                dequant_idct_block_scaled(&coef, &q, k, &mut out);
+                let amp: f32 = coef.iter().map(|v| v.abs()).sum();
+                for i in 0..n {
+                    for j in 0..n {
+                        let mut mean = 0f32;
+                        for y in 0..step {
+                            for x in 0..step {
+                                mean += full[(i * step + y) * 8 + (j * step + x)];
+                            }
+                        }
+                        mean /= (step * step) as f32;
+                        // Midpoint-sample vs box-average of a k<=2 cosine
+                        // series: bounded by a modest fraction of the
+                        // total coefficient amplitude.
+                        let tol = 0.08 * amp + 1.0;
+                        assert!(
+                            (out[i * n + j] - mean).abs() < tol,
+                            "scale 1/{}: ({i},{j}) {} vs {mean} (tol {tol})",
+                            1 << k,
+                            out[i * n + j]
+                        );
+                    }
+                }
+            }
         }
     }
 }

@@ -146,6 +146,51 @@ impl<'a> EntropyReader<'a> {
         }
     }
 
+    /// Advance past one block without materializing coefficients — the
+    /// fused-decode fast path for blocks outside the crop ROI (§Perf):
+    /// the stream is still walked token by token (blocks are
+    /// variable-length), but no varint is decoded, no zigzag scatter
+    /// happens, and no dequant+IDCT follows.  Applies the same
+    /// validation as [`read_block`] (token range, run bounds, varint
+    /// length, truncation), so a corrupt stream fails identically
+    /// whether a block is decoded or skipped.
+    pub fn skip_block(&mut self) -> Result<()> {
+        let mut zi = 0usize;
+        loop {
+            let tok = self.byte()?;
+            if tok == EOB {
+                return Ok(());
+            }
+            if tok > MAX_RUN {
+                bail!("bad entropy token {tok:#x}");
+            }
+            zi += tok as usize;
+            if zi >= 64 {
+                bail!("zero run past block end");
+            }
+            self.skip_varint()?;
+            zi += 1;
+            if zi > 64 {
+                bail!("block overflow");
+            }
+        }
+    }
+
+    /// Skip one varint, enforcing the same length bound as `get_varint`.
+    fn skip_varint(&mut self) -> Result<()> {
+        let mut shift = 0;
+        loop {
+            let b = self.byte()?;
+            if b & 0x80 == 0 {
+                return Ok(());
+            }
+            shift += 7;
+            if shift > 28 {
+                bail!("varint overflow");
+            }
+        }
+    }
+
     pub fn bytes_consumed(&self) -> usize {
         self.pos
     }
@@ -237,5 +282,82 @@ mod tests {
         let mut r = EntropyReader::new(&out[..out.len() - 2]);
         let mut got = [0i32; 64];
         assert!(r.read_block(&mut got).is_err());
+    }
+
+    #[test]
+    fn skip_block_lands_exactly_where_read_block_does() {
+        // Seeded property: for any prefix split, skipping the first j
+        // blocks then reading the rest yields the same coefficients and
+        // the same stream position as reading everything.
+        let mut rng = Rng::new(11);
+        let mut blocks = Vec::new();
+        for _ in 0..40 {
+            let mut b = [0i32; 64];
+            for v in b.iter_mut() {
+                if rng.f64() < 0.2 {
+                    *v = rng.uniform(-900.0, 900.0) as i32;
+                }
+            }
+            blocks.push(b);
+        }
+        blocks.push([0i32; 64]); // all-zero block
+        let mut dense = [0i32; 64];
+        dense.fill(7);
+        blocks.push(dense); // fully dense block
+        let mut out = Vec::new();
+        let mut w = EntropyWriter::new(&mut out);
+        for b in &blocks {
+            w.write_block(b).unwrap();
+        }
+        for j in [0usize, 1, 7, blocks.len() - 1, blocks.len()] {
+            let mut skip = EntropyReader::new(&out);
+            let mut read = EntropyReader::new(&out);
+            let mut got = [0i32; 64];
+            for _ in 0..j {
+                skip.skip_block().unwrap();
+                read.read_block(&mut got).unwrap();
+                assert_eq!(skip.bytes_consumed(), read.bytes_consumed(), "prefix {j}");
+            }
+            for _ in j..blocks.len() {
+                let mut a = [0i32; 64];
+                let mut b2 = [0i32; 64];
+                skip.read_block(&mut a).unwrap();
+                read.read_block(&mut b2).unwrap();
+                assert_eq!(a, b2, "prefix {j}");
+            }
+            assert_eq!(skip.bytes_consumed(), out.len());
+        }
+    }
+
+    #[test]
+    fn skip_block_rejects_what_read_block_rejects() {
+        // Truncation mid-varint and mid-block.
+        let mut out = Vec::new();
+        let mut w = EntropyWriter::new(&mut out);
+        let mut b = [0i32; 64];
+        b[0] = 100_000; // multi-byte varint
+        b[63] = 9;
+        w.write_block(&b).unwrap();
+        for cut in 1..out.len() {
+            let mut r = EntropyReader::new(&out[..out.len() - cut]);
+            assert!(r.skip_block().is_err(), "cut {cut} must error");
+        }
+        // Bad token (> MAX_RUN, not EOB).
+        let mut r = EntropyReader::new(&[0x41, 0x00]);
+        assert!(r.skip_block().is_err());
+        // Zero run past the block end.
+        let mut bad = Vec::new();
+        for _ in 0..3 {
+            bad.push(MAX_RUN - 1); // 61-zero run + literal, thrice > 64
+            bad.push(0x00);
+        }
+        let mut r = EntropyReader::new(&bad);
+        assert!(r.skip_block().is_err());
+        // Unterminated varint (all continuation bits).
+        let mut r = EntropyReader::new(&[0x00, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80]);
+        assert!(r.skip_block().is_err());
+        // Empty stream.
+        let mut r = EntropyReader::new(&[]);
+        assert!(r.skip_block().is_err());
     }
 }

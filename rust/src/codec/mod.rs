@@ -22,7 +22,7 @@ mod dct;
 mod entropy;
 mod quant;
 
-pub use dct::{dequant_idct_block, fdct_block, idct_block, DCT_MAT};
+pub use dct::{dequant_idct_block, dequant_idct_block_scaled, fdct_block, idct_block, DCT_MAT};
 pub use entropy::{EntropyReader, EntropyWriter};
 pub use quant::{qtable_for_quality, BASE_QTABLE, ZIGZAG};
 
@@ -184,6 +184,207 @@ pub fn decode_cpu(bytes: &[u8]) -> Result<Image> {
     Ok(coefs_to_image(&ci))
 }
 
+// ---------------------------------------------------------------------------
+// Fused ROI + fractional-scale decode (§Perf)
+// ---------------------------------------------------------------------------
+
+/// How much of a bitstream to actually decode: the block-aligned cover
+/// of the crop window, and the fractional IDCT scale.  Computed from
+/// [`probe`] dims + the augmentation crop + the training output size —
+/// the DALI/nvJPEG insight that a decoder feeding RandomResizedCrop
+/// should only reconstruct the blocks (and the resolution) training
+/// consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodePlan {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// ROI block bounds: rows `[by0, by1)`, cols `[bx0, bx1)`.
+    pub by0: usize,
+    pub by1: usize,
+    pub bx0: usize,
+    pub bx1: usize,
+    /// Fractional-scale exponent: each ROI block reconstructs at
+    /// `8 >> scale_log2` pixels per side (0 = full resolution).
+    pub scale_log2: usize,
+}
+
+/// Counters from a planned decode (the fused path's acceptance metric:
+/// block operations, not wall clock).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// 8x8 blocks dequantized + inverse-transformed (any scale).
+    pub blocks_idct: u64,
+    /// Blocks entropy-skipped without materializing coefficients.
+    pub blocks_skipped: u64,
+}
+
+impl DecodePlan {
+    /// Plan for a crop window `(y0, x0, crop_h, crop_w)` over a `h`x`w`
+    /// image that will be resized to `out_hw`: the ROI is the
+    /// block-aligned cover of the crop, and the scale is the largest
+    /// `1/2^k` (k ≤ `max_scale_log2` ≤ 3) whose scaled crop still covers
+    /// the output in both dims (`crop/2^k >= out_hw`) — the resize then
+    /// only ever *downsamples* decoded pixels, never invents them.
+    pub fn new(
+        c: usize,
+        h: usize,
+        w: usize,
+        crop: (usize, usize, usize, usize),
+        out_hw: usize,
+        max_scale_log2: usize,
+    ) -> DecodePlan {
+        let (bh, bw) = (h / 8, w / 8);
+        let (y0, x0, ch, cw) = crop;
+        let y0 = y0.min(h.saturating_sub(1));
+        let x0 = x0.min(w.saturating_sub(1));
+        let ch = ch.max(1).min(h - y0);
+        let cw = cw.max(1).min(w - x0);
+        let by0 = y0 / 8;
+        let by1 = ((y0 + ch + 7) / 8).min(bh).max(by0 + 1);
+        let bx0 = x0 / 8;
+        let bx1 = ((x0 + cw + 7) / 8).min(bw).max(bx0 + 1);
+        let k = largest_scale(ch, cw, out_hw, max_scale_log2);
+        DecodePlan { c, h, w, by0, by1, bx0, bx1, scale_log2: k }
+    }
+
+    /// Whole-image plan at full resolution (equivalent to [`decode_cpu`]).
+    pub fn full(c: usize, h: usize, w: usize) -> DecodePlan {
+        Self::full_scaled(c, h, w, 0)
+    }
+
+    /// Whole-image plan at `1/2^k` — the prep-cache admission shape: the
+    /// cached pixels must serve *any* future crop, so no blocks are
+    /// skipped, but they can still be stored downscaled.
+    pub fn full_scaled(c: usize, h: usize, w: usize, scale_log2: usize) -> DecodePlan {
+        DecodePlan {
+            c,
+            h,
+            w,
+            by0: 0,
+            by1: h / 8,
+            bx0: 0,
+            bx1: w / 8,
+            scale_log2: scale_log2.min(3),
+        }
+    }
+
+    /// Largest image-level scale `k ≤ max_scale_log2` keeping both
+    /// scaled dims at least `out_hw` — the admission-path analogue of
+    /// the per-crop choice in [`DecodePlan::new`] (one shared rule, so
+    /// plan and admission cannot desynchronize).
+    pub fn image_scale(h: usize, w: usize, out_hw: usize, max_scale_log2: usize) -> usize {
+        largest_scale(h, w, out_hw, max_scale_log2)
+    }
+
+    /// Pixels per reconstructed block side at this plan's scale.
+    pub fn block_size(&self) -> usize {
+        8 >> self.scale_log2
+    }
+
+    /// ROI extent in blocks, `(rows, cols)`.
+    pub fn roi_blocks(&self) -> (usize, usize) {
+        (self.by1 - self.by0, self.bx1 - self.bx0)
+    }
+
+    /// Decoded output dims, `(h, w)` in (scaled) pixels.
+    pub fn out_dims(&self) -> (usize, usize) {
+        let (rbh, rbw) = self.roi_blocks();
+        (rbh * self.block_size(), rbw * self.block_size())
+    }
+
+    /// ROI origin in full-resolution pixel coordinates.
+    pub fn origin(&self) -> (usize, usize) {
+        (self.by0 * 8, self.bx0 * 8)
+    }
+
+    /// Fraction of the image's blocks this plan dequant+IDCTs — what the
+    /// simulator scales the decode transform service time by.
+    pub fn block_fraction(&self) -> f64 {
+        let (rbh, rbw) = self.roi_blocks();
+        (rbh * rbw) as f64 / ((self.h / 8) * (self.w / 8)) as f64
+    }
+}
+
+/// The one scale-selection rule: largest `k ≤ max_scale_log2` (≤ 3)
+/// with both `dh >> k` and `dw >> k` still at least `out_hw`.
+fn largest_scale(dh: usize, dw: usize, out_hw: usize, max_scale_log2: usize) -> usize {
+    let mut k = 0usize;
+    let max_k = max_scale_log2.min(3);
+    while k < max_k && out_hw > 0 && (dh >> (k + 1)) >= out_hw && (dw >> (k + 1)) >= out_hw {
+        k += 1;
+    }
+    k
+}
+
+/// Fused ROI + fractional-scale decode: entropy-skip every block outside
+/// the plan's ROI, dequant+IDCT the rest (with the scaled kernels when
+/// `scale_log2 > 0`), and return the ROI as a standalone image of
+/// [`DecodePlan::out_dims`].
+///
+/// At full scale the output is **bit-identical** to the same window of
+/// [`decode_cpu`]'s image — each 8x8 block transforms independently, so
+/// skipping its neighbors cannot change it (asserted by a property
+/// harness in `tests/fused_decode.rs`).
+pub fn decode_cpu_planned(bytes: &[u8], plan: &DecodePlan) -> Result<(Image, DecodeStats)> {
+    let (h, w, c, quality, off) = parse_header(bytes)?;
+    ensure!(
+        (c, h, w) == (plan.c, plan.h, plan.w),
+        "plan dims {}x{}x{} do not match image {c}x{h}x{w}",
+        plan.c,
+        plan.h,
+        plan.w
+    );
+    ensure!(
+        plan.by0 < plan.by1 && plan.by1 <= h / 8 && plan.bx0 < plan.bx1 && plan.bx1 <= w / 8,
+        "plan ROI out of range"
+    );
+    let q = qtable_for_quality(quality);
+    let bs = plan.block_size();
+    let (oh, ow) = plan.out_dims();
+    let mut img = Image::new(c, oh, ow);
+    let (bh, bw) = (h / 8, w / 8);
+    let mut reader = EntropyReader::new(&bytes[off..]);
+    let mut quantized = [0i32; 64];
+    let mut coef = [0f32; 64];
+    let mut pix = [0f32; 64]; // scaled kernels fill only the bs*bs prefix
+    let mut stats = DecodeStats::default();
+    for ch in 0..c {
+        for by in 0..bh {
+            let in_rows = by >= plan.by0 && by < plan.by1;
+            for bx in 0..bw {
+                if !in_rows || bx < plan.bx0 || bx >= plan.bx1 {
+                    reader
+                        .skip_block()
+                        .with_context(|| format!("block ({ch},{by},{bx})"))?;
+                    stats.blocks_skipped += 1;
+                    continue;
+                }
+                reader
+                    .read_block(&mut quantized)
+                    .with_context(|| format!("block ({ch},{by},{bx})"))?;
+                // Inverse zigzag into natural order (covers all 64).
+                for (zi, &nat) in ZIGZAG.iter().enumerate() {
+                    coef[nat] = quantized[zi] as f32;
+                }
+                dequant_idct_block_scaled(&coef, &q, plan.scale_log2, &mut pix[..bs * bs]);
+                stats.blocks_idct += 1;
+                // Same clamp/round as `coefs_to_image`, which is what
+                // keeps the full-scale path bit-identical to it.
+                let base = ch * oh * ow + (by - plan.by0) * bs * ow + (bx - plan.bx0) * bs;
+                for y in 0..bs {
+                    let prow = &pix[y * bs..y * bs + bs];
+                    let orow = &mut img.data[base + y * ow..base + y * ow + bs];
+                    for x in 0..bs {
+                        orow[x] = (prow[x] + 128.0).clamp(0.0, 255.0).round() as u8;
+                    }
+                }
+            }
+        }
+    }
+    Ok((img, stats))
+}
+
 /// Peek image dims without decoding.
 pub fn probe(bytes: &[u8]) -> Result<(usize, usize, usize, u8)> {
     let (h, w, c, q, _) = parse_header(bytes)?;
@@ -279,6 +480,83 @@ mod tests {
         assert!(decode_cpu(&bytes[..5]).is_err());
         bytes[0] = b'X';
         assert!(decode_cpu(&bytes).is_err());
+    }
+
+    #[test]
+    fn plan_geometry_and_scale_selection() {
+        // Non-aligned crop: ROI is the block cover.
+        let p = DecodePlan::new(3, 64, 64, (5, 9, 40, 40), 56, 3);
+        assert_eq!((p.by0, p.by1, p.bx0, p.bx1), (0, 6, 1, 7));
+        assert_eq!(p.scale_log2, 0, "crop 40 < out 56 cannot scale");
+        assert_eq!(p.out_dims(), (48, 48));
+        assert_eq!(p.origin(), (0, 8));
+        assert!((p.block_fraction() - 36.0 / 64.0).abs() < 1e-12);
+        // Scale picks the largest 1/2^k with crop/2^k >= out_hw.
+        let p = DecodePlan::new(3, 64, 64, (0, 0, 32, 32), 16, 3);
+        assert_eq!(p.scale_log2, 1);
+        assert_eq!(p.block_size(), 4);
+        assert_eq!(p.out_dims(), (16, 16));
+        let p = DecodePlan::new(3, 64, 64, (0, 0, 64, 64), 8, 3);
+        assert_eq!(p.scale_log2, 3);
+        assert_eq!(p.out_dims(), (8, 8));
+        // The cap clamps the choice.
+        let p = DecodePlan::new(3, 64, 64, (0, 0, 64, 64), 8, 1);
+        assert_eq!(p.scale_log2, 1);
+        // Whole-image plans and the admission-path scale helper.
+        assert_eq!(DecodePlan::full(3, 64, 64).block_fraction(), 1.0);
+        assert_eq!(DecodePlan::image_scale(64, 64, 16, 3), 2);
+        assert_eq!(DecodePlan::image_scale(64, 64, 56, 3), 0);
+        // Out-of-range crops clamp instead of panicking.
+        let p = DecodePlan::new(3, 64, 64, (200, 200, 10, 10), 8, 0);
+        assert!(p.by0 < p.by1 && p.by1 <= 8 && p.bx1 <= 8);
+    }
+
+    #[test]
+    fn planned_full_roi_decode_equals_decode_cpu() {
+        let img = smooth_image(8, 3, 64, 48);
+        let bytes = encode(&img, 85).unwrap();
+        let full = decode_cpu(&bytes).unwrap();
+        let (planned, stats) =
+            decode_cpu_planned(&bytes, &DecodePlan::full(3, 64, 48)).unwrap();
+        assert_eq!(full, planned);
+        assert_eq!(stats.blocks_idct, 3 * 8 * 6);
+        assert_eq!(stats.blocks_skipped, 0);
+    }
+
+    #[test]
+    fn planned_roi_decode_is_window_of_full_decode() {
+        let img = smooth_image(9, 3, 64, 64);
+        let bytes = encode(&img, 80).unwrap();
+        let full = decode_cpu(&bytes).unwrap();
+        let plan = DecodePlan::new(3, 64, 64, (13, 22, 30, 27), 56, 0);
+        let (roi, stats) = decode_cpu_planned(&bytes, &plan).unwrap();
+        let (oy, ox) = plan.origin();
+        let (rh, rw) = plan.out_dims();
+        assert_eq!((roi.h, roi.w), (rh, rw));
+        for ch in 0..3 {
+            for y in 0..rh {
+                for x in 0..rw {
+                    assert_eq!(
+                        roi.pixel(ch, y, x),
+                        full.pixel(ch, oy + y, ox + x),
+                        "({ch},{y},{x})"
+                    );
+                }
+            }
+        }
+        let total = 3 * 8 * 8;
+        assert_eq!(stats.blocks_idct + stats.blocks_skipped, total);
+        assert!(stats.blocks_skipped > 0);
+    }
+
+    #[test]
+    fn planned_decode_rejects_corruption_and_dim_mismatch() {
+        let img = smooth_image(10, 1, 16, 16);
+        let bytes = encode(&img, 70).unwrap();
+        let plan = DecodePlan::full(1, 16, 16);
+        assert!(decode_cpu_planned(&bytes[..bytes.len() - 1], &plan).is_err());
+        assert!(decode_cpu_planned(&bytes, &DecodePlan::full(1, 16, 24)).is_err());
+        assert!(decode_cpu_planned(&bytes, &DecodePlan::full(3, 16, 16)).is_err());
     }
 
     #[test]

@@ -67,6 +67,56 @@ impl Placement {
     }
 }
 
+/// Fractional-scale cap for the fused decoder (`--decode-scale`):
+/// * `auto` — per image, pick the largest `1/2^k` (k ≤ 3) whose scaled
+///   crop still covers the training output.
+/// * `1 | 2 | 4 | 8` — never scale past `1/n` (`1` = full resolution
+///   only, the default: the ROI skip is bit-exact, the fractional scale
+///   is a tolerance-checked quality trade-off the user opts into).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeScale {
+    Auto,
+    Fixed(u8),
+}
+
+impl DecodeScale {
+    pub fn parse(s: &str) -> Result<DecodeScale> {
+        match s {
+            "auto" => Ok(DecodeScale::Auto),
+            "1" => Ok(DecodeScale::Fixed(1)),
+            "2" => Ok(DecodeScale::Fixed(2)),
+            "4" => Ok(DecodeScale::Fixed(4)),
+            "8" => Ok(DecodeScale::Fixed(8)),
+            _ => bail!("decode-scale must be auto|1|2|4|8, got {s}"),
+        }
+    }
+
+    /// Canonical flag value.  Total: a hand-built `Fixed` payload that
+    /// `parse` would reject (only 1|2|4|8 are meaningful) renders as its
+    /// normalized denominator rather than panicking mid-report.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeScale::Auto => "auto",
+            DecodeScale::Fixed(_) => match self.max_log2() {
+                0 => "1",
+                1 => "2",
+                2 => "4",
+                _ => "8",
+            },
+        }
+    }
+
+    /// Largest scale exponent the decode plan may pick (0..=3).
+    /// Payloads `parse` would reject normalize to the nearest lower
+    /// power of two, so invalid states degrade instead of panicking.
+    pub fn max_log2(&self) -> u8 {
+        match self {
+            DecodeScale::Auto => 3,
+            DecodeScale::Fixed(n) => ((*n).max(1).ilog2() as u8).min(3),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Directory holding the raw corpus (img/*.mjx + metadata.tsv) and/or
@@ -123,6 +173,14 @@ pub struct RunConfig {
     /// (eviction-free, shuffle-proof) or `lru` (thrashes under
     /// re-shuffled epochs; kept for comparison).
     pub prep_cache_policy: PrepCachePolicy,
+    /// Fused ROI decode (`--fused-decode on|off`): entropy-skip blocks
+    /// outside the crop window on the `cpu`/`hybrid0` paths instead of
+    /// dequant+IDCTing the whole image.  Bit-exact vs. full decode, so
+    /// on by default.
+    pub fused_decode: bool,
+    /// Fractional-scale cap for the fused decoder (`--decode-scale`);
+    /// only scales past 1/1 when `fused_decode` is on.
+    pub decode_scale: DecodeScale,
 }
 
 impl Default for RunConfig {
@@ -152,6 +210,8 @@ impl Default for RunConfig {
             cache_mb: 0,
             prep_cache_mb: 0,
             prep_cache_policy: PrepCachePolicy::Minio,
+            fused_decode: true,
+            decode_scale: DecodeScale::Fixed(1),
         }
     }
 }
@@ -229,6 +289,16 @@ impl RunConfig {
         }
         self.net_conns = args.get_usize("net-conns", self.net_conns);
         self.readahead_mb = args.get_usize("readahead-mb", self.readahead_mb);
+        if let Some(v) = args.get("fused-decode") {
+            self.fused_decode = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                _ => bail!("fused-decode must be on|off, got {v}"),
+            };
+        }
+        if let Some(v) = args.get("decode-scale") {
+            self.decode_scale = DecodeScale::parse(v)?;
+        }
         if args.has_flag("ideal") {
             self.ideal = true;
         }
@@ -259,6 +329,8 @@ impl RunConfig {
             ("cache_mb", Json::num(self.cache_mb as f64)),
             ("prep_cache_mb", Json::num(self.prep_cache_mb as f64)),
             ("prep_cache_policy", Json::str(self.prep_cache_policy.name())),
+            ("fused_decode", Json::Bool(self.fused_decode)),
+            ("decode_scale", Json::str(self.decode_scale.name())),
         ])
     }
 }
@@ -382,6 +454,49 @@ mod tests {
         let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
         assert_eq!(parsed.req("prep_cache_mb").as_usize(), Some(256));
         assert_eq!(parsed.req("prep_cache_policy").as_str(), Some("lru"));
+    }
+
+    #[test]
+    fn fused_decode_flags_parse_validate_and_roundtrip() {
+        let cfg = RunConfig::default();
+        assert!(cfg.fused_decode, "ROI skip is bit-exact, so on by default");
+        assert_eq!(cfg.decode_scale, DecodeScale::Fixed(1));
+        assert_eq!(cfg.decode_scale.max_log2(), 0);
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "run --fused-decode off --decode-scale auto".split_whitespace().map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(!cfg.fused_decode);
+        assert_eq!(cfg.decode_scale, DecodeScale::Auto);
+        assert_eq!(cfg.decode_scale.max_log2(), 3);
+        // Every fixed denominator maps to its exponent.
+        for (s, k) in [("1", 0u8), ("2", 1), ("4", 2), ("8", 3)] {
+            assert_eq!(DecodeScale::parse(s).unwrap().max_log2(), k);
+            assert_eq!(DecodeScale::parse(s).unwrap().name(), s);
+        }
+        assert!(DecodeScale::parse("3").is_err());
+        assert!(DecodeScale::parse("").is_err());
+        // Hand-built payloads parse would reject degrade, never panic.
+        assert_eq!(DecodeScale::Fixed(3).max_log2(), 1);
+        assert_eq!(DecodeScale::Fixed(3).name(), "2");
+        assert_eq!(DecodeScale::Fixed(0).max_log2(), 0);
+        assert_eq!(DecodeScale::Fixed(255).max_log2(), 3);
+        let mut bad = RunConfig::default();
+        let args =
+            Args::parse("run --fused-decode maybe".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
+        let mut bad = RunConfig::default();
+        let args =
+            Args::parse("run --decode-scale 16".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
+        // JSON round-trip carries both fields.
+        let mut cfg = RunConfig::default();
+        cfg.fused_decode = false;
+        cfg.decode_scale = DecodeScale::Fixed(4);
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("fused_decode").as_bool(), Some(false));
+        assert_eq!(parsed.req("decode_scale").as_str(), Some("4"));
     }
 
     #[test]

@@ -2,14 +2,15 @@
 
 use crate::config::{Method, Placement, RunConfig};
 use crate::dataset::{self, GenConfig, MetaEntry};
-use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, UtilSampler};
+use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, ScaleHist, UtilSampler};
 use crate::ops::sample_aug_params;
 use crate::pipeline::channel::{bounded, Receiver};
 use crate::pipeline::prep_cache::PrepCache;
 use crate::pipeline::shuffle::ShuffleBuffer;
 use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
 use crate::pipeline::{
-    collate, cpu_stage, cpu_stage_admitting, cpu_stage_cached, Batch, Payload, Sample,
+    collate, cpu_stage_admitting_planned, cpu_stage_cached, cpu_stage_planned, Batch,
+    DecodeOpts, Payload, Sample,
 };
 use crate::runtime::{lit_f32, Engine};
 use crate::storage::{
@@ -98,6 +99,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let cpu_clock = BusyClock::new(cfg.cpu_workers);
     let dev_clock = BusyClock::new(1);
     let epoch_clock = EpochClock::new();
+    // Fused ROI decode policy + the per-scale decode histogram.
+    let decode_opts = DecodeOpts::from_config(cfg);
+    let scale_hist = Arc::new(ScaleHist::default());
     // Decoded-sample cache, shared across CPU workers and epochs: epoch
     // N+1 skips read+decode for resident samples (augmentation stays
     // fresh per epoch — only decode is amortized).
@@ -209,6 +213,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let cpu_clock = cpu_clock.clone();
         let epoch_clock = epoch_clock.clone();
         let prep_cache = prep_cache.clone();
+        let scale_hist = scale_hist.clone();
         let work_rx = work_rx.clone();
         let sample_tx = sample_tx.clone();
         threads.push(std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
@@ -222,7 +227,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
                 // Hit: skip the raw read (raw method) and the decode.
                 if let Some(sample) = prep_cache.as_ref().and_then(|c| c.get(id)) {
-                    let aug = sample_aug_params(&mut rng, sample.h as u32, sample.w as u32);
+                    // Params are sampled against the *original* dims, so
+                    // the aug stream is the same whether the resident
+                    // pixels are full-res or fractionally scaled.
+                    let aug = sample_aug_params(
+                        &mut rng,
+                        sample.orig_h() as u32,
+                        sample.orig_w() as u32,
+                    );
                     let payload = cpu_clock
                         .track(|| cpu_stage_cached(&sample, cfg.placement, aug, out_hw));
                     counters.decode_skipped(1);
@@ -254,12 +266,28 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                 let (c, h, wid, _q) = crate::codec::probe(bytes)?;
                 ensure!(c == 3, "expected RGB, got {c} channels");
                 let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
-                let payload = cpu_clock.track(|| match &prep_cache {
-                    Some(cache) => {
-                        cpu_stage_admitting(bytes, cfg.placement, aug, out_hw, cache, id)
-                    }
-                    None => cpu_stage(bytes, cfg.placement, aug, out_hw),
+                let (payload, dstats) = cpu_clock.track(|| match &prep_cache {
+                    Some(cache) => cpu_stage_admitting_planned(
+                        bytes,
+                        cfg.placement,
+                        aug,
+                        out_hw,
+                        cache,
+                        id,
+                        &decode_opts,
+                    ),
+                    None => cpu_stage_planned(bytes, cfg.placement, aug, out_hw, &decode_opts),
                 })?;
+                counters.idct_blocks(dstats.blocks_idct);
+                counters.idct_blocks_skipped(dstats.blocks_skipped);
+                // Only decodes that ran a CPU transform enter the scale
+                // histogram — the hybrid entropy-only path decodes
+                // nothing here, and counting it as "full resolution"
+                // would corrupt the realized-scale readout DESIGN.md
+                // tells users to feed back into the sim.
+                if dstats.blocks_idct > 0 {
+                    scale_hist.record(dstats.scale_log2);
+                }
                 counters.images_decoded(1);
                 if matches!(cfg.placement, Placement::Cpu) {
                     counters.images_augmented(1);
@@ -365,6 +393,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         net_in_flight_peak: remote.map(|r| r.in_flight.peak()).unwrap_or(0),
         prep_cache_hit_rate: prep_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0),
         decode_skipped: snap.decode_skipped,
+        idct_blocks: snap.idct_blocks,
+        idct_blocks_skipped: snap.idct_blocks_skipped,
+        decode_scale_hist: scale_hist.snapshot(),
         epoch_secs: epoch_clock.epoch_secs(),
     })
 }

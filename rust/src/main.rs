@@ -6,6 +6,7 @@
 //!   sim         run the calibrated testbed simulator for one scenario
 //!   reproduce   regenerate a paper figure/table (--fig 2|3|4|5|6|t1)
 //!   autoconf    search resource configurations for a model/objective
+//!   bench       counter-based microbenches (currently: decode)
 //!   inspect     print manifest/artifact info
 
 use anyhow::{bail, Result};
@@ -29,6 +30,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sim") => sim(args),
         Some("reproduce") => reproduce(args),
         Some("autoconf") => autoconf(args),
+        Some("bench") => bench(args),
         Some("inspect") => inspect(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -54,12 +56,22 @@ fn print_help() {
                       [--prep-cache-mb M] [--prep-cache-policy lru|minio]\n\
                       (decoded-sample cache: epoch >= 2 skips read+decode;\n\
                        minio = eviction-free, shuffle-proof hit rate)\n\
+                      [--fused-decode on|off] (default on: entropy-skip blocks\n\
+                       outside the crop, IDCT only what training consumes —\n\
+                       bit-exact vs full decode on cpu/hybrid0 paths)\n\
+                      [--decode-scale auto|1|2|4|8] (default 1: cap on the\n\
+                       fractional IDCT scale; auto picks the largest 1/2^k\n\
+                       with crop/2^k >= out — a quality trade-off you opt\n\
+                       into, tolerance-checked, cpu path only)\n\
                       [--workers N] [--steps N] [--batch B] [--ideal] [--no-train]\n\
            sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]\n\
                       [--storage ..] [--net-conns N] [--seconds S]\n\
                       [--prep-cache-gb G] [--prep-cache-policy lru|minio]\n\
+                      [--fused-decode on|off] [--decode-scale 1|2|4|8]\n\
            reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)\n\
            autoconf   --model M [--objective throughput|cost] [--budget $/h]\n\
+           bench      decode [--out BENCH_decode.json] (counter-based decode\n\
+                      microbench: blocks IDCT'd + ns/image per path)\n\
            inspect    [--artifacts DIR]\n"
     );
 }
@@ -136,6 +148,17 @@ fn autoconf(args: &Args) -> Result<()> {
     let rec = dpp::autoconf::recommend(model, objective, budget)?;
     println!("{}", rec.render());
     Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("decode") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_decode.json"));
+            dpp::bench::decode::run(Some(&out))?;
+            Ok(())
+        }
+        other => bail!("bench target must be `decode`, got {other:?}"),
+    }
 }
 
 fn inspect(args: &Args) -> Result<()> {

@@ -13,6 +13,10 @@ pub struct Counters {
     pub images_decoded: AtomicU64,
     /// Samples served from the decoded-sample cache (decode not paid).
     pub decode_skipped: AtomicU64,
+    /// 8x8 blocks dequant+IDCT'd on the CPU (any scale).
+    pub idct_blocks: AtomicU64,
+    /// Blocks entropy-skipped by the fused ROI decode (never IDCT'd).
+    pub idct_blocks_skipped: AtomicU64,
     pub images_augmented: AtomicU64,
     pub batches_built: AtomicU64,
     pub batches_preprocessed_device: AtomicU64,
@@ -41,12 +45,39 @@ counter_fns!(
     images_read,
     images_decoded,
     decode_skipped,
+    idct_blocks,
+    idct_blocks_skipped,
     images_augmented,
     batches_built,
     batches_preprocessed_device,
     train_steps,
     bytes_read
 );
+
+/// Histogram of fused-decode scale choices per decoded image.  Index =
+/// the scale exponent (0 → full res, 1 → 1/2, 2 → 1/4, 3 → 1/8): which
+/// fraction of the corpus actually decoded at which resolution is what
+/// tells you whether `--decode-scale auto` is buying anything.
+#[derive(Debug, Default)]
+pub struct ScaleHist {
+    buckets: [AtomicU64; 4],
+}
+
+impl ScaleHist {
+    pub fn record(&self, scale_log2: u8) {
+        let i = (scale_log2 as usize).min(3);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> [u64; 4] {
+        [
+            self.buckets[0].load(Ordering::Relaxed),
+            self.buckets[1].load(Ordering::Relaxed),
+            self.buckets[2].load(Ordering::Relaxed),
+            self.buckets[3].load(Ordering::Relaxed),
+        ]
+    }
+}
 
 /// Level gauge with peak tracking — e.g. in-flight remote connections or
 /// prefetch-queue depth.  `value` is the instantaneous level; `peak` is the
@@ -242,6 +273,13 @@ pub struct RunReport {
     pub prep_cache_hit_rate: f64,
     /// Samples whose decode was skipped via the decoded-sample cache.
     pub decode_skipped: u64,
+    /// 8x8 blocks dequant+IDCT'd on the CPU; with the fused ROI decode
+    /// this is the per-image block work training actually paid for.
+    pub idct_blocks: u64,
+    /// Blocks the fused ROI decode entropy-skipped (decode work saved).
+    pub idct_blocks_skipped: u64,
+    /// Decodes per fused scale (index = exponent: 1/1, 1/2, 1/4, 1/8).
+    pub decode_scale_hist: [u64; 4],
     /// Wall-clock per epoch (preprocessing completion times); the
     /// decoded-sample cache should make entries 2+ beat entry 1.
     pub epoch_secs: Vec<f64>,
@@ -263,6 +301,12 @@ impl RunReport {
             ("net_in_flight_peak", Json::num(self.net_in_flight_peak as f64)),
             ("prep_cache_hit_rate", Json::num(self.prep_cache_hit_rate)),
             ("decode_skipped", Json::num(self.decode_skipped as f64)),
+            ("idct_blocks", Json::num(self.idct_blocks as f64)),
+            ("idct_blocks_skipped", Json::num(self.idct_blocks_skipped as f64)),
+            (
+                "decode_scale_hist",
+                Json::arr(self.decode_scale_hist.iter().map(|&n| Json::num(n as f64))),
+            ),
             (
                 "epoch_secs",
                 Json::arr(self.epoch_secs.iter().map(|&s| Json::num(s))),
@@ -304,6 +348,20 @@ impl RunReport {
         );
         if self.net_in_flight_peak > 0 {
             println!("  remote store: peak {} connections in flight", self.net_in_flight_peak);
+        }
+        if self.idct_blocks_skipped > 0 {
+            let total = self.idct_blocks + self.idct_blocks_skipped;
+            let h = self.decode_scale_hist;
+            println!(
+                "  fused decode: {} of {} blocks IDCT'd ({:.1}%), scales [1/1:{} 1/2:{} 1/4:{} 1/8:{}]",
+                self.idct_blocks,
+                total,
+                self.idct_blocks as f64 / total.max(1) as f64 * 100.0,
+                h[0],
+                h[1],
+                h[2],
+                h[3],
+            );
         }
         if self.decode_skipped > 0 || self.prep_cache_hit_rate > 0.0 {
             let epochs: Vec<String> =
@@ -401,9 +459,26 @@ mod tests {
         let mut r = RunReport::default();
         r.images = 10;
         r.losses.push((1, 2.5));
+        r.idct_blocks = 75;
+        r.idct_blocks_skipped = 117;
+        r.decode_scale_hist = [3, 2, 1, 0];
         let j = r.to_json();
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.req("images").as_usize(), Some(10));
         assert_eq!(parsed.req("losses").idx(0).unwrap().idx(1).unwrap().as_f64(), Some(2.5));
+        assert_eq!(parsed.req("idct_blocks").as_usize(), Some(75));
+        assert_eq!(parsed.req("idct_blocks_skipped").as_usize(), Some(117));
+        assert_eq!(parsed.req("decode_scale_hist").idx(1).unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn scale_hist_buckets_by_exponent() {
+        let h = ScaleHist::default();
+        h.record(0);
+        h.record(0);
+        h.record(1);
+        h.record(3);
+        h.record(9); // defensive clamp into the last bucket
+        assert_eq!(h.snapshot(), [2, 1, 0, 2]);
     }
 }

@@ -46,11 +46,28 @@ impl AugParams {
     }
 }
 
+/// RandomResizedCrop sampling bounds.  Shared with the fused decoder's
+/// cache-admission scale ([`min_crop_side`]), which must never pick a
+/// scale that would upsample any crop this sampler can draw.
+pub const AUG_MIN_AREA: f64 = 0.35;
+pub const AUG_MAX_RATIO: f64 = 4.0 / 3.0;
+
+/// Smallest crop side [`sample_aug_params`] can draw on an `h`x`w`
+/// image: `floor(sqrt(min_area·h·w / max_ratio))`, additionally bounded
+/// by the 87.5% central-crop fallback — on high-aspect images the
+/// sampler's 10 tries can all fail, and the fallback's short side is
+/// then the true minimum — and floored at the sampler's 8-px minimum.
+pub fn min_crop_side(h: u32, w: u32) -> u32 {
+    let s = ((AUG_MIN_AREA * h as f64 * w as f64) / AUG_MAX_RATIO).sqrt().floor() as u32;
+    let fallback = (h * 7 / 8).min(w * 7 / 8);
+    s.min(fallback).max(8).min(h.min(w))
+}
+
 /// RandomResizedCrop-style sampling: area scale in [0.35, 1.0], aspect
 /// ratio in [3/4, 4/3], uniform placement, fair-coin flip.
 pub fn sample_aug_params(rng: &mut Rng, h: u32, w: u32) -> AugParams {
     for _ in 0..10 {
-        let area = (h * w) as f64 * rng.uniform(0.35, 1.0);
+        let area = (h * w) as f64 * rng.uniform(AUG_MIN_AREA, 1.0);
         let log_ratio = rng.uniform((3f64 / 4.0).ln(), (4f64 / 3.0).ln());
         let ratio = log_ratio.exp();
         let cw = ((area * ratio).sqrt().round() as u32).max(8);
@@ -88,19 +105,54 @@ pub fn augment_fused(
     ow: usize,
     out: &mut [f32],
 ) {
-    assert_eq!(img.len(), c * h * w);
+    augment_fused_view(img, c, h, w, (0, 0, h, w), p, oh, ow, out)
+}
+
+/// Like [`augment_fused`], but `img` holds only the rectangular view
+/// `(vy, vx, vh, vw)` of a full `h`x`w` image — the fused ROI decoder's
+/// output, placed at its true offset.  The crop window must lie inside
+/// the view.
+///
+/// All sampling arithmetic runs in *full-image* coordinates — the exact
+/// f32 operations of the full path — and only the final integer row/col
+/// indices shift into the view, so the result is bit-identical to
+/// augmenting the full image (the property `tests/fused_decode.rs`
+/// drives).  The one extra clamp (against the view's far edge) can bind
+/// only where the lerp weight is exactly 0, which preserves that.
+#[allow(clippy::too_many_arguments)]
+pub fn augment_fused_view(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    view: (usize, usize, usize, usize),
+    p: &AugParams,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let (vy, vx, vh, vw) = view;
+    assert_eq!(img.len(), c * vh * vw);
     assert_eq!(out.len(), c * oh * ow);
+    assert!(vy + vh <= h && vx + vw <= w, "view exceeds image");
+    assert!(
+        p.y0 as usize >= vy
+            && p.x0 as usize >= vx
+            && (p.y0 + p.crop_h) as usize <= vy + vh
+            && (p.x0 + p.crop_w) as usize <= vx + vw,
+        "crop window must lie inside the decoded view"
+    );
     let chf = p.crop_h as f32;
     let cwf = p.crop_w as f32;
 
-    // Precompute per-row/col source coords and lerp weights.
+    // Precompute per-row/col source coords (view-relative) and weights.
     let mut ys = vec![(0usize, 0usize, 0f32); oh];
     for (i, e) in ys.iter_mut().enumerate() {
         let iy = ((i as f32 + 0.5) * chf / oh as f32 - 0.5).clamp(0.0, chf - 1.0);
         let sy = (iy + p.y0 as f32).clamp(0.0, (h - 1) as f32);
         let y0 = sy.floor() as usize;
-        let y1 = (y0 + 1).min(h - 1);
-        *e = (y0, y1, sy - y0 as f32);
+        let y1 = (y0 + 1).min(h - 1).min(vy + vh - 1);
+        *e = (y0 - vy, y1 - vy, sy - y0 as f32);
     }
     let mut xs = vec![(0usize, 0usize, 0f32); ow];
     for (j, e) in xs.iter_mut().enumerate() {
@@ -111,18 +163,18 @@ pub fn augment_fused(
         let ix = ix.clamp(0.0, cwf - 1.0);
         let sx = (ix + p.x0 as f32).clamp(0.0, (w - 1) as f32);
         let x0 = sx.floor() as usize;
-        let x1 = (x0 + 1).min(w - 1);
-        *e = (x0, x1, sx - x0 as f32);
+        let x1 = (x0 + 1).min(w - 1).min(vx + vw - 1);
+        *e = (x0 - vx, x1 - vx, sx - x0 as f32);
     }
 
     for ch in 0..c {
-        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        let plane = &img[ch * vh * vw..(ch + 1) * vh * vw];
         let mean = NORM_MEAN[ch.min(2)];
         let istd = 1.0 / NORM_STD[ch.min(2)];
         let oplane = &mut out[ch * oh * ow..(ch + 1) * oh * ow];
         for (i, &(y0, y1, wy)) in ys.iter().enumerate() {
-            let r0 = &plane[y0 * w..y0 * w + w];
-            let r1 = &plane[y1 * w..y1 * w + w];
+            let r0 = &plane[y0 * vw..y0 * vw + vw];
+            let r1 = &plane[y1 * vw..y1 * vw + vw];
             let orow = &mut oplane[i * ow..(i + 1) * ow];
             for (j, &(x0, x1, wx)) in xs.iter().enumerate() {
                 let top = r0[x0] * (1.0 - wx) + r0[x1] * wx;
@@ -262,6 +314,40 @@ mod tests {
     }
 
     #[test]
+    fn view_augment_is_bit_identical_to_full_augment() {
+        let (c, h, w) = (3, 64, 64);
+        let img = ramp_image(c, h, w);
+        let mut rng = Rng::new(21);
+        for _ in 0..50 {
+            let p = sample_aug_params(&mut rng, h as u32, w as u32);
+            // A block-aligned view covering the crop (what the fused ROI
+            // decoder hands over), plus the full-image view as a control.
+            let vy = (p.y0 as usize / 8) * 8;
+            let vx = (p.x0 as usize / 8) * 8;
+            let vh = ((p.y0 + p.crop_h) as usize).div_ceil(8) * 8 - vy;
+            let vw = ((p.x0 + p.crop_w) as usize).div_ceil(8) * 8 - vx;
+            let (vh, vw) = (vh.min(h - vy), vw.min(w - vx));
+            let mut view = vec![0f32; c * vh * vw];
+            for ch in 0..c {
+                for y in 0..vh {
+                    for x in 0..vw {
+                        view[ch * vh * vw + y * vw + x] =
+                            img[ch * h * w + (vy + y) * w + (vx + x)];
+                    }
+                }
+            }
+            let mut full = vec![0f32; c * 56 * 56];
+            let mut roi = vec![0f32; c * 56 * 56];
+            let mut ctl = vec![0f32; c * 56 * 56];
+            augment_fused(&img, c, h, w, &p, 56, 56, &mut full);
+            augment_fused_view(&view, c, h, w, (vy, vx, vh, vw), &p, 56, 56, &mut roi);
+            augment_fused_view(&img, c, h, w, (0, 0, h, w), &p, 56, 56, &mut ctl);
+            assert_eq!(full, roi, "{p:?} view ({vy},{vx},{vh},{vw})");
+            assert_eq!(full, ctl, "{p:?}");
+        }
+    }
+
+    #[test]
     fn crop_extracts_window() {
         let (c, h, w) = (2, 16, 16);
         let img = ramp_image(c, h, w);
@@ -310,11 +396,19 @@ mod tests {
     #[test]
     fn sampled_params_always_valid() {
         let mut rng = Rng::new(11);
+        let floor = min_crop_side(64, 64);
+        assert_eq!(floor, 32, "0.35 area / 4:3 aspect on 64x64");
+        // High aspect: sampling always rejects (min ch would exceed h),
+        // so the 87.5% fallback's short side is the true minimum.
+        assert_eq!(min_crop_side(64, 256), 56);
         for _ in 0..500 {
             let p = sample_aug_params(&mut rng, 64, 64);
             assert!(p.crop_h >= 8 && p.crop_w >= 8);
             assert!(p.y0 + p.crop_h <= 64, "{p:?}");
             assert!(p.x0 + p.crop_w <= 64, "{p:?}");
+            // min_crop_side is a true lower bound — what lets the cache
+            // admission pick a scale that can never upsample a crop.
+            assert!(p.crop_h >= floor && p.crop_w >= floor, "{p:?} below {floor}");
         }
     }
 }

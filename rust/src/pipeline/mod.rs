@@ -20,7 +20,8 @@ pub mod prep_cache;
 pub mod shuffle;
 pub mod source;
 
-use crate::config::Placement;
+use crate::codec::{DecodePlan, DecodeStats};
+use crate::config::{Placement, RunConfig};
 use crate::ops::{self, AugParams};
 use prep_cache::{DecodedSample, PrepCache};
 use std::sync::Arc;
@@ -79,11 +80,16 @@ impl Batch {
 
 /// Collate `batch_size` samples into one `Batch`.  Samples must share the
 /// payload kind (guaranteed: placement is fixed per run).
+///
+/// `data`/`aug` are preallocated at exact capacity from the first
+/// sample's payload length × batch size (payloads are homogeneous per
+/// batch), so the batcher hot path never reallocates mid-collation.
 pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
-    let mut labels = Vec::with_capacity(samples.len());
+    let n = samples.len();
+    let mut labels = Vec::with_capacity(n);
     match samples.first().map(|s| &s.payload) {
-        Some(Payload::Ready(_)) => {
-            let mut data = Vec::new();
+        Some(Payload::Ready(first)) => {
+            let mut data = Vec::with_capacity(first.len() * n);
             for s in samples {
                 let Payload::Ready(v) = s.payload else { return Err(BatchKindError) };
                 data.extend_from_slice(&v);
@@ -91,10 +97,10 @@ pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
             }
             Ok(Batch::Ready { data, labels })
         }
-        Some(Payload::Coefs { qtable, .. }) => {
+        Some(Payload::Coefs { coefs: first, qtable, .. }) => {
             let qtable = *qtable;
-            let mut data = Vec::new();
-            let mut aug = Vec::new();
+            let mut data = Vec::with_capacity(first.len() * n);
+            let mut aug = Vec::with_capacity(6 * n);
             for s in samples {
                 let Payload::Coefs { coefs, aug: a, .. } = s.payload else {
                     return Err(BatchKindError);
@@ -105,9 +111,9 @@ pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
             }
             Ok(Batch::Coefs { data, qtable, aug, labels })
         }
-        Some(Payload::Pixels { .. }) => {
-            let mut data = Vec::new();
-            let mut aug = Vec::new();
+        Some(Payload::Pixels { pixels: first, .. }) => {
+            let mut data = Vec::with_capacity(first.len() * n);
+            let mut aug = Vec::with_capacity(6 * n);
             for s in samples {
                 let Payload::Pixels { pixels, aug: a } = s.payload else {
                     return Err(BatchKindError);
@@ -176,6 +182,7 @@ pub fn cpu_stage_admitting(
                         c: img.c,
                         h: img.h,
                         w: img.w,
+                        scale_log2: 0,
                         pixels: pixels.clone(),
                     }),
                 );
@@ -206,6 +213,7 @@ pub fn cpu_stage_admitting(
                         c: img.c,
                         h: img.h,
                         w: img.w,
+                        scale_log2: 0,
                         pixels: pixels.clone(),
                     }),
                 );
@@ -220,6 +228,13 @@ pub fn cpu_stage_admitting(
 /// placements re-enter as a hybrid0-style pixel payload (the device runs
 /// the augment artifact), so a hybrid run's batches stay homogeneous per
 /// batch via the batcher's per-kind collation.
+///
+/// `aug` is in *original-image* coordinates (sampled against
+/// [`DecodedSample::orig_h`]/`orig_w`, so the aug stream is independent
+/// of how the pixels were stored); a fractionally-scaled entry rescales
+/// it into stored-pixel space here.  Only the `cpu` placement ever
+/// admits scaled entries — the device augment artifact's input shape is
+/// fixed at full resolution.
 pub fn cpu_stage_cached(
     sample: &DecodedSample,
     placement: Placement,
@@ -229,6 +244,7 @@ pub fn cpu_stage_cached(
     match placement {
         Placement::Cpu => {
             let mut out = vec![0f32; sample.c * out_hw * out_hw];
+            let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
             ops::augment_fused(
                 &sample.pixels,
                 sample.c,
@@ -242,9 +258,274 @@ pub fn cpu_stage_cached(
             Payload::Ready(out)
         }
         Placement::Hybrid | Placement::Hybrid0 => {
+            debug_assert_eq!(
+                sample.scale_log2, 0,
+                "device placements never cache scaled pixels"
+            );
             // Refcount bump: the warm path never copies the pixels.
             Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused ROI + fractional-scale decode (plan-driven CPU stages)
+// ---------------------------------------------------------------------------
+
+/// Decode policy for the CPU stage (`--fused-decode` / `--decode-scale`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeOpts {
+    /// Entropy-skip blocks outside the crop ROI (`cpu`/`hybrid0` paths;
+    /// `hybrid` ships whole coefficient grids to the device regardless).
+    pub fused: bool,
+    /// Largest fractional-scale exponent the plan may pick (0 = full
+    /// resolution only; `cpu`-placement path only).
+    pub max_scale_log2: u8,
+}
+
+impl DecodeOpts {
+    /// Full decode everywhere — the pre-fused behavior.
+    pub fn off() -> Self {
+        DecodeOpts { fused: false, max_scale_log2: 0 }
+    }
+
+    pub fn from_config(cfg: &RunConfig) -> Self {
+        DecodeOpts {
+            fused: cfg.fused_decode,
+            max_scale_log2: if cfg.fused_decode { cfg.decode_scale.max_log2() } else { 0 },
+        }
+    }
+}
+
+/// Per-image decode telemetry from the planned CPU stage (feeds the
+/// runner's `idct_blocks*` counters and `decode_scale_hist`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageStats {
+    pub blocks_idct: u64,
+    pub blocks_skipped: u64,
+    /// Scale the decode actually ran at (0 when nothing was decoded on
+    /// the CPU, e.g. the hybrid entropy-only path).
+    pub scale_log2: u8,
+}
+
+impl StageStats {
+    fn from_decode(d: &DecodeStats, scale_log2: usize) -> Self {
+        StageStats {
+            blocks_idct: d.blocks_idct,
+            blocks_skipped: d.blocks_skipped,
+            scale_log2: scale_log2 as u8,
+        }
+    }
+}
+
+/// Map augmentation params from full-image coordinates into the space of
+/// pixels stored at `1/2^k` with full-res origin `(vy, vx)`; `vh`x`vw`
+/// are the stored dims.  Floor rounding keeps the window inside the
+/// view (the fractional-scale path is tolerance-, not bit-, checked, so
+/// the sub-pixel shift is acceptable by construction); `k == 0` with a
+/// zero origin is the identity.
+fn rescale_aug(aug: &AugParams, vy: u32, vx: u32, k: u8, vh: usize, vw: usize) -> AugParams {
+    if k == 0 && vy == 0 && vx == 0 {
+        return *aug;
+    }
+    // Fail at the fault, not via wraparound three frames later inside
+    // augment_fused's length assertion.
+    assert!(
+        aug.y0 >= vy && aug.x0 >= vx,
+        "crop origin ({},{}) outside view origin ({vy},{vx})",
+        aug.y0,
+        aug.x0
+    );
+    let y0 = (aug.y0 - vy) >> k;
+    let x0 = (aug.x0 - vx) >> k;
+    assert!(
+        (y0 as usize) < vh && (x0 as usize) < vw,
+        "scaled crop origin ({y0},{x0}) outside {vh}x{vw} view"
+    );
+    AugParams {
+        y0,
+        x0,
+        crop_h: (aug.crop_h >> k).max(1).min(vh as u32 - y0),
+        crop_w: (aug.crop_w >> k).max(1).min(vw as u32 - x0),
+        flip: aug.flip,
+    }
+}
+
+/// Plan-driven variant of [`cpu_stage`]: on the `cpu` path, decode only
+/// the blocks the crop consumes (optionally at a fractional scale) and
+/// augment the ROI in place; on the `hybrid0` path, decode the ROI
+/// blocks at their true offsets into a zeroed full-size canvas (the
+/// device augment artifact's input shape is fixed, and it samples only
+/// inside the crop window, so the device output is unchanged).  The
+/// `hybrid` path and `opts.fused == false` fall back to the full stage.
+pub fn cpu_stage_planned(
+    bytes: &[u8],
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+    opts: &DecodeOpts,
+) -> anyhow::Result<(Payload, StageStats)> {
+    if !opts.fused || placement == Placement::Hybrid {
+        return full_stage_with_stats(bytes, placement, aug, out_hw);
+    }
+    let (c, h, w, _q) = crate::codec::probe(bytes)?;
+    let crop =
+        (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
+    match placement {
+        Placement::Cpu => {
+            let plan = DecodePlan::new(c, h, w, crop, out_hw, opts.max_scale_log2 as usize);
+            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+            let f = roi.to_f32();
+            let (vy, vx) = plan.origin();
+            let mut out = vec![0f32; c * out_hw * out_hw];
+            if plan.scale_log2 == 0 {
+                // Bit-identical to full decode + augment (sampling runs
+                // in full-image coordinates over the ROI view).
+                ops::augment_fused_view(
+                    &f,
+                    c,
+                    h,
+                    w,
+                    (vy, vx, roi.h, roi.w),
+                    &aug,
+                    out_hw,
+                    out_hw,
+                    &mut out,
+                );
+            } else {
+                let aug_s =
+                    rescale_aug(&aug, vy as u32, vx as u32, plan.scale_log2 as u8, roi.h, roi.w);
+                ops::augment_fused(&f, c, roi.h, roi.w, &aug_s, out_hw, out_hw, &mut out);
+            }
+            Ok((Payload::Ready(out), StageStats::from_decode(&dstats, plan.scale_log2)))
+        }
+        Placement::Hybrid0 => {
+            let plan = DecodePlan::new(c, h, w, crop, out_hw, 0);
+            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+            let (vy, vx) = plan.origin();
+            let mut full = vec![0f32; c * h * w];
+            for ch in 0..c {
+                let plane = roi.plane(ch);
+                for y in 0..roi.h {
+                    let dst = &mut full[ch * h * w + (vy + y) * w + vx..][..roi.w];
+                    let src = &plane[y * roi.w..(y + 1) * roi.w];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d = s as f32;
+                    }
+                }
+            }
+            Ok((
+                Payload::Pixels { pixels: full.into(), aug: aug.to_row() },
+                StageStats::from_decode(&dstats, 0),
+            ))
+        }
+        Placement::Hybrid => unreachable!("handled above"),
+    }
+}
+
+/// Plan-driven variant of [`cpu_stage_admitting`].  Cache entries must
+/// serve *any* future epoch's crop, so admission decodes whole images:
+/// under `cpu` the whole image can still be decoded (and stored) at a
+/// fractional scale — bounded by the smallest crop the aug distribution
+/// can sample ([`ops::min_crop_side`]), so no future hit ever upsamples
+/// stored pixels — shrinking every entry by 4^k and raising the MinIO
+/// hit fraction.  `hybrid0` falls back to the full-resolution decode
+/// (its device payload shape is fixed).  When admission would be
+/// refused anyway, the stage runs the plain fused ROI path instead.
+pub fn cpu_stage_admitting_planned(
+    bytes: &[u8],
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+    cache: &PrepCache,
+    id: u64,
+    opts: &DecodeOpts,
+) -> anyhow::Result<(Payload, StageStats)> {
+    let (c, h, w, _q) = crate::codec::probe(bytes)?;
+    let px_bytes = |c: usize, h: usize, w: usize| c * h * w * std::mem::size_of::<f32>();
+    if !opts.fused || placement == Placement::Hybrid {
+        let mut stats = full_stage_stats(c, h, w, placement);
+        // The hybrid arm runs the cache-only dequant+IDCT when the
+        // sample will be admitted — count that transform work (the
+        // admission decision is re-taken inside `cpu_stage_admitting`,
+        // so under concurrency the count is best-effort, like every
+        // other relaxed counter here).
+        if placement == Placement::Hybrid && cache.would_admit(px_bytes(c, h, w)) {
+            stats.blocks_idct = (c * (h / 8) * (w / 8)) as u64;
+        }
+        let payload = cpu_stage_admitting(bytes, placement, aug, out_hw, cache, id)?;
+        return Ok((payload, stats));
+    }
+    match placement {
+        Placement::Cpu => {
+            // The admission scale is bounded by the *smallest* crop the
+            // aug distribution can draw, not the image dims: a cached
+            // entry serves every future epoch's crop, and the resize
+            // must only ever downsample stored pixels (the same
+            // never-upsample rule the per-crop plan enforces).
+            let min_crop = ops::min_crop_side(h as u32, w as u32) as usize;
+            let k = DecodePlan::image_scale(min_crop, min_crop, out_hw, opts.max_scale_log2 as usize);
+            let (sh, sw) = (h >> k, w >> k);
+            if cache.would_admit(px_bytes(c, sh, sw)) {
+                let plan = DecodePlan::full_scaled(c, h, w, k);
+                let (img, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+                // Share one buffer between cache and augment: admission
+                // is a refcount bump, not a second copy.
+                let pixels: Arc<[f32]> = img.to_f32().into();
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample {
+                        c,
+                        h: sh,
+                        w: sw,
+                        scale_log2: k as u8,
+                        pixels: pixels.clone(),
+                    }),
+                );
+                let aug_s = rescale_aug(&aug, 0, 0, k as u8, sh, sw);
+                let mut out = vec![0f32; c * out_hw * out_hw];
+                ops::augment_fused(&pixels, c, sh, sw, &aug_s, out_hw, out_hw, &mut out);
+                Ok((Payload::Ready(out), StageStats::from_decode(&dstats, k)))
+            } else {
+                cpu_stage_planned(bytes, placement, aug, out_hw, opts)
+            }
+        }
+        Placement::Hybrid0 => {
+            if cache.would_admit(px_bytes(c, h, w)) {
+                let stats = full_stage_stats(c, h, w, placement);
+                let payload = cpu_stage_admitting(bytes, placement, aug, out_hw, cache, id)?;
+                Ok((payload, stats))
+            } else {
+                cpu_stage_planned(bytes, placement, aug, out_hw, opts)
+            }
+        }
+        Placement::Hybrid => unreachable!("handled above"),
+    }
+}
+
+/// The full (unfused) stage, with block counters derived from the probe:
+/// a full decode dequant+IDCTs every block; the hybrid entropy-only path
+/// transforms nothing on the CPU (its admission-time transform is
+/// counted by `cpu_stage_admitting_planned` instead).
+fn full_stage_with_stats(
+    bytes: &[u8],
+    placement: Placement,
+    aug: AugParams,
+    out_hw: usize,
+) -> anyhow::Result<(Payload, StageStats)> {
+    let (c, h, w, _q) = crate::codec::probe(bytes)?;
+    let stats = full_stage_stats(c, h, w, placement);
+    let payload = cpu_stage(bytes, placement, aug, out_hw)?;
+    Ok((payload, stats))
+}
+
+/// Block counters for a full (unplanned) decode of a `c`x`h`x`w` image.
+fn full_stage_stats(c: usize, h: usize, w: usize, placement: Placement) -> StageStats {
+    let blocks = (c * (h / 8) * (w / 8)) as u64;
+    StageStats {
+        blocks_idct: if placement == Placement::Hybrid { 0 } else { blocks },
+        blocks_skipped: 0,
+        scale_log2: 0,
     }
 }
 
@@ -363,6 +644,172 @@ mod tests {
         let cache = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
         cpu_stage_admitting(&bytes, Placement::Cpu, aug, 56, &cache, 9).unwrap();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fused_cpu_stage_is_bit_identical_to_full_stage() {
+        let bytes = encoded_image(7);
+        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
+        for aug in [
+            AugParams { y0: 3, x0: 11, crop_h: 37, crop_w: 41, flip: true },
+            AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: false },
+            AugParams::identity(64, 64),
+        ] {
+            let full = cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap();
+            let (fused, stats) =
+                cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts).unwrap();
+            match (full, fused) {
+                (Payload::Ready(a), Payload::Ready(b)) => assert_eq!(a, b, "{aug:?}"),
+                other => panic!("{other:?}"),
+            }
+            assert_eq!(stats.blocks_idct + stats.blocks_skipped, 3 * 64);
+            if aug.crop_h < 60 {
+                assert!(stats.blocks_skipped > 0, "{aug:?} skipped nothing");
+            }
+        }
+        // Fused off falls back to the full stage with full-block stats.
+        let aug = AugParams { y0: 3, x0: 11, crop_h: 37, crop_w: 41, flip: true };
+        let (_, stats) =
+            cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &DecodeOpts::off()).unwrap();
+        assert_eq!(stats.blocks_idct, 3 * 64);
+        assert_eq!(stats.blocks_skipped, 0);
+        // Hybrid ships whole coefficient grids: the plan never applies.
+        let (p, stats) =
+            cpu_stage_planned(&bytes, Placement::Hybrid, aug, 56, &opts).unwrap();
+        assert!(matches!(p, Payload::Coefs { .. }));
+        assert_eq!(stats.blocks_idct, 0);
+    }
+
+    #[test]
+    fn fused_hybrid0_canvas_augments_identically_on_the_device_math() {
+        // The hybrid0 fused payload zeroes the skipped blocks; the device
+        // augment (same math as ops::augment_fused) samples only inside
+        // the crop window, so the augmented output must be identical.
+        let bytes = encoded_image(8);
+        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
+        let aug = AugParams { y0: 9, x0: 2, crop_h: 33, crop_w: 45, flip: true };
+        let full = cpu_stage(&bytes, Placement::Hybrid0, aug, 56).unwrap();
+        let (fused, stats) =
+            cpu_stage_planned(&bytes, Placement::Hybrid0, aug, 56, &opts).unwrap();
+        assert!(stats.blocks_skipped > 0);
+        let (Payload::Pixels { pixels: a, aug: ra }, Payload::Pixels { pixels: b, aug: rb }) =
+            (full, fused)
+        else {
+            panic!("expected pixel payloads")
+        };
+        assert_eq!(ra, rb);
+        let mut out_a = vec![0f32; 3 * 56 * 56];
+        let mut out_b = vec![0f32; 3 * 56 * 56];
+        ops::augment_fused(&a, 3, 64, 64, &aug, 56, 56, &mut out_a);
+        ops::augment_fused(&b, 3, 64, 64, &aug, 56, 56, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn scaled_admission_shrinks_entries_and_serves_hits() {
+        // out_hw 16 on a 64x64 image allows a 1/2-scale cache entry (the
+        // admission scale is bounded by the smallest samplable crop —
+        // min_crop_side = 32 — so no future crop is ever upsampled):
+        // 4x fewer bytes resident, and the hit path rescales the aug
+        // params against the stored dims.
+        let bytes = encoded_image(9);
+        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
+        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+        let aug = AugParams { y0: 4, x0: 8, crop_h: 48, crop_w: 48, flip: false };
+        let (p, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Cpu, aug, 16, &cache, 5, &opts)
+                .unwrap();
+        assert!(matches!(p, Payload::Ready(ref v) if v.len() == 3 * 16 * 16));
+        assert_eq!(stats.scale_log2, 1);
+        assert_eq!(stats.blocks_idct, 3 * 64, "admission decodes the whole image");
+        let s = cache.get(5).expect("admitted");
+        assert_eq!((s.c, s.h, s.w, s.scale_log2), (3, 32, 32, 1));
+        assert_eq!((s.orig_h(), s.orig_w()), (64, 64));
+        assert_eq!(s.byte_size(), 3 * 32 * 32 * 4);
+        // Every samplable crop (side >= 32) still covers the 16px output
+        // at this scale: stored pixels are only ever downsampled.
+        assert!(crate::ops::min_crop_side(64, 64) as usize >> s.scale_log2 >= 16);
+        // A hit augments the scaled pixels into the same output shape...
+        let hit = cpu_stage_cached(&s, Placement::Cpu, aug, 16);
+        let Payload::Ready(hit_out) = hit else { panic!() };
+        assert_eq!(hit_out.len(), 3 * 16 * 16);
+        // ...and matches the miss path exactly (same stored pixels, same
+        // rescaled params).
+        let Payload::Ready(miss_out) = p else { panic!() };
+        assert_eq!(hit_out, miss_out);
+        // A zero-budget cache refuses admission; the stage degrades to
+        // the plain fused ROI path.
+        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
+        let (_, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Cpu, aug, 16, &empty, 5, &opts)
+                .unwrap();
+        assert!(empty.is_empty());
+        assert!(stats.blocks_skipped > 0, "no admission -> ROI skip");
+    }
+
+    #[test]
+    fn hybrid0_admission_falls_back_to_full_decode() {
+        // The hybrid0 device payload shape is fixed at full resolution,
+        // so admission decodes (and caches) whole full-res images.
+        let bytes = encoded_image(10);
+        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
+        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+        let aug = AugParams { y0: 4, x0: 8, crop_h: 40, crop_w: 40, flip: false };
+        let (p, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Hybrid0, aug, 56, &cache, 6, &opts)
+                .unwrap();
+        assert!(matches!(p, Payload::Pixels { ref pixels, .. } if pixels.len() == 3 * 64 * 64));
+        assert_eq!(stats.blocks_skipped, 0, "whole image admitted");
+        let s = cache.get(6).expect("admitted");
+        assert_eq!((s.h, s.w, s.scale_log2), (64, 64, 0));
+        // Refused admission -> fused ROI canvas, nothing cached.
+        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
+        let (_, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Hybrid0, aug, 56, &empty, 6, &opts)
+                .unwrap();
+        assert!(empty.is_empty());
+        assert!(stats.blocks_skipped > 0);
+    }
+
+    #[test]
+    fn hybrid_admission_counts_its_cache_only_transform() {
+        // The hybrid arm's admission runs a full dequant+IDCT to produce
+        // cacheable pixels — the idct_blocks counter must see it.
+        let bytes = encoded_image(11);
+        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
+        let aug = AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: false };
+        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+        let (p, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Hybrid, aug, 56, &cache, 7, &opts)
+                .unwrap();
+        assert!(matches!(p, Payload::Coefs { .. }));
+        assert_eq!(stats.blocks_idct, 3 * 64, "admission dequant+IDCT must be counted");
+        assert!(cache.get(7).is_some());
+        // Refused admission: entropy-only, no CPU transform to count.
+        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
+        let (_, stats) =
+            cpu_stage_admitting_planned(&bytes, Placement::Hybrid, aug, 56, &empty, 7, &opts)
+                .unwrap();
+        assert_eq!(stats.blocks_idct, 0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn decode_opts_derive_from_config() {
+        use crate::config::{DecodeScale, RunConfig};
+        let cfg = RunConfig::default();
+        assert_eq!(DecodeOpts::from_config(&cfg), DecodeOpts { fused: true, max_scale_log2: 0 });
+        let cfg = RunConfig {
+            decode_scale: DecodeScale::Auto,
+            ..RunConfig::default()
+        };
+        assert_eq!(DecodeOpts::from_config(&cfg), DecodeOpts { fused: true, max_scale_log2: 3 });
+        let cfg = RunConfig {
+            fused_decode: false,
+            decode_scale: DecodeScale::Auto,
+            ..RunConfig::default()
+        };
+        assert_eq!(DecodeOpts::from_config(&cfg), DecodeOpts::off());
     }
 
     #[test]

@@ -24,8 +24,9 @@
 //! simulated multi-epoch remote runs comparable to real ones (agreement
 //! asserted in `tests/prep_cache.rs`).
 
+use crate::util::bytelru::ByteLru;
 use anyhow::{bail, Result};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -58,31 +59,51 @@ impl PrepCachePolicy {
 /// Decoded (post-decode, pre-augment) planar pixels of one sample.
 /// Pixels live behind an `Arc` so a cache hit is a refcount bump; the
 /// placement-specific augment path copies only when it must.
+///
+/// `h`×`w` are the *stored* dims; with the fused decoder's fractional
+/// scale the pixels may be a 1/2^k downscale of the source image
+/// (`scale_log2 = k`), which shrinks the entry by 4^k and raises the
+/// MinIO hit fraction for the same DRAM budget.  Augmentation params are
+/// sampled against the original dims ([`orig_h`](Self::orig_h)) and
+/// rescaled at use, so the aug stream is identical either way.
 #[derive(Clone, Debug)]
 pub struct DecodedSample {
     pub c: usize,
     pub h: usize,
     pub w: usize,
+    /// Fractional-scale exponent of the stored pixels (0 = full res).
+    pub scale_log2: u8,
     pub pixels: Arc<[f32]>,
 }
 
 impl DecodedSample {
     pub fn new(c: usize, h: usize, w: usize, pixels: Vec<f32>) -> Self {
-        DecodedSample { c, h, w, pixels: pixels.into() }
+        DecodedSample { c, h, w, scale_log2: 0, pixels: pixels.into() }
     }
 
     /// Bytes this sample charges against the cache budget.
     pub fn byte_size(&self) -> usize {
         self.pixels.len() * std::mem::size_of::<f32>()
     }
+
+    /// Height of the source image these pixels were decoded from.
+    pub fn orig_h(&self) -> usize {
+        self.h << self.scale_log2
+    }
+
+    /// Width of the source image these pixels were decoded from.
+    pub fn orig_w(&self) -> usize {
+        self.w << self.scale_log2
+    }
 }
 
-struct Inner {
-    map: HashMap<u64, (Arc<DecodedSample>, u64)>, // sample + last-use tick
-    /// Tick-ordered eviction index (LRU policy only; empty under minio).
-    by_tick: BTreeMap<u64, u64>, // tick -> sample id
-    bytes: usize,
-    tick: u64,
+/// Policy-specific resident store: the lru arm delegates recency,
+/// eviction, and replacement-credit accounting to the shared
+/// [`ByteLru`] core (also behind `storage/cache.rs`); the minio arm is a
+/// frozen map that never evicts, so it needs only a byte total.
+enum Store {
+    Lru(ByteLru<u64, Arc<DecodedSample>>),
+    Minio { map: HashMap<u64, Arc<DecodedSample>>, bytes: usize },
 }
 
 /// Byte-budgeted, thread-safe decoded-sample store keyed by sample id,
@@ -90,22 +111,21 @@ struct Inner {
 pub struct PrepCache {
     budget: usize,
     policy: PrepCachePolicy,
-    inner: Mutex<Inner>,
+    inner: Mutex<Store>,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
 }
 
 impl PrepCache {
     pub fn new(budget_bytes: usize, policy: PrepCachePolicy) -> Self {
+        let store = match policy {
+            PrepCachePolicy::Lru => Store::Lru(ByteLru::new(budget_bytes)),
+            PrepCachePolicy::Minio => Store::Minio { map: HashMap::new(), bytes: 0 },
+        };
         PrepCache {
             budget: budget_bytes,
             policy,
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                by_tick: BTreeMap::new(),
-                bytes: 0,
-                tick: 0,
-            }),
+            inner: Mutex::new(store),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -118,22 +138,10 @@ impl PrepCache {
     /// Look a sample up, counting the hit/miss.  LRU refreshes recency;
     /// minio needs no bookkeeping (nothing is ever evicted).
     pub fn get(&self, id: u64) -> Option<Arc<DecodedSample>> {
-        let mut guard = self.inner.lock().unwrap();
-        let inner = &mut *guard; // split-borrow map and by_tick
-        inner.tick += 1;
-        let tick = inner.tick;
-        let out = if let Some((sample, used)) = inner.map.get_mut(&id) {
-            let out = sample.clone();
-            if self.policy == PrepCachePolicy::Lru {
-                let old = std::mem::replace(used, tick);
-                inner.by_tick.remove(&old);
-                inner.by_tick.insert(tick, id);
-            }
-            Some(out)
-        } else {
-            None
+        let out = match &mut *self.inner.lock().unwrap() {
+            Store::Lru(lru) => lru.get(&id).cloned(),
+            Store::Minio { map, .. } => map.get(&id).cloned(),
         };
-        drop(guard);
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -143,16 +151,15 @@ impl PrepCache {
 
     /// Would a sample of `bytes` be admitted right now?  Lets the CPU
     /// worker skip preparing cache-only pixels (the hybrid placement's
-    /// extra dequant+IDCT) when admission would be refused anyway.
+    /// extra dequant+IDCT, or a whole-image decode under the fused ROI
+    /// path) when admission would be refused anyway.
     pub fn would_admit(&self, bytes: usize) -> bool {
         if bytes > self.budget {
             return false;
         }
-        match self.policy {
-            PrepCachePolicy::Lru => true,
-            PrepCachePolicy::Minio => {
-                self.inner.lock().unwrap().bytes + bytes <= self.budget
-            }
+        match &*self.inner.lock().unwrap() {
+            Store::Lru(_) => true,
+            Store::Minio { bytes: resident, .. } => resident + bytes <= self.budget,
         }
     }
 
@@ -161,37 +168,16 @@ impl PrepCache {
         if size > self.budget {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        match self.policy {
-            PrepCachePolicy::Minio => {
-                // Eviction-free: first admission wins, nothing leaves.
-                if inner.map.contains_key(&id) || inner.bytes + size > self.budget {
+        match &mut *self.inner.lock().unwrap() {
+            // Replacement credit + eviction are the shared core's job.
+            Store::Lru(lru) => lru.insert(id, sample, size),
+            // Eviction-free: first admission wins, nothing leaves.
+            Store::Minio { map, bytes } => {
+                if map.contains_key(&id) || *bytes + size > self.budget {
                     return;
                 }
-                inner.bytes += size;
-                inner.map.insert(id, (sample, tick));
-            }
-            PrepCachePolicy::Lru => {
-                // Credit a racing admission of the same id before sizing
-                // the eviction target (same invariant as storage/cache.rs).
-                if let Some((old, old_tick)) = inner.map.remove(&id) {
-                    inner.by_tick.remove(&old_tick);
-                    inner.bytes -= old.byte_size();
-                }
-                while inner.bytes + size > self.budget {
-                    let Some((&victim_tick, _)) = inner.by_tick.iter().next() else {
-                        break;
-                    };
-                    let victim = inner.by_tick.remove(&victim_tick).expect("index entry");
-                    if let Some((old, _)) = inner.map.remove(&victim) {
-                        inner.bytes -= old.byte_size();
-                    }
-                }
-                inner.bytes += size;
-                inner.map.insert(id, (sample, tick));
-                inner.by_tick.insert(tick, id);
+                *bytes += size;
+                map.insert(id, sample);
             }
         }
     }
@@ -207,11 +193,17 @@ impl PrepCache {
     }
 
     pub fn cached_bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        match &*self.inner.lock().unwrap() {
+            Store::Lru(lru) => lru.bytes(),
+            Store::Minio { bytes, .. } => *bytes,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        match &*self.inner.lock().unwrap() {
+            Store::Lru(lru) => lru.len(),
+            Store::Minio { map, .. } => map.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -354,6 +346,30 @@ mod tests {
                 assert_eq!(epoch_hits, 50, "epoch {epoch}");
             }
         }
+    }
+
+    #[test]
+    fn scaled_samples_charge_fewer_bytes_and_remember_orig_dims() {
+        let full = DecodedSample::new(3, 64, 64, vec![0.0; 3 * 64 * 64]);
+        let half =
+            DecodedSample { scale_log2: 1, ..DecodedSample::new(3, 32, 32, vec![0.0; 3 * 32 * 32]) };
+        assert_eq!(full.byte_size(), 4 * half.byte_size());
+        assert_eq!((half.orig_h(), half.orig_w()), (64, 64));
+        assert_eq!((full.orig_h(), full.orig_w()), (64, 64));
+        // The same budget holds 4x the samples at half scale — the fused
+        // decoder's cache-entry shrink that lifts the MinIO hit fraction.
+        let c = PrepCache::new(full.byte_size() * 2, PrepCachePolicy::Minio);
+        for id in 0..8 {
+            c.admit(
+                id,
+                Arc::new(DecodedSample {
+                    scale_log2: 1,
+                    ..DecodedSample::new(3, 32, 32, vec![0.0; 3 * 32 * 32])
+                }),
+            );
+        }
+        assert_eq!(c.len(), 8);
+        assert!(!c.would_admit(half.byte_size()), "budget exactly full");
     }
 
     #[test]

@@ -59,6 +59,15 @@ pub const OVERLAP_REF_MS: f64 = 0.25;
 /// + open + random read issue) — 2× the read share.
 pub const RAW_EXTRA_CPU_MS: f64 = 2.0 * SHARE_READ * CPU_PREPROC_MS;
 
+/// Fraction of an image's 8×8 blocks the fused ROI decode dequant+IDCTs
+/// under the RandomResizedCrop distribution (area ∈ [0.35, 1.0], aspect
+/// ∈ [3/4, 4/3], uniform placement): the expected block-aligned cover of
+/// the crop.  Only the transform (`SHARE_XFORM`) thins — the entropy
+/// walk still visits every block to skip it (we conservatively charge
+/// `skip_block` at full entropy cost).  Validated against the engine's
+/// measured plan fraction in `tests/fused_decode.rs` (within 20%).
+pub const FUSED_BLOCK_FRACTION: f64 = 0.85;
+
 /// Mean encoded image size (ImageNet-train JPEG average ≈ 110 KB).
 pub const IMG_BYTES: f64 = 110_000.0;
 
@@ -201,6 +210,7 @@ mod tests {
         let s = SHARE_READ + SHARE_DECODE + SHARE_AUG;
         assert!((s - 1.0).abs() < 1e-9, "{s}");
         assert!((SHARE_DECODE - 0.477).abs() < 1e-9, "decode share must be 47.7%");
+        assert!((0.0..=1.0).contains(&FUSED_BLOCK_FRACTION));
     }
 
     #[test]

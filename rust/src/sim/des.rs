@@ -380,6 +380,38 @@ mod tests {
     }
 
     #[test]
+    fn des_fused_decode_matches_analytic_and_speeds_cpu_bound_runs() {
+        // The fused-decode service-time thinning flows into the DES via
+        // cpu_cost_ms: agreement with the analytic model must hold, and
+        // a CPU-bound scenario must gain measurable throughput.
+        let cold = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 24,
+            placement: Placement::Cpu,
+            seconds: 40.0,
+            ..Default::default()
+        };
+        let fused = Scenario { fused_decode: true, ..cold.clone() };
+        let scaled = Scenario { fused_decode: true, decode_scale: 4, ..cold.clone() };
+        for s in [&cold, &fused, &scaled] {
+            let des = simulate(s).throughput_ips;
+            let ana = analytic_throughput(s);
+            let rel = (des - ana).abs() / ana;
+            assert!(
+                rel < 0.15,
+                "fused={}/s{}: des {des:.0} vs ana {ana:.0}",
+                s.fused_decode,
+                s.decode_scale
+            );
+        }
+        assert!(
+            simulate(&scaled).throughput_ips > simulate(&cold).throughput_ips,
+            "fused 1/4-scale decode must raise a CPU-bound run's throughput"
+        );
+    }
+
+    #[test]
     fn des_utilization_identifies_bottleneck() {
         // ResNet50 record-hybrid (Fig. 4 right): GPU ~saturated, CPU low.
         let s = Scenario { model: "resnet50".into(), seconds: 40.0, ..Default::default() };

@@ -44,6 +44,24 @@ pub struct Scenario {
     /// simulated multi-epoch runs stay comparable to real ones.
     pub prep_cache_gb: f64,
     pub prep_cache_policy: PrepCachePolicy,
+    /// Fused ROI decode (`--fused-decode on`): the dequant+IDCT service
+    /// share thins to the decoded-block fraction on the `cpu`/`hybrid0`
+    /// paths.  Off by default — the sim's baseline is the paper's
+    /// whole-image decoder; turn it on to model our fused engine.
+    pub fused_decode: bool,
+    /// Fused fractional-scale denominator (1|2|4|8): divides the
+    /// remaining per-block transform cost by `scale²` and shrinks
+    /// decoded cache entries by the same factor (`cpu` placement).
+    ///
+    /// NOTE: this is the *realized* per-image scale to model, not the
+    /// engine's `--decode-scale` **cap** — the engine only scales when
+    /// the crop/output geometry allows (`crop/2^k >= out`), and the sim
+    /// has no image geometry to derive that from.  Read the achieved
+    /// scale off a real run's `decode_scale_hist` and pass that here;
+    /// passing an unachievable scale models a decoder the engine would
+    /// not run, and the engine-vs-sim agreement contract is asserted
+    /// only for the unscaled path.
+    pub decode_scale: u8,
     /// Simulated duration in seconds (DES only).
     pub seconds: f64,
     pub seed: u64,
@@ -63,6 +81,8 @@ impl Default for Scenario {
             ideal: false,
             prep_cache_gb: 0.0,
             prep_cache_policy: PrepCachePolicy::Minio,
+            fused_decode: false,
+            decode_scale: 1,
             seconds: 60.0,
             seed: 7,
         }
@@ -93,6 +113,18 @@ impl Scenario {
         if let Some(v) = args.get("prep-cache-policy") {
             s.prep_cache_policy = PrepCachePolicy::parse(v)?;
         }
+        if let Some(v) = args.get("fused-decode") {
+            s.fused_decode = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                _ => anyhow::bail!("fused-decode must be on|off, got {v}"),
+            };
+        }
+        if let Some(v) = args.get("decode-scale") {
+            s.decode_scale = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("sim decode-scale must be 1|2|4|8, got {v}"))?;
+        }
         s.seconds = args.get_f64("seconds", s.seconds);
         s.seed = args.get_u64("seed", s.seed);
         s.validate()?;
@@ -109,17 +141,30 @@ impl Scenario {
         anyhow::ensure!(self.gpus >= 1 && self.vcpus >= 1, "need >=1 gpu and vcpu");
         anyhow::ensure!(self.net_conns >= 1, "need >=1 net connection");
         anyhow::ensure!(self.prep_cache_gb >= 0.0, "prep_cache_gb must be >= 0");
+        anyhow::ensure!(
+            matches!(self.decode_scale, 1 | 2 | 4 | 8),
+            "decode_scale must be 1|2|4|8, got {}",
+            self.decode_scale
+        );
         Ok(())
     }
 
     /// Steady-state (epoch ≥ 2) decoded-cache hit rate for this scenario
     /// — the same closed-form model the engine's cache converges to
-    /// (`pipeline::prep_cache::steady_state_hit_rate`).
+    /// (`pipeline::prep_cache::steady_state_hit_rate`).  With the fused
+    /// decoder's fractional scale, the `cpu` placement stores entries at
+    /// `1/scale²` of full size — same DRAM, scale²× the resident
+    /// fraction (exactly what the engine's admission path does).
     pub fn prep_cache_hit(&self) -> f64 {
+        let mut dataset = calib::decoded_dataset_bytes();
+        if self.fused_decode && self.placement == Placement::Cpu {
+            let s = self.decode_scale as f64;
+            dataset /= s * s;
+        }
         prep_cache::steady_state_hit_rate(
             self.prep_cache_policy,
             self.prep_cache_gb * 1e9,
-            calib::decoded_dataset_bytes(),
+            dataset,
         )
     }
 
@@ -129,11 +174,31 @@ impl Scenario {
     /// placements a hit costs the CPU essentially nothing (the pixels go
     /// straight to collation).
     pub fn cpu_cost_ms(&self) -> f64 {
+        // Fused ROI decode: the entropy walk still visits every block
+        // (skip_block is charged at full entropy cost, conservatively),
+        // but only the decoded-block fraction pays the dequant+IDCT, and
+        // a fractional scale divides that per-block cost by scale².  The
+        // scale applies on the cpu path only — hybrid0's device payload
+        // shape pins it to full resolution, exactly like the engine.
+        let xform_share = |scaled: bool| -> f64 {
+            if !self.fused_decode {
+                return calib::SHARE_XFORM;
+            }
+            let mut x = calib::SHARE_XFORM * calib::FUSED_BLOCK_FRACTION;
+            if scaled {
+                x /= (self.decode_scale as f64).powi(2);
+            }
+            x
+        };
         let base = match self.placement {
-            Placement::Cpu => calib::CPU_PREPROC_MS,
+            Placement::Cpu => {
+                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(true) + calib::SHARE_AUG)
+                    * calib::CPU_PREPROC_MS
+            }
             Placement::Hybrid => (calib::SHARE_READ + calib::SHARE_ENTROPY) * calib::CPU_PREPROC_MS,
             Placement::Hybrid0 => {
-                (calib::SHARE_READ + calib::SHARE_DECODE) * calib::CPU_PREPROC_MS
+                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(false))
+                    * calib::CPU_PREPROC_MS
             }
         };
         let miss_cost = match self.method {
@@ -497,6 +562,68 @@ mod tests {
         let rec = Scenario { method: Method::Record, ..mk(half) };
         let rec_cold = Scenario { method: Method::Record, ..mk(0.0) };
         assert!((rec.storage_cap_ips() - rec_cold.storage_cap_ips()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_decode_thins_exactly_the_transform_share() {
+        // The model: only SHARE_XFORM scales (by the block fraction, and
+        // by 1/scale² on the cpu path); read/entropy/aug are untouched.
+        for pl in [Placement::Cpu, Placement::Hybrid0] {
+            let base = scen("alexnet", 8, 24, pl, Method::Record);
+            let fused = Scenario { fused_decode: true, ..base.clone() };
+            let saved = base.cpu_cost_ms() - fused.cpu_cost_ms();
+            let want = calib::SHARE_XFORM * (1.0 - calib::FUSED_BLOCK_FRACTION)
+                * calib::CPU_PREPROC_MS;
+            assert!((saved - want).abs() < 1e-9, "{pl:?}: saved {saved} want {want}");
+        }
+        // Hybrid ships whole coefficient grids: fused changes nothing.
+        let hy = scen("alexnet", 8, 24, Placement::Hybrid, Method::Record);
+        let hy_f = Scenario { fused_decode: true, ..hy.clone() };
+        assert_eq!(hy.cpu_cost_ms(), hy_f.cpu_cost_ms());
+        // Fractional scale divides the remaining per-block cost by
+        // scale² on the cpu path only.
+        let cpu2 = Scenario {
+            fused_decode: true,
+            decode_scale: 2,
+            ..scen("alexnet", 8, 24, Placement::Cpu, Method::Record)
+        };
+        let cpu1 = Scenario { decode_scale: 1, ..cpu2.clone() };
+        let xform1 = calib::SHARE_XFORM * calib::FUSED_BLOCK_FRACTION * calib::CPU_PREPROC_MS;
+        let extra = xform1 * (1.0 - 1.0 / 4.0);
+        assert!((cpu1.cpu_cost_ms() - cpu2.cpu_cost_ms() - extra).abs() < 1e-9);
+        let h02 = Scenario {
+            fused_decode: true,
+            decode_scale: 2,
+            ..scen("alexnet", 8, 24, Placement::Hybrid0, Method::Record)
+        };
+        let h01 = Scenario { decode_scale: 1, ..h02.clone() };
+        assert_eq!(h01.cpu_cost_ms(), h02.cpu_cost_ms(), "hybrid0 never scales");
+        // Throughput on a CPU-bound scenario strictly improves.
+        let cold = scen("alexnet", 8, 24, Placement::Cpu, Method::Record);
+        let warm = Scenario { fused_decode: true, ..cold.clone() };
+        assert!(analytic_throughput(&warm) > analytic_throughput(&cold));
+        // And validation rejects bad scales.
+        assert!(Scenario { decode_scale: 3, ..Default::default() }.validate().is_err());
+        assert!(Scenario { decode_scale: 8, ..Default::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn fused_scale_multiplies_cache_capacity_on_the_cpu_path() {
+        let quarter = calib::decoded_dataset_bytes() / 4.0 / 1e9;
+        let base = Scenario {
+            prep_cache_gb: quarter,
+            ..scen("alexnet", 8, 24, Placement::Cpu, Method::Record)
+        };
+        assert!((base.prep_cache_hit() - 0.25).abs() < 1e-9);
+        // 1/2-scale entries: same DRAM holds 4x the samples.
+        let scaled = Scenario { fused_decode: true, decode_scale: 2, ..base.clone() };
+        assert!((scaled.prep_cache_hit() - 1.0).abs() < 1e-9);
+        // hybrid0 entries stay full-res, so nothing changes there.
+        let h0 = Scenario {
+            placement: Placement::Hybrid0,
+            ..scaled.clone()
+        };
+        assert!((h0.prep_cache_hit() - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -7,12 +7,13 @@
 //! the access pattern is identical across epochs, so ranged keys hit).
 //!
 //! Internals: values are `Arc<[u8]>` so a hit is a refcount bump, not a
-//! buffer copy, and a tick-ordered `BTreeMap` index makes eviction
-//! O(log n) instead of a full-map scan under the global mutex.
+//! buffer copy, and the replacement-credit accounting + tick-ordered
+//! O(log n) eviction live in the shared [`ByteLru`] core (also used by
+//! `pipeline/prep_cache.rs`'s lru arm).
 
 use super::Storage;
+use crate::util::bytelru::ByteLru;
 use anyhow::Result;
-use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -22,20 +23,10 @@ enum Key {
     Range(String, u64, u64),
 }
 
-struct Lru {
-    map: HashMap<Key, (Arc<[u8]>, u64)>, // value + last-use tick
-    /// Tick-ordered eviction index (ticks are unique: every get/admit
-    /// takes a fresh one).  First entry = least recently used.
-    by_tick: BTreeMap<u64, Key>,
-    bytes: usize,
-    tick: u64,
-}
-
 /// Byte-budgeted LRU cache wrapper.
 pub struct CachedStore<S: Storage> {
     inner: S,
-    budget: usize,
-    lru: Mutex<Lru>,
+    lru: Mutex<ByteLru<Key, Arc<[u8]>>>,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
 }
@@ -44,13 +35,7 @@ impl<S: Storage> CachedStore<S> {
     pub fn new(inner: S, budget_bytes: usize) -> Self {
         CachedStore {
             inner,
-            budget: budget_bytes,
-            lru: Mutex::new(Lru {
-                map: HashMap::new(),
-                by_tick: BTreeMap::new(),
-                bytes: 0,
-                tick: 0,
-            }),
+            lru: Mutex::new(ByteLru::new(budget_bytes)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -67,32 +52,20 @@ impl<S: Storage> CachedStore<S> {
     }
 
     pub fn cached_bytes(&self) -> usize {
-        self.lru.lock().unwrap().bytes
+        self.lru.lock().unwrap().bytes()
     }
 
     /// Recompute resident bytes from the entries themselves.  The
     /// accounting invariant (`cached_bytes == recount <= budget`) is what
-    /// the property test below drives; a drift means `bytes` went stale.
+    /// the property test below drives; a drift means the charged sizes
+    /// went stale against the values they account for.
     #[cfg(test)]
     fn recount_bytes(&self) -> usize {
-        self.lru.lock().unwrap().map.values().map(|(v, _)| v.len()).sum()
+        self.lru.lock().unwrap().iter().map(|(_, v)| v.len()).sum()
     }
 
     fn get(&self, key: &Key) -> Option<Arc<[u8]>> {
-        let mut guard = self.lru.lock().unwrap();
-        let lru = &mut *guard; // split-borrow map and by_tick
-        lru.tick += 1;
-        let tick = lru.tick;
-        let out = if let Some((v, used)) = lru.map.get_mut(key) {
-            let out = v.clone(); // refcount bump, not a copy
-            let old = std::mem::replace(used, tick);
-            lru.by_tick.remove(&old);
-            lru.by_tick.insert(tick, key.clone());
-            Some(out)
-        } else {
-            None
-        };
-        drop(guard);
+        let out = self.lru.lock().unwrap().get(key).cloned(); // refcount bump
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -101,32 +74,10 @@ impl<S: Storage> CachedStore<S> {
     }
 
     fn admit(&self, key: Key, value: Arc<[u8]>) {
-        if value.len() > self.budget {
-            return; // larger than the whole cache: never admit
-        }
-        let mut lru = self.lru.lock().unwrap();
-        lru.tick += 1;
-        let tick = lru.tick;
-        // Credit the entry being replaced (concurrent misses on one key
-        // race to admit) before sizing the eviction target, so `bytes`
-        // stays exact and the loop below never over-evicts.
-        if let Some((old, old_tick)) = lru.map.remove(&key) {
-            lru.by_tick.remove(&old_tick);
-            lru.bytes -= old.len();
-        }
-        // Evict least-recently-used entries until the value fits.
-        while lru.bytes + value.len() > self.budget {
-            let Some((&victim_tick, _)) = lru.by_tick.iter().next() else {
-                break;
-            };
-            let victim = lru.by_tick.remove(&victim_tick).expect("index entry");
-            if let Some((v, _)) = lru.map.remove(&victim) {
-                lru.bytes -= v.len();
-            }
-        }
-        lru.bytes += value.len();
-        lru.map.insert(key.clone(), (value, tick));
-        lru.by_tick.insert(tick, key);
+        // Replacement credit, eviction, and the oversized-value bypass
+        // are the shared core's contract (see util/bytelru.rs).
+        let size = value.len();
+        self.lru.lock().unwrap().insert(key, value, size);
     }
 }
 

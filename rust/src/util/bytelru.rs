@@ -1,0 +1,198 @@
+//! Shared byte-budgeted LRU core — the invariant that used to live twice
+//! (in `storage/cache.rs` and `pipeline/prep_cache.rs`'s lru arm):
+//!
+//! * **byte accounting is exact**: `bytes` always equals the sum of the
+//!   resident entries' charged sizes, and never exceeds the budget;
+//! * **replacement credits the old entry** before the eviction loop sizes
+//!   its target, so racing admissions of one key neither leak bytes nor
+//!   over-evict neighbors;
+//! * **eviction is O(log n)** via a tick-ordered `BTreeMap` index (ticks
+//!   are unique: every get/insert takes a fresh one), not a map scan.
+//!
+//! The core is single-threaded; callers wrap it in their own `Mutex` and
+//! keep policy-specific concerns (hit counters, admission gates, the
+//! MinIO eviction-free arm) outside.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+struct Entry<V> {
+    value: V,
+    /// Bytes this entry charges against the budget (supplied at insert:
+    /// values know their own size only at the caller's layer).
+    size: usize,
+    /// Last-use tick, the key into the eviction index.
+    tick: u64,
+}
+
+/// Byte-budgeted LRU store keyed by `K`, charging caller-supplied sizes.
+pub struct ByteLru<K, V> {
+    budget: usize,
+    map: HashMap<K, Entry<V>>,
+    by_tick: BTreeMap<u64, K>,
+    bytes: usize,
+    tick: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
+    pub fn new(budget_bytes: usize) -> Self {
+        ByteLru {
+            budget: budget_bytes,
+            map: HashMap::new(),
+            by_tick: BTreeMap::new(),
+            bytes: 0,
+            tick: 0,
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Exact resident byte count (the invariant the property tests drive).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look a key up and refresh its recency (one hash lookup: map and
+    /// index are split-borrowed, as both pre-extraction call sites did).
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let ByteLru { map, by_tick, .. } = self;
+        let e = map.get_mut(key)?;
+        let old = std::mem::replace(&mut e.tick, tick);
+        by_tick.remove(&old);
+        by_tick.insert(tick, key.clone());
+        Some(&e.value)
+    }
+
+    /// Look a key up without touching recency (inspection/tests).
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|e| &e.value)
+    }
+
+    /// Admit `value` charging `size` bytes.  An entry already resident
+    /// under the same key is credited (removed from the accounting)
+    /// *before* the eviction loop sizes its target — replacement only
+    /// needs room for the size delta.  Values larger than the whole
+    /// budget are never admitted.
+    pub fn insert(&mut self, key: K, value: V, size: usize) {
+        if size > self.budget {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(old) = self.map.remove(&key) {
+            self.by_tick.remove(&old.tick);
+            self.bytes -= old.size;
+        }
+        // Evict least-recently-used entries until the value fits.
+        while self.bytes + size > self.budget {
+            let Some((&victim_tick, _)) = self.by_tick.iter().next() else {
+                break;
+            };
+            let victim = self.by_tick.remove(&victim_tick).expect("index entry");
+            if let Some(e) = self.map.remove(&victim) {
+                self.bytes -= e.size;
+            }
+        }
+        self.bytes += size;
+        self.map.insert(key.clone(), Entry { value, size, tick });
+        self.by_tick.insert(tick, key);
+    }
+
+    /// Iterate resident entries (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, e)| (k, &e.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn get_refreshes_recency_and_insert_evicts_lru() {
+        let mut l: ByteLru<u32, &'static str> = ByteLru::new(120);
+        l.insert(1, "a", 60);
+        l.insert(2, "b", 60);
+        assert_eq!(l.get(&1), Some(&"a")); // refresh 1
+        l.insert(3, "c", 60); // evicts 2
+        assert!(l.peek(&2).is_none());
+        assert_eq!(l.peek(&1), Some(&"a"));
+        assert_eq!(l.peek(&3), Some(&"c"));
+        assert_eq!(l.bytes(), 120);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn oversized_values_bypass() {
+        let mut l: ByteLru<u32, ()> = ByteLru::new(100);
+        l.insert(1, (), 101);
+        assert!(l.is_empty());
+        assert_eq!(l.bytes(), 0);
+        assert_eq!(l.budget(), 100);
+    }
+
+    #[test]
+    fn replacement_credits_old_entry_and_does_not_over_evict() {
+        let mut l: ByteLru<u32, u8> = ByteLru::new(120);
+        l.insert(1, 1, 60);
+        l.insert(2, 2, 60); // full: 120/120
+        // Same-size replacement needs no room: 2 must survive.
+        l.insert(1, 9, 60);
+        assert_eq!(l.peek(&2), Some(&2), "neighbor was needlessly evicted");
+        assert_eq!(l.bytes(), 120);
+        // Shrinking replacement frees bytes exactly.
+        l.insert(1, 7, 20);
+        assert_eq!(l.bytes(), 80);
+        // Growing replacement evicts only what the delta requires.
+        l.insert(1, 8, 60);
+        assert_eq!(l.bytes(), 120);
+        assert_eq!(l.peek(&2), Some(&2));
+    }
+
+    #[test]
+    fn prop_accounting_is_exact_under_random_workloads() {
+        // Seeded random insert/get workload with varying sizes: after
+        // every operation, bytes == Σ resident sizes <= budget.
+        let mut rng = Rng::new(0xB17E);
+        for case in 0..50 {
+            let budget = 64 + rng.gen_range(512) as usize;
+            let mut l: ByteLru<u64, usize> = ByteLru::new(budget);
+            let mut sizes: std::collections::HashMap<u64, usize> =
+                std::collections::HashMap::new();
+            for _ in 0..200 {
+                let key = rng.gen_range(12);
+                if rng.bool() {
+                    let size = 1 + rng.gen_range(128) as usize;
+                    l.insert(key, size, size);
+                    if size <= budget {
+                        sizes.insert(key, size);
+                    }
+                } else {
+                    l.get(&key);
+                }
+                // Resident set may be a subset of `sizes` (evictions),
+                // but every resident entry's charge must match and the
+                // totals must reconcile.
+                let recount: usize = l.iter().map(|(_, &s)| s).sum();
+                assert_eq!(l.bytes(), recount, "case {case}");
+                assert!(l.bytes() <= budget, "case {case}");
+                for (k, v) in l.iter() {
+                    assert_eq!(sizes.get(k), Some(v), "case {case}: stale entry");
+                }
+            }
+        }
+    }
+}

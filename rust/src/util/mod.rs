@@ -1,6 +1,7 @@
 //! Self-contained utility substrates (the offline environment ships no
 //! serde / rand / clap — see DESIGN.md "Offline-environment substitutions").
 
+pub mod bytelru;
 pub mod cli;
 pub mod json;
 pub mod rng;

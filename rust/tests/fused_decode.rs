@@ -1,0 +1,193 @@
+//! Acceptance tests for the fused ROI + fractional-scale decode:
+//!
+//! * a seeded property harness asserting that the fused ROI decode is
+//!   **bit-identical** to crop-of-full-decode across random dims, crops
+//!   (block-aligned or not), qualities, and flips — both at the codec
+//!   layer and through the `cpu`-placement pipeline stage;
+//! * the ISSUE's counter-based acceptance: the representative
+//!   RandomResizedCrop (64×64 image, ~0.4-area crop, out_hw = 56) must
+//!   dequant+IDCT ≥2× fewer blocks with `--fused-decode on` vs `off`;
+//! * the sim contract: the calibrated decoded-block fraction agrees with
+//!   the engine's measured plan fraction (within 20%), and the analytic
+//!   decode service time reflects it;
+//! * tolerance checks for the opt-in fractional scale.
+
+use dpp::codec::{self, DecodePlan};
+use dpp::config::Placement;
+use dpp::ops::{self, AugParams};
+use dpp::pipeline::{cpu_stage, cpu_stage_planned, DecodeOpts, Payload};
+use dpp::sim::calib;
+use dpp::testing::{check, PropConfig};
+use dpp::util::rng::Rng;
+
+fn smooth_image(rng: &mut Rng, c: usize, h: usize, w: usize) -> codec::Image {
+    let mut img = codec::Image::new(c, h, w);
+    let fx = rng.uniform(0.02, 0.2);
+    let fy = rng.uniform(0.02, 0.2);
+    let phase = rng.uniform(0.0, 3.0);
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                let v = 128.0
+                    + 80.0 * ((x as f64 * fx + phase).sin() * (y as f64 * fy).cos())
+                    + 15.0 * ch as f64;
+                img.data[ch * h * w + y * w + x] = v.clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+    img
+}
+
+/// ROI parity, codec layer: fused full-scale decode == the same window
+/// of the full decode, bit for bit, for arbitrary non-aligned crops.
+#[test]
+fn prop_roi_decode_is_bitwise_crop_of_full_decode() {
+    check(
+        "roi-decode-parity",
+        PropConfig { cases: 40, ..Default::default() },
+        |rng, size| {
+            // Dims are 8-aligned (codec requirement), 16..=64 px.
+            let h = 8 * (2 + rng.gen_range(1 + 6 * size as u64 / 100) as usize).min(8);
+            let w = 8 * (2 + rng.gen_range(1 + 6 * size as u64 / 100) as usize).min(8);
+            let c = if rng.bool() { 3 } else { 1 };
+            let quality = 20 + rng.gen_range(80) as u8;
+            // Arbitrary (non-block-aligned) crop inside the image.
+            let ch = 1 + rng.gen_range(h as u64) as usize;
+            let cw = 1 + rng.gen_range(w as u64) as usize;
+            let y0 = rng.gen_range((h - ch + 1) as u64) as usize;
+            let x0 = rng.gen_range((w - cw + 1) as u64) as usize;
+            let seed = rng.next_u32() as u64;
+            (c, h, w, quality, (y0, x0, ch, cw), seed)
+        },
+        |&(c, h, w, quality, crop, seed)| {
+            let img = smooth_image(&mut Rng::new(seed), c, h, w);
+            let bytes = codec::encode(&img, quality).unwrap();
+            let full = codec::decode_cpu(&bytes).unwrap();
+            let plan = DecodePlan::new(c, h, w, crop, 56, 0);
+            let (roi, stats) = codec::decode_cpu_planned(&bytes, &plan).unwrap();
+            let (oy, ox) = plan.origin();
+            for ch in 0..c {
+                for y in 0..roi.h {
+                    for x in 0..roi.w {
+                        if roi.pixel(ch, y, x) != full.pixel(ch, oy + y, ox + x) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            stats.blocks_idct + stats.blocks_skipped == (c * (h / 8) * (w / 8)) as u64
+        },
+    );
+}
+
+/// ROI parity, pipeline layer: the fused `cpu` stage produces the exact
+/// f32 tensor of the full stage (decode + view-augment bit-identity
+/// composed), for sampled RandomResizedCrop params.
+#[test]
+fn prop_fused_cpu_stage_matches_full_stage_bitwise() {
+    check(
+        "fused-cpu-stage-parity",
+        PropConfig { cases: 30, ..Default::default() },
+        |rng, _| {
+            let seed = rng.next_u32() as u64;
+            let aug_seed = rng.next_u32() as u64;
+            (seed, aug_seed)
+        },
+        |&(seed, aug_seed)| {
+            let img = smooth_image(&mut Rng::new(seed), 3, 64, 64);
+            let bytes = codec::encode(&img, 85).unwrap();
+            let aug = ops::sample_aug_params(&mut Rng::new(aug_seed), 64, 64);
+            let full = cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap();
+            let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
+            let (fused, _) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts).unwrap();
+            match (full, fused) {
+                (Payload::Ready(a), Payload::Ready(b)) => a == b,
+                _ => false,
+            }
+        },
+    );
+}
+
+/// The ISSUE acceptance: representative RandomResizedCrop (64×64 image,
+/// ~0.4-area crop = 40×40, out 56) does ≥2× fewer dequant+IDCT block
+/// operations fused vs full.
+#[test]
+fn fused_decode_halves_block_operations_on_representative_crop() {
+    let img = smooth_image(&mut Rng::new(3), 3, 64, 64);
+    let bytes = codec::encode(&img, 85).unwrap();
+    let aug = AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: true };
+    let opts_on = DecodeOpts { fused: true, max_scale_log2: 0 };
+    let (_, on) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts_on).unwrap();
+    let (_, off) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &DecodeOpts::off()).unwrap();
+    assert_eq!(off.blocks_idct, 3 * 64);
+    assert_eq!(on.blocks_idct, 3 * 25, "40x40 at the origin covers 5x5 blocks");
+    assert!(
+        on.blocks_idct * 2 <= off.blocks_idct,
+        "fused {} vs full {}: must be >= 2x fewer",
+        on.blocks_idct,
+        off.blocks_idct
+    );
+    assert_eq!(on.blocks_idct + on.blocks_skipped, off.blocks_idct);
+}
+
+/// Sim contract: the calibrated block fraction tracks the engine's mean
+/// planned fraction under the real aug distribution within 20%, and the
+/// analytic CPU service time thins by exactly the calibrated amount.
+#[test]
+fn sim_decode_service_time_reflects_measured_block_fraction() {
+    let mut rng = Rng::new(0xB10C);
+    let n = 2000;
+    let mut sum = 0.0;
+    for _ in 0..n {
+        let aug = ops::sample_aug_params(&mut rng, 64, 64);
+        let crop =
+            (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
+        sum += DecodePlan::new(3, 64, 64, crop, 56, 0).block_fraction();
+    }
+    let measured = sum / n as f64;
+    let rel = (calib::FUSED_BLOCK_FRACTION - measured).abs() / measured;
+    assert!(
+        rel < 0.20,
+        "calibrated fraction {} vs measured {measured:.3} ({rel:.3})",
+        calib::FUSED_BLOCK_FRACTION
+    );
+    // Analytic model: fused thins the cpu cost by SHARE_XFORM*(1-frac).
+    let base = dpp::sim::Scenario {
+        model: "alexnet".into(),
+        placement: Placement::Cpu,
+        ..Default::default()
+    };
+    let fused = dpp::sim::Scenario { fused_decode: true, ..base.clone() };
+    let saved = base.cpu_cost_ms() - fused.cpu_cost_ms();
+    let want = calib::SHARE_XFORM * (1.0 - calib::FUSED_BLOCK_FRACTION) * calib::CPU_PREPROC_MS;
+    assert!((saved - want).abs() < 1e-9, "saved {saved} want {want}");
+}
+
+/// The opt-in fractional scale: tolerance-checked against the full-path
+/// output (never bit-checked — it is a quality trade-off), and the
+/// scaled path must actually engage when the geometry allows it.
+#[test]
+fn fractional_scale_stays_within_tolerance_of_full_path() {
+    let mut worst: f32 = 0.0;
+    for seed in 0..8u64 {
+        let img = smooth_image(&mut Rng::new(100 + seed), 3, 64, 64);
+        let bytes = codec::encode(&img, 95).unwrap();
+        // A 32x32 crop feeding a 16x16 output allows 1/2 scale.
+        let aug = AugParams { y0: 8, x0: 16, crop_h: 32, crop_w: 32, flip: seed % 2 == 0 };
+        let full = cpu_stage(&bytes, Placement::Cpu, aug, 16).unwrap();
+        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
+        let (scaled, stats) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 16, &opts).unwrap();
+        assert_eq!(stats.scale_log2, 1, "1/2 scale must engage");
+        let (Payload::Ready(a), Payload::Ready(b)) = (full, scaled) else { panic!() };
+        assert_eq!(a.len(), b.len());
+        // Outputs are ImageNet-normalized (std ≈ 57..64 pixel levels):
+        // a mean abs error of 0.15 is ≈ 9 pixel levels — the half-band
+        // resample against smooth content sits well inside that.
+        let mae: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        worst = worst.max(mae);
+        assert!(mae < 0.15, "seed {seed}: mean abs error {mae}");
+    }
+    // The comparison is not vacuous: the paths genuinely differ.
+    assert!(worst > 0.0, "scaled path should not be bit-identical");
+}
