@@ -70,12 +70,14 @@ fn main() {
         rx.recv().unwrap()
     })
     .print();
-    b.run("cpu_stage hybrid (entropy only)", || {
-        dpp::pipeline::cpu_stage(&payloads[0], dpp::config::Placement::Hybrid, aug, 56).unwrap()
+    let hybrid_ctx = dpp::pipeline::StageCtx::new(dpp::config::Placement::Hybrid, 56);
+    b.run("run_stage hybrid (entropy only)", || {
+        hybrid_ctx.run_stage(&payloads[0], 0, aug).unwrap()
     })
     .print_rate(1.0, "img");
-    b.run("cpu_stage cpu (full decode+augment)", || {
-        dpp::pipeline::cpu_stage(&payloads[0], dpp::config::Placement::Cpu, aug, 56).unwrap()
+    let cpu_ctx = dpp::pipeline::StageCtx::new(dpp::config::Placement::Cpu, 56);
+    b.run("run_stage cpu (full decode+augment)", || {
+        cpu_ctx.run_stage(&payloads[0], 0, aug).unwrap()
     })
     .print_rate(1.0, "img");
 

@@ -164,6 +164,39 @@ pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
     Ok(out)
 }
 
+/// `--workers auto` as a sweepable axis: the vCPU count the elastic
+/// executor's controller would converge to for this (model × instance ×
+/// placement × storage) cell — i.e. the fixed point of
+/// [`Scenario::autoscale_workers`] over the instance's full vCPU range.
+///
+/// This is the static answer to the question the explicit vCPU sweep in
+/// [`enumerate`] answers empirically (the fewest vCPUs that keep the
+/// device fed); the cross-check test below asserts the two agree within
+/// one sweep step, so the online controller and the offline
+/// configurator cannot silently recommend different resource levels.
+pub fn auto_vcpus(
+    model: &str,
+    inst: &Instance,
+    placement: Placement,
+    storage: &str,
+    net_conns: usize,
+) -> Result<usize> {
+    calib::model(model).with_context(|| format!("unknown model {model}"))?;
+    let s = Scenario {
+        model: model.to_string(),
+        gpus: inst.gpus,
+        vcpus: inst.max_vcpus,
+        method: Method::Record,
+        placement,
+        storage: storage.to_string(),
+        net_conns: net_conns.max(1),
+        p3dn: inst.p3dn,
+        ..Default::default()
+    };
+    s.validate()?;
+    Ok(s.autoscale_workers(1, inst.max_vcpus))
+}
+
 /// Best configuration for the model under the objective and a $/h budget.
 pub fn recommend(model: &str, objective: Objective, budget_per_hour: f64) -> Result<Recommendation> {
     let mut cands: Vec<Candidate> = enumerate(model)?
@@ -327,6 +360,53 @@ mod tests {
             })
             .collect();
         assert_eq!(p32.len(), 1 + 2 * PREP_CACHE_GB_SWEEP.len());
+    }
+
+    /// `--workers auto` cross-check: the controller's fixed point must
+    /// agree with the explicit vCPU sweep — the smallest swept count
+    /// reaching ≥99% of the instance's peak — within one 2-vCPU step.
+    #[test]
+    fn auto_axis_agrees_with_explicit_worker_sweep() {
+        let inst = CATALOG.iter().find(|i| i.name == "V100-8").unwrap();
+        for (model, placement) in [
+            ("resnet50", Placement::Hybrid),
+            ("resnet50", Placement::Cpu),
+            ("resnet18", Placement::Hybrid),
+            ("resnet152", Placement::Hybrid),
+        ] {
+            let auto = auto_vcpus(model, inst, placement, "ebs", 0).unwrap();
+            // Explicit sweep over the same cell (no cache, no fused —
+            // the axes auto_vcpus holds at Scenario defaults).
+            let cands = enumerate(model).unwrap();
+            let slice: Vec<&Candidate> = cands
+                .iter()
+                .filter(|c| {
+                    c.instance == inst.name
+                        && c.placement == placement
+                        && c.storage == "ebs"
+                        && c.prep_cache_gb == 0.0
+                        && !c.fused_decode
+                })
+                .collect();
+            let peak = slice
+                .iter()
+                .map(|c| c.throughput_ips)
+                .fold(0.0f64, f64::max);
+            let swept = slice
+                .iter()
+                .filter(|c| c.throughput_ips >= 0.99 * peak)
+                .map(|c| c.vcpus)
+                .min()
+                .unwrap();
+            let diff = auto.abs_diff(swept);
+            assert!(
+                diff <= 2,
+                "{model}/{placement:?}: auto fixed point {auto} vs swept optimum {swept}"
+            );
+        }
+        // Unknown model / storage fail loudly.
+        assert!(auto_vcpus("vgg", inst, Placement::Hybrid, "ebs", 0).is_err());
+        assert!(auto_vcpus("resnet50", inst, Placement::Hybrid, "tape", 0).is_err());
     }
 
     #[test]

@@ -326,6 +326,19 @@ pub fn fig5() -> Result<()> {
     );
     println!("  saturation: cold @ {sat_cold} vCPU, warm @ {sat_warm} vCPU — the decoded cache \
               substitutes DRAM for decode vCPUs");
+
+    // Extension: the elastic executor's `--workers auto` fixed point is
+    // exactly the saturation knee these sweeps find by hand — the
+    // controller discovers Fig. 5's answer online instead of sweeping.
+    let fp = scen("alexnet", 4, 64, Method::Record, Placement::Hybrid).autoscale_workers(1, 64);
+    println!(
+        "  elastic `--workers auto` fixed point (alexnet, 4 GPU, hybrid): {fp} vCPU \
+         (paper's Fig. 5a saturation: 24)"
+    );
+    anyhow::ensure!(
+        (20..=28).contains(&fp),
+        "auto fixed point {fp} strayed from the Fig. 5a saturation knee"
+    );
     Ok(())
 }
 

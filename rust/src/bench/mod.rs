@@ -5,5 +5,6 @@
 pub mod decode;
 pub mod figures;
 pub mod harness;
+pub mod workers;
 
 pub use harness::Bencher;

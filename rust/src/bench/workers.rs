@@ -1,0 +1,152 @@
+//! `dpp bench workers` — fixed-vs-auto worker sweep (CI smoke).
+//!
+//! A fig-5-style row per storage tier: end-to-end throughput with fixed
+//! pools of 1/2/4/8 workers next to what `--workers auto` converges to
+//! (the controller's analytic fixed point, `Scenario::autoscale_workers`).
+//! Everything comes out of the calibrated analytic model, so the bench
+//! is deterministic — CI asserts the *shape* (auto matches the best
+//! fixed point without over-provisioning) and never a wall clock.
+//! Writes the rows as JSON (`BENCH_workers.json`) for the CI artifact.
+
+use crate::config::Placement;
+use crate::sim::{analytic_throughput, Scenario};
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// Fixed pool sizes swept per tier (the fig-5 x-axis, engine scale).
+pub const FIXED_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// One tier's sweep row.
+pub struct WorkersBenchRow {
+    pub storage: &'static str,
+    /// `(workers, img/s)` for each fixed pool size.
+    pub fixed: Vec<(usize, f64)>,
+    /// Worker count `auto` converges to (fixed point, capped at 8).
+    pub auto_workers: usize,
+    pub auto_ips: f64,
+}
+
+impl WorkersBenchRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("storage", Json::str(self.storage)),
+            (
+                "fixed",
+                Json::arr(self.fixed.iter().map(|(w, t)| {
+                    Json::obj(vec![
+                        ("workers", Json::num(*w as f64)),
+                        ("ips", Json::num(*t)),
+                    ])
+                })),
+            ),
+            ("auto_workers", Json::num(self.auto_workers as f64)),
+            ("auto_ips", Json::num(self.auto_ips)),
+        ])
+    }
+}
+
+/// Run the sweep; optionally write `BENCH_workers.json` to `out`.
+///
+/// The scenario is a fast data consumer (AlexNet, cpu placement) on one
+/// GPU, where the pool genuinely binds: on the fast tiers the sweep is
+/// still rising at 8 workers (prep-bound — `auto` pegs at the cap),
+/// while the cold remote tier's GET rate caps the pipeline first
+/// (`auto` parks below the cap at the storage match point).
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    let (min_w, max_w) = (1usize, *FIXED_SWEEP.last().unwrap());
+    let mk = |storage: &str, vcpus: usize| Scenario {
+        model: "alexnet".into(),
+        gpus: 1,
+        vcpus,
+        placement: Placement::Cpu,
+        storage: storage.into(),
+        net_conns: 8,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    println!("== workers sweep (alexnet, 1 GPU, record-cpu, img/s) ==");
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>9}  {:>12}",
+        "storage", "w=1", "w=2", "w=4", "w=8", "auto"
+    );
+    for storage in ["ebs", "dram", "s3", "s3-cold"] {
+        let fixed: Vec<(usize, f64)> = FIXED_SWEEP
+            .iter()
+            .map(|&w| (w, analytic_throughput(&mk(storage, w))))
+            .collect();
+        let auto_workers = mk(storage, max_w).autoscale_workers(min_w, max_w);
+        let auto_ips = analytic_throughput(&mk(storage, auto_workers));
+        println!(
+            "{:<8} {:>9.0} {:>9.0} {:>9.0} {:>9.0}  {:>6.0} (w={})",
+            storage,
+            fixed[0].1,
+            fixed[1].1,
+            fixed[2].1,
+            fixed[3].1,
+            auto_ips,
+            auto_workers
+        );
+        let best_fixed = fixed.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+        // The acceptance gates are model-based, so CI cannot flake:
+        // auto must keep the best fixed rate...
+        ensure!(
+            auto_ips >= best_fixed * 0.999,
+            "{storage}: auto ({auto_ips:.0}) below best fixed ({best_fixed:.0})"
+        );
+        // ...without over-provisioning past the smallest fixed count
+        // that already achieves it.
+        let smallest_best = fixed
+            .iter()
+            .filter(|&&(_, t)| t >= best_fixed * 0.999)
+            .map(|&(w, _)| w)
+            .min()
+            .unwrap();
+        ensure!(
+            auto_workers <= smallest_best,
+            "{storage}: auto parked at {auto_workers} > fixed optimum {smallest_best}"
+        );
+        rows.push(WorkersBenchRow { storage, fixed, auto_workers, auto_ips });
+    }
+    // Cross-tier shape: on at least one tier the sweep is still rising
+    // at 8 workers (prep-bound — auto pegs at the cap), and on at least
+    // one other it flattens early (auto parks below the cap).
+    ensure!(
+        rows.iter().any(|r| r.auto_workers == max_w)
+            && rows.iter().any(|r| r.auto_workers < max_w),
+        "sweep shape lost: every tier converged to the same pool size"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("workers")),
+        ("scenario", Json::str("alexnet x1 GPU record-cpu")),
+        (
+            "fixed_sweep",
+            Json::arr(FIXED_SWEEP.iter().map(|&w| Json::num(w as f64))),
+        ),
+        ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_bench_shape_holds_without_io() {
+        // The same gates `dpp bench workers` enforces, minus the file.
+        let json = run(None).unwrap();
+        let dump = json.dump();
+        assert!(dump.contains("\"bench\":\"workers\""));
+        assert!(dump.contains("\"auto_workers\""));
+        // Every swept tier produced a row.
+        for tier in ["ebs", "dram", "s3", "s3-cold"] {
+            assert!(dump.contains(&format!("\"storage\":\"{tier}\"")), "{tier} row missing");
+        }
+    }
+}

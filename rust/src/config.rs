@@ -141,8 +141,20 @@ pub struct RunConfig {
     pub time_scale: f64,
     pub model: String,
     pub batch_size: usize,
-    /// CPU worker threads for read+decode+augment.
+    /// CPU worker threads for read+decode+augment (`--workers N`): the
+    /// fixed pool size, or the starting point ignored under `--workers
+    /// auto` (the elastic executor starts at `workers_min`).
     pub cpu_workers: usize,
+    /// `--workers auto`: let the elastic executor scale the pool between
+    /// `workers_min` and `workers_max` from live backpressure signals.
+    pub workers_auto: bool,
+    /// Elastic pool floor (`--workers-min`).
+    pub workers_min: usize,
+    /// Elastic pool ceiling (`--workers-max`) — also sizes the work
+    /// queue, which belongs to the executor.
+    pub workers_max: usize,
+    /// Autoscale controller decision period, seconds (`--workers-interval`).
+    pub workers_interval_secs: f64,
     /// Bounded queue depth, in batches, between stages (prefetch depth).
     pub queue_depth: usize,
     /// Stop after this many train steps (0 = run exactly one epoch).
@@ -197,6 +209,10 @@ impl Default for RunConfig {
             model: "resnet_t".into(),
             batch_size: 32,
             cpu_workers: 2,
+            workers_auto: false,
+            workers_min: 1,
+            workers_max: 8,
+            workers_interval_secs: 0.2,
             queue_depth: 4,
             steps: 0,
             lr: 0.05,
@@ -228,12 +244,69 @@ impl RunConfig {
         names
     }
 
+    /// The boolean (value-less) flags among [`Self::accepted_flags`].
+    pub fn boolean_flags() -> &'static [&'static str] {
+        &["ideal", "no-train"]
+    }
+
+    /// Every CLI key the `run` subcommand accepts — options and boolean
+    /// flags alike.  `apply_args` rejects anything outside this list, so
+    /// a new `args.get("...")` in `apply_args` *must* be registered here
+    /// (or it is dead on arrival at runtime), and the help-drift test
+    /// requires every registered flag to appear in `dpp::CLI_HELP` — the
+    /// two together keep code, list, and docs from diverging.
+    pub fn accepted_flags() -> &'static [&'static str] {
+        &[
+            "data-dir",
+            "artifacts",
+            "method",
+            "placement",
+            "storage",
+            "model",
+            "time-scale",
+            "batch",
+            "workers",
+            "workers-min",
+            "workers-max",
+            "workers-interval",
+            "queue-depth",
+            "steps",
+            "lr",
+            "seed",
+            "epochs",
+            "cache-mb",
+            "prep-cache-mb",
+            "prep-cache-policy",
+            "net-conns",
+            "readahead-mb",
+            "fused-decode",
+            "decode-scale",
+            "ideal",
+            "no-train",
+            // Consumed by the `run` driver (report export), not RunConfig.
+            "report-json",
+        ]
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.batch_size == 0 {
             bail!("batch_size must be > 0");
         }
         if self.cpu_workers == 0 {
             bail!("cpu_workers must be > 0");
+        }
+        if self.workers_min == 0 {
+            bail!("workers_min must be > 0");
+        }
+        if self.workers_max < self.workers_min {
+            bail!(
+                "workers_max ({}) must be >= workers_min ({})",
+                self.workers_max,
+                self.workers_min
+            );
+        }
+        if !(self.workers_interval_secs > 0.0) {
+            bail!("workers-interval must be > 0 seconds");
         }
         if self.epochs == 0 {
             bail!("epochs must be >= 1");
@@ -255,7 +328,31 @@ impl RunConfig {
     }
 
     /// Apply CLI overrides (--model, --method, --placement, ...).
+    /// Unknown keys are rejected up front — typos fail loudly instead of
+    /// silently running the default configuration.
     pub fn apply_args(&mut self, args: &crate::util::cli::Args) -> Result<()> {
+        let accepted = Self::accepted_flags();
+        let boolean = Self::boolean_flags();
+        for key in args.options.keys().map(String::as_str) {
+            if !accepted.contains(&key) {
+                bail!("unknown flag --{key} (see `dpp --help` for the run flags)");
+            }
+            if boolean.contains(&key) {
+                bail!("--{key} takes no value");
+            }
+        }
+        for key in args.flags.iter().map(String::as_str) {
+            if !accepted.contains(&key) {
+                bail!("unknown flag --{key} (see `dpp --help` for the run flags)");
+            }
+            // A value-taking key that parsed as a bare flag means the
+            // value was forgotten (`--steps --no-train`): without this
+            // check it would silently run on the default, exactly what
+            // the loud-failure contract above exists to prevent.
+            if !boolean.contains(&key) {
+                bail!("--{key} requires a value");
+            }
+        }
         if let Some(v) = args.get("data-dir") {
             self.data_dir = PathBuf::from(v);
         }
@@ -274,21 +371,49 @@ impl RunConfig {
         if let Some(v) = args.get("model") {
             self.model = v.to_string();
         }
-        self.time_scale = args.get_f64("time-scale", self.time_scale);
-        self.batch_size = args.get_usize("batch", self.batch_size);
-        self.cpu_workers = args.get_usize("workers", self.cpu_workers);
-        self.queue_depth = args.get_usize("queue-depth", self.queue_depth);
-        self.steps = args.get_usize("steps", self.steps);
-        self.lr = args.get_f64("lr", self.lr as f64) as f32;
-        self.seed = args.get_u64("seed", self.seed);
-        self.epochs = args.get_usize("epochs", self.epochs).max(1);
-        self.cache_mb = args.get_usize("cache-mb", self.cache_mb);
-        self.prep_cache_mb = args.get_usize("prep-cache-mb", self.prep_cache_mb);
+        // Strict numeric parsing: a malformed value (`--workers-max 1O`)
+        // must fail loudly, not silently fall back to the default — the
+        // same contract as the unknown-flag rejection above.
+        fn num<T: std::str::FromStr>(
+            args: &crate::util::cli::Args,
+            key: &str,
+            cur: T,
+        ) -> Result<T> {
+            match args.get(key) {
+                None => Ok(cur),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{key}: expected a number, got {v:?}")),
+            }
+        }
+        self.time_scale = num(args, "time-scale", self.time_scale)?;
+        self.batch_size = num(args, "batch", self.batch_size)?;
+        if let Some(v) = args.get("workers") {
+            if v == "auto" {
+                self.workers_auto = true;
+            } else {
+                self.cpu_workers = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("workers must be auto|N, got {v}"))?;
+                self.workers_auto = false;
+            }
+        }
+        self.workers_min = num(args, "workers-min", self.workers_min)?;
+        self.workers_max = num(args, "workers-max", self.workers_max)?;
+        self.workers_interval_secs =
+            num(args, "workers-interval", self.workers_interval_secs)?;
+        self.queue_depth = num(args, "queue-depth", self.queue_depth)?;
+        self.steps = num(args, "steps", self.steps)?;
+        self.lr = num(args, "lr", self.lr as f64)? as f32;
+        self.seed = num(args, "seed", self.seed)?;
+        self.epochs = num(args, "epochs", self.epochs)?.max(1);
+        self.cache_mb = num(args, "cache-mb", self.cache_mb)?;
+        self.prep_cache_mb = num(args, "prep-cache-mb", self.prep_cache_mb)?;
         if let Some(v) = args.get("prep-cache-policy") {
             self.prep_cache_policy = PrepCachePolicy::parse(v)?;
         }
-        self.net_conns = args.get_usize("net-conns", self.net_conns);
-        self.readahead_mb = args.get_usize("readahead-mb", self.readahead_mb);
+        self.net_conns = num(args, "net-conns", self.net_conns)?;
+        self.readahead_mb = num(args, "readahead-mb", self.readahead_mb)?;
         if let Some(v) = args.get("fused-decode") {
             self.fused_decode = match v {
                 "on" | "true" => true,
@@ -319,6 +444,10 @@ impl RunConfig {
             ("model", Json::str(&self.model)),
             ("batch_size", Json::num(self.batch_size as f64)),
             ("cpu_workers", Json::num(self.cpu_workers as f64)),
+            ("workers_auto", Json::Bool(self.workers_auto)),
+            ("workers_min", Json::num(self.workers_min as f64)),
+            ("workers_max", Json::num(self.workers_max as f64)),
+            ("workers_interval_secs", Json::num(self.workers_interval_secs)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("steps", Json::num(self.steps as f64)),
             ("lr", Json::num(self.lr as f64)),
@@ -497,6 +626,120 @@ mod tests {
         let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
         assert_eq!(parsed.req("fused_decode").as_bool(), Some(false));
         assert_eq!(parsed.req("decode_scale").as_str(), Some("4"));
+    }
+
+    #[test]
+    fn elastic_worker_flags_parse_validate_and_roundtrip() {
+        let cfg = RunConfig::default();
+        assert!(!cfg.workers_auto);
+        assert_eq!((cfg.workers_min, cfg.workers_max), (1, 8));
+        assert!(cfg.workers_interval_secs > 0.0);
+        // `--workers N` pins a fixed pool; `--workers auto` frees it.
+        let mut cfg = RunConfig::default();
+        let args = Args::parse("run --workers 6".split_whitespace().map(String::from));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.cpu_workers, 6);
+        assert!(!cfg.workers_auto);
+        let args = Args::parse(
+            "run --workers auto --workers-min 2 --workers-max 12 --workers-interval 0.1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.workers_auto);
+        assert_eq!((cfg.workers_min, cfg.workers_max), (2, 12));
+        assert_eq!(cfg.workers_interval_secs, 0.1);
+        // Garbage worker counts are rejected, not silently defaulted.
+        let mut bad = RunConfig::default();
+        let args = Args::parse("run --workers many".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
+        // Inverted bounds and zero interval fail validation.
+        let bad = RunConfig { workers_min: 4, workers_max: 2, ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = RunConfig { workers_min: 0, ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = RunConfig { workers_interval_secs: 0.0, ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        // JSON round-trip carries the elastic fields.
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("workers_auto").as_bool(), Some(true));
+        assert_eq!(parsed.req("workers_min").as_usize(), Some(2));
+        assert_eq!(parsed.req("workers_max").as_usize(), Some(12));
+        assert_eq!(parsed.req("workers_interval_secs").as_f64(), Some(0.1));
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        for bad in ["run --workerz 3", "run --trace", "run --prep-cache 64"] {
+            let mut cfg = RunConfig::default();
+            let args = Args::parse(bad.split_whitespace().map(String::from));
+            let err = cfg.apply_args(&args).unwrap_err().to_string();
+            assert!(err.contains("unknown flag"), "{bad}: {err}");
+        }
+        // A value-taking key with its value forgotten parses as a bare
+        // flag — it must fail loudly, not silently run on the default.
+        for bad in ["run --steps --no-train", "run --workers", "run --seed --ideal"] {
+            let mut cfg = RunConfig::default();
+            let args = Args::parse(bad.split_whitespace().map(String::from));
+            let err = cfg.apply_args(&args).unwrap_err().to_string();
+            assert!(err.contains("requires a value"), "{bad}: {err}");
+        }
+        // And the converse: boolean flags take no value.
+        let mut cfg = RunConfig::default();
+        let args = Args::parse("run --ideal yes".split_whitespace().map(String::from));
+        let err = cfg.apply_args(&args).unwrap_err().to_string();
+        assert!(err.contains("takes no value"), "{err}");
+        // Malformed numeric values fail loudly too — never a silent
+        // fallback to the default.
+        for bad in [
+            "run --workers-max 1O",
+            "run --workers-interval 0,5",
+            "run --batch x",
+            "run --seed 1e3",
+        ] {
+            let mut cfg = RunConfig::default();
+            let args = Args::parse(bad.split_whitespace().map(String::from));
+            let err = cfg.apply_args(&args).unwrap_err().to_string();
+            assert!(err.contains("expected a number"), "{bad}: {err}");
+        }
+    }
+
+    /// The help-vs-`apply_args` drift gate: every flag `apply_args`
+    /// accepts must be documented in `dpp --help`.  Combined with
+    /// `apply_args`' unknown-flag rejection (which forces new keys into
+    /// `accepted_flags`), code, flag list, and help cannot diverge.
+    #[test]
+    fn every_accepted_run_flag_is_documented_in_help() {
+        for flag in RunConfig::accepted_flags() {
+            // Delimited match: a bare substring would let `--workers` be
+            // "documented" by the `--workers-min` line alone.
+            let documented = [" ", "]", "\n"]
+                .iter()
+                .any(|d| crate::CLI_HELP.contains(&format!("--{flag}{d}")));
+            assert!(
+                documented,
+                "--{flag} accepted by apply_args but missing from CLI_HELP"
+            );
+        }
+        // Boolean flags must be registered as accepted too.
+        for flag in RunConfig::boolean_flags() {
+            assert!(RunConfig::accepted_flags().contains(flag));
+        }
+        // And every documented run flag parses without an unknown-flag
+        // error when given a plausible value (spot checks).
+        for (flag, val) in [
+            ("workers", "auto"),
+            ("workers-min", "1"),
+            ("workers-max", "4"),
+            ("workers-interval", "0.5"),
+            ("queue-depth", "2"),
+            ("report-json", "/tmp/r.json"),
+        ] {
+            let mut cfg = RunConfig::default();
+            let args =
+                Args::parse(format!("run --{flag} {val}").split_whitespace().map(String::from));
+            cfg.apply_args(&args).unwrap_or_else(|e| panic!("--{flag} {val}: {e}"));
+        }
     }
 
     #[test]

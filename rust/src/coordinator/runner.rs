@@ -5,13 +5,11 @@ use crate::dataset::{self, GenConfig, MetaEntry};
 use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, ScaleHist, UtilSampler};
 use crate::ops::sample_aug_params;
 use crate::pipeline::channel::{bounded, Receiver};
+use crate::pipeline::exec::{self, ExecConfig};
 use crate::pipeline::prep_cache::PrepCache;
 use crate::pipeline::shuffle::ShuffleBuffer;
 use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
-use crate::pipeline::{
-    collate, cpu_stage_admitting_planned, cpu_stage_cached, cpu_stage_planned, Batch,
-    DecodeOpts, Payload, Sample,
-};
+use crate::pipeline::{collate, Batch, Payload, Sample, StageCtx};
 use crate::runtime::{lit_f32, Engine};
 use crate::storage::{
     CachedStore, DirStore, MemStore, NetProfile, PrefetchPlan, RemoteStore, Storage,
@@ -96,11 +94,16 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     ensure!(!meta.is_empty(), "empty dataset at {:?}", cfg.data_dir);
 
     let counters = Arc::new(Counters::default());
-    let cpu_clock = BusyClock::new(cfg.cpu_workers);
+    // The elastic executor owns the pool geometry; a live-denominator
+    // clock keeps cpu_util honest while the pool resizes.
+    let exec_cfg = ExecConfig::from_run_config(cfg);
+    let cpu_clock = if exec_cfg.auto {
+        BusyClock::new_live(exec_cfg.workers_initial)
+    } else {
+        BusyClock::new(exec_cfg.workers_initial)
+    };
     let dev_clock = BusyClock::new(1);
     let epoch_clock = EpochClock::new();
-    // Fused ROI decode policy + the per-scale decode histogram.
-    let decode_opts = DecodeOpts::from_config(cfg);
     let scale_hist = Arc::new(ScaleHist::default());
     // Decoded-sample cache, shared across CPU workers and epochs: epoch
     // N+1 skips read+decode for resident samples (augmentation stays
@@ -108,9 +111,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let prep_cache = (cfg.prep_cache_mb > 0)
         .then(|| Arc::new(PrepCache::new(cfg.prep_cache_mb << 20, cfg.prep_cache_policy)));
 
-    let (work_tx, work_rx) = bounded::<WorkItem>(cfg.cpu_workers * 2 + cfg.batch_size);
+    // Queue bounds: the executor derives the work-queue capacity from
+    // `workers_max` (a live worker count would go stale under
+    // autoscaling); the sample/batch queues stay sized by prefetch depth.
+    let (work_tx, work_rx) = bounded::<WorkItem>(exec_cfg.work_queue_cap(cfg.batch_size));
     let (sample_tx, sample_rx) = bounded::<Sample>(cfg.queue_depth * cfg.batch_size);
     let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_depth.max(1));
+    let (work_probe, sample_probe, batch_probe) =
+        (work_rx.probe(), sample_rx.probe(), batch_rx.probe());
 
     let t0 = Instant::now();
     let mut threads: Vec<std::thread::JoinHandle<Result<()>>> = Vec::new();
@@ -168,6 +176,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                             PrefetchPlan::serial(cfg.record_chunk)
                         };
                         stream_shards_prefetched(storage.clone(), &shards, cfg.record_chunk, plan, |rec| {
+                            // Counted at the actual storage read (the
+                            // record just left the shard stream) — the
+                            // raw path's counterpart lives at the worker
+                            // read; parity is tested in pipeline_e2e.
                             counters.images_read(1);
                             if let Some(evicted) = sb.push(rec) {
                                 let item = WorkItem::Bytes {
@@ -205,103 +217,96 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         })?);
     }
 
-    // ---- cpu workers ------------------------------------------------------
-    for w in 0..cfg.cpu_workers {
-        let cfg = cfg.clone();
+    // ---- cpu workers (elastic pool) ---------------------------------------
+    // One stage closure runs the unified per-sample chain; the executor
+    // owns the threads, the park/unpark gate, and — under `--workers
+    // auto` — the feedback controller that resizes the pool.
+    let pool = {
         let storage = storage.clone();
         let counters = counters.clone();
-        let cpu_clock = cpu_clock.clone();
+        // One shared clock: the stage closure tracks busy time on it,
+        // the executor's controller resizes its live denominator.
+        let stage_clock = cpu_clock.clone();
         let epoch_clock = epoch_clock.clone();
-        let prep_cache = prep_cache.clone();
         let scale_hist = scale_hist.clone();
-        let work_rx = work_rx.clone();
-        let sample_tx = sample_tx.clone();
-        threads.push(std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
-            let out_hw = 56; // manifest.out_hw; validated on the device side
-            while let Some(item) = work_rx.recv() {
-                let (id, label, epoch) = (item.id(), item.label(), item.epoch());
-                // The aug stream forks on (id, epoch): a prep-cache hit in
-                // epoch N+1 samples *fresh* params, and hit/miss paths draw
-                // identical params for the same sample.
-                let mut rng = Rng::new(cfg.seed ^ 0x5EED).fork(id).fork(epoch);
+        let out_hw = 56; // manifest.out_hw; validated on the device side
+        let ctx = StageCtx::from_config(cfg, prep_cache.clone(), out_hw);
+        // The closure lives in every pool worker for the whole run:
+        // capture only the two scalars it needs, not a RunConfig clone.
+        let seed = cfg.seed;
+        let stage = move |item: WorkItem| -> Result<Option<Sample>> {
+            let (id, label, epoch) = (item.id(), item.label(), item.epoch());
+            // The aug stream forks on (id, epoch): a prep-cache hit in
+            // epoch N+1 samples *fresh* params, and hit/miss paths draw
+            // identical params for the same sample.
+            let mut rng = Rng::new(seed ^ 0x5EED).fork(id).fork(epoch);
 
-                // Hit: skip the raw read (raw method) and the decode.
-                if let Some(sample) = prep_cache.as_ref().and_then(|c| c.get(id)) {
-                    // Params are sampled against the *original* dims, so
-                    // the aug stream is the same whether the resident
-                    // pixels are full-res or fractionally scaled.
-                    let aug = sample_aug_params(
-                        &mut rng,
-                        sample.orig_h() as u32,
-                        sample.orig_w() as u32,
-                    );
-                    let payload = cpu_clock
-                        .track(|| cpu_stage_cached(&sample, cfg.placement, aug, out_hw));
-                    counters.decode_skipped(1);
-                    counters.images_decoded(1);
-                    if matches!(cfg.placement, Placement::Cpu) {
-                        counters.images_augmented(1);
-                    }
-                    epoch_clock.mark(epoch as usize);
-                    if sample_tx.send(Sample { id, label, payload }).is_err() {
-                        break;
-                    }
-                    continue;
-                }
-
-                // Keep whichever buffer the arm produced — both views
-                // borrow it as &[u8] with no copy.
-                let (raw_buf, rec_buf);
-                let bytes: &[u8] = match item {
-                    WorkItem::RawRef { path, .. } => {
-                        raw_buf = storage.read(&path)?;
-                        counters.images_read(1);
-                        &raw_buf
-                    }
-                    WorkItem::Bytes { payload, .. } => {
-                        rec_buf = payload;
-                        &rec_buf
-                    }
-                };
-                let (c, h, wid, _q) = crate::codec::probe(bytes)?;
-                ensure!(c == 3, "expected RGB, got {c} channels");
-                let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
-                let (payload, dstats) = cpu_clock.track(|| match &prep_cache {
-                    Some(cache) => cpu_stage_admitting_planned(
-                        bytes,
-                        cfg.placement,
-                        aug,
-                        out_hw,
-                        cache,
-                        id,
-                        &decode_opts,
-                    ),
-                    None => cpu_stage_planned(bytes, cfg.placement, aug, out_hw, &decode_opts),
-                })?;
-                counters.idct_blocks(dstats.blocks_idct);
-                counters.idct_blocks_skipped(dstats.blocks_skipped);
-                // Only decodes that ran a CPU transform enter the scale
-                // histogram — the hybrid entropy-only path decodes
-                // nothing here, and counting it as "full resolution"
-                // would corrupt the realized-scale readout DESIGN.md
-                // tells users to feed back into the sim.
-                if dstats.blocks_idct > 0 {
-                    scale_hist.record(dstats.scale_log2);
-                }
+            // Hit: skip the raw read (raw method) and the decode.
+            if let Some(sample) = ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                // Params are sampled against the *original* dims, so
+                // the aug stream is the same whether the resident
+                // pixels are full-res or fractionally scaled.
+                let aug = sample_aug_params(
+                    &mut rng,
+                    sample.orig_h() as u32,
+                    sample.orig_w() as u32,
+                );
+                let payload = stage_clock.track(|| ctx.run_stage_cached(&sample, aug));
+                counters.decode_skipped(1);
                 counters.images_decoded(1);
-                if matches!(cfg.placement, Placement::Cpu) {
+                if matches!(ctx.placement, Placement::Cpu) {
                     counters.images_augmented(1);
                 }
                 epoch_clock.mark(epoch as usize);
-                if sample_tx.send(Sample { id, label, payload }).is_err() {
-                    break;
-                }
+                return Ok(Some(Sample { id, label, payload }));
             }
-            Ok(())
-        })?);
-    }
-    drop(work_rx);
-    drop(sample_tx);
+
+            // Keep whichever buffer the arm produced — both views
+            // borrow it as &[u8] with no copy.
+            let (raw_buf, rec_buf);
+            let bytes: &[u8] = match item {
+                WorkItem::RawRef { path, .. } => {
+                    raw_buf = storage.read(&path)?;
+                    // `images_read` counts at the actual storage read on
+                    // both paths: here for raw (a prep-cache hit above
+                    // never touches storage), and in the source's stream
+                    // callback for records (shards stream regardless of
+                    // residency).  Raw-vs-record parity over a full
+                    // epoch is asserted in tests/pipeline_e2e.rs.
+                    counters.images_read(1);
+                    &raw_buf
+                }
+                WorkItem::Bytes { payload, .. } => {
+                    rec_buf = payload;
+                    &rec_buf
+                }
+            };
+            // This probe is a few-byte header parse; run_stage re-probes
+            // internally — the accepted price of keeping the chain at
+            // two public entry points (no pre-probed variant).
+            let (c, h, wid, _q) = crate::codec::probe(bytes)?;
+            ensure!(c == 3, "expected RGB, got {c} channels");
+            let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
+            let (payload, dstats) = stage_clock.track(|| ctx.run_stage(bytes, id, aug))?;
+            counters.idct_blocks(dstats.blocks_idct);
+            counters.idct_blocks_skipped(dstats.blocks_skipped);
+            // Only decodes that ran a CPU transform enter the scale
+            // histogram — the hybrid entropy-only path decodes
+            // nothing here, and counting it as "full resolution"
+            // would corrupt the realized-scale readout DESIGN.md
+            // tells users to feed back into the sim.
+            if dstats.blocks_idct > 0 {
+                scale_hist.record(dstats.scale_log2);
+            }
+            counters.images_decoded(1);
+            if matches!(ctx.placement, Placement::Cpu) {
+                counters.images_augmented(1);
+            }
+            epoch_clock.mark(epoch as usize);
+            Ok(Some(Sample { id, label, payload }))
+        };
+        exec::spawn(exec_cfg, work_rx, sample_tx, cpu_clock.clone(), stage)?
+    };
 
     // ---- batcher ----------------------------------------------------------
     {
@@ -371,6 +376,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             Err(_) => bail!("pipeline thread panicked"),
         }
     }
+    // The pool's telemetry is wanted even when a worker was cut off by
+    // an early device stop (an expected close, like the threads above).
+    let pool_out = pool.join();
+    if let Err(e) = pool_out.result {
+        if !device_out.finished_early {
+            return Err(e);
+        }
+    }
 
     let wall = t0.elapsed().as_secs_f64();
     let snap = counters.snapshot();
@@ -397,6 +410,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         idct_blocks_skipped: snap.idct_blocks_skipped,
         decode_scale_hist: scale_hist.snapshot(),
         epoch_secs: epoch_clock.epoch_secs(),
+        images_read: snap.images_read,
+        workers_auto: exec_cfg.auto,
+        workers_final: pool_out.report.workers_final,
+        workers_timeline: pool_out.report.workers_timeline,
+        work_queue_peak: work_probe.stats().occupancy_peak,
+        sample_queue_peak: sample_probe.stats().occupancy_peak,
+        batch_queue_peak: batch_probe.stats().occupancy_peak,
     })
 }
 

@@ -15,6 +15,53 @@
 //! Python never runs on the request path; the `dpp` binary is
 //! self-contained once `make artifacts` has produced the HLO files.
 
+/// The `dpp --help` text.  Lives in the library (not the binary) so the
+/// help-vs-`apply_args` drift test in `config.rs` can assert that every
+/// accepted run flag is documented here.
+pub const CLI_HELP: &str = r#"dpp — data preprocessing pipeline framework
+
+USAGE: dpp <subcommand> [--key value ...]
+
+SUBCOMMANDS
+  gen-data   --data-dir D [--images N] [--classes K] [--quality Q] [--shards S]
+  run        --data-dir D [--model M] [--method raw|record]
+             [--placement cpu|hybrid|hybrid0]
+             [--storage local|ebs|nvme|dram|s3|s3-cold]
+             [--net-conns N] [--readahead-mb M] (remote-tier prefetcher)
+             [--epochs E] [--cache-mb M] (raw-byte DRAM cache)
+             [--prep-cache-mb M] [--prep-cache-policy lru|minio]
+             (decoded-sample cache: epoch >= 2 skips read+decode;
+              minio = eviction-free, shuffle-proof hit rate)
+             [--fused-decode on|off] (default on: entropy-skip blocks
+              outside the crop, IDCT only what training consumes —
+              bit-exact vs full decode on cpu/hybrid0 paths)
+             [--decode-scale auto|1|2|4|8] (default 1: cap on the
+              fractional IDCT scale; auto picks the largest 1/2^k
+              with crop/2^k >= out — a quality trade-off you opt
+              into, tolerance-checked, cpu path only)
+             [--workers auto|N] (elastic CPU-stage pool: auto scales
+              between --workers-min and --workers-max from live
+              backpressure — add on batcher starvation, park on
+              worker starvation/blocking; N pins a fixed pool)
+             [--workers-min A] [--workers-max B] (auto pool bounds)
+             [--workers-interval S] (controller decision period, secs)
+             [--queue-depth Q] [--time-scale T] [--lr R] [--seed S]
+             [--artifacts DIR] [--report-json PATH]
+             [--steps N] [--batch B] [--ideal] [--no-train]
+  sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]
+             [--storage ..] [--net-conns N] [--seconds S]
+             [--prep-cache-gb G] [--prep-cache-policy lru|minio]
+             [--fused-decode on|off] [--decode-scale 1|2|4|8]
+  reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)
+  autoconf   --model M [--objective throughput|cost] [--budget $/h]
+  bench      decode  [--out BENCH_decode.json] (counter-based decode
+             microbench: blocks IDCT'd + ns/image per path)
+  bench      workers [--out BENCH_workers.json] (fig-5-style fixed
+             1/2/4/8 workers vs `auto` per storage tier, analytic
+             model — deterministic, no wall clock)
+  inspect    [--artifacts DIR]
+"#;
+
 pub mod autoconf;
 pub mod bench;
 pub mod codec;

@@ -41,39 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn print_help() {
-    println!(
-        "dpp — data preprocessing pipeline framework\n\
-         \n\
-         USAGE: dpp <subcommand> [--key value ...]\n\
-         \n\
-         SUBCOMMANDS\n\
-           gen-data   --data-dir D [--images N] [--classes K] [--quality Q] [--shards S]\n\
-           run        --data-dir D [--model M] [--method raw|record]\n\
-                      [--placement cpu|hybrid|hybrid0]\n\
-                      [--storage local|ebs|nvme|dram|s3|s3-cold]\n\
-                      [--net-conns N] [--readahead-mb M] (remote-tier prefetcher)\n\
-                      [--epochs E] [--cache-mb M] (raw-byte DRAM cache)\n\
-                      [--prep-cache-mb M] [--prep-cache-policy lru|minio]\n\
-                      (decoded-sample cache: epoch >= 2 skips read+decode;\n\
-                       minio = eviction-free, shuffle-proof hit rate)\n\
-                      [--fused-decode on|off] (default on: entropy-skip blocks\n\
-                       outside the crop, IDCT only what training consumes —\n\
-                       bit-exact vs full decode on cpu/hybrid0 paths)\n\
-                      [--decode-scale auto|1|2|4|8] (default 1: cap on the\n\
-                       fractional IDCT scale; auto picks the largest 1/2^k\n\
-                       with crop/2^k >= out — a quality trade-off you opt\n\
-                       into, tolerance-checked, cpu path only)\n\
-                      [--workers N] [--steps N] [--batch B] [--ideal] [--no-train]\n\
-           sim        --model M [--gpus G] [--vcpus V] [--method ..] [--placement ..]\n\
-                      [--storage ..] [--net-conns N] [--seconds S]\n\
-                      [--prep-cache-gb G] [--prep-cache-policy lru|minio]\n\
-                      [--fused-decode on|off] [--decode-scale 1|2|4|8]\n\
-           reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)\n\
-           autoconf   --model M [--objective throughput|cost] [--budget $/h]\n\
-           bench      decode [--out BENCH_decode.json] (counter-based decode\n\
-                      microbench: blocks IDCT'd + ns/image per path)\n\
-           inspect    [--artifacts DIR]\n"
-    );
+    println!("{}", dpp::CLI_HELP);
 }
 
 fn gen_data(args: &Args) -> Result<()> {
@@ -157,7 +125,12 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::decode::run(Some(&out))?;
             Ok(())
         }
-        other => bail!("bench target must be `decode`, got {other:?}"),
+        Some("workers") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_workers.json"));
+            dpp::bench::workers::run(Some(&out))?;
+            Ok(())
+        }
+        other => bail!("bench target must be `decode` or `workers`, got {other:?}"),
     }
 }
 

@@ -121,16 +121,55 @@ impl Gauge {
 }
 
 /// Busy-time accumulator for a pool of workers (one per resource class).
-/// Utilization over a window = busy_time / (window * n_workers).
+///
+/// Two denominator modes:
+/// * **fixed** ([`BusyClock::new`]) — utilization over a window is
+///   `busy_time / (window * n_workers)`, the historical behavior.
+/// * **live** ([`BusyClock::new_live`], or after any [`set_workers`]
+///   call) — the denominator is the *integral of the live worker count*
+///   (worker-seconds of offered capacity), so `cpu_util` stays honest
+///   while an elastic pool resizes: a pool that ran 10 s at 2 workers
+///   then 10 s at 8 workers offers 100 worker-seconds, not `20 * 8`.
+///
+/// [`set_workers`]: BusyClock::set_workers
 #[derive(Debug)]
 pub struct BusyClock {
     busy_ns: AtomicU64,
+    /// Pool size at creation (the fixed-mode denominator).
     pub workers: usize,
+    cap: std::sync::Mutex<CapState>,
+}
+
+#[derive(Debug)]
+struct CapState {
+    last: Instant,
+    cur: usize,
+    acc_secs: f64,
+    live: bool,
 }
 
 impl BusyClock {
     pub fn new(workers: usize) -> Arc<Self> {
-        Arc::new(BusyClock { busy_ns: AtomicU64::new(0), workers: workers.max(1) })
+        Self::build(workers, false)
+    }
+
+    /// Live-denominator mode from the start (elastic pools).
+    pub fn new_live(workers: usize) -> Arc<Self> {
+        Self::build(workers, true)
+    }
+
+    fn build(workers: usize, live: bool) -> Arc<Self> {
+        let workers = workers.max(1);
+        Arc::new(BusyClock {
+            busy_ns: AtomicU64::new(0),
+            workers,
+            cap: std::sync::Mutex::new(CapState {
+                last: Instant::now(),
+                cur: workers,
+                acc_secs: 0.0,
+                live,
+            }),
+        })
     }
 
     pub fn track<R>(&self, f: impl FnOnce() -> R) -> R {
@@ -148,9 +187,45 @@ impl BusyClock {
         self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
-    /// Mean utilization of the pool over `elapsed` seconds, in [0,1].
+    /// Record a pool resize (switches the clock into live mode): offered
+    /// capacity accrues at the old size up to now, at `n` afterwards.
+    pub fn set_workers(&self, n: usize) {
+        let mut c = self.cap.lock().unwrap();
+        let now = Instant::now();
+        c.acc_secs += c.cur as f64 * now.duration_since(c.last).as_secs_f64();
+        c.last = now;
+        c.cur = n.max(1);
+        c.live = true;
+    }
+
+    /// Pool size right now (== `workers` unless resized).
+    pub fn current_workers(&self) -> usize {
+        self.cap.lock().unwrap().cur
+    }
+
+    /// Worker-seconds of capacity the pool has offered since creation —
+    /// the utilization denominator in live mode, and exactly
+    /// `workers * elapsed` for a never-resized clock.
+    pub fn capacity_secs(&self) -> f64 {
+        let c = self.cap.lock().unwrap();
+        c.acc_secs + c.cur as f64 * c.last.elapsed().as_secs_f64()
+    }
+
+    /// Mean utilization of the pool, in [0,1].  Fixed mode divides by
+    /// `elapsed * workers`; live mode divides by the capacity integral
+    /// (`elapsed` is ignored — the clock carries its own denominator).
     pub fn utilization(&self, elapsed: f64) -> f64 {
-        if elapsed <= 0.0 {
+        let (live, cap) = {
+            let c = self.cap.lock().unwrap();
+            (c.live, c.acc_secs + c.cur as f64 * c.last.elapsed().as_secs_f64())
+        };
+        if live {
+            if cap <= 0.0 {
+                0.0
+            } else {
+                (self.busy_secs() / cap).min(1.0)
+            }
+        } else if elapsed <= 0.0 {
             0.0
         } else {
             (self.busy_secs() / (elapsed * self.workers as f64)).min(1.0)
@@ -203,11 +278,17 @@ pub struct UtilSample {
 }
 
 /// Collects utilization samples by diffing busy clocks + byte counters.
+/// Per-window utilization divides busy-time deltas by *capacity* deltas
+/// (worker-seconds offered in the window), so the trace stays correct
+/// while an elastic pool resizes; for a fixed pool the capacity delta is
+/// exactly `dt * workers`, the historical formula.
 pub struct UtilSampler {
     t0: Instant,
     last_t: f64,
     last_cpu_busy: f64,
     last_dev_busy: f64,
+    last_cpu_cap: f64,
+    last_dev_cap: f64,
     last_bytes: u64,
     pub samples: Vec<UtilSample>,
 }
@@ -219,6 +300,8 @@ impl UtilSampler {
             last_t: 0.0,
             last_cpu_busy: 0.0,
             last_dev_busy: 0.0,
+            last_cpu_cap: 0.0,
+            last_dev_cap: 0.0,
             last_bytes: 0,
             samples: Vec::new(),
         }
@@ -229,15 +312,21 @@ impl UtilSampler {
         let dt = (t - self.last_t).max(1e-9);
         let cpu_busy = cpu.busy_secs();
         let dev_busy = device.busy_secs();
+        let cpu_cap = cpu.capacity_secs();
+        let dev_cap = device.capacity_secs();
         self.samples.push(UtilSample {
             t,
-            cpu: ((cpu_busy - self.last_cpu_busy) / (dt * cpu.workers as f64)).min(1.0),
-            device: ((dev_busy - self.last_dev_busy) / (dt * device.workers as f64)).min(1.0),
+            cpu: ((cpu_busy - self.last_cpu_busy) / (cpu_cap - self.last_cpu_cap).max(1e-9))
+                .min(1.0),
+            device: ((dev_busy - self.last_dev_busy) / (dev_cap - self.last_dev_cap).max(1e-9))
+                .min(1.0),
             io_mbps: (bytes_read - self.last_bytes) as f64 / dt / 1e6,
         });
         self.last_t = t;
         self.last_cpu_busy = cpu_busy;
         self.last_dev_busy = dev_busy;
+        self.last_cpu_cap = cpu_cap;
+        self.last_dev_cap = dev_cap;
         self.last_bytes = bytes_read;
     }
 }
@@ -283,6 +372,24 @@ pub struct RunReport {
     /// Wall-clock per epoch (preprocessing completion times); the
     /// decoded-sample cache should make entries 2+ beat entry 1.
     pub epoch_secs: Vec<f64>,
+    /// Images actually fetched from storage (counted at the read for
+    /// both methods: the record stream callback and the raw worker
+    /// read).  Prep-cache hits under the raw method skip the read, so
+    /// this can run below `images`.
+    pub images_read: u64,
+    /// Whether the run used `--workers auto` (the elastic controller).
+    pub workers_auto: bool,
+    /// CPU-stage pool size when the run ended (the elastic controller's
+    /// converged count; equals `cpu_workers` for fixed pools).
+    pub workers_final: usize,
+    /// Every pool resize as `(secs_since_start, new_worker_count)`,
+    /// starting with the spawn size at t≈0.
+    pub workers_timeline: Vec<(f64, usize)>,
+    /// Occupancy high-water marks of the three pipeline queues
+    /// (work / sample / batch) — did backpressure actually engage?
+    pub work_queue_peak: u64,
+    pub sample_queue_peak: u64,
+    pub batch_queue_peak: u64,
 }
 
 impl RunReport {
@@ -311,6 +418,18 @@ impl RunReport {
                 "epoch_secs",
                 Json::arr(self.epoch_secs.iter().map(|&s| Json::num(s))),
             ),
+            ("images_read", Json::num(self.images_read as f64)),
+            ("workers_auto", Json::Bool(self.workers_auto)),
+            ("workers_final", Json::num(self.workers_final as f64)),
+            (
+                "workers_timeline",
+                Json::arr(self.workers_timeline.iter().map(|(t, n)| {
+                    Json::arr(vec![Json::num(*t), Json::num(*n as f64)])
+                })),
+            ),
+            ("work_queue_peak", Json::num(self.work_queue_peak as f64)),
+            ("sample_queue_peak", Json::num(self.sample_queue_peak as f64)),
+            ("batch_queue_peak", Json::num(self.batch_queue_peak as f64)),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -349,7 +468,28 @@ impl RunReport {
         if self.net_in_flight_peak > 0 {
             println!("  remote store: peak {} connections in flight", self.net_in_flight_peak);
         }
-        if self.idct_blocks_skipped > 0 {
+        // Print for every auto run — a pool that converged without ever
+        // resizing is exactly the case the user needs to see — and for
+        // any run whose pool moved.
+        if self.workers_auto || self.workers_timeline.len() > 1 {
+            let steps: Vec<String> = self
+                .workers_timeline
+                .iter()
+                .map(|(t, n)| format!("{n}@{t:.1}s"))
+                .collect();
+            println!(
+                "  elastic workers: final {}, timeline [{}], queue peaks work={} sample={} batch={}",
+                self.workers_final,
+                steps.join(" -> "),
+                self.work_queue_peak,
+                self.sample_queue_peak,
+                self.batch_queue_peak,
+            );
+        }
+        // Also printed when only the fractional scale engaged (an
+        // admission-dominated run skips no blocks yet still decodes at
+        // 1/2^k — the realized-scale readout must stay visible).
+        if self.idct_blocks_skipped > 0 || self.decode_scale_hist[1..].iter().any(|&n| n > 0) {
             let total = self.idct_blocks + self.idct_blocks_skipped;
             let h = self.decode_scale_hist;
             println!(
@@ -416,6 +556,52 @@ mod tests {
         // Pool of 2 workers over 0.1s elapsed: utilization ~ busy/(0.1*2).
         let u = b.utilization(0.1);
         assert!((u - busy / 0.2).abs() < 1e-9);
+    }
+
+    /// Live-denominator mode: utilization divides by the capacity
+    /// integral, so a resize mid-run changes the denominator from the
+    /// resize moment on — not retroactively.  Only *floor* bounds and
+    /// relational checks here: `thread::sleep` never undersleeps but can
+    /// overshoot arbitrarily on loaded CI, so upper bounds would flake.
+    #[test]
+    fn busy_clock_live_denominator_tracks_resizes() {
+        let b = BusyClock::new_live(2);
+        std::thread::sleep(Duration::from_millis(30));
+        let cap1 = b.capacity_secs();
+        assert!(cap1 >= 2.0 * 0.03, "2 workers x >=30ms: {cap1}");
+        b.set_workers(8);
+        std::thread::sleep(Duration::from_millis(30));
+        let cap2 = b.capacity_secs();
+        assert_eq!(b.current_workers(), 8);
+        assert!(
+            cap2 - cap1 >= 8.0 * 0.03,
+            "post-resize capacity must accrue at 8 worker-secs/sec: {cap1} -> {cap2}"
+        );
+        // Utilization is busy/capacity in live mode (elapsed ignored):
+        // with busy frozen, more capacity strictly dilutes it.
+        b.add_secs(0.05);
+        let u1 = b.utilization(123.0);
+        let cap = b.capacity_secs();
+        assert!((u1 - (0.05 / cap).min(1.0)).abs() < 0.05, "u {u1} vs cap {cap}");
+        std::thread::sleep(Duration::from_millis(30));
+        let u2 = b.utilization(123.0);
+        assert!(u2 < u1, "capacity grew, busy fixed: {u1} -> {u2}");
+        // A fixed clock's capacity accrues at its constant size.
+        let f = BusyClock::new(2);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(f.capacity_secs() >= 2.0 * 0.02);
+    }
+
+    #[test]
+    fn busy_clock_set_workers_flips_fixed_clock_to_live() {
+        let b = BusyClock::new(2);
+        b.add_secs(0.1);
+        // Fixed mode: denominator is elapsed * workers.
+        assert!((b.utilization(0.1) - 0.5).abs() < 1e-9);
+        b.set_workers(2);
+        // Live mode: denominator is the capacity integral (tiny so far),
+        // so the same busy time now saturates.
+        assert!(b.utilization(0.1) > 0.9);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! (AlexNet) the device blocks on `recv` (GPU starved).  Both wait times
 //! are counted and exported to the run report.
 
+use crate::metrics::Gauge;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -17,16 +18,84 @@ struct State<T> {
     cap: usize,
     senders: usize,
     receivers: usize,
+    /// Waiters currently blocked in `send`/`recv`, plus the sum of their
+    /// wait-start offsets (ns since channel creation).  Together these
+    /// let `stats()` charge *in-flight* blocked time — a wait spanning a
+    /// controller tick must be visible during the tick, not only after
+    /// the blocked call finally returns.
+    send_waiters: usize,
+    send_wait_start_sum_ns: u128,
+    recv_waiters: usize,
+    recv_wait_start_sum_ns: u128,
 }
 
 struct Inner<T> {
     st: Mutex<State<T>>,
     not_empty: Condvar,
     not_full: Condvar,
-    /// Cumulative nanoseconds producers spent blocked on a full queue.
+    created: Instant,
+    /// Cumulative nanoseconds producers spent blocked on a full queue
+    /// (completed waits only; `stats()` adds the in-flight share).
     pub send_wait_ns: AtomicU64,
-    /// Cumulative nanoseconds consumers spent blocked on an empty queue.
+    /// Cumulative nanoseconds consumers spent blocked on an empty queue
+    /// (completed waits only; `stats()` adds the in-flight share).
     pub recv_wait_ns: AtomicU64,
+    /// Sampled queue occupancy (level after every send/recv) with peak
+    /// tracking — the elastic executor's backpressure signal alongside
+    /// the two wait clocks.
+    occupancy: Gauge,
+}
+
+impl<T> Inner<T> {
+    fn stats(&self) -> ChannelStats {
+        let st = self.st.lock().unwrap();
+        // Read the clock under the lock: every recorded start offset was
+        // taken under this lock at an earlier instant, so `now` bounds
+        // them all and the in-flight sums cannot go negative.
+        let now = self.created.elapsed().as_nanos() as u128;
+        let in_flight = |waiters: usize, start_sum: u128| {
+            (waiters as u128 * now).saturating_sub(start_sum) as f64 / 1e9
+        };
+        ChannelStats {
+            len: st.q.len(),
+            cap: st.cap,
+            occupancy_peak: self.occupancy.peak(),
+            send_wait_secs: self.send_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+                + in_flight(st.send_waiters, st.send_wait_start_sum_ns),
+            recv_wait_secs: self.recv_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+                + in_flight(st.recv_waiters, st.recv_wait_start_sum_ns),
+        }
+    }
+}
+
+/// One observation of a channel's health: instantaneous occupancy, the
+/// occupancy high-water mark, and the cumulative producer/consumer block
+/// times — everything the autoscaling controller diffs per interval.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChannelStats {
+    pub len: usize,
+    pub cap: usize,
+    pub occupancy_peak: u64,
+    pub send_wait_secs: f64,
+    pub recv_wait_secs: f64,
+}
+
+/// A stats-only handle onto a channel.  Unlike cloning an endpoint, a
+/// probe does NOT count as a sender or receiver, so holding one never
+/// keeps a queue artificially open (the controller and the run report
+/// must observe the pipeline without changing its shutdown semantics).
+pub struct QueueProbe<T>(Arc<Inner<T>>);
+
+impl<T> Clone for QueueProbe<T> {
+    fn clone(&self) -> Self {
+        QueueProbe(self.0.clone())
+    }
+}
+
+impl<T> QueueProbe<T> {
+    pub fn stats(&self) -> ChannelStats {
+        self.0.stats()
+    }
 }
 
 pub struct Sender<T>(Arc<Inner<T>>);
@@ -38,11 +107,22 @@ pub struct Closed<T>(pub T);
 
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     let inner = Arc::new(Inner {
-        st: Mutex::new(State { q: VecDeque::new(), cap: cap.max(1), senders: 1, receivers: 1 }),
+        st: Mutex::new(State {
+            q: VecDeque::new(),
+            cap: cap.max(1),
+            senders: 1,
+            receivers: 1,
+            send_waiters: 0,
+            send_wait_start_sum_ns: 0,
+            recv_waiters: 0,
+            recv_wait_start_sum_ns: 0,
+        }),
         not_empty: Condvar::new(),
         not_full: Condvar::new(),
+        created: Instant::now(),
         send_wait_ns: AtomicU64::new(0),
         recv_wait_ns: AtomicU64::new(0),
+        occupancy: Gauge::new(),
     });
     (Sender(inner.clone()), Receiver(inner))
 }
@@ -85,21 +165,36 @@ impl<T> Sender<T> {
     /// Blocking send; returns `Err(Closed(v))` if all receivers dropped.
     pub fn send(&self, v: T) -> Result<(), Closed<T>> {
         let mut st = self.0.st.lock().unwrap();
-        let mut waited: Option<Instant> = None;
-        while st.q.len() >= st.cap {
+        // (wall-clock anchor, start offset) of an in-progress wait; the
+        // offset is registered in the state so `stats()` can see the
+        // block while it is still happening.
+        let mut waited: Option<(Instant, u128)> = None;
+        let unregister = |st: &mut State<T>, waited: &Option<(Instant, u128)>| {
+            if let Some((t, start)) = waited {
+                st.send_waiters -= 1;
+                st.send_wait_start_sum_ns -= start;
+                self.0.send_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        };
+        loop {
             if st.receivers == 0 {
+                unregister(&mut st, &waited);
                 return Err(Closed(v));
             }
-            waited.get_or_insert_with(Instant::now);
+            if st.q.len() < st.cap {
+                break;
+            }
+            if waited.is_none() {
+                let start = self.0.created.elapsed().as_nanos();
+                st.send_waiters += 1;
+                st.send_wait_start_sum_ns += start;
+                waited = Some((Instant::now(), start));
+            }
             st = self.0.not_full.wait(st).unwrap();
         }
-        if let Some(t) = waited {
-            self.0.send_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        }
-        if st.receivers == 0 {
-            return Err(Closed(v));
-        }
+        unregister(&mut st, &waited);
         st.q.push_back(v);
+        self.0.occupancy.set(st.q.len() as u64);
         drop(st);
         self.0.not_empty.notify_one();
         Ok(())
@@ -108,6 +203,14 @@ impl<T> Sender<T> {
     pub fn send_wait_secs(&self) -> f64 {
         self.0.send_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.0.stats()
+    }
+
+    pub fn probe(&self) -> QueueProbe<T> {
+        QueueProbe(self.0.clone())
+    }
 }
 
 impl<T> Receiver<T> {
@@ -115,14 +218,18 @@ impl<T> Receiver<T> {
     /// have dropped.
     pub fn recv(&self) -> Option<T> {
         let mut st = self.0.st.lock().unwrap();
-        let mut waited: Option<Instant> = None;
+        let mut waited: Option<(Instant, u128)> = None;
+        let unregister = |st: &mut State<T>, waited: &Option<(Instant, u128)>| {
+            if let Some((t, start)) = waited {
+                st.recv_waiters -= 1;
+                st.recv_wait_start_sum_ns -= start;
+                self.0.recv_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        };
         loop {
             if let Some(v) = st.q.pop_front() {
-                if let Some(t) = waited {
-                    self.0
-                        .recv_wait_ns
-                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                }
+                unregister(&mut st, &waited);
+                self.0.occupancy.set(st.q.len() as u64);
                 drop(st);
                 self.0.not_full.notify_one();
                 return Some(v);
@@ -132,20 +239,29 @@ impl<T> Receiver<T> {
                 // producers that never delivered still counts — dropping
                 // it here undercounted `recv_wait_ns` exactly when the
                 // consumer was starved at shutdown.
-                if let Some(t) = waited {
-                    self.0
-                        .recv_wait_ns
-                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                }
+                unregister(&mut st, &waited);
                 return None;
             }
-            waited.get_or_insert_with(Instant::now);
+            if waited.is_none() {
+                let start = self.0.created.elapsed().as_nanos();
+                st.recv_waiters += 1;
+                st.recv_wait_start_sum_ns += start;
+                waited = Some((Instant::now(), start));
+            }
             st = self.0.not_empty.wait(st).unwrap();
         }
     }
 
     pub fn recv_wait_secs(&self) -> f64 {
         self.0.recv_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.0.stats()
+    }
+
+    pub fn probe(&self) -> QueueProbe<T> {
+        QueueProbe(self.0.clone())
     }
 
     pub fn len(&self) -> usize {
@@ -249,6 +365,91 @@ mod tests {
         t.join().unwrap();
         let waited = rx.recv_wait_secs();
         assert!(waited > 0.03, "drain wait dropped on None path: {waited}");
+    }
+
+    /// The occupancy gauge samples the level after every send/recv and
+    /// keeps the high-water mark — what the autoscaler reads per tick.
+    #[test]
+    fn occupancy_gauge_tracks_level_and_peak() {
+        let (tx, rx) = bounded(4);
+        assert_eq!(tx.stats().occupancy_peak, 0);
+        tx.send(1u32).unwrap();
+        tx.send(2).unwrap();
+        tx.send(3).unwrap();
+        let s = rx.stats();
+        assert_eq!((s.len, s.cap, s.occupancy_peak), (3, 4, 3));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        let s = tx.stats();
+        assert_eq!(s.len, 1, "level follows drains");
+        assert_eq!(s.occupancy_peak, 3, "peak is sticky");
+        // Both endpoints and the probe see the same shared stats.
+        let probe = rx.probe();
+        assert_eq!(probe.stats(), tx.stats());
+    }
+
+    /// A probe must NOT count as an endpoint: senders still see Closed
+    /// when the real receivers drop, and receivers still see None when
+    /// the real senders drop, even with probes alive.
+    #[test]
+    fn probe_does_not_keep_channel_open() {
+        let (tx, rx) = bounded(2);
+        let probe_rx = rx.probe();
+        drop(rx);
+        assert_eq!(tx.send(7), Err(Closed(7)));
+        let (tx2, rx2) = bounded::<u32>(2);
+        let probe_tx = tx2.probe();
+        drop(tx2);
+        assert_eq!(rx2.recv(), None);
+        // Probes still read stats after the endpoints closed.
+        assert_eq!(probe_rx.stats().len, 0);
+        assert_eq!(probe_tx.stats().len, 0);
+    }
+
+    /// Regression (elastic controller): a wait that is *still blocked*
+    /// must already show up in `stats()` — flushing only on wake would
+    /// hide a long stall from every controller tick it spans, stalling
+    /// scale-up exactly when the pipeline is most starved.
+    #[test]
+    fn stats_charge_in_flight_blocked_time() {
+        // Blocked sender, observed mid-block.
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(0).unwrap();
+        let probe = tx.probe();
+        let t = thread::spawn(move || tx.send(1).unwrap());
+        thread::sleep(Duration::from_millis(60));
+        let mid = probe.stats().send_wait_secs;
+        assert!(mid > 0.03, "in-flight send block invisible: {mid}");
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        t.join().unwrap();
+        // After the wake the time is in the cumulative clock, once.
+        let done = probe.stats().send_wait_secs;
+        assert!(done >= mid * 0.9, "flush lost the in-flight share: {mid} -> {done}");
+        // Blocked receiver, observed mid-block.
+        let (tx2, rx2) = bounded::<u32>(1);
+        let probe2 = rx2.probe();
+        let t2 = thread::spawn(move || rx2.recv());
+        thread::sleep(Duration::from_millis(60));
+        let mid = probe2.stats().recv_wait_secs;
+        assert!(mid > 0.03, "in-flight recv block invisible: {mid}");
+        tx2.send(7).unwrap();
+        assert_eq!(t2.join().unwrap(), Some(7));
+        assert!(probe2.stats().recv_wait_secs >= mid * 0.9);
+    }
+
+    #[test]
+    fn wait_clocks_surface_in_stats() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(1).unwrap();
+            tx.stats().send_wait_secs
+        });
+        thread::sleep(Duration::from_millis(40));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        assert!(t.join().unwrap() > 0.02);
     }
 
     #[test]

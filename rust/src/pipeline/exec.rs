@@ -1,0 +1,483 @@
+//! Elastic CPU-stage executor: a worker pool that resizes itself from
+//! live backpressure signals instead of trusting a preset `--workers`.
+//!
+//! The paper's bottom line is that preprocessing throughput must be
+//! *matched* to training throughput; the right worker count depends on
+//! the model, placement, storage tier, and cache warmth, and is best
+//! discovered online (tf.data AUTOTUNE, DALI's thread tuning).  The
+//! controller here is a small hill climber over two starvation signals,
+//! both read from the bounded channels the pipeline already has:
+//!
+//! * **batcher starved** (sample queue empty, consumer blocked in
+//!   `recv`) → preprocessing is the bottleneck → *add* a worker;
+//! * **workers starved** (work queue empty — the source/storage cannot
+//!   feed the pool) or **workers blocked** (sample queue full — the
+//!   device cannot drain the pool) → capacity is wasted → *park* one.
+//!
+//! Why this converges: let `c` be the per-item CPU cost and `R` the rate
+//! the rest of the pipeline (device + storage) can absorb.  Below
+//! `k* = ceil(R·c)` workers the batcher starves every interval (add);
+//! above it workers block or starve (park); at `k*` neither signal
+//! fires.  `k*` clamped to `[min, max]` is therefore the controller's
+//! unique fixed point — the same quantity `sim::workers_fixed_point`
+//! computes analytically, which is what the engine-vs-sim agreement test
+//! in `tests/elastic_exec.rs` pins down.
+//!
+//! All `workers_max` threads are spawned up front; parked workers wait
+//! on a gate instead of exiting, so resizing is a notify, not a thread
+//! spawn.  The pool — not the caller — owns its queue bound
+//! ([`ExecConfig::work_queue_cap`]), derived from `workers_max` so it
+//! cannot go stale as the live count moves.
+
+use crate::config::RunConfig;
+use crate::metrics::BusyClock;
+use crate::pipeline::channel::{Receiver, Sender};
+use anyhow::{ensure, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Pool geometry + controller cadence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecConfig {
+    pub workers_min: usize,
+    pub workers_max: usize,
+    /// Pool size at spawn (fixed pools stay here; auto pools move).
+    pub workers_initial: usize,
+    /// Controller decision period, seconds.
+    pub interval_secs: f64,
+    /// Feedback autoscaling on/off (off = fixed pool of `workers_initial`).
+    pub auto: bool,
+}
+
+/// Starvation fraction of an interval above which the controller adds a
+/// worker (the batcher waited ≥ this share of the tick for samples).
+pub const ADD_STARVE_FRAC: f64 = 0.10;
+/// Per-worker starved/blocked fraction above which one worker is parked
+/// (capacity demonstrably wasted on waiting, not preprocessing).
+pub const PARK_WASTE_FRAC: f64 = 0.25;
+
+impl ExecConfig {
+    /// A fixed pool of `n` workers (the pre-elastic behavior).
+    pub fn fixed(n: usize) -> Self {
+        let n = n.max(1);
+        ExecConfig {
+            workers_min: n,
+            workers_max: n,
+            workers_initial: n,
+            interval_secs: 0.25,
+            auto: false,
+        }
+    }
+
+    /// An autoscaling pool over `[min, max]`, starting at `min` (the
+    /// controller only ever pays for workers the signals justify).
+    pub fn auto(min: usize, max: usize, interval_secs: f64) -> Self {
+        ExecConfig {
+            workers_min: min.max(1),
+            workers_max: max.max(min.max(1)),
+            workers_initial: min.max(1),
+            interval_secs,
+            auto: true,
+        }
+    }
+
+    pub fn from_run_config(cfg: &RunConfig) -> Self {
+        if cfg.workers_auto {
+            Self::auto(cfg.workers_min, cfg.workers_max, cfg.workers_interval_secs)
+        } else {
+            ExecConfig { interval_secs: cfg.workers_interval_secs, ..Self::fixed(cfg.cpu_workers) }
+        }
+    }
+
+    /// The work-queue bound this pool needs: two in-flight items per
+    /// worker the pool may *grow to*, plus a batch of slack for the
+    /// source.  Owned here — deriving it from a live worker count would
+    /// go stale the moment the controller resizes.
+    pub fn work_queue_cap(&self, batch_size: usize) -> usize {
+        self.workers_max * 2 + batch_size
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.workers_min >= 1, "workers_min must be >= 1");
+        ensure!(
+            self.workers_max >= self.workers_min,
+            "workers_max ({}) must be >= workers_min ({})",
+            self.workers_max,
+            self.workers_min
+        );
+        ensure!(
+            (self.workers_min..=self.workers_max).contains(&self.workers_initial),
+            "workers_initial {} outside [{}, {}]",
+            self.workers_initial,
+            self.workers_min,
+            self.workers_max
+        );
+        ensure!(self.interval_secs > 0.0, "controller interval must be > 0");
+        Ok(())
+    }
+}
+
+/// What the pool did: final size + every resize, for the run report.
+#[derive(Clone, Debug, Default)]
+pub struct PoolReport {
+    pub workers_final: usize,
+    /// `(secs_since_spawn, new_count)`, first entry = the spawn size.
+    pub workers_timeline: Vec<(f64, usize)>,
+}
+
+/// Join result: the report is always available — a worker error after
+/// the device stopped is an expected close, and the caller still wants
+/// the telemetry.
+pub struct PoolOutcome {
+    pub report: PoolReport,
+    pub result: Result<()>,
+}
+
+/// Park/unpark gate shared by workers and the controller.  Worker `w`
+/// processes items only while `w < target`; others wait here.  Shutdown
+/// wakes everyone for exit.
+struct Gate {
+    st: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    target: usize,
+    shutdown: bool,
+}
+
+impl Gate {
+    fn new(target: usize) -> Arc<Self> {
+        Arc::new(Gate { st: Mutex::new(GateState { target, shutdown: false }), cv: Condvar::new() })
+    }
+
+    /// Block until worker `w` is active; `false` means shut down instead.
+    fn wait_active(&self, w: usize) -> bool {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return false;
+            }
+            if w < st.target {
+                return true;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn set_target(&self, n: usize) {
+        self.st.lock().unwrap().target = n;
+        self.cv.notify_all();
+    }
+
+    fn target(&self) -> usize {
+        self.st.lock().unwrap().target
+    }
+
+    fn shutdown(&self) {
+        self.st.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Controller sleep: returns `true` if shutdown arrived meanwhile.
+    fn sleep(&self, secs: f64) -> bool {
+        let mut st = self.st.lock().unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs_f64(secs);
+        while !st.shutdown {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
+    }
+}
+
+/// The running pool.  `join` after the source has closed the work queue
+/// (or the consumer has dropped) to collect the outcome.
+pub struct ElasticPool {
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    controller: Option<std::thread::JoinHandle<()>>,
+    gate: Arc<Gate>,
+    timeline: Arc<Mutex<Vec<(f64, usize)>>>,
+}
+
+/// Spawn the pool: `workers_max` threads over `work_rx`, each running
+/// `stage` per item and forwarding `Some(out)` to `out_tx` (a `None`
+/// result drops the item — e.g. filtered records).  `clock` is resized
+/// alongside the pool so its live-denominator utilization stays honest;
+/// the *stage itself* decides what counts as busy time (wrap the compute
+/// in `clock.track`, not the blocking queue ops).
+pub fn spawn<I, O, F>(
+    cfg: ExecConfig,
+    work_rx: Receiver<I>,
+    out_tx: Sender<O>,
+    clock: Arc<BusyClock>,
+    stage: F,
+) -> Result<ElasticPool>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    F: Fn(I) -> Result<Option<O>> + Send + Sync + 'static,
+{
+    cfg.validate()?;
+    let gate = Gate::new(cfg.workers_initial);
+    let timeline = Arc::new(Mutex::new(vec![(0.0f64, cfg.workers_initial)]));
+    let t0 = Instant::now();
+    let stage = Arc::new(stage);
+    // Probes, not endpoint clones: the controller must observe the
+    // queues without keeping them open (an extra Receiver would stop the
+    // source from ever seeing Closed, an extra Sender would stop the
+    // batcher from ever seeing None).
+    let work_probe = work_rx.probe();
+    let out_probe = out_tx.probe();
+
+    let mut workers = Vec::with_capacity(cfg.workers_max);
+    for w in 0..cfg.workers_max {
+        let gate = gate.clone();
+        let work_rx = work_rx.clone();
+        let out_tx = out_tx.clone();
+        let stage = stage.clone();
+        workers.push(
+            std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
+                let res = (|| -> Result<()> {
+                    loop {
+                        if !gate.wait_active(w) {
+                            return Ok(()); // shut down while parked
+                        }
+                        // recv returns None only when the queue is empty
+                        // AND the source is done: nothing is dropped.
+                        let Some(item) = work_rx.recv() else { return Ok(()) };
+                        if let Some(out) = stage(item)? {
+                            if out_tx.send(out).is_err() {
+                                return Ok(()); // consumer gone (early stop)
+                            }
+                        }
+                    }
+                })();
+                // Whatever ended this worker ends the pool: wake parked
+                // peers and the controller so nobody waits on a gate
+                // that will never open.
+                gate.shutdown();
+                res
+            })?,
+        );
+    }
+    drop(work_rx);
+    drop(out_tx);
+
+    let controller = if cfg.auto && cfg.workers_max > cfg.workers_min {
+        let gate = gate.clone();
+        let timeline = timeline.clone();
+        let clock = clock.clone();
+        Some(std::thread::Builder::new().name("exec-ctl".into()).spawn(move || {
+            let mut last_work = work_probe.stats();
+            let mut last_out = out_probe.stats();
+            let mut last_t = Instant::now();
+            loop {
+                if gate.sleep(cfg.interval_secs) {
+                    return;
+                }
+                let work = work_probe.stats();
+                let out = out_probe.stats();
+                let now = Instant::now();
+                let dt = now.duration_since(last_t).as_secs_f64().max(1e-9);
+                let cur = gate.target();
+                // Consumer-side starvation of the sample queue: the
+                // batcher (1 thread) waited this fraction of the tick.
+                let batcher_starved = (out.recv_wait_secs - last_out.recv_wait_secs) / dt;
+                // Producer-side waste, per active worker: waiting for
+                // work (source/storage-bound) or for queue space
+                // (device-bound).
+                let per = dt * cur as f64;
+                let workers_starved = (work.recv_wait_secs - last_work.recv_wait_secs) / per;
+                let workers_blocked = (out.send_wait_secs - last_out.send_wait_secs) / per;
+                // Hill climb: one step per tick, park beats add (when
+                // both fire the pool is mis-phased, and shrinking is the
+                // cheap direction to probe from).
+                let next = if workers_starved > PARK_WASTE_FRAC
+                    || workers_blocked > PARK_WASTE_FRAC
+                {
+                    cur.saturating_sub(1).max(cfg.workers_min)
+                } else if batcher_starved > ADD_STARVE_FRAC && out.len < out.cap {
+                    (cur + 1).min(cfg.workers_max)
+                } else {
+                    cur
+                };
+                if next != cur {
+                    gate.set_target(next);
+                    clock.set_workers(next);
+                    timeline.lock().unwrap().push((t0.elapsed().as_secs_f64(), next));
+                }
+                last_work = work;
+                last_out = out;
+                last_t = now;
+            }
+        })?)
+    } else {
+        None
+    };
+
+    Ok(ElasticPool { workers, controller, gate, timeline })
+}
+
+impl ElasticPool {
+    /// Current pool target (test/telemetry hook).
+    pub fn workers_now(&self) -> usize {
+        self.gate.target()
+    }
+
+    /// Wait for every worker to finish, stop the controller, and report.
+    /// The first worker error (if any) is carried in `result`; the
+    /// report is valid either way.
+    pub fn join(self) -> PoolOutcome {
+        let mut result: Result<()> = Ok(());
+        for t in self.workers {
+            match t.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if result.is_ok() {
+                        result = Err(e);
+                    }
+                }
+                Err(_) => {
+                    if result.is_ok() {
+                        result = Err(anyhow::anyhow!("cpu worker panicked"));
+                    }
+                }
+            }
+        }
+        self.gate.shutdown();
+        if let Some(c) = self.controller {
+            let _ = c.join();
+        }
+        let mut timeline = self.timeline.lock().unwrap();
+        let report = PoolReport {
+            workers_final: self.gate.target(),
+            workers_timeline: std::mem::take(&mut *timeline),
+        };
+        drop(timeline);
+        PoolOutcome { report, result }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::channel::bounded;
+    use std::time::Duration;
+
+    #[test]
+    fn exec_config_validates_and_derives_queue_cap() {
+        assert!(ExecConfig::fixed(2).validate().is_ok());
+        assert!(ExecConfig::auto(1, 4, 0.1).validate().is_ok());
+        assert!(ExecConfig { workers_min: 0, ..ExecConfig::fixed(1) }.validate().is_err());
+        let inverted = ExecConfig {
+            workers_min: 2,
+            workers_max: 1,
+            workers_initial: 2,
+            interval_secs: 0.1,
+            auto: true,
+        };
+        assert!(inverted.validate().is_err());
+        assert!(ExecConfig { interval_secs: 0.0, ..ExecConfig::fixed(1) }.validate().is_err());
+        assert!(
+            ExecConfig { workers_initial: 9, ..ExecConfig::auto(1, 4, 0.1) }.validate().is_err()
+        );
+        // The satellite: the queue bound comes from workers_max, never
+        // from a live count that autoscaling would stale out.
+        let cfg = ExecConfig::auto(1, 8, 0.1);
+        assert_eq!(cfg.work_queue_cap(32), 8 * 2 + 32);
+        assert_eq!(ExecConfig::fixed(3).work_queue_cap(4), 10);
+    }
+
+    #[test]
+    fn fixed_pool_processes_everything_and_reports_constant_timeline() {
+        let (work_tx, work_rx) = bounded(16);
+        let (out_tx, out_rx) = bounded(16);
+        let clock = BusyClock::new(2);
+        let pool = spawn(ExecConfig::fixed(2), work_rx, out_tx, clock, |x: u32| {
+            Ok(Some(x * 2))
+        })
+        .unwrap();
+        for i in 0..100u32 {
+            work_tx.send(i).unwrap();
+        }
+        drop(work_tx);
+        let mut got: Vec<u32> = std::iter::from_fn(|| out_rx.recv()).collect();
+        got.sort();
+        assert_eq!(got, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        let out = pool.join();
+        assert!(out.result.is_ok());
+        assert_eq!(out.report.workers_final, 2);
+        assert_eq!(out.report.workers_timeline, vec![(0.0, 2)]);
+    }
+
+    #[test]
+    fn stage_errors_surface_in_join_and_release_parked_workers() {
+        let (work_tx, work_rx) = bounded(8);
+        let (out_tx, out_rx) = bounded::<u32>(8);
+        let clock = BusyClock::new_live(1);
+        // min 1 of max 4: three workers start parked; the active one
+        // errors, and join must not hang on the parked three.
+        let pool = spawn(ExecConfig::auto(1, 4, 10.0), work_rx, out_tx, clock, |_x: u32| {
+            anyhow::bail!("boom")
+        })
+        .unwrap();
+        work_tx.send(1).unwrap();
+        drop(work_tx);
+        assert_eq!(out_rx.recv(), None);
+        let out = pool.join();
+        assert!(out.result.is_err());
+        assert!(out.result.unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn none_outputs_are_dropped_not_forwarded() {
+        let (work_tx, work_rx) = bounded(8);
+        let (out_tx, out_rx) = bounded(8);
+        let clock = BusyClock::new(1);
+        let pool = spawn(ExecConfig::fixed(1), work_rx, out_tx, clock, |x: u32| {
+            Ok((x % 2 == 0).then_some(x))
+        })
+        .unwrap();
+        for i in 0..10u32 {
+            work_tx.send(i).unwrap();
+        }
+        drop(work_tx);
+        let mut got: Vec<u32> = std::iter::from_fn(|| out_rx.recv()).collect();
+        got.sort();
+        assert_eq!(got, vec![0, 2, 4, 6, 8]);
+        assert!(pool.join().result.is_ok());
+    }
+
+    #[test]
+    fn consumer_drop_stops_pool_cleanly() {
+        let (work_tx, work_rx) = bounded(4);
+        let (out_tx, out_rx) = bounded(1);
+        let clock = BusyClock::new(2);
+        let pool =
+            spawn(ExecConfig::fixed(2), work_rx, out_tx, clock, |x: u32| Ok(Some(x))).unwrap();
+        work_tx.send(0).unwrap();
+        assert_eq!(out_rx.recv(), Some(0));
+        drop(out_rx); // device stops early
+        // A worker blocked on an empty work queue only notices the dead
+        // consumer when its next item's send fails — exactly the old
+        // fixed-pool semantics.  Keep feeding until every worker has
+        // exited and the source observes Closed.
+        let mut closed = false;
+        for i in 1..200u32 {
+            if work_tx.send(i).is_err() {
+                closed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(closed, "source never observed the closed pool");
+        drop(work_tx);
+        let out = pool.join();
+        assert!(out.result.is_ok());
+    }
+}

@@ -3,11 +3,18 @@
 //! Thread topology (all queues bounded — backpressure is load-bearing):
 //!
 //! ```text
-//!  source ──work q──▶ cpu workers ×N ──sample q──▶ batcher ──batch q──▶ device
-//!  (epoch order /     (read, entropy/full         (collate B)          (fused HLO
-//!   shard streams)     decode, augment)                                 preproc +
-//!                                                                       train step)
+//!  source ──work q──▶ cpu workers ×[min..max] ──sample q──▶ batcher ──batch q──▶ device
+//!  (epoch order /     (elastic pool, exec.rs:       (collate B)          (fused HLO
+//!   shard streams)     each worker runs the one                           preproc +
+//!                      StageCtx chain: read →                             train step)
+//!                      cache-lookup → decode(plan)
+//!                      → admit → augment → handoff)
 //! ```
+//!
+//! The worker count is no longer fixed: `exec::ElasticPool` grows and
+//! parks workers from live backpressure signals (queue waits + sampled
+//! occupancy), so preprocessing capacity tracks what the device actually
+//! consumes instead of a preset `--workers` guess.
 //!
 //! Placement decides how much work the CPU stage does per image:
 //! * `cpu`     — full decode + augment on CPU; device only trains.
@@ -16,6 +23,7 @@
 //! * `hybrid0` — full decode on CPU; augment on device.
 
 pub mod channel;
+pub mod exec;
 pub mod prep_cache;
 pub mod shuffle;
 pub mod source;
@@ -128,148 +136,8 @@ pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
     }
 }
 
-/// The per-image CPU-stage work: decode `bytes` (an MJX bitstream) to the
-/// placement's hand-off format.  `aug` was sampled by the coordinator.
-pub fn cpu_stage(
-    bytes: &[u8],
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-) -> anyhow::Result<Payload> {
-    match placement {
-        Placement::Cpu => {
-            let img = crate::codec::decode_cpu(bytes)?;
-            let f = img.to_f32();
-            let mut out = vec![0f32; img.c * out_hw * out_hw];
-            ops::augment_fused(&f, img.c, img.h, img.w, &aug, out_hw, out_hw, &mut out);
-            Ok(Payload::Ready(out))
-        }
-        Placement::Hybrid => {
-            let ci = crate::codec::entropy_decode(bytes)?;
-            Ok(Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() })
-        }
-        Placement::Hybrid0 => {
-            let img = crate::codec::decode_cpu(bytes)?;
-            Ok(Payload::Pixels { pixels: img.to_f32().into(), aug: aug.to_row() })
-        }
-    }
-}
-
-/// Like [`cpu_stage`], but admits the decoded (pre-augment) pixels into
-/// the prep cache so later epochs skip the decode.  Under the hybrid
-/// placement the entropy path never produces full pixels, so the extra
-/// dequant+IDCT is run for admission only when the cache would accept the
-/// sample (one-time cost ≪ the per-epoch decode it amortizes away).
-pub fn cpu_stage_admitting(
-    bytes: &[u8],
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-    cache: &PrepCache,
-    id: u64,
-) -> anyhow::Result<Payload> {
-    let px_bytes = |c: usize, h: usize, w: usize| c * h * w * std::mem::size_of::<f32>();
-    match placement {
-        Placement::Cpu => {
-            let img = crate::codec::decode_cpu(bytes)?;
-            // Share one pixel buffer between cache and augment: the
-            // admission is a refcount bump, not a second full copy.
-            let pixels: Arc<[f32]> = img.to_f32().into();
-            if cache.would_admit(px_bytes(img.c, img.h, img.w)) {
-                cache.admit(
-                    id,
-                    Arc::new(DecodedSample {
-                        c: img.c,
-                        h: img.h,
-                        w: img.w,
-                        scale_log2: 0,
-                        pixels: pixels.clone(),
-                    }),
-                );
-            }
-            let mut out = vec![0f32; img.c * out_hw * out_hw];
-            ops::augment_fused(&pixels, img.c, img.h, img.w, &aug, out_hw, out_hw, &mut out);
-            Ok(Payload::Ready(out))
-        }
-        Placement::Hybrid => {
-            let ci = crate::codec::entropy_decode(bytes)?;
-            if cache.would_admit(px_bytes(ci.c, ci.h, ci.w)) {
-                let img = crate::codec::coefs_to_image(&ci);
-                cache.admit(
-                    id,
-                    Arc::new(DecodedSample::new(img.c, img.h, img.w, img.to_f32())),
-                );
-            }
-            Ok(Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() })
-        }
-        Placement::Hybrid0 => {
-            let img = crate::codec::decode_cpu(bytes)?;
-            // Payload and cache share one buffer — admission is free.
-            let pixels: Arc<[f32]> = img.to_f32().into();
-            if cache.would_admit(px_bytes(img.c, img.h, img.w)) {
-                cache.admit(
-                    id,
-                    Arc::new(DecodedSample {
-                        c: img.c,
-                        h: img.h,
-                        w: img.w,
-                        scale_log2: 0,
-                        pixels: pixels.clone(),
-                    }),
-                );
-            }
-            Ok(Payload::Pixels { pixels, aug: aug.to_row() })
-        }
-    }
-}
-
-/// The CPU-stage work for a prep-cache hit: read+decode are skipped.
-/// `cpu` placement augments the cached pixels in place; the device
-/// placements re-enter as a hybrid0-style pixel payload (the device runs
-/// the augment artifact), so a hybrid run's batches stay homogeneous per
-/// batch via the batcher's per-kind collation.
-///
-/// `aug` is in *original-image* coordinates (sampled against
-/// [`DecodedSample::orig_h`]/`orig_w`, so the aug stream is independent
-/// of how the pixels were stored); a fractionally-scaled entry rescales
-/// it into stored-pixel space here.  Only the `cpu` placement ever
-/// admits scaled entries — the device augment artifact's input shape is
-/// fixed at full resolution.
-pub fn cpu_stage_cached(
-    sample: &DecodedSample,
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-) -> Payload {
-    match placement {
-        Placement::Cpu => {
-            let mut out = vec![0f32; sample.c * out_hw * out_hw];
-            let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
-            ops::augment_fused(
-                &sample.pixels,
-                sample.c,
-                sample.h,
-                sample.w,
-                &aug,
-                out_hw,
-                out_hw,
-                &mut out,
-            );
-            Payload::Ready(out)
-        }
-        Placement::Hybrid | Placement::Hybrid0 => {
-            debug_assert_eq!(
-                sample.scale_log2, 0,
-                "device placements never cache scaled pixels"
-            );
-            // Refcount bump: the warm path never copies the pixels.
-            Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() }
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
-// Fused ROI + fractional-scale decode (plan-driven CPU stages)
+// The unified per-sample CPU-stage chain
 // ---------------------------------------------------------------------------
 
 /// Decode policy for the CPU stage (`--fused-decode` / `--decode-scale`).
@@ -297,8 +165,8 @@ impl DecodeOpts {
     }
 }
 
-/// Per-image decode telemetry from the planned CPU stage (feeds the
-/// runner's `idct_blocks*` counters and `decode_scale_hist`).
+/// Per-image decode telemetry from the CPU stage (feeds the runner's
+/// `idct_blocks*` counters and `decode_scale_hist`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StageStats {
     pub blocks_idct: u64,
@@ -314,6 +182,306 @@ impl StageStats {
             blocks_idct: d.blocks_idct,
             blocks_skipped: d.blocks_skipped,
             scale_log2: scale_log2 as u8,
+        }
+    }
+}
+
+/// Everything the per-sample chain needs, fixed for the whole run.  The
+/// cache × plan × placement axes *compose* here — one context, one
+/// entry point per path (miss / hit) — instead of multiplying into
+/// per-combination `cpu_stage*` functions (this replaced five of them).
+#[derive(Clone)]
+pub struct StageCtx {
+    pub placement: Placement,
+    pub decode_opts: DecodeOpts,
+    /// Decoded-sample cache shared across workers and epochs (`None`
+    /// disables the cache-lookup/admit links of the chain).
+    pub prep_cache: Option<Arc<PrepCache>>,
+    /// Training output side (the augment target resolution).
+    pub out_hw: usize,
+}
+
+fn px_bytes(c: usize, h: usize, w: usize) -> usize {
+    c * h * w * std::mem::size_of::<f32>()
+}
+
+impl StageCtx {
+    /// Plain full-decode chain: no cache, no fused plan (the historical
+    /// `cpu_stage` behavior).
+    pub fn new(placement: Placement, out_hw: usize) -> Self {
+        StageCtx { placement, decode_opts: DecodeOpts::off(), prep_cache: None, out_hw }
+    }
+
+    pub fn with_opts(mut self, opts: DecodeOpts) -> Self {
+        self.decode_opts = opts;
+        self
+    }
+
+    pub fn with_cache(mut self, cache: Arc<PrepCache>) -> Self {
+        self.prep_cache = Some(cache);
+        self
+    }
+
+    pub fn from_config(cfg: &RunConfig, prep_cache: Option<Arc<PrepCache>>, out_hw: usize) -> Self {
+        StageCtx {
+            placement: cfg.placement,
+            decode_opts: DecodeOpts::from_config(cfg),
+            prep_cache,
+            out_hw,
+        }
+    }
+
+    /// The per-image CPU-stage chain for a cache **miss** (or cache-less
+    /// run): `decode(plan) → admit → augment → hand-off payload`.
+    /// `bytes` is an MJX bitstream; `aug` was sampled by the worker in
+    /// full-image coordinates.
+    ///
+    /// Behavior is the composition of three orthogonal axes:
+    /// * **placement** picks the hand-off format (Ready/Coefs/Pixels);
+    /// * **decode_opts** picks whole-image vs ROI/fractional-scale decode
+    ///   (the fused path is bit-identical at full scale, property-tested
+    ///   in `tests/fused_decode.rs`);
+    /// * **prep_cache** inserts the admission link: cache entries must
+    ///   serve *any* future epoch's crop, so admission decodes whole
+    ///   images — under `cpu` optionally at the largest scale every
+    ///   samplable crop tolerates, shrinking entries by 4^k.
+    pub fn run_stage(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        aug: AugParams,
+    ) -> anyhow::Result<(Payload, StageStats)> {
+        let (c, h, w, _q) = crate::codec::probe(bytes)?;
+        match self.placement {
+            Placement::Cpu => self.cpu_chain(bytes, id, c, h, w, aug),
+            Placement::Hybrid => self.hybrid_chain(bytes, id, c, h, w, aug),
+            Placement::Hybrid0 => self.hybrid0_chain(bytes, id, c, h, w, aug),
+        }
+    }
+
+    /// The chain for a prep-cache **hit**: read+decode are skipped.
+    /// `cpu` placement augments the cached pixels in place; the device
+    /// placements re-enter as a hybrid0-style pixel payload (the device
+    /// runs the augment artifact), so a hybrid run's batches stay
+    /// homogeneous per batch via the batcher's per-kind collation.
+    ///
+    /// `aug` is in *original-image* coordinates (sampled against
+    /// [`DecodedSample::orig_h`]/`orig_w`, so the aug stream is
+    /// independent of how the pixels were stored); a fractionally-scaled
+    /// entry rescales it into stored-pixel space here.  Only the `cpu`
+    /// placement ever admits scaled entries — the device augment
+    /// artifact's input shape is fixed at full resolution.
+    pub fn run_stage_cached(&self, sample: &DecodedSample, aug: AugParams) -> Payload {
+        match self.placement {
+            Placement::Cpu => {
+                let mut out = vec![0f32; sample.c * self.out_hw * self.out_hw];
+                let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
+                ops::augment_fused(
+                    &sample.pixels,
+                    sample.c,
+                    sample.h,
+                    sample.w,
+                    &aug,
+                    self.out_hw,
+                    self.out_hw,
+                    &mut out,
+                );
+                Payload::Ready(out)
+            }
+            Placement::Hybrid | Placement::Hybrid0 => {
+                debug_assert_eq!(
+                    sample.scale_log2, 0,
+                    "device placements never cache scaled pixels"
+                );
+                // Refcount bump: the warm path never copies the pixels.
+                Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() }
+            }
+        }
+    }
+
+    /// `cpu` placement: decode + augment both run here.
+    fn cpu_chain(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        c: usize,
+        h: usize,
+        w: usize,
+        aug: AugParams,
+    ) -> anyhow::Result<(Payload, StageStats)> {
+        // Admission link: whole-image decode so the entry serves any
+        // future crop.  Under the fused plan the admission scale is
+        // bounded by the *smallest* crop the aug distribution can draw
+        // (never the per-crop geometry): stored pixels must only ever be
+        // downsampled by future hits.
+        if let Some(cache) = &self.prep_cache {
+            let k = if self.decode_opts.fused {
+                let min_crop = ops::min_crop_side(h as u32, w as u32) as usize;
+                DecodePlan::image_scale(
+                    min_crop,
+                    min_crop,
+                    self.out_hw,
+                    self.decode_opts.max_scale_log2 as usize,
+                )
+            } else {
+                0
+            };
+            let (sh, sw) = (h >> k, w >> k);
+            if cache.would_admit(px_bytes(c, sh, sw)) {
+                let plan = DecodePlan::full_scaled(c, h, w, k);
+                let (img, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+                // Share one pixel buffer between cache and augment: the
+                // admission is a refcount bump, not a second full copy.
+                let pixels: Arc<[f32]> = img.to_f32().into();
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample {
+                        c,
+                        h: sh,
+                        w: sw,
+                        scale_log2: k as u8,
+                        pixels: pixels.clone(),
+                    }),
+                );
+                let aug_s = rescale_aug(&aug, 0, 0, k as u8, sh, sw);
+                let mut out = vec![0f32; c * self.out_hw * self.out_hw];
+                ops::augment_fused(&pixels, c, sh, sw, &aug_s, self.out_hw, self.out_hw, &mut out);
+                return Ok((Payload::Ready(out), StageStats::from_decode(&dstats, k)));
+            }
+        }
+        // Per-crop decode link (admission refused or no cache): fused
+        // ROI/fractional-scale plan, or the plain whole-image decode.
+        if self.decode_opts.fused {
+            let crop =
+                (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
+            let max_k = self.decode_opts.max_scale_log2 as usize;
+            let plan = DecodePlan::new(c, h, w, crop, self.out_hw, max_k);
+            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+            let f = roi.to_f32();
+            let (vy, vx) = plan.origin();
+            let mut out = vec![0f32; c * self.out_hw * self.out_hw];
+            if plan.scale_log2 == 0 {
+                // Bit-identical to full decode + augment (sampling runs
+                // in full-image coordinates over the ROI view).
+                ops::augment_fused_view(
+                    &f,
+                    c,
+                    h,
+                    w,
+                    (vy, vx, roi.h, roi.w),
+                    &aug,
+                    self.out_hw,
+                    self.out_hw,
+                    &mut out,
+                );
+            } else {
+                let aug_s =
+                    rescale_aug(&aug, vy as u32, vx as u32, plan.scale_log2 as u8, roi.h, roi.w);
+                ops::augment_fused(&f, c, roi.h, roi.w, &aug_s, self.out_hw, self.out_hw, &mut out);
+            }
+            Ok((Payload::Ready(out), StageStats::from_decode(&dstats, plan.scale_log2)))
+        } else {
+            let img = crate::codec::decode_cpu(bytes)?;
+            let f = img.to_f32();
+            let mut out = vec![0f32; c * self.out_hw * self.out_hw];
+            ops::augment_fused(&f, c, h, w, &aug, self.out_hw, self.out_hw, &mut out);
+            Ok((Payload::Ready(out), full_stage_stats(c, h, w, self.placement)))
+        }
+    }
+
+    /// `hybrid` placement: entropy-only on the CPU; the fused plan never
+    /// applies (whole coefficient grids ship to the device).  Admission
+    /// runs the cache-only dequant+IDCT when the cache would accept the
+    /// sample (one-time cost ≪ the per-epoch decode it amortizes away) —
+    /// that transform is real CPU work, so it enters the block counters.
+    fn hybrid_chain(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        c: usize,
+        h: usize,
+        w: usize,
+        aug: AugParams,
+    ) -> anyhow::Result<(Payload, StageStats)> {
+        let ci = crate::codec::entropy_decode(bytes)?;
+        let mut stats = full_stage_stats(c, h, w, self.placement);
+        if let Some(cache) = &self.prep_cache {
+            if cache.would_admit(px_bytes(ci.c, ci.h, ci.w)) {
+                let img = crate::codec::coefs_to_image(&ci);
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample::new(img.c, img.h, img.w, img.to_f32())),
+                );
+                stats.blocks_idct = (c * (h / 8) * (w / 8)) as u64;
+            }
+        }
+        Ok((Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() }, stats))
+    }
+
+    /// `hybrid0` placement: full decode on the CPU, pixels to the device.
+    /// Admission decodes (and caches) whole full-resolution images — the
+    /// device augment artifact's input shape is fixed, so neither the
+    /// payload nor the cache entry may shrink.  Without admission the
+    /// fused plan decodes only the ROI blocks at their true offsets into
+    /// a zeroed full-size canvas (the device samples only inside the
+    /// crop window, so its output is unchanged).
+    fn hybrid0_chain(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        c: usize,
+        h: usize,
+        w: usize,
+        aug: AugParams,
+    ) -> anyhow::Result<(Payload, StageStats)> {
+        if let Some(cache) = &self.prep_cache {
+            if cache.would_admit(px_bytes(c, h, w)) {
+                let img = crate::codec::decode_cpu(bytes)?;
+                // Payload and cache share one buffer — admission is free.
+                let pixels: Arc<[f32]> = img.to_f32().into();
+                cache.admit(
+                    id,
+                    Arc::new(DecodedSample {
+                        c,
+                        h,
+                        w,
+                        scale_log2: 0,
+                        pixels: pixels.clone(),
+                    }),
+                );
+                return Ok((
+                    Payload::Pixels { pixels, aug: aug.to_row() },
+                    full_stage_stats(c, h, w, self.placement),
+                ));
+            }
+        }
+        if self.decode_opts.fused {
+            let crop =
+                (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
+            let plan = DecodePlan::new(c, h, w, crop, self.out_hw, 0);
+            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
+            let (vy, vx) = plan.origin();
+            let mut full = vec![0f32; c * h * w];
+            for ch in 0..c {
+                let plane = roi.plane(ch);
+                for y in 0..roi.h {
+                    let dst = &mut full[ch * h * w + (vy + y) * w + vx..][..roi.w];
+                    let src = &plane[y * roi.w..(y + 1) * roi.w];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d = s as f32;
+                    }
+                }
+            }
+            Ok((
+                Payload::Pixels { pixels: full.into(), aug: aug.to_row() },
+                StageStats::from_decode(&dstats, 0),
+            ))
+        } else {
+            let img = crate::codec::decode_cpu(bytes)?;
+            Ok((
+                Payload::Pixels { pixels: img.to_f32().into(), aug: aug.to_row() },
+                full_stage_stats(c, h, w, self.placement),
+            ))
         }
     }
 }
@@ -351,175 +519,10 @@ fn rescale_aug(aug: &AugParams, vy: u32, vx: u32, k: u8, vh: usize, vw: usize) -
     }
 }
 
-/// Plan-driven variant of [`cpu_stage`]: on the `cpu` path, decode only
-/// the blocks the crop consumes (optionally at a fractional scale) and
-/// augment the ROI in place; on the `hybrid0` path, decode the ROI
-/// blocks at their true offsets into a zeroed full-size canvas (the
-/// device augment artifact's input shape is fixed, and it samples only
-/// inside the crop window, so the device output is unchanged).  The
-/// `hybrid` path and `opts.fused == false` fall back to the full stage.
-pub fn cpu_stage_planned(
-    bytes: &[u8],
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-    opts: &DecodeOpts,
-) -> anyhow::Result<(Payload, StageStats)> {
-    if !opts.fused || placement == Placement::Hybrid {
-        return full_stage_with_stats(bytes, placement, aug, out_hw);
-    }
-    let (c, h, w, _q) = crate::codec::probe(bytes)?;
-    let crop =
-        (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
-    match placement {
-        Placement::Cpu => {
-            let plan = DecodePlan::new(c, h, w, crop, out_hw, opts.max_scale_log2 as usize);
-            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
-            let f = roi.to_f32();
-            let (vy, vx) = plan.origin();
-            let mut out = vec![0f32; c * out_hw * out_hw];
-            if plan.scale_log2 == 0 {
-                // Bit-identical to full decode + augment (sampling runs
-                // in full-image coordinates over the ROI view).
-                ops::augment_fused_view(
-                    &f,
-                    c,
-                    h,
-                    w,
-                    (vy, vx, roi.h, roi.w),
-                    &aug,
-                    out_hw,
-                    out_hw,
-                    &mut out,
-                );
-            } else {
-                let aug_s =
-                    rescale_aug(&aug, vy as u32, vx as u32, plan.scale_log2 as u8, roi.h, roi.w);
-                ops::augment_fused(&f, c, roi.h, roi.w, &aug_s, out_hw, out_hw, &mut out);
-            }
-            Ok((Payload::Ready(out), StageStats::from_decode(&dstats, plan.scale_log2)))
-        }
-        Placement::Hybrid0 => {
-            let plan = DecodePlan::new(c, h, w, crop, out_hw, 0);
-            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
-            let (vy, vx) = plan.origin();
-            let mut full = vec![0f32; c * h * w];
-            for ch in 0..c {
-                let plane = roi.plane(ch);
-                for y in 0..roi.h {
-                    let dst = &mut full[ch * h * w + (vy + y) * w + vx..][..roi.w];
-                    let src = &plane[y * roi.w..(y + 1) * roi.w];
-                    for (d, &s) in dst.iter_mut().zip(src) {
-                        *d = s as f32;
-                    }
-                }
-            }
-            Ok((
-                Payload::Pixels { pixels: full.into(), aug: aug.to_row() },
-                StageStats::from_decode(&dstats, 0),
-            ))
-        }
-        Placement::Hybrid => unreachable!("handled above"),
-    }
-}
-
-/// Plan-driven variant of [`cpu_stage_admitting`].  Cache entries must
-/// serve *any* future epoch's crop, so admission decodes whole images:
-/// under `cpu` the whole image can still be decoded (and stored) at a
-/// fractional scale — bounded by the smallest crop the aug distribution
-/// can sample ([`ops::min_crop_side`]), so no future hit ever upsamples
-/// stored pixels — shrinking every entry by 4^k and raising the MinIO
-/// hit fraction.  `hybrid0` falls back to the full-resolution decode
-/// (its device payload shape is fixed).  When admission would be
-/// refused anyway, the stage runs the plain fused ROI path instead.
-pub fn cpu_stage_admitting_planned(
-    bytes: &[u8],
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-    cache: &PrepCache,
-    id: u64,
-    opts: &DecodeOpts,
-) -> anyhow::Result<(Payload, StageStats)> {
-    let (c, h, w, _q) = crate::codec::probe(bytes)?;
-    let px_bytes = |c: usize, h: usize, w: usize| c * h * w * std::mem::size_of::<f32>();
-    if !opts.fused || placement == Placement::Hybrid {
-        let mut stats = full_stage_stats(c, h, w, placement);
-        // The hybrid arm runs the cache-only dequant+IDCT when the
-        // sample will be admitted — count that transform work (the
-        // admission decision is re-taken inside `cpu_stage_admitting`,
-        // so under concurrency the count is best-effort, like every
-        // other relaxed counter here).
-        if placement == Placement::Hybrid && cache.would_admit(px_bytes(c, h, w)) {
-            stats.blocks_idct = (c * (h / 8) * (w / 8)) as u64;
-        }
-        let payload = cpu_stage_admitting(bytes, placement, aug, out_hw, cache, id)?;
-        return Ok((payload, stats));
-    }
-    match placement {
-        Placement::Cpu => {
-            // The admission scale is bounded by the *smallest* crop the
-            // aug distribution can draw, not the image dims: a cached
-            // entry serves every future epoch's crop, and the resize
-            // must only ever downsample stored pixels (the same
-            // never-upsample rule the per-crop plan enforces).
-            let min_crop = ops::min_crop_side(h as u32, w as u32) as usize;
-            let k = DecodePlan::image_scale(min_crop, min_crop, out_hw, opts.max_scale_log2 as usize);
-            let (sh, sw) = (h >> k, w >> k);
-            if cache.would_admit(px_bytes(c, sh, sw)) {
-                let plan = DecodePlan::full_scaled(c, h, w, k);
-                let (img, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
-                // Share one buffer between cache and augment: admission
-                // is a refcount bump, not a second copy.
-                let pixels: Arc<[f32]> = img.to_f32().into();
-                cache.admit(
-                    id,
-                    Arc::new(DecodedSample {
-                        c,
-                        h: sh,
-                        w: sw,
-                        scale_log2: k as u8,
-                        pixels: pixels.clone(),
-                    }),
-                );
-                let aug_s = rescale_aug(&aug, 0, 0, k as u8, sh, sw);
-                let mut out = vec![0f32; c * out_hw * out_hw];
-                ops::augment_fused(&pixels, c, sh, sw, &aug_s, out_hw, out_hw, &mut out);
-                Ok((Payload::Ready(out), StageStats::from_decode(&dstats, k)))
-            } else {
-                cpu_stage_planned(bytes, placement, aug, out_hw, opts)
-            }
-        }
-        Placement::Hybrid0 => {
-            if cache.would_admit(px_bytes(c, h, w)) {
-                let stats = full_stage_stats(c, h, w, placement);
-                let payload = cpu_stage_admitting(bytes, placement, aug, out_hw, cache, id)?;
-                Ok((payload, stats))
-            } else {
-                cpu_stage_planned(bytes, placement, aug, out_hw, opts)
-            }
-        }
-        Placement::Hybrid => unreachable!("handled above"),
-    }
-}
-
-/// The full (unfused) stage, with block counters derived from the probe:
+/// Block counters for a full (unplanned) decode of a `c`x`h`x`w` image:
 /// a full decode dequant+IDCTs every block; the hybrid entropy-only path
 /// transforms nothing on the CPU (its admission-time transform is
-/// counted by `cpu_stage_admitting_planned` instead).
-fn full_stage_with_stats(
-    bytes: &[u8],
-    placement: Placement,
-    aug: AugParams,
-    out_hw: usize,
-) -> anyhow::Result<(Payload, StageStats)> {
-    let (c, h, w, _q) = crate::codec::probe(bytes)?;
-    let stats = full_stage_stats(c, h, w, placement);
-    let payload = cpu_stage(bytes, placement, aug, out_hw)?;
-    Ok((payload, stats))
-}
-
-/// Block counters for a full (unplanned) decode of a `c`x`h`x`w` image.
+/// counted by the hybrid chain instead).
 fn full_stage_stats(c: usize, h: usize, w: usize, placement: Placement) -> StageStats {
     let blocks = (c * (h / 8) * (w / 8)) as u64;
     StageStats {
@@ -541,19 +544,27 @@ mod tests {
         codec::encode(&img, 85).unwrap()
     }
 
+    fn fused(max_scale_log2: u8) -> DecodeOpts {
+        DecodeOpts { fused: true, max_scale_log2 }
+    }
+
+    fn minio_cache(budget: usize) -> Arc<prep_cache::PrepCache> {
+        Arc::new(prep_cache::PrepCache::new(budget, prep_cache::PrepCachePolicy::Minio))
+    }
+
     #[test]
-    fn cpu_stage_shapes_per_placement() {
+    fn stage_shapes_per_placement() {
         let bytes = encoded_image(1);
         let aug = AugParams::identity(64, 64);
-        match cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap() {
+        match StageCtx::new(Placement::Cpu, 56).run_stage(&bytes, 0, aug).unwrap().0 {
             Payload::Ready(v) => assert_eq!(v.len(), 3 * 56 * 56),
             other => panic!("{other:?}"),
         }
-        match cpu_stage(&bytes, Placement::Hybrid, aug, 56).unwrap() {
+        match StageCtx::new(Placement::Hybrid, 56).run_stage(&bytes, 0, aug).unwrap().0 {
             Payload::Coefs { coefs, .. } => assert_eq!(coefs.len(), 3 * 8 * 8 * 64),
             other => panic!("{other:?}"),
         }
-        match cpu_stage(&bytes, Placement::Hybrid0, aug, 56).unwrap() {
+        match StageCtx::new(Placement::Hybrid0, 56).run_stage(&bytes, 0, aug).unwrap().0 {
             Payload::Pixels { pixels, .. } => assert_eq!(pixels.len(), 3 * 64 * 64),
             other => panic!("{other:?}"),
         }
@@ -594,24 +605,68 @@ mod tests {
         assert!(collate(vec![]).is_err());
     }
 
+    /// Satellite coverage: every first-kind × intruder-kind combination
+    /// returns `BatchKindError` (not a panic, not a silent mix), the
+    /// intruder position doesn't matter, and empty input is an error too.
     #[test]
-    fn cached_cpu_stage_matches_uncached_exactly() {
+    fn collate_error_paths_cover_all_kind_pairs() {
+        fn mk(kind: usize) -> Payload {
+            match kind {
+                0 => Payload::Ready(vec![1.0; 4]),
+                1 => Payload::Coefs { coefs: vec![1.0; 4], qtable: [0.5; 64], aug: [0.0; 6] },
+                _ => Payload::Pixels { pixels: vec![1.0; 4].into(), aug: [0.0; 6] },
+            }
+        }
+        for first in 0..3usize {
+            for intruder in 0..3usize {
+                if first == intruder {
+                    continue;
+                }
+                // Intruder in the middle and at the tail.
+                for pos in [1usize, 2] {
+                    let samples: Vec<Sample> = (0..3)
+                        .map(|i| Sample {
+                            id: i as u64,
+                            label: 0,
+                            payload: mk(if i == pos { intruder } else { first }),
+                        })
+                        .collect();
+                    assert!(
+                        collate(samples).is_err(),
+                        "first={first} intruder={intruder} pos={pos} must error"
+                    );
+                }
+            }
+            // Homogeneous batches of each kind still collate fine.
+            let ok: Vec<Sample> = (0..3)
+                .map(|i| Sample { id: i, label: 1, payload: mk(first) })
+                .collect();
+            let b = collate(ok).unwrap();
+            assert_eq!(b.len(), 3);
+            assert_eq!(b.labels(), &[1, 1, 1]);
+        }
+        assert!(matches!(collate(vec![]), Err(BatchKindError)));
+    }
+
+    #[test]
+    fn cached_stage_matches_uncached_exactly() {
         // Cache transparency: for the same aug params, a prep-cache hit
         // must produce bit-identical tensors to the decode path.
         let bytes = encoded_image(3);
         let aug = AugParams { y0: 2, x0: 1, crop_h: 48, crop_w: 52, flip: true };
         let img = crate::codec::decode_cpu(&bytes).unwrap();
         let sample = prep_cache::DecodedSample::new(img.c, img.h, img.w, img.to_f32());
+        let ctx = StageCtx::new(Placement::Cpu, 56);
         match (
-            cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap(),
-            cpu_stage_cached(&sample, Placement::Cpu, aug, 56),
+            ctx.run_stage(&bytes, 0, aug).unwrap().0,
+            ctx.run_stage_cached(&sample, aug),
         ) {
             (Payload::Ready(a), Payload::Ready(b)) => assert_eq!(a, b),
             other => panic!("{other:?}"),
         }
         // Device placements re-enter as a hybrid0-style pixel payload.
         for pl in [Placement::Hybrid, Placement::Hybrid0] {
-            match cpu_stage_cached(&sample, pl, aug, 56) {
+            match StageCtx::new(pl, 56).run_stage_cached(&sample, aug) {
                 Payload::Pixels { pixels, aug: row } => {
                     assert_eq!(pixels[..], img.to_f32()[..]);
                     assert_eq!(row, aug.to_row());
@@ -626,9 +681,10 @@ mod tests {
         let bytes = encoded_image(4);
         let aug = AugParams::identity(64, 64);
         for pl in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
-            let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
-            let p = cpu_stage_admitting(&bytes, pl, aug, 56, &cache, 9).unwrap();
-            // Same hand-off format as the plain stage...
+            let cache = minio_cache(1 << 20);
+            let ctx = StageCtx::new(pl, 56).with_cache(cache.clone());
+            let (p, _) = ctx.run_stage(&bytes, 9, aug).unwrap();
+            // Same hand-off format as the cache-less chain...
             match (pl, &p) {
                 (Placement::Cpu, Payload::Ready(_))
                 | (Placement::Hybrid, Payload::Coefs { .. })
@@ -640,24 +696,25 @@ mod tests {
             assert_eq!((s.c, s.h, s.w), (3, 64, 64));
             assert_eq!(s.pixels.len(), 3 * 64 * 64);
         }
-        // A zero-budget cache admits nothing but the stage still works.
-        let cache = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
-        cpu_stage_admitting(&bytes, Placement::Cpu, aug, 56, &cache, 9).unwrap();
+        // A zero-budget cache admits nothing but the chain still works.
+        let cache = minio_cache(0);
+        let ctx = StageCtx::new(Placement::Cpu, 56).with_cache(cache.clone());
+        ctx.run_stage(&bytes, 9, aug).unwrap();
         assert!(cache.is_empty());
     }
 
     #[test]
-    fn fused_cpu_stage_is_bit_identical_to_full_stage() {
+    fn fused_stage_is_bit_identical_to_full_stage() {
         let bytes = encoded_image(7);
-        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
+        let full_ctx = StageCtx::new(Placement::Cpu, 56);
+        let fused_ctx = StageCtx::new(Placement::Cpu, 56).with_opts(fused(0));
         for aug in [
             AugParams { y0: 3, x0: 11, crop_h: 37, crop_w: 41, flip: true },
             AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: false },
             AugParams::identity(64, 64),
         ] {
-            let full = cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap();
-            let (fused, stats) =
-                cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts).unwrap();
+            let (full, _) = full_ctx.run_stage(&bytes, 0, aug).unwrap();
+            let (fused, stats) = fused_ctx.run_stage(&bytes, 0, aug).unwrap();
             match (full, fused) {
                 (Payload::Ready(a), Payload::Ready(b)) => assert_eq!(a, b, "{aug:?}"),
                 other => panic!("{other:?}"),
@@ -669,13 +726,14 @@ mod tests {
         }
         // Fused off falls back to the full stage with full-block stats.
         let aug = AugParams { y0: 3, x0: 11, crop_h: 37, crop_w: 41, flip: true };
-        let (_, stats) =
-            cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &DecodeOpts::off()).unwrap();
+        let (_, stats) = full_ctx.run_stage(&bytes, 0, aug).unwrap();
         assert_eq!(stats.blocks_idct, 3 * 64);
         assert_eq!(stats.blocks_skipped, 0);
         // Hybrid ships whole coefficient grids: the plan never applies.
-        let (p, stats) =
-            cpu_stage_planned(&bytes, Placement::Hybrid, aug, 56, &opts).unwrap();
+        let (p, stats) = StageCtx::new(Placement::Hybrid, 56)
+            .with_opts(fused(0))
+            .run_stage(&bytes, 0, aug)
+            .unwrap();
         assert!(matches!(p, Payload::Coefs { .. }));
         assert_eq!(stats.blocks_idct, 0);
     }
@@ -686,14 +744,15 @@ mod tests {
         // augment (same math as ops::augment_fused) samples only inside
         // the crop window, so the augmented output must be identical.
         let bytes = encoded_image(8);
-        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
         let aug = AugParams { y0: 9, x0: 2, crop_h: 33, crop_w: 45, flip: true };
-        let full = cpu_stage(&bytes, Placement::Hybrid0, aug, 56).unwrap();
-        let (fused, stats) =
-            cpu_stage_planned(&bytes, Placement::Hybrid0, aug, 56, &opts).unwrap();
+        let (full, _) = StageCtx::new(Placement::Hybrid0, 56).run_stage(&bytes, 0, aug).unwrap();
+        let (fused_p, stats) = StageCtx::new(Placement::Hybrid0, 56)
+            .with_opts(fused(0))
+            .run_stage(&bytes, 0, aug)
+            .unwrap();
         assert!(stats.blocks_skipped > 0);
         let (Payload::Pixels { pixels: a, aug: ra }, Payload::Pixels { pixels: b, aug: rb }) =
-            (full, fused)
+            (full, fused_p)
         else {
             panic!("expected pixel payloads")
         };
@@ -713,12 +772,10 @@ mod tests {
         // 4x fewer bytes resident, and the hit path rescales the aug
         // params against the stored dims.
         let bytes = encoded_image(9);
-        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
-        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+        let cache = minio_cache(1 << 20);
+        let ctx = StageCtx::new(Placement::Cpu, 16).with_opts(fused(3)).with_cache(cache.clone());
         let aug = AugParams { y0: 4, x0: 8, crop_h: 48, crop_w: 48, flip: false };
-        let (p, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Cpu, aug, 16, &cache, 5, &opts)
-                .unwrap();
+        let (p, stats) = ctx.run_stage(&bytes, 5, aug).unwrap();
         assert!(matches!(p, Payload::Ready(ref v) if v.len() == 3 * 16 * 16));
         assert_eq!(stats.scale_log2, 1);
         assert_eq!(stats.blocks_idct, 3 * 64, "admission decodes the whole image");
@@ -730,19 +787,18 @@ mod tests {
         // at this scale: stored pixels are only ever downsampled.
         assert!(crate::ops::min_crop_side(64, 64) as usize >> s.scale_log2 >= 16);
         // A hit augments the scaled pixels into the same output shape...
-        let hit = cpu_stage_cached(&s, Placement::Cpu, aug, 16);
+        let hit = ctx.run_stage_cached(&s, aug);
         let Payload::Ready(hit_out) = hit else { panic!() };
         assert_eq!(hit_out.len(), 3 * 16 * 16);
         // ...and matches the miss path exactly (same stored pixels, same
         // rescaled params).
         let Payload::Ready(miss_out) = p else { panic!() };
         assert_eq!(hit_out, miss_out);
-        // A zero-budget cache refuses admission; the stage degrades to
+        // A zero-budget cache refuses admission; the chain degrades to
         // the plain fused ROI path.
-        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
-        let (_, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Cpu, aug, 16, &empty, 5, &opts)
-                .unwrap();
+        let empty = minio_cache(0);
+        let ctx = StageCtx::new(Placement::Cpu, 16).with_opts(fused(3)).with_cache(empty.clone());
+        let (_, stats) = ctx.run_stage(&bytes, 5, aug).unwrap();
         assert!(empty.is_empty());
         assert!(stats.blocks_skipped > 0, "no admission -> ROI skip");
     }
@@ -752,44 +808,42 @@ mod tests {
         // The hybrid0 device payload shape is fixed at full resolution,
         // so admission decodes (and caches) whole full-res images.
         let bytes = encoded_image(10);
-        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
-        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
+        let cache = minio_cache(1 << 20);
+        let ctx =
+            StageCtx::new(Placement::Hybrid0, 56).with_opts(fused(3)).with_cache(cache.clone());
         let aug = AugParams { y0: 4, x0: 8, crop_h: 40, crop_w: 40, flip: false };
-        let (p, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Hybrid0, aug, 56, &cache, 6, &opts)
-                .unwrap();
+        let (p, stats) = ctx.run_stage(&bytes, 6, aug).unwrap();
         assert!(matches!(p, Payload::Pixels { ref pixels, .. } if pixels.len() == 3 * 64 * 64));
         assert_eq!(stats.blocks_skipped, 0, "whole image admitted");
         let s = cache.get(6).expect("admitted");
         assert_eq!((s.h, s.w, s.scale_log2), (64, 64, 0));
         // Refused admission -> fused ROI canvas, nothing cached.
-        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
-        let (_, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Hybrid0, aug, 56, &empty, 6, &opts)
-                .unwrap();
+        let empty = minio_cache(0);
+        let ctx =
+            StageCtx::new(Placement::Hybrid0, 56).with_opts(fused(3)).with_cache(empty.clone());
+        let (_, stats) = ctx.run_stage(&bytes, 6, aug).unwrap();
         assert!(empty.is_empty());
         assert!(stats.blocks_skipped > 0);
     }
 
     #[test]
     fn hybrid_admission_counts_its_cache_only_transform() {
-        // The hybrid arm's admission runs a full dequant+IDCT to produce
-        // cacheable pixels — the idct_blocks counter must see it.
+        // The hybrid chain's admission runs a full dequant+IDCT to
+        // produce cacheable pixels — the idct_blocks counter must see it.
         let bytes = encoded_image(11);
-        let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
         let aug = AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: false };
-        let cache = prep_cache::PrepCache::new(1 << 20, prep_cache::PrepCachePolicy::Minio);
-        let (p, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Hybrid, aug, 56, &cache, 7, &opts)
-                .unwrap();
+        let cache = minio_cache(1 << 20);
+        let ctx =
+            StageCtx::new(Placement::Hybrid, 56).with_opts(fused(0)).with_cache(cache.clone());
+        let (p, stats) = ctx.run_stage(&bytes, 7, aug).unwrap();
         assert!(matches!(p, Payload::Coefs { .. }));
         assert_eq!(stats.blocks_idct, 3 * 64, "admission dequant+IDCT must be counted");
         assert!(cache.get(7).is_some());
         // Refused admission: entropy-only, no CPU transform to count.
-        let empty = prep_cache::PrepCache::new(0, prep_cache::PrepCachePolicy::Minio);
-        let (_, stats) =
-            cpu_stage_admitting_planned(&bytes, Placement::Hybrid, aug, 56, &empty, 7, &opts)
-                .unwrap();
+        let empty = minio_cache(0);
+        let ctx =
+            StageCtx::new(Placement::Hybrid, 56).with_opts(fused(0)).with_cache(empty.clone());
+        let (_, stats) = ctx.run_stage(&bytes, 7, aug).unwrap();
         assert_eq!(stats.blocks_idct, 0);
         assert!(empty.is_empty());
     }
@@ -813,10 +867,24 @@ mod tests {
     }
 
     #[test]
+    fn stage_ctx_derives_from_config() {
+        use crate::config::RunConfig;
+        let cfg = RunConfig { placement: Placement::Hybrid0, ..RunConfig::default() };
+        let cache = minio_cache(1 << 20);
+        let ctx = StageCtx::from_config(&cfg, Some(cache), 56);
+        assert_eq!(ctx.placement, Placement::Hybrid0);
+        assert_eq!(ctx.decode_opts, DecodeOpts::from_config(&cfg));
+        assert_eq!(ctx.out_hw, 56);
+        assert!(ctx.prep_cache.is_some());
+        let ctx = StageCtx::from_config(&cfg, None, 56);
+        assert!(ctx.prep_cache.is_none());
+    }
+
+    #[test]
     fn collate_coefs_carries_qtable_and_aug() {
         let bytes = encoded_image(2);
         let aug = AugParams { y0: 1, x0: 2, crop_h: 50, crop_w: 40, flip: true };
-        let p = cpu_stage(&bytes, Placement::Hybrid, aug, 56).unwrap();
+        let (p, _) = StageCtx::new(Placement::Hybrid, 56).run_stage(&bytes, 0, aug).unwrap();
         let b = collate(vec![Sample { id: 0, label: 5, payload: p }]).unwrap();
         match b {
             Batch::Coefs { qtable, aug, labels, .. } => {

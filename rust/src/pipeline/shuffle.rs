@@ -95,4 +95,37 @@ mod tests {
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4));
     }
+
+    /// Satellite: the *eviction order* itself (not just the final
+    /// multiset) is a pure function of the seed — same seed ⇒ the same
+    /// item leaves on the same push, across both the streaming phase and
+    /// the drain.
+    #[test]
+    fn eviction_order_is_a_pure_function_of_the_seed() {
+        let evictions = |seed: u64, n: u32| {
+            let mut sb = ShuffleBuffer::new(16, Rng::new(seed));
+            let mut streamed = Vec::new();
+            for i in 0..n {
+                // Record (push index, evicted item) pairs: position
+                // matters, not just membership.
+                if let Some(v) = sb.push(i) {
+                    streamed.push((i, v));
+                }
+            }
+            (streamed, sb.drain())
+        };
+        let (s1, d1) = evictions(42, 200);
+        let (s2, d2) = evictions(42, 200);
+        assert_eq!(s1, s2, "same seed must evict the same item on the same push");
+        assert_eq!(d1, d2, "same seed must drain in the same order");
+        let (s3, d3) = evictions(43, 200);
+        assert!(
+            s1 != s3 || d1 != d3,
+            "different seeds should not reproduce the identical order"
+        );
+        // Prefix stability: the first half of the stream fully determines
+        // the evictions seen so far (no hidden global state).
+        let (short, _) = evictions(42, 100);
+        assert_eq!(&s1[..short.len()], &short[..]);
+    }
 }

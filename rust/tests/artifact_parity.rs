@@ -169,9 +169,9 @@ fn fused_artifact_equals_decode_then_augment() {
 #[test]
 fn hybrid_and_cpu_placements_produce_identical_batches() {
     // End-to-end placement parity at the pipeline layer: the exact tensors
-    // the trainer would see, via dpp::pipeline::cpu_stage + artifacts.
+    // the trainer would see, via the unified StageCtx chain + artifacts.
     use dpp::config::Placement;
-    use dpp::pipeline::{collate, cpu_stage, Batch, Sample};
+    use dpp::pipeline::{collate, Batch, Sample, StageCtx};
 
     let Some(mut eng) = engine_or_skip() else { return };
     let b = eng.manifest.batch_test;
@@ -181,12 +181,13 @@ fn hybrid_and_cpu_placements_produce_identical_batches() {
         (0..b).map(|_| ops::sample_aug_params(&mut rng, 64, 64)).collect();
 
     let make = |pl: Placement| -> Vec<Sample> {
+        let ctx = StageCtx::new(pl, 56);
         enc.iter()
             .enumerate()
             .map(|(i, bytes)| Sample {
                 id: i as u64,
                 label: 0,
-                payload: cpu_stage(bytes, pl, params[i], 56).unwrap(),
+                payload: ctx.run_stage(bytes, i as u64, params[i]).unwrap().0,
             })
             .collect()
     };

