@@ -51,6 +51,9 @@ pub struct Candidate {
     /// Fused ROI decode on the CPU stage (bit-exact; free throughput on
     /// decode-bound configs, a no-op on hybrid ones).
     pub fused_decode: bool,
+    /// Batch-slab pool on the CPU stage (bit-exact; drops the collate
+    /// memcpy — cpu placement only, where the CPU hand-off is the batch).
+    pub slab_pool: bool,
     pub throughput_ips: f64,
     pub price_per_hour: f64,
     pub dollars_per_mimg: f64,
@@ -117,42 +120,54 @@ pub fn enumerate(model: &str) -> Result<Vec<Candidate>> {
                                 if fused && placement == Placement::Hybrid {
                                     continue;
                                 }
-                                let s = Scenario {
-                                    model: model.to_string(),
-                                    gpus: inst.gpus,
-                                    vcpus: v,
-                                    method: Method::Record,
-                                    placement,
-                                    storage: storage.to_string(),
-                                    net_conns: conns.max(1),
-                                    p3dn: inst.p3dn,
-                                    prep_cache_gb: cache_gb,
-                                    prep_cache_policy: cache_policy,
-                                    fused_decode: fused,
-                                    ..Default::default()
-                                };
-                                let t = analytic_throughput(&s);
-                                let mut price = inst.price_per_hour(v, storage == "dram");
-                                price += match storage {
-                                    "s3" => catalog::s3_dataset_per_hour(),
-                                    "s3-cold" => catalog::s3_cold_dataset_per_hour(),
-                                    _ => 0.0,
-                                };
-                                price += cache_gb * GCLOUD_MEM_GB_HOUR;
-                                out.push(Candidate {
-                                    instance: inst.name,
-                                    gpus: inst.gpus,
-                                    vcpus: v,
-                                    placement,
-                                    storage: storage.to_string(),
-                                    net_conns: conns,
-                                    prep_cache_gb: cache_gb,
-                                    prep_cache_policy: cache_policy,
-                                    fused_decode: fused,
-                                    throughput_ips: t,
-                                    price_per_hour: price,
-                                    dollars_per_mimg: price / (t * 3600.0) * 1e6,
-                                });
+                                for slab in [false, true] {
+                                    // The slab pool only moves the model
+                                    // where the CPU stage carries the
+                                    // augment (and its collate copy) —
+                                    // the cpu placement.  Elsewhere it
+                                    // would duplicate rows.
+                                    if slab && placement != Placement::Cpu {
+                                        continue;
+                                    }
+                                    let s = Scenario {
+                                        model: model.to_string(),
+                                        gpus: inst.gpus,
+                                        vcpus: v,
+                                        method: Method::Record,
+                                        placement,
+                                        storage: storage.to_string(),
+                                        net_conns: conns.max(1),
+                                        p3dn: inst.p3dn,
+                                        prep_cache_gb: cache_gb,
+                                        prep_cache_policy: cache_policy,
+                                        fused_decode: fused,
+                                        slab_pool: slab,
+                                        ..Default::default()
+                                    };
+                                    let t = analytic_throughput(&s);
+                                    let mut price = inst.price_per_hour(v, storage == "dram");
+                                    price += match storage {
+                                        "s3" => catalog::s3_dataset_per_hour(),
+                                        "s3-cold" => catalog::s3_cold_dataset_per_hour(),
+                                        _ => 0.0,
+                                    };
+                                    price += cache_gb * GCLOUD_MEM_GB_HOUR;
+                                    out.push(Candidate {
+                                        instance: inst.name,
+                                        gpus: inst.gpus,
+                                        vcpus: v,
+                                        placement,
+                                        storage: storage.to_string(),
+                                        net_conns: conns,
+                                        prep_cache_gb: cache_gb,
+                                        prep_cache_policy: cache_policy,
+                                        fused_decode: fused,
+                                        slab_pool: slab,
+                                        throughput_ips: t,
+                                        price_per_hour: price,
+                                        dollars_per_mimg: price / (t * 3600.0) * 1e6,
+                                    });
+                                }
                             }
                         }
                     }
@@ -249,7 +264,7 @@ impl Candidate {
 
     pub fn row(&self) -> String {
         format!(
-            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:<11} {:<3} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
+            "{:<14} {:>2} GPU {:>3} vCPU  {:<7} {:<12} {:<11} {:<3} {:<3} {:>9.0} img/s  ${:>6.2}/h  ${:>6.2}/Mimg",
             self.instance,
             self.gpus,
             self.vcpus,
@@ -257,6 +272,7 @@ impl Candidate {
             self.storage_desc(),
             self.cache_desc(),
             if self.fused_decode { "fd" } else { "-" },
+            if self.slab_pool { "sl" } else { "-" },
             self.throughput_ips,
             self.price_per_hour,
             self.dollars_per_mimg,
@@ -386,6 +402,7 @@ mod tests {
                         && c.storage == "ebs"
                         && c.prep_cache_gb == 0.0
                         && !c.fused_decode
+                        && !c.slab_pool
                 })
                 .collect();
             let peak = slice
@@ -492,6 +509,7 @@ mod tests {
                         && c.storage == "ebs"
                         && c.prep_cache_gb == 0.0
                         && c.fused_decode == fused
+                        && !c.slab_pool
                 })
                 .unwrap()
         };
@@ -507,6 +525,46 @@ mod tests {
             cands.iter().filter(|c| c.placement == Placement::Hybrid).all(|c| !c.fused_decode),
             "hybrid candidates must not carry the fused axis"
         );
+    }
+
+    #[test]
+    fn slab_pool_axis_dominates_on_cpu_bound_cpu_placement() {
+        let cands = enumerate("alexnet").unwrap();
+        let pick = |slab: bool| {
+            cands
+                .iter()
+                .find(|c| {
+                    c.instance == "V100-8"
+                        && c.vcpus == 24
+                        && c.placement == Placement::Cpu
+                        && c.storage == "ebs"
+                        && c.prep_cache_gb == 0.0
+                        && !c.fused_decode
+                        && c.slab_pool == slab
+                })
+                .unwrap()
+        };
+        // CPU-bound cpu-placement slice: the slab pool wins strictly at
+        // equal price (it is pure removed work, like the fused decoder).
+        let (on, off) = (pick(true), pick(false));
+        assert!(
+            on.throughput_ips > off.throughput_ips,
+            "{} vs {}",
+            on.throughput_ips,
+            off.throughput_ips
+        );
+        assert_eq!(on.price_per_hour, off.price_per_hour);
+        assert!(on.dollars_per_mimg < off.dollars_per_mimg);
+        assert!(on.row().contains(" sl "), "{}", on.row());
+        // Device placements carry no slab axis (modeled no-op — the CPU
+        // hand-off there is not the final batch tensor).
+        assert!(
+            cands.iter().filter(|c| c.placement != Placement::Cpu).all(|c| !c.slab_pool),
+            "non-cpu candidates must not carry the slab axis"
+        );
+        // Both axis values are enumerated for the cpu placement.
+        assert!(cands.iter().any(|c| c.placement == Placement::Cpu && c.slab_pool));
+        assert!(cands.iter().any(|c| c.placement == Placement::Cpu && !c.slab_pool));
     }
 
     #[test]

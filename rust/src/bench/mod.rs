@@ -2,6 +2,7 @@
 //! is unavailable offline) and the paper-figure reproduction harnesses
 //! shared by `cargo bench` targets and `dpp reproduce`.
 
+pub mod alloc;
 pub mod decode;
 pub mod figures;
 pub mod harness;

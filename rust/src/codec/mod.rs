@@ -56,6 +56,24 @@ impl Image {
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&b| b as f32).collect()
     }
+
+    /// [`to_f32`](Self::to_f32) into caller scratch: `out`'s capacity is
+    /// reused, so a worker converting same-sized images allocates once.
+    pub fn to_f32_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.data.iter().map(|&b| b as f32));
+    }
+
+    /// Reshape in place, reusing the pixel buffer's capacity — the
+    /// decode-scratch reset of the zero-copy hot path.  Contents are
+    /// zeroed (same as a fresh [`Image::new`]).
+    pub fn reset(&mut self, c: usize, h: usize, w: usize) {
+        self.c = c;
+        self.h = h;
+        self.w = w;
+        self.data.clear();
+        self.data.resize(c * h * w, 0);
+    }
 }
 
 /// Entropy-decoded (but not yet inverse-transformed) coefficients —
@@ -327,6 +345,22 @@ fn largest_scale(dh: usize, dw: usize, out_hw: usize, max_scale_log2: usize) -> 
 /// skipping its neighbors cannot change it (asserted by a property
 /// harness in `tests/fused_decode.rs`).
 pub fn decode_cpu_planned(bytes: &[u8], plan: &DecodePlan) -> Result<(Image, DecodeStats)> {
+    let mut img = Image::new(0, 0, 0);
+    let stats = decode_cpu_planned_into(bytes, plan, &mut img)?;
+    Ok((img, stats))
+}
+
+/// [`decode_cpu_planned`] into caller-provided scratch: `img` is reshaped
+/// to the plan's output dims reusing its buffer capacity, so a worker
+/// decoding a stream of same-sized images allocates once and then never
+/// again (the pooled per-worker decode scratch of the zero-copy hot
+/// path).  Bit-identical by construction — the allocating entry point
+/// delegates here with a fresh image.
+pub fn decode_cpu_planned_into(
+    bytes: &[u8],
+    plan: &DecodePlan,
+    img: &mut Image,
+) -> Result<DecodeStats> {
     let (h, w, c, quality, off) = parse_header(bytes)?;
     ensure!(
         (c, h, w) == (plan.c, plan.h, plan.w),
@@ -342,7 +376,7 @@ pub fn decode_cpu_planned(bytes: &[u8], plan: &DecodePlan) -> Result<(Image, Dec
     let q = qtable_for_quality(quality);
     let bs = plan.block_size();
     let (oh, ow) = plan.out_dims();
-    let mut img = Image::new(c, oh, ow);
+    img.reset(c, oh, ow);
     let (bh, bw) = (h / 8, w / 8);
     let mut reader = EntropyReader::new(&bytes[off..]);
     let mut quantized = [0i32; 64];
@@ -382,7 +416,7 @@ pub fn decode_cpu_planned(bytes: &[u8], plan: &DecodePlan) -> Result<(Image, Dec
             }
         }
     }
-    Ok((img, stats))
+    Ok(stats)
 }
 
 /// Peek image dims without decoding.
@@ -547,6 +581,38 @@ mod tests {
         let total = 3 * 8 * 8;
         assert_eq!(stats.blocks_idct + stats.blocks_skipped, total);
         assert!(stats.blocks_skipped > 0);
+    }
+
+    /// Scratch-decode satellite: one reused `Image` across plans of
+    /// different geometry stays bit-identical to fresh decodes (stale
+    /// pixels from a larger previous plan must never survive a reset).
+    #[test]
+    fn planned_decode_into_reused_scratch_matches_fresh_decode() {
+        let mut scratch = Image::new(0, 0, 0);
+        let mut fbuf = Vec::new();
+        for (seed, crop) in [
+            (20u64, (0usize, 0usize, 64usize, 64usize)),
+            (21, (13, 22, 30, 27)),
+            (22, (5, 9, 40, 40)),
+            (23, (0, 0, 16, 16)),
+        ] {
+            let img = smooth_image(seed, 3, 64, 64);
+            let bytes = encode(&img, 85).unwrap();
+            let plan = DecodePlan::new(3, 64, 64, crop, 56, 0);
+            let (fresh, fresh_stats) = decode_cpu_planned(&bytes, &plan).unwrap();
+            let stats = decode_cpu_planned_into(&bytes, &plan, &mut scratch).unwrap();
+            assert_eq!(fresh, scratch, "seed {seed} crop {crop:?}");
+            assert_eq!(fresh_stats, stats);
+            scratch.to_f32_into(&mut fbuf);
+            assert_eq!(fbuf, fresh.to_f32());
+        }
+        // Shrinking reuse: a tiny image after a big one.
+        let small = smooth_image(24, 1, 16, 16);
+        let bytes = encode(&small, 85).unwrap();
+        decode_cpu_planned_into(&bytes, &DecodePlan::full(1, 16, 16), &mut scratch).unwrap();
+        assert_eq!((scratch.c, scratch.h, scratch.w), (1, 16, 16));
+        assert_eq!(scratch.data.len(), 16 * 16);
+        assert_eq!(scratch, decode_cpu(&bytes).unwrap());
     }
 
     #[test]

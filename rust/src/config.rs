@@ -117,6 +117,61 @@ impl DecodeScale {
     }
 }
 
+/// Batch-slab pool mode (`--slab-pool`) — the zero-copy hot path's
+/// memory knob, `cpu` placement only (the one whose CPU hand-off is the
+/// final batch tensor; device placements ignore it):
+/// * `auto` — pool on; the idle-arena bound derives from the prefetch
+///   depth (one slab per in-flight batch plus slack).
+/// * `N` — pool on; keep at most `N` idle arenas for reuse.
+/// * `off` — the per-sample `Vec` path (pre-slab behavior, kept for A/B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlabPoolCfg {
+    Auto,
+    Fixed(usize),
+    Off,
+}
+
+impl SlabPoolCfg {
+    pub fn parse(s: &str) -> Result<SlabPoolCfg> {
+        match s {
+            "auto" => Ok(SlabPoolCfg::Auto),
+            "off" => Ok(SlabPoolCfg::Off),
+            _ => match s.parse::<usize>() {
+                Ok(n) if n > 0 => Ok(SlabPoolCfg::Fixed(n)),
+                _ => bail!("slab-pool must be auto|N|off (N >= 1), got {s}"),
+            },
+        }
+    }
+
+    /// Canonical flag value (round-trips through [`parse`](Self::parse)).
+    pub fn name(&self) -> String {
+        match self {
+            SlabPoolCfg::Auto => "auto".into(),
+            SlabPoolCfg::Off => "off".into(),
+            SlabPoolCfg::Fixed(n) => n.to_string(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self, SlabPoolCfg::Off)
+    }
+
+    /// Idle arenas the pool keeps for reuse.  `auto` covers every slab
+    /// the pipeline can hold in flight at once — the sample queue
+    /// (`queue_depth` batches' worth of slot samples) plus the batch
+    /// queue (`queue_depth` sealed batches) plus the open slab, the
+    /// batch on the device, and one of slack — so even a full drain
+    /// burst recycles without freeing, and the steady state never
+    /// allocates.  A burst beyond it frees on recycle.
+    pub fn free_cap(&self, queue_depth: usize) -> usize {
+        match self {
+            SlabPoolCfg::Auto => 2 * queue_depth + 3,
+            SlabPoolCfg::Fixed(n) => *n,
+            SlabPoolCfg::Off => 0,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Directory holding the raw corpus (img/*.mjx + metadata.tsv) and/or
@@ -193,6 +248,10 @@ pub struct RunConfig {
     /// Fractional-scale cap for the fused decoder (`--decode-scale`);
     /// only scales past 1/1 when `fused_decode` is on.
     pub decode_scale: DecodeScale,
+    /// Batch-slab pool (`--slab-pool auto|N|off`): workers write
+    /// augmented output directly into their batch slot and collate
+    /// becomes a seal — `off` preserves the per-sample Vec path for A/B.
+    pub slab_pool: SlabPoolCfg,
 }
 
 impl Default for RunConfig {
@@ -228,6 +287,7 @@ impl Default for RunConfig {
             prep_cache_policy: PrepCachePolicy::Minio,
             fused_decode: true,
             decode_scale: DecodeScale::Fixed(1),
+            slab_pool: SlabPoolCfg::Auto,
         }
     }
 }
@@ -281,6 +341,7 @@ impl RunConfig {
             "readahead-mb",
             "fused-decode",
             "decode-scale",
+            "slab-pool",
             "ideal",
             "no-train",
             // Consumed by the `run` driver (report export), not RunConfig.
@@ -424,6 +485,9 @@ impl RunConfig {
         if let Some(v) = args.get("decode-scale") {
             self.decode_scale = DecodeScale::parse(v)?;
         }
+        if let Some(v) = args.get("slab-pool") {
+            self.slab_pool = SlabPoolCfg::parse(v)?;
+        }
         if args.has_flag("ideal") {
             self.ideal = true;
         }
@@ -460,6 +524,7 @@ impl RunConfig {
             ("prep_cache_policy", Json::str(self.prep_cache_policy.name())),
             ("fused_decode", Json::Bool(self.fused_decode)),
             ("decode_scale", Json::str(self.decode_scale.name())),
+            ("slab_pool", Json::str(&self.slab_pool.name())),
         ])
     }
 }
@@ -626,6 +691,50 @@ mod tests {
         let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
         assert_eq!(parsed.req("fused_decode").as_bool(), Some(false));
         assert_eq!(parsed.req("decode_scale").as_str(), Some("4"));
+    }
+
+    #[test]
+    fn slab_pool_flag_parses_validates_and_roundtrips() {
+        // Default: pooled slabs on with the auto free-list bound.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.slab_pool, SlabPoolCfg::Auto);
+        assert!(cfg.slab_pool.enabled());
+        // Auto bound = every in-flight slab (sample queue + batch queue
+        // + open + device + slack), so a drain burst recycles fully.
+        assert_eq!(cfg.slab_pool.free_cap(cfg.queue_depth), 2 * cfg.queue_depth + 3);
+        // auto | N | off all parse and round-trip through name().
+        for (s, want) in [
+            ("auto", SlabPoolCfg::Auto),
+            ("off", SlabPoolCfg::Off),
+            ("3", SlabPoolCfg::Fixed(3)),
+            ("16", SlabPoolCfg::Fixed(16)),
+        ] {
+            let parsed = SlabPoolCfg::parse(s).unwrap();
+            assert_eq!(parsed, want);
+            assert_eq!(SlabPoolCfg::parse(&parsed.name()).unwrap(), parsed);
+        }
+        assert!(!SlabPoolCfg::Off.enabled());
+        assert_eq!(SlabPoolCfg::Fixed(5).free_cap(4), 5);
+        assert_eq!(SlabPoolCfg::Off.free_cap(4), 0);
+        // Garbage values fail loudly (0 idle arenas = just say off).
+        for bad in ["0", "on", "", "-1", "2.5"] {
+            assert!(SlabPoolCfg::parse(bad).is_err(), "{bad:?} accepted");
+        }
+        // CLI → config → JSON.
+        let mut cfg = RunConfig::default();
+        let args =
+            Args::parse("run --slab-pool off".split_whitespace().map(String::from));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.slab_pool, SlabPoolCfg::Off);
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("slab_pool").as_str(), Some("off"));
+        let args = Args::parse("run --slab-pool 8".split_whitespace().map(String::from));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.slab_pool, SlabPoolCfg::Fixed(8));
+        let mut bad = RunConfig::default();
+        let args =
+            Args::parse("run --slab-pool maybe".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
     }
 
     #[test]

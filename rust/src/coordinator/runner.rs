@@ -9,7 +9,7 @@ use crate::pipeline::exec::{self, ExecConfig};
 use crate::pipeline::prep_cache::PrepCache;
 use crate::pipeline::shuffle::ShuffleBuffer;
 use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
-use crate::pipeline::{collate, Batch, Payload, Sample, StageCtx};
+use crate::pipeline::{collate, Batch, Payload, Sample, StageCtx, StageScratch};
 use crate::runtime::{lit_f32, Engine};
 use crate::storage::{
     CachedStore, DirStore, MemStore, NetProfile, PrefetchPlan, RemoteStore, Storage,
@@ -110,6 +110,20 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     // fresh per epoch — only decode is amortized).
     let prep_cache = (cfg.prep_cache_mb > 0)
         .then(|| Arc::new(PrepCache::new(cfg.prep_cache_mb << 20, cfg.prep_cache_policy)));
+
+    // Zero-copy hot path (`--slab-pool`, cpu placement): workers write
+    // augmented output straight into pooled batch-slab slots, the
+    // batcher seals instead of memcpying, drained batches recycle their
+    // arena via RAII.  Device placements keep their payload hand-offs.
+    let out_hw = 56; // manifest.out_hw; validated on the device side
+    let slab_pool = (cfg.placement == Placement::Cpu && cfg.slab_pool.enabled()).then(|| {
+        crate::util::slab::SlabPool::new(
+            3 * out_hw * out_hw,
+            cfg.batch_size,
+            cfg.slab_pool.free_cap(cfg.queue_depth),
+        )
+    });
+    let alloc0 = crate::util::alloc_count::snapshot();
 
     // Queue bounds: the executor derives the work-queue capacity from
     // `workers_max` (a live worker count would go stale under
@@ -219,7 +233,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
     // ---- cpu workers (elastic pool) ---------------------------------------
     // One stage closure runs the unified per-sample chain; the executor
-    // owns the threads, the park/unpark gate, and — under `--workers
+    // owns the threads, the park/unpark gate, the per-worker scratch
+    // lifecycle (parked workers release theirs), and — under `--workers
     // auto` — the feedback controller that resizes the pool.
     let pool = {
         let storage = storage.clone();
@@ -229,12 +244,12 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let stage_clock = cpu_clock.clone();
         let epoch_clock = epoch_clock.clone();
         let scale_hist = scale_hist.clone();
-        let out_hw = 56; // manifest.out_hw; validated on the device side
         let ctx = StageCtx::from_config(cfg, prep_cache.clone(), out_hw);
+        let slab = slab_pool.clone();
         // The closure lives in every pool worker for the whole run:
         // capture only the two scalars it needs, not a RunConfig clone.
         let seed = cfg.seed;
-        let stage = move |item: WorkItem| -> Result<Option<Sample>> {
+        let stage = move |scratch: &mut StageScratch, item: WorkItem| -> Result<Option<Sample>> {
             let (id, label, epoch) = (item.id(), item.label(), item.epoch());
             // The aug stream forks on (id, epoch): a prep-cache hit in
             // epoch N+1 samples *fresh* params, and hit/miss paths draw
@@ -251,7 +266,17 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                     sample.orig_h() as u32,
                     sample.orig_w() as u32,
                 );
-                let payload = stage_clock.track(|| ctx.run_stage_cached(&sample, aug));
+                let payload = if let Some(pool) = &slab {
+                    // Zero-copy hit: the single write is the augmented
+                    // sample into its batch slot.
+                    let mut slice = pool.slice();
+                    stage_clock.track(|| {
+                        ctx.run_stage_cached_into(&sample, aug, scratch, slice.as_mut_slice())
+                    });
+                    Payload::Slot(slice)
+                } else {
+                    stage_clock.track(|| ctx.run_stage_cached(&sample, aug))
+                };
                 counters.decode_skipped(1);
                 counters.images_decoded(1);
                 if matches!(ctx.placement, Placement::Cpu) {
@@ -287,7 +312,16 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             let (c, h, wid, _q) = crate::codec::probe(bytes)?;
             ensure!(c == 3, "expected RGB, got {c} channels");
             let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
-            let (payload, dstats) = stage_clock.track(|| ctx.run_stage(bytes, id, aug))?;
+            let (payload, dstats) = if let Some(pool) = &slab {
+                // Zero-copy miss: decode into worker scratch, augment
+                // into the batch slot — no per-sample allocation.
+                let mut slice = pool.slice();
+                let dstats = stage_clock
+                    .track(|| ctx.run_stage_into(bytes, id, aug, scratch, slice.as_mut_slice()))?;
+                (Payload::Slot(slice), dstats)
+            } else {
+                stage_clock.track(|| ctx.run_stage(bytes, id, aug))?
+            };
             counters.idct_blocks(dstats.blocks_idct);
             counters.idct_blocks_skipped(dstats.blocks_skipped);
             // Only decodes that ran a CPU transform enter the scale
@@ -305,7 +339,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             epoch_clock.mark(epoch as usize);
             Ok(Some(Sample { id, label, payload }))
         };
-        exec::spawn(exec_cfg, work_rx, sample_tx, cpu_clock.clone(), stage)?
+        exec::spawn_stateful(
+            exec_cfg,
+            work_rx,
+            sample_tx,
+            cpu_clock.clone(),
+            StageScratch::new,
+            stage,
+        )?
     };
 
     // ---- batcher ----------------------------------------------------------
@@ -322,10 +363,34 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                     Payload::Ready(_) => 0,
                     Payload::Coefs { .. } => 1,
                     Payload::Pixels { .. } => 2,
+                    // Slot samples are routed to the slab groups before
+                    // this accumulator path ever sees them.
+                    Payload::Slot(_) => unreachable!("slot samples group by slab"),
                 }
             }
             let mut accs: [Vec<Sample>; 3] = Default::default();
+            // Slab-slot samples group by slab generation: with several
+            // workers in flight, slices of consecutive slabs interleave
+            // in the sample stream, and a batch must be exactly one
+            // fully-filled slab for the zero-copy seal.
+            let mut slabs: std::collections::HashMap<u64, Vec<Sample>> =
+                std::collections::HashMap::new();
             while let Some(s) = sample_rx.recv() {
+                if let Payload::Slot(ref sl) = s.payload {
+                    let seq = sl.slab_seq();
+                    let acc = slabs.entry(seq).or_insert_with(|| Vec::with_capacity(b));
+                    acc.push(s);
+                    if acc.len() == b {
+                        let group = slabs.remove(&seq).expect("group just filled");
+                        let batch = collate(group)
+                            .map_err(|_| anyhow::anyhow!("slab batch failed to seal"))?;
+                        counters.batches_built(1);
+                        if batch_tx.send(batch).is_err() {
+                            return Ok(());
+                        }
+                    }
+                    continue;
+                }
                 let k = kind(&s.payload);
                 accs[k].push(s);
                 if accs[k].len() == b {
@@ -337,7 +402,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                     }
                 }
             }
-            // Partial trailing batches are dropped (standard drop_last=True).
+            // Partial trailing batches are dropped (standard drop_last=True)
+            // — a trailing partial slab recycles once its slices drop.
             Ok(())
         })?);
     }
@@ -417,6 +483,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         work_queue_peak: work_probe.stats().occupancy_peak,
         sample_queue_peak: sample_probe.stats().occupancy_peak,
         batch_queue_peak: batch_probe.stats().occupancy_peak,
+        slab_hits: slab_pool.as_ref().map(|p| p.hits()).unwrap_or(0),
+        slab_grows: slab_pool.as_ref().map(|p| p.grows()).unwrap_or(0),
+        bytes_alloc_hot: crate::util::alloc_count::delta(alloc0).bytes,
     })
 }
 

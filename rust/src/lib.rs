@@ -45,6 +45,11 @@ SUBCOMMANDS
               worker starvation/blocking; N pins a fixed pool)
              [--workers-min A] [--workers-max B] (auto pool bounds)
              [--workers-interval S] (controller decision period, secs)
+             [--slab-pool auto|N|off] (default auto, cpu placement:
+              pooled batch slabs — workers write augmented output
+              straight into their batch slot, collate becomes a seal,
+              drained batches recycle their arena; N bounds the idle
+              arenas kept; off restores the per-sample Vec path for A/B)
              [--queue-depth Q] [--time-scale T] [--lr R] [--seed S]
              [--artifacts DIR] [--report-json PATH]
              [--steps N] [--batch B] [--ideal] [--no-train]
@@ -52,6 +57,8 @@ SUBCOMMANDS
              [--storage ..] [--net-conns N] [--seconds S]
              [--prep-cache-gb G] [--prep-cache-policy lru|minio]
              [--fused-decode on|off] [--decode-scale 1|2|4|8]
+             [--slab-pool on|off] (model the zero-copy engine: the
+              transform share thins by the collate-copy fraction)
   reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)
   autoconf   --model M [--objective throughput|cost] [--budget $/h]
   bench      decode  [--out BENCH_decode.json] (counter-based decode
@@ -59,6 +66,10 @@ SUBCOMMANDS
   bench      workers [--out BENCH_workers.json] (fig-5-style fixed
              1/2/4/8 workers vs `auto` per storage tier, analytic
              model — deterministic, no wall clock)
+  bench      alloc   [--out BENCH_alloc.json] (counting-allocator
+             microbench: allocations/sample + ns/sample, slab vs Vec
+             hot path; fails if the slab path regresses >10% over the
+             committed allocations/sample baseline)
   inspect    [--artifacts DIR]
 "#;
 

@@ -130,7 +130,12 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::workers::run(Some(&out))?;
             Ok(())
         }
-        other => bail!("bench target must be `decode` or `workers`, got {other:?}"),
+        Some("alloc") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_alloc.json"));
+            dpp::bench::alloc::run(Some(&out))?;
+            Ok(())
+        }
+        other => bail!("bench target must be `decode`, `workers`, or `alloc`, got {other:?}"),
     }
 }
 

@@ -390,6 +390,15 @@ pub struct RunReport {
     pub work_queue_peak: u64,
     pub sample_queue_peak: u64,
     pub batch_queue_peak: u64,
+    /// Slab-pool telemetry (`--slab-pool`): batch arenas served from the
+    /// recycle free list vs freshly allocated.  At steady state hits
+    /// dominate and grows stays at the warm-up handful.
+    pub slab_hits: u64,
+    pub slab_grows: u64,
+    /// Heap bytes allocated process-wide during the run (the counting
+    /// allocator shim) — the A/B number `--slab-pool off` vs `auto`
+    /// moves.  Whole-process, so it includes runtime/engine allocations.
+    pub bytes_alloc_hot: u64,
 }
 
 impl RunReport {
@@ -430,6 +439,9 @@ impl RunReport {
             ("work_queue_peak", Json::num(self.work_queue_peak as f64)),
             ("sample_queue_peak", Json::num(self.sample_queue_peak as f64)),
             ("batch_queue_peak", Json::num(self.batch_queue_peak as f64)),
+            ("slab_hits", Json::num(self.slab_hits as f64)),
+            ("slab_grows", Json::num(self.slab_grows as f64)),
+            ("bytes_alloc_hot", Json::num(self.bytes_alloc_hot as f64)),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -501,6 +513,14 @@ impl RunReport {
                 h[1],
                 h[2],
                 h[3],
+            );
+        }
+        if self.slab_hits + self.slab_grows > 0 {
+            println!(
+                "  slab pool: {} arena reuses, {} grows, {} heap-allocated during run",
+                self.slab_hits,
+                self.slab_grows,
+                crate::util::human_bytes(self.bytes_alloc_hot),
             );
         }
         if self.decode_skipped > 0 || self.prep_cache_hit_rate > 0.0 {
@@ -648,6 +668,9 @@ mod tests {
         r.idct_blocks = 75;
         r.idct_blocks_skipped = 117;
         r.decode_scale_hist = [3, 2, 1, 0];
+        r.slab_hits = 40;
+        r.slab_grows = 5;
+        r.bytes_alloc_hot = 1 << 20;
         let j = r.to_json();
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.req("images").as_usize(), Some(10));
@@ -655,6 +678,9 @@ mod tests {
         assert_eq!(parsed.req("idct_blocks").as_usize(), Some(75));
         assert_eq!(parsed.req("idct_blocks_skipped").as_usize(), Some(117));
         assert_eq!(parsed.req("decode_scale_hist").idx(1).unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.req("slab_hits").as_usize(), Some(40));
+        assert_eq!(parsed.req("slab_grows").as_usize(), Some(5));
+        assert_eq!(parsed.req("bytes_alloc_hot").as_usize(), Some(1 << 20));
     }
 
     #[test]

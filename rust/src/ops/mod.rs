@@ -90,6 +90,22 @@ pub fn sample_aug_params(rng: &mut Rng, h: u32, w: u32) -> AugParams {
     }
 }
 
+/// Reusable row/column interpolation tables for the fused augment
+/// sampler.  The allocating entry points build these per call; the
+/// `_into` variants take one from the caller so a worker's steady state
+/// allocates nothing (the zero-copy hot path, `util/slab.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct AugScratch {
+    ys: Vec<(usize, usize, f32)>,
+    xs: Vec<(usize, usize, f32)>,
+}
+
+impl AugScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Fused crop+flip+bilinear-resize+normalize. `img` is planar `[C,H,W]`
 /// f32 pixels 0..255; output planar `[C,OH,OW]` normalized.
 ///
@@ -106,6 +122,24 @@ pub fn augment_fused(
     out: &mut [f32],
 ) {
     augment_fused_view(img, c, h, w, (0, 0, h, w), p, oh, ow, out)
+}
+
+/// [`augment_fused`] with caller-owned interpolation scratch —
+/// bit-identical (it is the same code path; the allocating wrapper
+/// merely hands in fresh scratch).
+#[allow(clippy::too_many_arguments)]
+pub fn augment_fused_into(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    p: &AugParams,
+    oh: usize,
+    ow: usize,
+    scratch: &mut AugScratch,
+    out: &mut [f32],
+) {
+    augment_fused_view_into(img, c, h, w, (0, 0, h, w), p, oh, ow, scratch, out)
 }
 
 /// Like [`augment_fused`], but `img` holds only the rectangular view
@@ -131,6 +165,25 @@ pub fn augment_fused_view(
     ow: usize,
     out: &mut [f32],
 ) {
+    augment_fused_view_into(img, c, h, w, view, p, oh, ow, &mut AugScratch::new(), out)
+}
+
+/// [`augment_fused_view`] with caller-owned interpolation scratch (the
+/// zero-allocation hot path; bit-identical by construction — the
+/// allocating entry points delegate here).
+#[allow(clippy::too_many_arguments)]
+pub fn augment_fused_view_into(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    view: (usize, usize, usize, usize),
+    p: &AugParams,
+    oh: usize,
+    ow: usize,
+    scratch: &mut AugScratch,
+    out: &mut [f32],
+) {
     let (vy, vx, vh, vw) = view;
     assert_eq!(img.len(), c * vh * vw);
     assert_eq!(out.len(), c * oh * ow);
@@ -145,17 +198,20 @@ pub fn augment_fused_view(
     let chf = p.crop_h as f32;
     let cwf = p.crop_w as f32;
 
-    // Precompute per-row/col source coords (view-relative) and weights.
-    let mut ys = vec![(0usize, 0usize, 0f32); oh];
-    for (i, e) in ys.iter_mut().enumerate() {
+    // Precompute per-row/col source coords (view-relative) and weights
+    // into the caller's scratch (capacity reused across samples).
+    scratch.ys.clear();
+    scratch.ys.resize(oh, (0usize, 0usize, 0f32));
+    for (i, e) in scratch.ys.iter_mut().enumerate() {
         let iy = ((i as f32 + 0.5) * chf / oh as f32 - 0.5).clamp(0.0, chf - 1.0);
         let sy = (iy + p.y0 as f32).clamp(0.0, (h - 1) as f32);
         let y0 = sy.floor() as usize;
         let y1 = (y0 + 1).min(h - 1).min(vy + vh - 1);
         *e = (y0 - vy, y1 - vy, sy - y0 as f32);
     }
-    let mut xs = vec![(0usize, 0usize, 0f32); ow];
-    for (j, e) in xs.iter_mut().enumerate() {
+    scratch.xs.clear();
+    scratch.xs.resize(ow, (0usize, 0usize, 0f32));
+    for (j, e) in scratch.xs.iter_mut().enumerate() {
         let mut ix = (j as f32 + 0.5) * cwf / ow as f32 - 0.5;
         if p.flip {
             ix = (cwf - 1.0) - ix;
@@ -172,11 +228,11 @@ pub fn augment_fused_view(
         let mean = NORM_MEAN[ch.min(2)];
         let istd = 1.0 / NORM_STD[ch.min(2)];
         let oplane = &mut out[ch * oh * ow..(ch + 1) * oh * ow];
-        for (i, &(y0, y1, wy)) in ys.iter().enumerate() {
+        for (i, &(y0, y1, wy)) in scratch.ys.iter().enumerate() {
             let r0 = &plane[y0 * vw..y0 * vw + vw];
             let r1 = &plane[y1 * vw..y1 * vw + vw];
             let orow = &mut oplane[i * ow..(i + 1) * ow];
-            for (j, &(x0, x1, wx)) in xs.iter().enumerate() {
+            for (j, &(x0, x1, wx)) in scratch.xs.iter().enumerate() {
                 let top = r0[x0] * (1.0 - wx) + r0[x1] * wx;
                 let bot = r1[x0] * (1.0 - wx) + r1[x1] * wx;
                 let v = top * (1.0 - wy) + bot * wy;
@@ -192,15 +248,22 @@ pub fn augment_fused_view(
 
 /// Crop `[C,H,W]` -> `[C,ch,cw]` (pixel copy, no resampling).
 pub fn crop(img: &[f32], c: usize, h: usize, w: usize, p: &AugParams) -> Vec<f32> {
+    let mut out = vec![0f32; c * p.crop_h as usize * p.crop_w as usize];
+    crop_into(img, c, h, w, p, &mut out);
+    out
+}
+
+/// [`crop`] into a caller-owned buffer (bit-identical; the allocating
+/// wrapper delegates here).
+pub fn crop_into(img: &[f32], c: usize, h: usize, w: usize, p: &AugParams, out: &mut [f32]) {
     let (ch_, cw_) = (p.crop_h as usize, p.crop_w as usize);
-    let mut out = vec![0f32; c * ch_ * cw_];
+    assert_eq!(out.len(), c * ch_ * cw_);
     for ch in 0..c {
         for y in 0..ch_ {
             let src = &img[ch * h * w + (p.y0 as usize + y) * w + p.x0 as usize..][..cw_];
             out[ch * ch_ * cw_ + y * cw_..][..cw_].copy_from_slice(src);
         }
     }
-    out
 }
 
 /// Horizontal flip in place, planar `[C,H,W]`.
@@ -223,10 +286,28 @@ pub fn resize_bilinear(
     ow: usize,
 ) -> Vec<f32> {
     let mut out = vec![0f32; c * oh * ow];
+    resize_bilinear_into(img, c, h, w, oh, ow, &mut AugScratch::new(), &mut out);
+    out
+}
+
+/// [`resize_bilinear`] reusing caller scratch for its row-interpolation
+/// temporaries instead of allocating them per call (bit-identical; the
+/// allocating wrapper delegates here).
+#[allow(clippy::too_many_arguments)]
+pub fn resize_bilinear_into(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    scratch: &mut AugScratch,
+    out: &mut [f32],
+) {
     let p = AugParams::identity(h as u32, w as u32);
     // Resizing the full window with no normalize = fused path with unit norm.
     // Reuse the fused sampler but undo normalization.
-    augment_fused(img, c, h, w, &p, oh, ow, &mut out);
+    augment_fused_into(img, c, h, w, &p, oh, ow, scratch, out);
     for ch in 0..c {
         let mean = NORM_MEAN[ch.min(2)];
         let std = NORM_STD[ch.min(2)];
@@ -234,7 +315,6 @@ pub fn resize_bilinear(
             *v = *v * std + mean;
         }
     }
-    out
 }
 
 /// Normalize in place with the ImageNet constants.
@@ -244,6 +324,21 @@ pub fn normalize(img: &mut [f32], c: usize, hw: usize) {
         let istd = 1.0 / NORM_STD[ch.min(2)];
         for v in &mut img[ch * hw..(ch + 1) * hw] {
             *v = (*v - mean) * istd;
+        }
+    }
+}
+
+/// Normalized copy into a caller-owned buffer: `out[i] = (img[i] −
+/// mean)/std`, the out-of-place sibling of [`normalize`] for hot paths
+/// whose destination is a batch-slab slot.
+pub fn normalize_into(img: &[f32], c: usize, hw: usize, out: &mut [f32]) {
+    assert_eq!(img.len(), c * hw);
+    assert_eq!(out.len(), c * hw);
+    for ch in 0..c {
+        let mean = NORM_MEAN[ch.min(2)];
+        let istd = 1.0 / NORM_STD[ch.min(2)];
+        for (o, &v) in out[ch * hw..(ch + 1) * hw].iter_mut().zip(&img[ch * hw..(ch + 1) * hw]) {
+            *o = (v - mean) * istd;
         }
     }
 }
@@ -390,6 +485,49 @@ mod tests {
                 let back = n[ch * hw + i] * NORM_STD[ch] + NORM_MEAN[ch];
                 assert!((back - img[ch * hw + i]).abs() < 1e-3);
             }
+        }
+    }
+
+    /// The `_into` satellite: every allocating operator is bit-identical
+    /// to its scratch-taking variant, with ONE scratch reused across all
+    /// iterations (stale table contents from the previous geometry must
+    /// never leak into the next call).
+    #[test]
+    fn into_variants_are_bit_identical_with_reused_scratch() {
+        let mut rng = Rng::new(33);
+        let mut scratch = AugScratch::new();
+        for round in 0..40usize {
+            let (c, h, w) = (3usize, 64usize, 64usize);
+            let img = {
+                let mut v = ramp_image(c, h, w);
+                // Perturb so rounds differ.
+                v[round % v.len()] = (round % 255) as f32;
+                v
+            };
+            let p = sample_aug_params(&mut rng, h as u32, w as u32);
+            let (oh, ow) = (8 + (round % 3) * 24, 8 + (round % 5) * 12);
+
+            let mut a = vec![0f32; c * oh * ow];
+            let mut b = vec![0f32; c * oh * ow];
+            augment_fused(&img, c, h, w, &p, oh, ow, &mut a);
+            augment_fused_into(&img, c, h, w, &p, oh, ow, &mut scratch, &mut b);
+            assert_eq!(a, b, "augment round {round} {p:?}");
+
+            let cr = crop(&img, c, h, w, &p);
+            let mut cr2 = vec![0f32; cr.len()];
+            crop_into(&img, c, h, w, &p, &mut cr2);
+            assert_eq!(cr, cr2, "crop round {round}");
+
+            let rs = resize_bilinear(&img, c, h, w, oh, ow);
+            let mut rs2 = vec![0f32; rs.len()];
+            resize_bilinear_into(&img, c, h, w, oh, ow, &mut scratch, &mut rs2);
+            assert_eq!(rs, rs2, "resize round {round}");
+
+            let mut n = img.clone();
+            normalize(&mut n, c, h * w);
+            let mut n2 = vec![0f32; img.len()];
+            normalize_into(&img, c, h * w, &mut n2);
+            assert_eq!(n, n2, "normalize round {round}");
         }
     }
 

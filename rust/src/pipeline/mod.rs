@@ -34,6 +34,8 @@ use crate::ops::{self, AugParams};
 use prep_cache::{DecodedSample, PrepCache};
 use std::sync::Arc;
 
+pub use crate::util::slab::{SlabSlice, TensorBuf};
+
 /// What the CPU stage produced for one image, by placement.
 #[derive(Clone, Debug)]
 pub enum Payload {
@@ -44,6 +46,9 @@ pub enum Payload {
     /// Decoded `[C, H, W]` pixels + aug row (hybrid0).  Shared, so a
     /// prep-cache hit hands its resident buffer on as a refcount bump.
     Pixels { pixels: std::sync::Arc<[f32]>, aug: [f32; 6] },
+    /// Augmented output already resident in its pooled batch-slab slot
+    /// (`--slab-pool`, cpu placement): collation is a seal, not a copy.
+    Slot(SlabSlice),
 }
 
 #[derive(Clone, Debug)]
@@ -59,7 +64,9 @@ pub struct BatchKindError;
 
 #[derive(Clone, Debug)]
 pub enum Batch {
-    Ready { data: Vec<f32>, labels: Vec<i32> },
+    /// `data` is a `Vec` on the collate path, a sealed slab on the
+    /// zero-copy path; both deref to the same `[B·C·OUT·OUT]` slice.
+    Ready { data: TensorBuf, labels: Vec<i32> },
     Coefs { data: Vec<f32>, qtable: [f32; 64], aug: Vec<f32>, labels: Vec<i32> },
     Pixels { data: Vec<f32>, aug: Vec<f32>, labels: Vec<i32> },
 }
@@ -92,10 +99,13 @@ impl Batch {
 /// `data`/`aug` are preallocated at exact capacity from the first
 /// sample's payload length × batch size (payloads are homogeneous per
 /// batch), so the batcher hot path never reallocates mid-collation.
+/// Slab-slot samples never copy at all: their collation is
+/// [`seal_slab_batch`] — slot order, one slab, zero memcpy.
 pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
     let n = samples.len();
     let mut labels = Vec::with_capacity(n);
     match samples.first().map(|s| &s.payload) {
+        Some(Payload::Slot(_)) => seal_slab_batch(samples),
         Some(Payload::Ready(first)) => {
             let mut data = Vec::with_capacity(first.len() * n);
             for s in samples {
@@ -103,7 +113,7 @@ pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
                 data.extend_from_slice(&v);
                 labels.push(s.label as i32);
             }
-            Ok(Batch::Ready { data, labels })
+            Ok(Batch::Ready { data: data.into(), labels })
         }
         Some(Payload::Coefs { coefs: first, qtable, .. }) => {
             let qtable = *qtable;
@@ -134,6 +144,28 @@ pub fn collate(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
         }
         None => Err(BatchKindError),
     }
+}
+
+/// Slab finalization: the zero-copy replacement for the Ready arm's
+/// O(batch·pixels) memcpy.  The batcher groups slot samples by slab
+/// generation (worker interleaving can split consecutive slabs across
+/// the sample stream), so the group arriving here must be exactly one
+/// fully-filled slab; data position = slab slot, labels fill in slot
+/// order, and `seal` verifies completeness before any read exists.
+fn seal_slab_batch(samples: Vec<Sample>) -> Result<Batch, BatchKindError> {
+    let n = samples.len();
+    let mut labels = vec![0i32; n];
+    let mut slices = Vec::with_capacity(n);
+    for s in samples {
+        let Payload::Slot(sl) = s.payload else { return Err(BatchKindError) };
+        if sl.slot() >= n {
+            return Err(BatchKindError);
+        }
+        labels[sl.slot()] = s.label as i32;
+        slices.push(sl);
+    }
+    let tensor = crate::util::slab::seal(slices).map_err(|_| BatchKindError)?;
+    Ok(Batch::Ready { data: TensorBuf::Slab(tensor), labels })
 }
 
 // ---------------------------------------------------------------------------
@@ -203,6 +235,34 @@ pub struct StageCtx {
 
 fn px_bytes(c: usize, h: usize, w: usize) -> usize {
     c * h * w * std::mem::size_of::<f32>()
+}
+
+/// Per-worker reusable scratch for the zero-copy chain: the decode
+/// target, the u8→f32 conversion buffer, and the augment interpolation
+/// tables.  Handed to each worker by the elastic executor's stateful
+/// spawn, and dropped when the controller parks the worker — parked
+/// capacity holds no scratch memory.
+#[derive(Debug)]
+pub struct StageScratch {
+    img: crate::codec::Image,
+    fbuf: Vec<f32>,
+    aug: ops::AugScratch,
+}
+
+impl StageScratch {
+    pub fn new() -> Self {
+        StageScratch {
+            img: crate::codec::Image::new(0, 0, 0),
+            fbuf: Vec::new(),
+            aug: ops::AugScratch::new(),
+        }
+    }
+}
+
+impl Default for StageScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl StageCtx {
@@ -275,17 +335,7 @@ impl StageCtx {
         match self.placement {
             Placement::Cpu => {
                 let mut out = vec![0f32; sample.c * self.out_hw * self.out_hw];
-                let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
-                ops::augment_fused(
-                    &sample.pixels,
-                    sample.c,
-                    sample.h,
-                    sample.w,
-                    &aug,
-                    self.out_hw,
-                    self.out_hw,
-                    &mut out,
-                );
+                self.cached_chain_into(sample, aug, &mut ops::AugScratch::new(), &mut out);
                 Payload::Ready(out)
             }
             Placement::Hybrid | Placement::Hybrid0 => {
@@ -299,7 +349,76 @@ impl StageCtx {
         }
     }
 
-    /// `cpu` placement: decode + augment both run here.
+    /// The miss chain with caller-owned output and scratch (`--slab-pool`):
+    /// identical math to [`run_stage`] — the allocating chain now wraps
+    /// this one — but decode lands in per-worker scratch and the
+    /// augmented sample lands directly in `out` (its batch-slab slot).
+    /// At steady state the only f32s written are the ones training
+    /// reads.  Cpu placement only: the device placements hand off
+    /// coefficient/pixel payloads, not final tensors.
+    pub fn run_stage_into(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        aug: AugParams,
+        scratch: &mut StageScratch,
+        out: &mut [f32],
+    ) -> anyhow::Result<StageStats> {
+        anyhow::ensure!(
+            self.placement == Placement::Cpu,
+            "slab hand-off is a cpu-placement path, not {:?}",
+            self.placement
+        );
+        let (c, h, w, _q) = crate::codec::probe(bytes)?;
+        self.cpu_chain_into(bytes, id, c, h, w, aug, scratch, out)
+    }
+
+    /// The hit chain with caller-owned output: the resident pixels are
+    /// read in place and the single write is the augmented sample into
+    /// its batch-slab slot — a cache hit copies no pixel bytes beyond
+    /// that one write.  Cpu placement only (device placements hand the
+    /// resident `Arc` on as a refcount bump instead).
+    pub fn run_stage_cached_into(
+        &self,
+        sample: &DecodedSample,
+        aug: AugParams,
+        scratch: &mut StageScratch,
+        out: &mut [f32],
+    ) {
+        assert!(
+            self.placement == Placement::Cpu,
+            "slab hand-off is a cpu-placement path, not {:?}",
+            self.placement
+        );
+        self.cached_chain_into(sample, aug, &mut scratch.aug, out)
+    }
+
+    /// Shared hit-path augment: original-coordinate params rescaled into
+    /// stored-pixel space, then one fused pass into `out`.
+    fn cached_chain_into(
+        &self,
+        sample: &DecodedSample,
+        aug: AugParams,
+        scratch: &mut ops::AugScratch,
+        out: &mut [f32],
+    ) {
+        let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
+        ops::augment_fused_into(
+            &sample.pixels,
+            sample.c,
+            sample.h,
+            sample.w,
+            &aug,
+            self.out_hw,
+            self.out_hw,
+            scratch,
+            out,
+        );
+    }
+
+    /// `cpu` placement: decode + augment both run here.  The allocating
+    /// entry point — fresh output + fresh scratch around the shared
+    /// zero-copy chain, so the two paths cannot drift.
     fn cpu_chain(
         &self,
         bytes: &[u8],
@@ -309,6 +428,30 @@ impl StageCtx {
         w: usize,
         aug: AugParams,
     ) -> anyhow::Result<(Payload, StageStats)> {
+        let mut out = vec![0f32; c * self.out_hw * self.out_hw];
+        let mut scratch = StageScratch::new();
+        let stats = self.cpu_chain_into(bytes, id, c, h, w, aug, &mut scratch, &mut out)?;
+        Ok((Payload::Ready(out), stats))
+    }
+
+    /// The one cpu chain, allocation-free at steady state: decode into
+    /// `scratch` (capacity reused across samples), augment into `out`
+    /// (the batch-slab slot on the slab path, a fresh `Vec` on the
+    /// legacy one).  The cache-admission link still allocates — the
+    /// resident entry is a genuine new allocation, and a full MinIO
+    /// cache refuses admission in steady state anyway.
+    #[allow(clippy::too_many_arguments)]
+    fn cpu_chain_into(
+        &self,
+        bytes: &[u8],
+        id: u64,
+        c: usize,
+        h: usize,
+        w: usize,
+        aug: AugParams,
+        scratch: &mut StageScratch,
+        out: &mut [f32],
+    ) -> anyhow::Result<StageStats> {
         // Admission link: whole-image decode so the entry serves any
         // future crop.  Under the fused plan the admission scale is
         // bounded by the *smallest* crop the aug distribution can draw
@@ -329,10 +472,11 @@ impl StageCtx {
             let (sh, sw) = (h >> k, w >> k);
             if cache.would_admit(px_bytes(c, sh, sw)) {
                 let plan = DecodePlan::full_scaled(c, h, w, k);
-                let (img, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
-                // Share one pixel buffer between cache and augment: the
-                // admission is a refcount bump, not a second full copy.
-                let pixels: Arc<[f32]> = img.to_f32().into();
+                let dstats = crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
+                scratch.img.to_f32_into(&mut scratch.fbuf);
+                // The one copy the admission pays: scratch → the cache's
+                // own resident buffer (which must outlive this sample).
+                let pixels: Arc<[f32]> = Arc::from(&scratch.fbuf[..]);
                 cache.admit(
                     id,
                     Arc::new(DecodedSample {
@@ -344,48 +488,80 @@ impl StageCtx {
                     }),
                 );
                 let aug_s = rescale_aug(&aug, 0, 0, k as u8, sh, sw);
-                let mut out = vec![0f32; c * self.out_hw * self.out_hw];
-                ops::augment_fused(&pixels, c, sh, sw, &aug_s, self.out_hw, self.out_hw, &mut out);
-                return Ok((Payload::Ready(out), StageStats::from_decode(&dstats, k)));
+                ops::augment_fused_into(
+                    &pixels,
+                    c,
+                    sh,
+                    sw,
+                    &aug_s,
+                    self.out_hw,
+                    self.out_hw,
+                    &mut scratch.aug,
+                    out,
+                );
+                return Ok(StageStats::from_decode(&dstats, k));
             }
         }
         // Per-crop decode link (admission refused or no cache): fused
-        // ROI/fractional-scale plan, or the plain whole-image decode.
+        // ROI/fractional-scale plan, or the plain whole-image decode
+        // (expressed as the full plan — bit-identical to `decode_cpu`,
+        // asserted in codec tests — so one decode path serves both).
         if self.decode_opts.fused {
             let crop =
                 (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
             let max_k = self.decode_opts.max_scale_log2 as usize;
             let plan = DecodePlan::new(c, h, w, crop, self.out_hw, max_k);
-            let (roi, dstats) = crate::codec::decode_cpu_planned(bytes, &plan)?;
-            let f = roi.to_f32();
+            let dstats = crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
+            scratch.img.to_f32_into(&mut scratch.fbuf);
+            let (roi_h, roi_w) = (scratch.img.h, scratch.img.w);
             let (vy, vx) = plan.origin();
-            let mut out = vec![0f32; c * self.out_hw * self.out_hw];
             if plan.scale_log2 == 0 {
                 // Bit-identical to full decode + augment (sampling runs
                 // in full-image coordinates over the ROI view).
-                ops::augment_fused_view(
-                    &f,
+                ops::augment_fused_view_into(
+                    &scratch.fbuf,
                     c,
                     h,
                     w,
-                    (vy, vx, roi.h, roi.w),
+                    (vy, vx, roi_h, roi_w),
                     &aug,
                     self.out_hw,
                     self.out_hw,
-                    &mut out,
+                    &mut scratch.aug,
+                    out,
                 );
             } else {
                 let aug_s =
-                    rescale_aug(&aug, vy as u32, vx as u32, plan.scale_log2 as u8, roi.h, roi.w);
-                ops::augment_fused(&f, c, roi.h, roi.w, &aug_s, self.out_hw, self.out_hw, &mut out);
+                    rescale_aug(&aug, vy as u32, vx as u32, plan.scale_log2 as u8, roi_h, roi_w);
+                ops::augment_fused_into(
+                    &scratch.fbuf,
+                    c,
+                    roi_h,
+                    roi_w,
+                    &aug_s,
+                    self.out_hw,
+                    self.out_hw,
+                    &mut scratch.aug,
+                    out,
+                );
             }
-            Ok((Payload::Ready(out), StageStats::from_decode(&dstats, plan.scale_log2)))
+            Ok(StageStats::from_decode(&dstats, plan.scale_log2))
         } else {
-            let img = crate::codec::decode_cpu(bytes)?;
-            let f = img.to_f32();
-            let mut out = vec![0f32; c * self.out_hw * self.out_hw];
-            ops::augment_fused(&f, c, h, w, &aug, self.out_hw, self.out_hw, &mut out);
-            Ok((Payload::Ready(out), full_stage_stats(c, h, w, self.placement)))
+            let plan = DecodePlan::full(c, h, w);
+            crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
+            scratch.img.to_f32_into(&mut scratch.fbuf);
+            ops::augment_fused_into(
+                &scratch.fbuf,
+                c,
+                h,
+                w,
+                &aug,
+                self.out_hw,
+                self.out_hw,
+                &mut scratch.aug,
+                out,
+            );
+            Ok(full_stage_stats(c, h, w, self.placement))
         }
     }
 
@@ -878,6 +1054,177 @@ mod tests {
         assert!(ctx.prep_cache.is_some());
         let ctx = StageCtx::from_config(&cfg, None, 56);
         assert!(ctx.prep_cache.is_none());
+    }
+
+    /// Tentpole invariant: the zero-copy chain (`run_stage_into` /
+    /// `run_stage_cached_into` + slab seal) produces bit-identical
+    /// tensors to the allocating chain, with scratch and slabs reused
+    /// across samples, across fused × prep-cache combinations.
+    #[test]
+    fn slab_chain_is_bit_identical_to_vec_chain() {
+        use crate::util::slab::SlabPool;
+        let b = 4usize;
+        for fused_on in [false, true] {
+            for cache_on in [false, true] {
+                let opts =
+                    if fused_on { fused(0) } else { DecodeOpts::off() };
+                let mk_ctx = |cache: Option<Arc<prep_cache::PrepCache>>| {
+                    let ctx = StageCtx::new(Placement::Cpu, 56).with_opts(opts);
+                    match cache {
+                        Some(c) => ctx.with_cache(c),
+                        None => ctx,
+                    }
+                };
+                let vec_ctx = mk_ctx(cache_on.then(|| minio_cache(1 << 22)));
+                let slab_ctx = mk_ctx(cache_on.then(|| minio_cache(1 << 22)));
+                let pool = SlabPool::new(3 * 56 * 56, b, 2);
+                let mut scratch = StageScratch::new();
+                let enc: Vec<Vec<u8>> = (0..b as u64).map(|i| encoded_image(40 + i)).collect();
+                // Two epochs: epoch 0 exercises miss+admission, epoch 1
+                // the hit chain (when the cache is on).
+                for epoch in 0..2u64 {
+                    let mut vec_samples = Vec::new();
+                    let mut slab_samples = Vec::new();
+                    for (i, bytes) in enc.iter().enumerate() {
+                        let id = i as u64;
+                        let aug = {
+                            let mut rng = crate::util::rng::Rng::new(7).fork(id).fork(epoch);
+                            ops::sample_aug_params(&mut rng, 64, 64)
+                        };
+                        let vp = match vec_ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                            Some(s) => vec_ctx.run_stage_cached(&s, aug),
+                            None => vec_ctx.run_stage(bytes, id, aug).unwrap().0,
+                        };
+                        let mut slice = pool.slice();
+                        match slab_ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                            Some(s) => slab_ctx.run_stage_cached_into(
+                                &s,
+                                aug,
+                                &mut scratch,
+                                slice.as_mut_slice(),
+                            ),
+                            None => {
+                                slab_ctx
+                                    .run_stage_into(
+                                        bytes,
+                                        id,
+                                        aug,
+                                        &mut scratch,
+                                        slice.as_mut_slice(),
+                                    )
+                                    .unwrap();
+                            }
+                        }
+                        vec_samples.push(Sample { id, label: i as u16, payload: vp });
+                        slab_samples
+                            .push(Sample { id, label: i as u16, payload: Payload::Slot(slice) });
+                    }
+                    let Batch::Ready { data: dv, labels: lv } = collate(vec_samples).unwrap()
+                    else {
+                        panic!("cpu batches must be Ready")
+                    };
+                    let Batch::Ready { data: ds, labels: ls } = collate(slab_samples).unwrap()
+                    else {
+                        panic!("cpu batches must be Ready")
+                    };
+                    assert_eq!(lv, ls, "fused={fused_on} cache={cache_on} epoch={epoch}");
+                    assert_eq!(
+                        &dv[..],
+                        &ds[..],
+                        "fused={fused_on} cache={cache_on} epoch={epoch}"
+                    );
+                }
+                if cache_on {
+                    assert!(
+                        slab_ctx.prep_cache.as_ref().unwrap().hit_rate() > 0.0,
+                        "epoch 1 must have exercised the hit chain"
+                    );
+                }
+                // The second slab came from the recycle path.
+                assert!(pool.hits() >= 1, "fused={fused_on} cache={cache_on}");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_collate_rejects_partial_mixed_and_foreign_slots() {
+        use crate::util::slab::SlabPool;
+        let pool = SlabPool::new(4, 2, 1);
+        let mk = |slice: SlabSlice, label: u16| Sample {
+            id: label as u64,
+            label,
+            payload: Payload::Slot(slice),
+        };
+        // Partial slab: one slice of a 2-slot slab.
+        let s0 = pool.slice();
+        assert!(collate(vec![mk(s0, 0)]).is_err());
+        // Mixed slabs: slot 1 of slab A with slot 0 of slab B.
+        let a1 = pool.slice();
+        let b0 = pool.slice();
+        assert!(collate(vec![mk(a1, 1), mk(b0, 0)]).is_err());
+        // Mixed kinds: a Slot first sees a Ready intruder.
+        let c0 = pool.slice();
+        let intruder =
+            Sample { id: 9, label: 9, payload: Payload::Ready(vec![0.0; 4]) };
+        assert!(collate(vec![mk(c0, 0), intruder]).is_err());
+        // And the happy path still seals: a full slab, out of order.
+        let mut d0 = pool.slice();
+        let mut d1 = pool.slice();
+        d0.as_mut_slice().copy_from_slice(&[1.0; 4]);
+        d1.as_mut_slice().copy_from_slice(&[2.0; 4]);
+        let batch = collate(vec![mk(d1, 7), mk(d0, 3)]).unwrap();
+        let Batch::Ready { data, labels } = batch else { panic!() };
+        // Slot order, not arrival order.
+        assert_eq!(labels, vec![3, 7]);
+        assert_eq!(&data[..4], &[1.0; 4]);
+        assert_eq!(&data[4..], &[2.0; 4]);
+    }
+
+    /// Satellite regression: a prep-cache hit copies no pixel bytes —
+    /// admission shares one buffer with the payload, device-placement
+    /// hits are refcount bumps, and the cpu hit's single write is the
+    /// augmented sample into its output slot.
+    #[test]
+    fn cache_hits_and_admissions_share_pixels_without_copy() {
+        let bytes = encoded_image(12);
+        let aug = AugParams::identity(64, 64);
+        // hybrid0 admission: payload and resident entry are one buffer.
+        let cache = minio_cache(1 << 20);
+        let ctx = StageCtx::new(Placement::Hybrid0, 56).with_cache(cache.clone());
+        let (p, _) = ctx.run_stage(&bytes, 1, aug).unwrap();
+        let Payload::Pixels { pixels, .. } = p else { panic!() };
+        let resident = cache.get(1).unwrap();
+        assert!(
+            Arc::ptr_eq(&pixels, &resident.pixels),
+            "hybrid0 admission must share the buffer, not copy it"
+        );
+        // Device-placement hits: refcount bumps on the resident Arc.
+        for pl in [Placement::Hybrid, Placement::Hybrid0] {
+            let hit = StageCtx::new(pl, 56).run_stage_cached(&resident, aug);
+            let Payload::Pixels { pixels, .. } = hit else { panic!() };
+            assert!(Arc::ptr_eq(&pixels, &resident.pixels), "{pl:?} hit copied pixels");
+        }
+        // Cpu hit into a slot matches the allocating hit bit-for-bit
+        // (the one write both paths share is the augment output).
+        let cpu = StageCtx::new(Placement::Cpu, 56);
+        let mut scratch = StageScratch::new();
+        let mut out = vec![0f32; 3 * 56 * 56];
+        cpu.run_stage_cached_into(&resident, aug, &mut scratch, &mut out);
+        let Payload::Ready(v) = cpu.run_stage_cached(&resident, aug) else { panic!() };
+        assert_eq!(v, out);
+    }
+
+    #[test]
+    fn run_stage_into_rejects_device_placements() {
+        let bytes = encoded_image(13);
+        let aug = AugParams::identity(64, 64);
+        let mut scratch = StageScratch::new();
+        let mut out = vec![0f32; 3 * 56 * 56];
+        for pl in [Placement::Hybrid, Placement::Hybrid0] {
+            assert!(StageCtx::new(pl, 56)
+                .run_stage_into(&bytes, 0, aug, &mut scratch, &mut out)
+                .is_err());
+        }
     }
 
     #[test]

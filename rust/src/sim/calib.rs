@@ -68,6 +68,21 @@ pub const RAW_EXTRA_CPU_MS: f64 = 2.0 * SHARE_READ * CPU_PREPROC_MS;
 /// measured plan fraction in `tests/fused_decode.rs` (within 20%).
 pub const FUSED_BLOCK_FRACTION: f64 = 0.85;
 
+/// Collate-copy share of the cpu hot path's per-sample memory traffic.
+/// The per-sample `Vec` path writes each decoded pixel four ways in
+/// bytes-per-pixel terms — the u8 decode plane (1 B/px), the f32
+/// conversion (4), the augment output (4), and the collate batch memcpy
+/// (4) — so the collate copy is 4/13 of the hot-path write traffic.
+/// `--slab-pool` eliminates exactly that write (augment lands directly
+/// in the batch slot), and the sim thins the transform share by this
+/// fraction when modeling the slab engine (augmentation at paper scale
+/// is memory-bandwidth-bound, so traffic share ≈ time share).
+/// Validated against the engine's measured per-sample traffic in
+/// `dpp bench alloc` within 20% — the bench geometry decodes 64×64 into
+/// 56×56 rather than 224×224 into 224×224, which shifts the measured
+/// ratio a few points but must stay inside the band.
+pub const COPY_SHARE: f64 = 4.0 / 13.0;
+
 /// Mean encoded image size (ImageNet-train JPEG average ≈ 110 KB).
 pub const IMG_BYTES: f64 = 110_000.0;
 
@@ -211,6 +226,11 @@ mod tests {
         assert!((s - 1.0).abs() < 1e-9, "{s}");
         assert!((SHARE_DECODE - 0.477).abs() < 1e-9, "decode share must be 47.7%");
         assert!((0.0..=1.0).contains(&FUSED_BLOCK_FRACTION));
+        // COPY_SHARE derives from the 1+4+4+4 bytes-per-pixel traffic
+        // split — pin the closed form so a drive-by edit cannot silently
+        // desynchronize it from the bench-alloc validation band.
+        assert!((COPY_SHARE - 4.0 / 13.0).abs() < 1e-12);
+        assert!((0.0..1.0).contains(&COPY_SHARE));
     }
 
     #[test]

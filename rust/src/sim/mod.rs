@@ -62,6 +62,13 @@ pub struct Scenario {
     /// not run, and the engine-vs-sim agreement contract is asserted
     /// only for the unscaled path.
     pub decode_scale: u8,
+    /// Batch-slab pool (`--slab-pool on`): the cpu-placement transform
+    /// share thins by the collate-copy fraction (`calib::COPY_SHARE`) —
+    /// workers write augmented output straight into the batch slot, so
+    /// the per-sample collate memcpy disappears.  Off by default: the
+    /// sim's baseline is the paper's per-sample-buffer loader; turn it
+    /// on to model our slab engine.
+    pub slab_pool: bool,
     /// Simulated duration in seconds (DES only).
     pub seconds: f64,
     pub seed: u64,
@@ -83,6 +90,7 @@ impl Default for Scenario {
             prep_cache_policy: PrepCachePolicy::Minio,
             fused_decode: false,
             decode_scale: 1,
+            slab_pool: false,
             seconds: 60.0,
             seed: 7,
         }
@@ -124,6 +132,13 @@ impl Scenario {
             s.decode_scale = v
                 .parse()
                 .map_err(|_| anyhow::anyhow!("sim decode-scale must be 1|2|4|8, got {v}"))?;
+        }
+        if let Some(v) = args.get("slab-pool") {
+            s.slab_pool = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                _ => anyhow::bail!("sim slab-pool must be on|off, got {v}"),
+            };
         }
         s.seconds = args.get_f64("seconds", s.seconds);
         s.seed = args.get_u64("seed", s.seed);
@@ -192,7 +207,7 @@ impl Scenario {
         };
         let base = match self.placement {
             Placement::Cpu => {
-                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(true) + calib::SHARE_AUG)
+                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(true) + self.aug_share())
                     * calib::CPU_PREPROC_MS
             }
             Placement::Hybrid => (calib::SHARE_READ + calib::SHARE_ENTROPY) * calib::CPU_PREPROC_MS,
@@ -206,8 +221,10 @@ impl Scenario {
             Method::Record => base,
         };
         let hit = self.prep_cache_hit();
+        // A cpu-placement hit still augments on the CPU, so the slab
+        // pool's collate-copy saving applies to hits and misses alike.
         let hit_cost = match self.placement {
-            Placement::Cpu => calib::SHARE_AUG * calib::CPU_PREPROC_MS,
+            Placement::Cpu => self.aug_share() * calib::CPU_PREPROC_MS,
             Placement::Hybrid | Placement::Hybrid0 => 0.0,
         };
         // Admission cost: a hybrid miss must run the cache-only
@@ -223,6 +240,21 @@ impl Scenario {
             _ => 0.0,
         };
         (1.0 - hit) * (miss_cost + admit_cost) + hit * hit_cost
+    }
+
+    /// CPU augment share for this scenario: with the slab pool on, the
+    /// transform share thins by the collate-copy fraction — the batch
+    /// memcpy the zero-copy hot path no longer performs.  Only the cpu
+    /// placement carries an augment share on the CPU, so the device
+    /// placements are modeled no-ops (exactly like the engine, whose
+    /// slab path exists only where the CPU hand-off is the final
+    /// tensor).
+    fn aug_share(&self) -> f64 {
+        if self.slab_pool {
+            calib::SHARE_AUG * (1.0 - calib::COPY_SHARE)
+        } else {
+            calib::SHARE_AUG
+        }
     }
 
     /// Visible GPU preprocessing cost per image (ms): the raw kernel cost
@@ -714,6 +746,37 @@ mod tests {
         // And validation rejects bad scales.
         assert!(Scenario { decode_scale: 3, ..Default::default() }.validate().is_err());
         assert!(Scenario { decode_scale: 8, ..Default::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn slab_pool_thins_exactly_the_collate_copy_share() {
+        // The model: only SHARE_AUG scales, by COPY_SHARE, on the cpu
+        // placement — read/decode are untouched and the device
+        // placements (no CPU augment share) are modeled no-ops.
+        let base = scen("alexnet", 8, 24, Placement::Cpu, Method::Record);
+        let slab = Scenario { slab_pool: true, ..base.clone() };
+        let saved = base.cpu_cost_ms() - slab.cpu_cost_ms();
+        let want = calib::SHARE_AUG * calib::COPY_SHARE * calib::CPU_PREPROC_MS;
+        assert!((saved - want).abs() < 1e-9, "saved {saved} want {want}");
+        for pl in [Placement::Hybrid, Placement::Hybrid0] {
+            let b = scen("alexnet", 8, 24, pl, Method::Record);
+            let s = Scenario { slab_pool: true, ..b.clone() };
+            assert_eq!(b.cpu_cost_ms(), s.cpu_cost_ms(), "{pl:?} must be a no-op");
+        }
+        // A CPU-bound scenario strictly speeds up; the default stays the
+        // paper's per-sample-buffer baseline.
+        assert!(analytic_throughput(&slab) > analytic_throughput(&base));
+        assert!(!Scenario::default().slab_pool);
+        // The hit path thins too: cpu hits still augment on the CPU.
+        let half = calib::decoded_dataset_bytes() / 2.0 / 1e9;
+        let warm = Scenario { prep_cache_gb: half, ..base.clone() };
+        let warm_slab = Scenario { slab_pool: true, ..warm.clone() };
+        let warm_saved = warm.cpu_cost_ms() - warm_slab.cpu_cost_ms();
+        assert!((warm_saved - want).abs() < 1e-9, "hit+miss blend must both thin");
+        // And it composes with the fused decoder: the two savings stack.
+        let both = Scenario { fused_decode: true, slab_pool: true, ..base.clone() };
+        let fused_only = Scenario { fused_decode: true, ..base.clone() };
+        assert!((fused_only.cpu_cost_ms() - both.cpu_cost_ms() - want).abs() < 1e-9);
     }
 
     #[test]

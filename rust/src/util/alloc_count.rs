@@ -1,0 +1,106 @@
+//! Counting global-allocator shim: process-wide allocation telemetry
+//! behind `dpp bench alloc` and the run report's `bytes_alloc_hot`.
+//!
+//! Every allocation goes through [`CountingAllocator`] (registered as
+//! the global allocator for the whole crate): two relaxed atomic adds
+//! per `alloc`, nothing on `dealloc` — cheap enough to leave on
+//! unconditionally, which is what lets the run report carry an A/B-able
+//! allocation figure for `--slab-pool off` vs `auto` without a special
+//! build.
+//!
+//! Counters are process-global, so a measurement window taken while
+//! other threads allocate is an over-count, never an under-count.  The
+//! alloc bench takes the minimum over several rounds to shed that noise
+//! (see `bench/alloc.rs`); the run report's delta is labeled as a
+//! whole-process number.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator plus monotonic alloc/byte counters.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Monotonic counter reading (process-wide, since start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocs: u64,
+    pub bytes: u64,
+}
+
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot { allocs: ALLOCS.load(Ordering::Relaxed), bytes: BYTES.load(Ordering::Relaxed) }
+}
+
+/// Counter movement since `since` (saturating: counters are monotonic,
+/// so this only guards against a stale snapshot from another process
+/// image — in practice it is an exact delta).
+pub fn delta(since: AllocSnapshot) -> AllocSnapshot {
+    let now = snapshot();
+    AllocSnapshot {
+        allocs: now.allocs.saturating_sub(since.allocs),
+        bytes: now.bytes.saturating_sub(since.bytes),
+    }
+}
+
+/// Run `f`, returning what it allocated (plus whatever *other threads*
+/// allocated meanwhile — callers wanting a clean number measure on a
+/// quiet process or take a min over rounds).
+pub fn measure<R>(f: impl FnOnce() -> R) -> (AllocSnapshot, R) {
+    let s0 = snapshot();
+    let r = f();
+    (delta(s0), r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_sees_allocations() {
+        let (d, v) = measure(|| vec![0u8; 4096]);
+        assert_eq!(v.len(), 4096);
+        assert!(d.allocs >= 1, "{d:?}");
+        assert!(d.bytes >= 4096, "{d:?}");
+    }
+
+    #[test]
+    fn delta_is_monotone() {
+        let s0 = snapshot();
+        let _v = vec![0u64; 100];
+        let d = delta(s0);
+        assert!(d.allocs >= 1);
+        // A later snapshot never reads below an earlier one.
+        let s1 = snapshot();
+        assert!(s1.allocs >= s0.allocs && s1.bytes >= s0.bytes);
+    }
+}

@@ -1,10 +1,12 @@
 //! Self-contained utility substrates (the offline environment ships no
 //! serde / rand / clap — see DESIGN.md "Offline-environment substitutions").
 
+pub mod alloc_count;
 pub mod bytelru;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 
 /// Human-readable byte count.

@@ -310,6 +310,131 @@ fn prop_shuffle_buffer_is_exactly_once_delivery() {
     );
 }
 
+/// Tentpole property harness: slab-path batches are bit-identical to
+/// Vec-path batches across placement × fused × prep-cache combinations.
+/// The slab hand-off exists only where the CPU hand-off is the final
+/// tensor (cpu placement); for the device placements the property is
+/// that the chain is untouched — same payloads either way — so the
+/// whole placement axis is exercised, not just the slab arm.
+#[test]
+fn prop_slab_batches_bit_identical_to_vec_batches() {
+    use dpp::config::Placement;
+    use dpp::ops;
+    use dpp::pipeline::{collate, Batch, DecodeOpts, Payload, Sample, StageCtx, StageScratch};
+    use dpp::pipeline::prep_cache::{PrepCache, PrepCachePolicy};
+    use dpp::util::slab::SlabPool;
+    use std::sync::Arc;
+
+    check(
+        "slab-vec-batch-identity",
+        PropConfig { cases: 10, ..Default::default() },
+        |rng, _| {
+            let seed = rng.next_u32() as u64;
+            let placement = match rng.gen_range(3) {
+                0 => Placement::Cpu,
+                1 => Placement::Hybrid,
+                _ => Placement::Hybrid0,
+            };
+            let fused = rng.bool();
+            let cache = rng.bool();
+            let b = 2 + rng.gen_range(4) as usize;
+            (seed, placement, fused, cache, b)
+        },
+        |&(seed, placement, fused, cache, b)| {
+            let mk_cache = || {
+                cache.then(|| Arc::new(PrepCache::new(1 << 22, PrepCachePolicy::Minio)))
+            };
+            let opts = DecodeOpts { fused, max_scale_log2: 0 };
+            let mk_ctx = |c: Option<Arc<PrepCache>>| {
+                let ctx = StageCtx::new(placement, 56).with_opts(opts);
+                match c {
+                    Some(c) => ctx.with_cache(c),
+                    None => ctx,
+                }
+            };
+            let vec_ctx = mk_ctx(mk_cache());
+            let slab_ctx = mk_ctx(mk_cache());
+            let pool = SlabPool::new(3 * 56 * 56, b, 2);
+            let mut scratch = StageScratch::new();
+            let enc: Vec<Vec<u8>> = (0..b as u64)
+                .map(|i| {
+                    let img = dpp::dataset::gen_image(&mut Rng::new(seed ^ i), 1, 3, 64, 64);
+                    dpp::codec::encode(&img, 85).unwrap()
+                })
+                .collect();
+            // Two epochs so a cache run exercises admission AND hits.
+            for epoch in 0..2u64 {
+                let mut vec_samples = Vec::new();
+                let mut slab_samples = Vec::new();
+                for (i, bytes) in enc.iter().enumerate() {
+                    let id = i as u64;
+                    let aug = {
+                        let mut rng = Rng::new(seed ^ 0x5EED).fork(id).fork(epoch);
+                        ops::sample_aug_params(&mut rng, 64, 64)
+                    };
+                    let vp = match vec_ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                        Some(s) => vec_ctx.run_stage_cached(&s, aug),
+                        None => vec_ctx.run_stage(bytes, id, aug).unwrap().0,
+                    };
+                    // The slab hand-off is cpu-placement only; for the
+                    // device placements both sides run the same chain.
+                    let sp = if placement == Placement::Cpu {
+                        let mut slice = pool.slice();
+                        match slab_ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                            Some(s) => slab_ctx.run_stage_cached_into(
+                                &s,
+                                aug,
+                                &mut scratch,
+                                slice.as_mut_slice(),
+                            ),
+                            None => {
+                                slab_ctx
+                                    .run_stage_into(
+                                        bytes,
+                                        id,
+                                        aug,
+                                        &mut scratch,
+                                        slice.as_mut_slice(),
+                                    )
+                                    .unwrap();
+                            }
+                        }
+                        Payload::Slot(slice)
+                    } else {
+                        match slab_ctx.prep_cache.as_ref().and_then(|c| c.get(id)) {
+                            Some(s) => slab_ctx.run_stage_cached(&s, aug),
+                            None => slab_ctx.run_stage(bytes, id, aug).unwrap().0,
+                        }
+                    };
+                    vec_samples.push(Sample { id, label: i as u16, payload: vp });
+                    slab_samples.push(Sample { id, label: i as u16, payload: sp });
+                }
+                let bv = collate(vec_samples).unwrap();
+                let bs = collate(slab_samples).unwrap();
+                let same = match (&bv, &bs) {
+                    (
+                        Batch::Ready { data: dv, labels: lv },
+                        Batch::Ready { data: ds, labels: ls },
+                    ) => dv[..] == ds[..] && lv == ls,
+                    (
+                        Batch::Coefs { data: dv, labels: lv, aug: av, .. },
+                        Batch::Coefs { data: ds, labels: ls, aug: aa, .. },
+                    ) => dv == ds && lv == ls && av == aa,
+                    (
+                        Batch::Pixels { data: dv, labels: lv, aug: av },
+                        Batch::Pixels { data: ds, labels: ls, aug: aa },
+                    ) => dv == ds && lv == ls && av == aa,
+                    _ => false,
+                };
+                if !same {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
 /// Satellite: `images_read` counts at the *actual storage read* on both
 /// paths — the record stream callback and the raw worker read — so a
 /// full epoch over the same corpus must report identical counts.
@@ -365,6 +490,36 @@ fn auto_workers_run_completes_and_reports_timeline() {
     // at least one batch for the device to have trained).
     assert!(r.batch_queue_peak >= 1);
     assert!(r.work_queue_peak >= 1);
+}
+
+/// End-to-end A/B: the slab path must be invisible in the training
+/// math.  Single worker + fixed seed makes batch composition
+/// deterministic, so slab-on and slab-off runs must produce the exact
+/// same loss curve — and the slab run's pool telemetry must show the
+/// zero-copy path actually engaged.
+#[test]
+fn slab_pool_run_matches_vec_path_losses_exactly() {
+    use dpp::config::SlabPoolCfg;
+    if !have_artifacts() {
+        return;
+    }
+    let mk = |slab: SlabPoolCfg| RunConfig {
+        placement: Placement::Cpu,
+        cpu_workers: 1,
+        steps: 3,
+        seed: 5,
+        slab_pool: slab,
+        ..base_cfg()
+    };
+    let on = coordinator::run(&mk(SlabPoolCfg::Auto)).unwrap();
+    let off = coordinator::run(&mk(SlabPoolCfg::Off)).unwrap();
+    assert_eq!(on.losses, off.losses, "slab path changed the training math");
+    assert!(on.slab_hits + on.slab_grows > 0, "slab pool never engaged");
+    assert_eq!(off.slab_hits + off.slab_grows, 0, "off must mean off");
+    // bytes_alloc_hot is process-global (parallel test threads pollute
+    // it), so the alloc-reduction gate lives in `dpp bench alloc`, not
+    // here — this just checks the counter flows into the report.
+    assert!(on.bytes_alloc_hot > 0);
 }
 
 #[test]
