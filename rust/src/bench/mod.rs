@@ -6,6 +6,7 @@ pub mod alloc;
 pub mod decode;
 pub mod figures;
 pub mod harness;
+pub mod trace;
 pub mod workers;
 
 pub use harness::Bencher;

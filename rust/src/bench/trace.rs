@@ -1,0 +1,214 @@
+//! `dpp bench trace-overhead` — span-tracing cost microbench (CI smoke).
+//!
+//! Runs the cpu-placement stage chain over a small corpus twice — once
+//! with `Tracer::off()`, once with a full-rate tracer (`--trace-sample-rate
+//! 1.0`, the worst case: every span recorded) — and reports ns/sample
+//! for both paths.
+//!
+//! Gates (enforced here and by the CI smoke step):
+//! * deterministic span accounting: full-rate tracing keeps exactly one
+//!   decode + one augment span per sample; a strided tracer keeps
+//!   `ceil(n/stride)` per stage; a wrapped ring reports every
+//!   overwritten span in `TraceDump::dropped`;
+//! * the traced path stays within [`TRACE_OVERHEAD_LIMIT_PCT`] of the
+//!   untraced path (min-over-rounds on both sides, so scheduler noise
+//!   must hit every round to flake the gate) — the ISSUE's "tracing is
+//!   cheap enough to leave on" contract.
+//!
+//! The in-crate tests run the deterministic gates only: timing gates
+//! live in the CI smoke step (`dpp bench trace-overhead`), where the
+//! process is quiet (repo precedent from `bench/alloc.rs`).
+
+use crate::config::Placement;
+use crate::metrics::trace::{Stage, Tracer};
+use crate::ops;
+use crate::pipeline::StageCtx;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Committed ceiling on the traced path's slowdown over the untraced
+/// path, in percent.  A full-rate span is one clock read plus four
+/// relaxed stores against a ~10 µs decode, so 3% leaves real headroom —
+/// the gate exists to fail loudly if a lock or allocation sneaks onto
+/// the record path.
+pub const TRACE_OVERHEAD_LIMIT_PCT: f64 = 3.0;
+
+/// Corpus/batch geometry, matching `dpp bench alloc`/`decode`.
+const BATCH: usize = 32;
+const IMG_HW: usize = 64;
+const OUT_HW: usize = 56;
+
+fn corpus() -> (Vec<Vec<u8>>, Vec<ops::AugParams>) {
+    let enc: Vec<Vec<u8>> = (0..BATCH)
+        .map(|i| {
+            let img = crate::dataset::gen_image(
+                &mut Rng::new(i as u64 + 1),
+                (i % 5) as u16,
+                3,
+                IMG_HW,
+                IMG_HW,
+            );
+            crate::codec::encode(&img, 85).unwrap()
+        })
+        .collect();
+    let mut rng = Rng::new(0x7ACE);
+    let augs: Vec<ops::AugParams> = (0..BATCH)
+        .map(|_| ops::sample_aug_params(&mut rng, IMG_HW as u32, IMG_HW as u32))
+        .collect();
+    (enc, augs)
+}
+
+/// Minimum ns/sample over `rounds` passes of `batches` corpus sweeps
+/// through `ctx` (one warm-up pass first).
+fn measure(ctx: &StageCtx, enc: &[Vec<u8>], augs: &[ops::AugParams], rounds: usize, batches: usize) -> f64 {
+    let sweep = || {
+        for _ in 0..batches {
+            for (i, bytes) in enc.iter().enumerate() {
+                let (payload, _) = ctx.run_stage(bytes, i as u64, augs[i]).unwrap();
+                std::hint::black_box(&payload);
+            }
+        }
+    };
+    sweep();
+    let samples = (batches * BATCH) as f64;
+    let mut best = f64::MAX;
+    for _ in 0..rounds {
+        let t = Instant::now();
+        sweep();
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best / samples
+}
+
+fn count_stage(dump: &crate::metrics::trace::TraceDump, stage: Stage) -> usize {
+    dump.tracks
+        .iter()
+        .flat_map(|t| t.spans.iter())
+        .filter(|s| s.stage == stage)
+        .count()
+}
+
+/// Deterministic span-accounting gates, shared by the CLI bench and the
+/// in-crate test.  Pure counting — no wall-clock assertions.
+pub fn check_span_accounting() -> Result<()> {
+    let (enc, augs) = corpus();
+
+    // Full rate: exactly one decode + one augment span per sample.
+    let tracer = Tracer::new(1.0);
+    let ctx = StageCtx::new(Placement::Cpu, OUT_HW).with_tracer(tracer.clone());
+    for (i, bytes) in enc.iter().enumerate() {
+        ctx.run_stage(bytes, i as u64, augs[i])?;
+    }
+    let dump = tracer.drain();
+    ensure!(
+        count_stage(&dump, Stage::Decode) == BATCH && count_stage(&dump, Stage::Augment) == BATCH,
+        "full-rate tracer must keep 1 decode + 1 augment span per sample, got {} + {}",
+        count_stage(&dump, Stage::Decode),
+        count_stage(&dump, Stage::Augment)
+    );
+    ensure!(dump.dropped == 0, "no ring wrap expected, got {} dropped", dump.dropped);
+
+    // Strided sampling: rate 0.25 keeps every 4th span per stage.
+    let tracer = Tracer::new(0.25);
+    let ctx = StageCtx::new(Placement::Cpu, OUT_HW).with_tracer(tracer.clone());
+    for _ in 0..3 {
+        for (i, bytes) in enc.iter().enumerate() {
+            ctx.run_stage(bytes, i as u64, augs[i])?;
+        }
+    }
+    let want = (3 * BATCH).div_ceil(4);
+    let dump = tracer.drain();
+    ensure!(
+        count_stage(&dump, Stage::Decode) == want,
+        "stride-4 tracer must keep ceil(n/4) decode spans: {} != {want}",
+        count_stage(&dump, Stage::Decode)
+    );
+
+    // Ring wrap: a tiny ring keeps the newest `cap` spans and reports
+    // every overwrite as dropped.
+    let cap = 16usize;
+    let tracer = Tracer::with_capacity(1.0, cap);
+    let ctx = StageCtx::new(Placement::Cpu, OUT_HW).with_tracer(tracer.clone());
+    for _ in 0..2 {
+        for (i, bytes) in enc.iter().enumerate() {
+            ctx.run_stage(bytes, i as u64, augs[i])?;
+        }
+    }
+    let pushed = 2 * BATCH * 2; // decode + augment per sample
+    let dump = tracer.drain();
+    ensure!(
+        dump.span_count() == cap && dump.dropped == (pushed - cap) as u64,
+        "wrapped ring must keep cap={cap} and drop the rest: kept {} dropped {}",
+        dump.span_count(),
+        dump.dropped
+    );
+    Ok(())
+}
+
+/// Run the microbench; optionally write `BENCH_trace.json` to `out`.
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    check_span_accounting()?;
+
+    let (enc, augs) = corpus();
+    let off_ctx = StageCtx::new(Placement::Cpu, OUT_HW);
+    let off_ns = measure(&off_ctx, &enc, &augs, 8, 4);
+    // Worst case: full sampling, every span recorded.  A fresh tracer
+    // per measurement keeps the ring registration out of the timed
+    // region's steady state (it happens once, in the warm-up pass).
+    let tracer = Tracer::new(1.0);
+    let on_ctx = StageCtx::new(Placement::Cpu, OUT_HW).with_tracer(tracer.clone());
+    let on_ns = measure(&on_ctx, &enc, &augs, 8, 4);
+    let overhead_pct = (on_ns / off_ns - 1.0) * 100.0;
+    let spans = tracer.drain().span_count();
+
+    println!(
+        "== trace overhead (cpu placement, {BATCH}x {IMG_HW}x{IMG_HW} q85 -> {OUT_HW}) =="
+    );
+    println!("{:<10} {:>14}", "tracer", "ns/sample");
+    println!("{:<10} {:>14.0}", "off", off_ns);
+    println!("{:<10} {:>14.0}", "on (1.0)", on_ns);
+    println!("  overhead {overhead_pct:+.2}% (limit {TRACE_OVERHEAD_LIMIT_PCT}%), {spans} spans kept");
+
+    ensure!(
+        on_ns <= off_ns * (1.0 + TRACE_OVERHEAD_LIMIT_PCT / 100.0),
+        "tracing overhead {overhead_pct:.2}% exceeds the {TRACE_OVERHEAD_LIMIT_PCT}% limit \
+         ({on_ns:.0} vs {off_ns:.0} ns/sample)"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("trace-overhead")),
+        ("geometry", Json::str("32x 64x64x3 q85 -> 56, cpu placement")),
+        ("ns_per_sample_off", Json::num(off_ns)),
+        ("ns_per_sample_traced", Json::num(on_ns)),
+        ("overhead_pct", Json::num(overhead_pct)),
+        ("limit_pct", Json::num(TRACE_OVERHEAD_LIMIT_PCT)),
+        ("spans_kept", Json::num(spans as f64)),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic gates only — the 3% timing gate runs in the CI
+    /// smoke step (`dpp bench trace-overhead`), where the process is
+    /// quiet; under the parallel test harness a wall-clock ratio that
+    /// tight would flake.
+    #[test]
+    fn span_accounting_is_exact() {
+        check_span_accounting().unwrap();
+    }
+
+    #[test]
+    fn overhead_limit_is_committed() {
+        assert!(TRACE_OVERHEAD_LIMIT_PCT > 0.0 && TRACE_OVERHEAD_LIMIT_PCT <= 5.0);
+    }
+}

@@ -252,6 +252,15 @@ pub struct RunConfig {
     /// augmented output directly into their batch slot and collate
     /// becomes a seal — `off` preserves the per-sample Vec path for A/B.
     pub slab_pool: SlabPoolCfg,
+    /// Span tracing (`--trace off|PATH`): `off` (default) disables the
+    /// tracer entirely; any other value enables per-stage span recording
+    /// and writes a Chrome trace-event JSON (open in Perfetto or
+    /// chrome://tracing) to that path when the run ends.
+    pub trace: String,
+    /// Fraction of spans kept per (thread, stage) when tracing is on
+    /// (`--trace-sample-rate`, in (0, 1]); implemented as a keep-every-
+    /// Nth stride so sampled histograms stay unbiased per stage.
+    pub trace_sample_rate: f64,
 }
 
 impl Default for RunConfig {
@@ -288,6 +297,8 @@ impl Default for RunConfig {
             fused_decode: true,
             decode_scale: DecodeScale::Fixed(1),
             slab_pool: SlabPoolCfg::Auto,
+            trace: "off".into(),
+            trace_sample_rate: 1.0,
         }
     }
 }
@@ -342,6 +353,8 @@ impl RunConfig {
             "fused-decode",
             "decode-scale",
             "slab-pool",
+            "trace",
+            "trace-sample-rate",
             "ideal",
             "no-train",
             // Consumed by the `run` driver (report export), not RunConfig.
@@ -384,6 +397,15 @@ impl RunConfig {
         }
         if self.readahead_mb == 0 {
             bail!("readahead_mb must be > 0");
+        }
+        if self.trace.is_empty() {
+            bail!("trace must be `off` or an output path");
+        }
+        if !(self.trace_sample_rate > 0.0 && self.trace_sample_rate <= 1.0) {
+            bail!(
+                "trace-sample-rate must be in (0, 1], got {}",
+                self.trace_sample_rate
+            );
         }
         Ok(())
     }
@@ -488,6 +510,11 @@ impl RunConfig {
         if let Some(v) = args.get("slab-pool") {
             self.slab_pool = SlabPoolCfg::parse(v)?;
         }
+        if let Some(v) = args.get("trace") {
+            self.trace = v.to_string();
+        }
+        self.trace_sample_rate =
+            num(args, "trace-sample-rate", self.trace_sample_rate)?;
         if args.has_flag("ideal") {
             self.ideal = true;
         }
@@ -525,6 +552,8 @@ impl RunConfig {
             ("fused_decode", Json::Bool(self.fused_decode)),
             ("decode_scale", Json::str(self.decode_scale.name())),
             ("slab_pool", Json::str(&self.slab_pool.name())),
+            ("trace", Json::str(&self.trace)),
+            ("trace_sample_rate", Json::num(self.trace_sample_rate)),
         ])
     }
 }
@@ -779,7 +808,7 @@ mod tests {
 
     #[test]
     fn unknown_flags_are_rejected() {
-        for bad in ["run --workerz 3", "run --trace", "run --prep-cache 64"] {
+        for bad in ["run --workerz 3", "run --tracing on", "run --prep-cache 64"] {
             let mut cfg = RunConfig::default();
             let args = Args::parse(bad.split_whitespace().map(String::from));
             let err = cfg.apply_args(&args).unwrap_err().to_string();
@@ -787,7 +816,10 @@ mod tests {
         }
         // A value-taking key with its value forgotten parses as a bare
         // flag — it must fail loudly, not silently run on the default.
-        for bad in ["run --steps --no-train", "run --workers", "run --seed --ideal"] {
+        // `--trace` included: it takes `off` or a path, never stands alone.
+        for bad in
+            ["run --steps --no-train", "run --workers", "run --seed --ideal", "run --trace"]
+        {
             let mut cfg = RunConfig::default();
             let args = Args::parse(bad.split_whitespace().map(String::from));
             let err = cfg.apply_args(&args).unwrap_err().to_string();
@@ -849,6 +881,42 @@ mod tests {
                 Args::parse(format!("run --{flag} {val}").split_whitespace().map(String::from));
             cfg.apply_args(&args).unwrap_or_else(|e| panic!("--{flag} {val}: {e}"));
         }
+    }
+
+    #[test]
+    fn trace_flags_parse_validate_and_roundtrip() {
+        // Default: tracing fully off, full sampling once enabled.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.trace, "off");
+        assert_eq!(cfg.trace_sample_rate, 1.0);
+        assert!(cfg.validate().is_ok());
+        // `--trace PATH` enables the tracer and names the export file.
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "run --trace /tmp/spans.json --trace-sample-rate 0.25"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.trace, "/tmp/spans.json");
+        assert_eq!(cfg.trace_sample_rate, 0.25);
+        // Out-of-range rates fail validation, malformed ones fail parse.
+        for bad_rate in [0.0, -0.5, 1.5] {
+            let bad =
+                RunConfig { trace_sample_rate: bad_rate, ..RunConfig::default() };
+            assert!(bad.validate().is_err(), "rate {bad_rate} accepted");
+        }
+        let bad = RunConfig { trace: String::new(), ..RunConfig::default() };
+        assert!(bad.validate().is_err(), "empty trace value accepted");
+        let mut bad = RunConfig::default();
+        let args = Args::parse(
+            "run --trace-sample-rate lots".split_whitespace().map(String::from),
+        );
+        assert!(bad.apply_args(&args).is_err());
+        // JSON round-trip carries both fields.
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("trace").as_str(), Some("/tmp/spans.json"));
+        assert_eq!(parsed.req("trace_sample_rate").as_f64(), Some(0.25));
     }
 
     #[test]

@@ -2,13 +2,14 @@
 
 use crate::config::{Method, Placement, RunConfig};
 use crate::dataset::{self, GenConfig, MetaEntry};
+use crate::metrics::trace::{self, Stage, StallAttribution, Tracer};
 use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, ScaleHist, UtilSampler};
 use crate::ops::sample_aug_params;
-use crate::pipeline::channel::{bounded, Receiver};
+use crate::pipeline::channel::{bounded_traced, Receiver};
 use crate::pipeline::exec::{self, ExecConfig};
 use crate::pipeline::prep_cache::PrepCache;
 use crate::pipeline::shuffle::ShuffleBuffer;
-use crate::pipeline::source::{list_shards, stream_shards_prefetched, WorkItem};
+use crate::pipeline::source::{list_shards, stream_shards_prefetched_traced, WorkItem};
 use crate::pipeline::{collate, Batch, Payload, Sample, StageCtx, StageScratch};
 use crate::runtime::{lit_f32, Engine};
 use crate::storage::{
@@ -125,12 +126,38 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     });
     let alloc0 = crate::util::alloc_count::snapshot();
 
+    // Span tracer: a disabled tracer is a single `None` branch per
+    // would-be span, so untraced runs pay nothing.  One instance
+    // threads through the channels, the prefetch workers, the stage
+    // closure, the batcher, and the device loop, so `drain()` at the
+    // end sees every per-thread track on one timeline.
+    let tracer = if cfg.trace == "off" {
+        Tracer::off()
+    } else {
+        Tracer::new(cfg.trace_sample_rate)
+    };
+
     // Queue bounds: the executor derives the work-queue capacity from
     // `workers_max` (a live worker count would go stale under
     // autoscaling); the sample/batch queues stay sized by prefetch depth.
-    let (work_tx, work_rx) = bounded::<WorkItem>(exec_cfg.work_queue_cap(cfg.batch_size));
-    let (sample_tx, sample_rx) = bounded::<Sample>(cfg.queue_depth * cfg.batch_size);
-    let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_depth.max(1));
+    let (work_tx, work_rx) = bounded_traced::<WorkItem>(
+        exec_cfg.work_queue_cap(cfg.batch_size),
+        tracer.clone(),
+        Stage::WorkSendWait,
+        Stage::WorkRecvWait,
+    );
+    let (sample_tx, sample_rx) = bounded_traced::<Sample>(
+        cfg.queue_depth * cfg.batch_size,
+        tracer.clone(),
+        Stage::SampleSendWait,
+        Stage::SampleRecvWait,
+    );
+    let (batch_tx, batch_rx) = bounded_traced::<Batch>(
+        cfg.queue_depth.max(1),
+        tracer.clone(),
+        Stage::BatchSendWait,
+        Stage::BatchRecvWait,
+    );
     let (work_probe, sample_probe, batch_probe) =
         (work_rx.probe(), sample_rx.probe(), batch_rx.probe());
 
@@ -143,6 +170,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let storage = storage.clone();
         let meta = meta.clone();
         let counters = counters.clone();
+        let tracer = tracer.clone();
         threads.push(std::thread::Builder::new().name("source".into()).spawn(move || {
             'epochs: for epoch in 0..cfg.epochs as u64 {
                 match cfg.method {
@@ -189,7 +217,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                         } else {
                             PrefetchPlan::serial(cfg.record_chunk)
                         };
-                        stream_shards_prefetched(storage.clone(), &shards, cfg.record_chunk, plan, |rec| {
+                        stream_shards_prefetched_traced(storage.clone(), &shards, cfg.record_chunk, plan, tracer.clone(), |rec| {
                             // Counted at the actual storage read (the
                             // record just left the shard stream) — the
                             // raw path's counterpart lives at the worker
@@ -244,13 +272,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let stage_clock = cpu_clock.clone();
         let epoch_clock = epoch_clock.clone();
         let scale_hist = scale_hist.clone();
-        let ctx = StageCtx::from_config(cfg, prep_cache.clone(), out_hw);
+        let ctx = StageCtx::from_config(cfg, prep_cache.clone(), out_hw).with_tracer(tracer.clone());
         let slab = slab_pool.clone();
         // The closure lives in every pool worker for the whole run:
         // capture only the two scalars it needs, not a RunConfig clone.
         let seed = cfg.seed;
         let stage = move |scratch: &mut StageScratch, item: WorkItem| -> Result<Option<Sample>> {
             let (id, label, epoch) = (item.id(), item.label(), item.epoch());
+            ctx.tracer.set_epoch(epoch);
             // The aug stream forks on (id, epoch): a prep-cache hit in
             // epoch N+1 samples *fresh* params, and hit/miss paths draw
             // identical params for the same sample.
@@ -291,7 +320,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             let (raw_buf, rec_buf);
             let bytes: &[u8] = match item {
                 WorkItem::RawRef { path, .. } => {
+                    let span = ctx.tracer.start();
                     raw_buf = storage.read(&path)?;
+                    ctx.tracer.record(Stage::Fetch, id, span);
                     // `images_read` counts at the actual storage read on
                     // both paths: here for raw (a prep-cache hit above
                     // never touches storage), and in the source's stream
@@ -353,7 +384,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     {
         let b = cfg.batch_size;
         let counters = counters.clone();
+        let tracer = tracer.clone();
         threads.push(std::thread::Builder::new().name("batcher".into()).spawn(move || {
+            // Collate spans carry a running batch index as their sample.
+            let mut built = 0u64;
             // One accumulator per payload kind: under the hybrid placement
             // a prep-cache hit re-enters as a pixel payload, so the sample
             // stream can interleave kinds while every collated batch must
@@ -382,8 +416,11 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                     acc.push(s);
                     if acc.len() == b {
                         let group = slabs.remove(&seq).expect("group just filled");
+                        let span = tracer.start();
                         let batch = collate(group)
                             .map_err(|_| anyhow::anyhow!("slab batch failed to seal"))?;
+                        tracer.record(Stage::Collate, built, span);
+                        built += 1;
                         counters.batches_built(1);
                         if batch_tx.send(batch).is_err() {
                             return Ok(());
@@ -394,8 +431,11 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                 let k = kind(&s.payload);
                 accs[k].push(s);
                 if accs[k].len() == b {
+                    let span = tracer.start();
                     let batch = collate(std::mem::take(&mut accs[k]))
                         .map_err(|_| anyhow::anyhow!("mixed payload kinds in batch"))?;
+                    tracer.record(Stage::Collate, built, span);
+                    built += 1;
                     counters.batches_built(1);
                     if batch_tx.send(batch).is_err() {
                         return Ok(());
@@ -410,24 +450,42 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
     // ---- utilization sampler ---------------------------------------------
     let stop = Arc::new(AtomicBool::new(false));
-    let trace = Arc::new(Mutex::new(UtilSampler::new()));
-    if cfg.sample_period > 0.0 {
+    let util = Arc::new(Mutex::new(UtilSampler::new()));
+    // Queue-depth series for the trace export's counter tracks:
+    // `(t_secs, depth)` per queue, sampled on the same thread.  Depth
+    // counters are what make stalls legible in the viewer — a span says
+    // a worker waited, the counter says which queue ran dry or full.
+    let queue_series: Arc<Mutex<[Vec<(f64, f64)>; 3]>> = Arc::new(Mutex::new(Default::default()));
+    if cfg.sample_period > 0.0 || tracer.is_on() {
         let stop = stop.clone();
-        let trace = trace.clone();
+        let util = util.clone();
         let cpu_clock = cpu_clock.clone();
         let dev_clock = dev_clock.clone();
         let storage = storage.clone();
-        let period = cfg.sample_period;
+        let sample_util = cfg.sample_period > 0.0;
+        let period = if sample_util { cfg.sample_period } else { 0.05 };
+        let trace_on = tracer.is_on();
+        let probes = (work_probe.clone(), sample_probe.clone(), batch_probe.clone());
+        let series = queue_series.clone();
         std::thread::Builder::new().name("sampler".into()).spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(std::time::Duration::from_secs_f64(period));
-                trace.lock().unwrap().sample(&cpu_clock, &dev_clock, storage.stats().0);
+                if sample_util {
+                    util.lock().unwrap().sample(&cpu_clock, &dev_clock, storage.stats().0);
+                }
+                if trace_on {
+                    let t = t0.elapsed().as_secs_f64();
+                    let mut s = series.lock().unwrap();
+                    s[0].push((t, probes.0.stats().len as f64));
+                    s[1].push((t, probes.1.stats().len as f64));
+                    s[2].push((t, probes.2.stats().len as f64));
+                }
             }
         })?;
     }
 
     // ---- device thread (runs inline on this thread) -----------------------
-    let device_out = device_loop(cfg, batch_rx, &dev_clock, &counters)?;
+    let device_out = device_loop(cfg, batch_rx, &dev_clock, &counters, &tracer)?;
     stop.store(true, Ordering::Relaxed);
 
     for t in threads {
@@ -455,7 +513,35 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let snap = counters.snapshot();
     let (io_bytes, _) = storage.stats();
     let trained_images = device_out.steps * cfg.batch_size as u64;
-    let util_trace = std::mem::take(&mut trace.lock().unwrap().samples);
+    let util_trace = std::mem::take(&mut util.lock().unwrap().samples);
+
+    // Wall-clock stall attribution (DS-Analyzer vocabulary): the
+    // device's busy share is "compute"; the remaining wall clock is
+    // stall, split between "fetch" (workers starved waiting for work
+    // items — upstream storage couldn't keep up) and "prep" (the CPU
+    // transforms themselves are the limit), pro rata by their observed
+    // signals.  Shares sum to 1 by construction.
+    let stall = StallAttribution::from_signals(
+        dev_clock.utilization(wall),
+        work_probe.stats().recv_wait_secs,
+        cpu_clock.utilization(wall) * wall,
+    );
+
+    // Drain spans once, after every producer thread has joined.
+    let dump = tracer.drain();
+    let stage_hists = trace::stage_hists(&dump);
+    if cfg.trace != "off" {
+        let qs = std::mem::take(&mut *queue_series.lock().unwrap());
+        let counter_tracks: Vec<(String, Vec<(f64, f64)>)> = ["work", "sample", "batch"]
+            .iter()
+            .zip(qs)
+            .map(|(n, pts)| (format!("{n} queue depth"), pts))
+            .collect();
+        let json = trace::chrome_trace(&dump, &counter_tracks);
+        std::fs::write(&cfg.trace, json.pretty())
+            .with_context(|| format!("writing trace to {}", cfg.trace))?;
+    }
+
     Ok(RunReport {
         images: snap.images_decoded,
         steps: device_out.steps,
@@ -486,6 +572,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         slab_hits: slab_pool.as_ref().map(|p| p.hits()).unwrap_or(0),
         slab_grows: slab_pool.as_ref().map(|p| p.grows()).unwrap_or(0),
         bytes_alloc_hot: crate::util::alloc_count::delta(alloc0).bytes,
+        stall_fetch: stall.fetch,
+        stall_prep: stall.prep,
+        stall_compute: stall.compute,
+        stage_hists,
     })
 }
 
@@ -504,6 +594,7 @@ fn device_loop(
     batch_rx: Receiver<Batch>,
     dev_clock: &BusyClock,
     counters: &Counters,
+    tracer: &Tracer,
 ) -> Result<DeviceOut> {
     let mut engine = Engine::new(&cfg.artifact_dir)?;
     let m = &engine.manifest;
@@ -548,7 +639,9 @@ fn device_loop(
         let sess = session.as_mut().unwrap();
         for _ in 0..cfg.steps {
             let img = lit_f32(&shape, &pixels)?;
+            let span = tracer.start();
             dev_clock.track(|| sess.step(&mut engine, img, &labels))?;
+            tracer.record(Stage::Train, steps, span);
             steps += 1;
         }
         return Ok(DeviceOut {
@@ -565,7 +658,9 @@ fn device_loop(
             device_preprocess(&mut engine, cfg, &batch, &fused, &augment, dev_clock, img_hw, out_hw)?;
         counters.images_augmented(batch.len() as u64);
         if let Some(sess) = session.as_mut() {
+            let span = tracer.start();
             dev_clock.track(|| sess.step(&mut engine, images, &labels))?;
+            tracer.record(Stage::Train, steps, span);
             counters.train_steps(1);
         }
         steps += 1;

@@ -50,6 +50,14 @@ SUBCOMMANDS
               straight into their batch slot, collate becomes a seal,
               drained batches recycle their arena; N bounds the idle
               arenas kept; off restores the per-sample Vec path for A/B)
+             [--trace PATH|off] (default off: per-stage span tracing,
+              written as Chrome trace-event JSON — open in Perfetto or
+              chrome://tracing; one track per pipeline thread plus
+              queue-depth counter tracks; also fills the report's
+              per-stage latency histograms)
+             [--trace-sample-rate R] (default 1.0: keep every
+              1/R-strided span per (thread, stage); lower it on long
+              runs to bound ring memory without losing coverage)
              [--queue-depth Q] [--time-scale T] [--lr R] [--seed S]
              [--artifacts DIR] [--report-json PATH]
              [--steps N] [--batch B] [--ideal] [--no-train]
@@ -59,6 +67,8 @@ SUBCOMMANDS
              [--fused-decode on|off] [--decode-scale 1|2|4|8]
              [--slab-pool on|off] (model the zero-copy engine: the
               transform share thins by the collate-copy fraction)
+             [--trace-json PATH] (write the DES's synthetic span
+              timeline in the same Chrome trace format as `run --trace`)
   reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)
   autoconf   --model M [--objective throughput|cost] [--budget $/h]
   bench      decode  [--out BENCH_decode.json] (counter-based decode
@@ -70,6 +80,13 @@ SUBCOMMANDS
              microbench: allocations/sample + ns/sample, slab vs Vec
              hot path; fails if the slab path regresses >10% over the
              committed allocations/sample baseline)
+  bench      trace-overhead [--out BENCH_trace.json] (span-tracing cost
+             microbench: ns/sample untraced vs full-rate traced; fails
+             if tracing costs more than the committed 3% limit, plus
+             exact span/drop accounting gates)
+  trace      <run.json> (pretty-print the per-stage latency histograms
+             and the fetch/prep/compute stall attribution from a report
+             saved with `run --report-json`)
   inspect    [--artifacts DIR]
 "#;
 

@@ -7,6 +7,7 @@
 //!   reproduce   regenerate a paper figure/table (--fig 2|3|4|5|6|t1)
 //!   autoconf    search resource configurations for a model/objective
 //!   bench       counter-based microbenches (currently: decode)
+//!   trace       pretty-print latency/stall tables from a saved run report
 //!   inspect     print manifest/artifact info
 
 use anyhow::{bail, Result};
@@ -31,6 +32,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("reproduce") => reproduce(args),
         Some("autoconf") => autoconf(args),
         Some("bench") => bench(args),
+        Some("trace") => trace(args),
         Some("inspect") => inspect(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -84,8 +86,18 @@ fn run(args: &Args) -> Result<()> {
 
 fn sim(args: &Args) -> Result<()> {
     let scenario = dpp::sim::Scenario::from_args(args)?;
-    let out = dpp::sim::simulate(&scenario);
+    // --trace-json also wants the synthetic span timeline, so it picks
+    // the traced solver; the plain path stays span-free.
+    let out = if let Some(path) = args.get("trace-json") {
+        let (out, json) = dpp::sim::simulate_traced(&scenario);
+        std::fs::write(path, json.pretty())?;
+        println!("sim trace written to {path}");
+        out
+    } else {
+        dpp::sim::simulate(&scenario)
+    };
     println!("{}", out.summary_line(&scenario));
+    println!("{}", out.stall.summary_line());
     if args.has_flag("trace") {
         for s in &out.util_trace {
             println!(
@@ -135,8 +147,27 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::alloc::run(Some(&out))?;
             Ok(())
         }
-        other => bail!("bench target must be `decode`, `workers`, or `alloc`, got {other:?}"),
+        Some("trace-overhead") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_trace.json"));
+            dpp::bench::trace::run(Some(&out))?;
+            Ok(())
+        }
+        other => bail!(
+            "bench target must be `decode`, `workers`, `alloc`, or `trace-overhead`, got {other:?}"
+        ),
     }
+}
+
+fn trace(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dpp trace <run.json> (from `dpp run --report-json`)"))?;
+    let raw = std::fs::read_to_string(path)?;
+    let report = dpp::util::json::Json::parse(&raw)
+        .map_err(|e| anyhow::anyhow!("{path} is not valid JSON: {e}"))?;
+    print!("{}", dpp::metrics::trace::report_tables(&report)?);
+    Ok(())
 }
 
 fn inspect(args: &Args) -> Result<()> {

@@ -1,0 +1,264 @@
+//! Log-bucketed (HDR-style) latency histograms.
+//!
+//! Fixed layout: 8 linear buckets below 8 ns, then 8 sub-buckets per
+//! power-of-two octave across the rest of the u64 nanosecond range —
+//! 496 buckets (~4 KB), so `record` is O(1), allocation-free after
+//! construction, and any reported percentile is exact to within one
+//! sub-bucket (≤ 12.5% relative error).  Non-atomic by design: spans are
+//! aggregated *after* the per-worker trace rings are drained, on one
+//! thread, so the histogram needs no synchronization.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Sub-buckets per octave (2^3 = 8).
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// 8 linear buckets + 8 per octave for exponents 3..=63.
+const BUCKETS: usize = (SUB as usize) * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index for a nanosecond value.  Monotone in `v` and total over
+/// the full u64 range (`u64::MAX` lands in the last bucket).
+fn bucket(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // e >= SUB_BITS
+    let oct = (e - SUB_BITS + 1) as usize;
+    oct * SUB as usize + ((v >> (e - SUB_BITS)) - SUB) as usize
+}
+
+/// Inclusive upper bound of bucket `i` — what percentiles report, so a
+/// quoted p99 is never below the true one.
+fn bucket_high(i: usize) -> u64 {
+    if i < SUB as usize {
+        return i as u64;
+    }
+    let e = (i / SUB as usize) as u32 + SUB_BITS - 1;
+    let sub = (i % SUB as usize) as u64;
+    let low = (SUB + sub) << (e - SUB_BITS);
+    low + ((1u64 << (e - SUB_BITS)) - 1)
+}
+
+/// One stage's latency distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHist {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: f64,
+    max_ns: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist::new()
+    }
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist { counts: vec![0; BUCKETS], total: 0, sum_ns: 0.0, max_ns: 0 }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns as f64;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.total as f64
+        }
+    }
+
+    /// The latency at or below which `p` percent of recordings fall
+    /// (bucket upper bound, clamped to the observed max).  `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_high(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Sparse export: only occupied buckets, as `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::arr([Json::num(i as f64), Json::num(c as f64)]));
+        Json::obj(vec![
+            ("buckets", Json::arr(buckets)),
+            ("total", Json::num(self.total as f64)),
+            ("sum_ns", Json::num(self.sum_ns)),
+            ("max_ns", Json::num(self.max_ns as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LogHist> {
+        let mut h = LogHist::new();
+        let buckets = j
+            .get("buckets")
+            .and_then(|b| b.as_arr())
+            .context("histogram `buckets` must be an array")?;
+        for pair in buckets {
+            let i = pair
+                .idx(0)
+                .and_then(|v| v.as_usize())
+                .context("histogram bucket index")?;
+            let c = pair
+                .idx(1)
+                .and_then(|v| v.as_f64())
+                .context("histogram bucket count")? as u64;
+            anyhow::ensure!(i < BUCKETS, "histogram bucket index {i} out of range");
+            h.counts[i] = c;
+        }
+        h.total = j.get("total").and_then(|v| v.as_f64()).context("histogram `total`")? as u64;
+        h.sum_ns = j.get("sum_ns").and_then(|v| v.as_f64()).context("histogram `sum_ns`")?;
+        h.max_ns = j.get("max_ns").and_then(|v| v.as_f64()).context("histogram `max_ns`")? as u64;
+        Ok(h)
+    }
+}
+
+/// Human-scale duration formatting shared by the summary printers.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_is_monotone_and_total() {
+        let probes = [
+            0u64,
+            1,
+            7,
+            8,
+            9,
+            15,
+            16,
+            17,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1 << 30,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        let mut last = 0usize;
+        for &v in &probes {
+            let b = bucket(v);
+            assert!(b >= last, "bucket({v}) = {b} < {last}");
+            assert!(b < BUCKETS);
+            assert!(bucket_high(b) >= v, "high({b}) = {} < {v}", bucket_high(b));
+            last = b;
+        }
+        assert_eq!(bucket(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_high(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_within_bucket_resolution() {
+        let mut h = LogHist::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10_000);
+        for (p, want) in [(50.0, 5_000.0), (95.0, 9_500.0), (99.0, 9_900.0)] {
+            let got = h.percentile(p) as f64;
+            // Upper bucket bound: never below the true percentile, at
+            // most one sub-bucket (12.5%) above.
+            assert!(got >= want, "p{p}: {got} < {want}");
+            assert!(got <= want * 1.126, "p{p}: {got} too far above {want}");
+        }
+        assert_eq!(h.percentile(100.0), 10_000);
+        assert!((h.mean_ns() - 5_000.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hist_is_quiet() {
+        let h = LogHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut h = LogHist::new();
+        for v in [3u64, 900, 900, 65_000, 1 << 40] {
+            h.record(v);
+        }
+        let j = h.to_json();
+        let back = LogHist::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.percentile(50.0), h.percentile(50.0));
+        assert!(LogHist::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn merge_adds_distributions() {
+        let mut a = LogHist::new();
+        let mut b = LogHist::new();
+        let mut all = LogHist::new();
+        for v in [10u64, 20, 30] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [1_000u64, 2_000] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500.0), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

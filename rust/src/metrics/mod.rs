@@ -1,10 +1,25 @@
 //! Metrics: counters, busy-time tracking, utilization time series, and the
 //! run report — the instrumentation behind the paper's Figs. 2–4.
+//!
+//! Submodules: `hist` (log-bucketed latency histograms), `trace`
+//! (per-stage span tracing, Chrome trace-event export, and DS-Analyzer
+//! stall attribution).
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::LogHist;
+pub use trace::{Stage, StallAttribution, Tracer};
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Version stamp of `RunReport::to_json`'s shape.  Bump when a field is
+/// added/renamed/removed so saved reports are self-describing (`dpp
+/// trace` prints it).  v1 was the unstamped pre-tracing shape.
+pub const REPORT_SCHEMA_VERSION: u64 = 2;
 
 /// Pipeline-wide event counters (all monotonic).
 #[derive(Debug, Default)]
@@ -101,8 +116,13 @@ impl Gauge {
         v
     }
 
+    /// Saturating decrement: an unmatched `dec` on a zero gauge must not
+    /// wrap to `u64::MAX` (a wrapped level would also poison the peak on
+    /// the next `inc`/`set`).
     pub fn dec(&self) {
-        self.value.fetch_sub(1, Ordering::Relaxed);
+        let _ = self
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
     }
 
     /// Set the level directly (for sampled depths like queue lengths).
@@ -399,11 +419,33 @@ pub struct RunReport {
     /// allocator shim) — the A/B number `--slab-pool off` vs `auto`
     /// moves.  Whole-process, so it includes runtime/engine allocations.
     pub bytes_alloc_hot: u64,
+    /// DS-Analyzer stall attribution: wall-clock shares of device
+    /// compute, fetch (storage) stall, and prep (CPU) stall.  Always
+    /// computed (tracing not required); the three sum to 1.
+    pub stall_fetch: f64,
+    pub stall_prep: f64,
+    pub stall_compute: f64,
+    /// Per-stage latency histograms from the span tracer, in pipeline
+    /// order (empty when the run was not traced).
+    pub stage_hists: Vec<(String, LogHist)>,
+}
+
+/// Render the per-epoch wall times, eliding the middle beyond 8 epochs
+/// so a 100-epoch run keeps a one-line summary.
+fn format_epochs(secs: &[f64]) -> String {
+    let fmt = |s: &f64| format!("{s:.2}s");
+    if secs.len() <= 8 {
+        return secs.iter().map(fmt).collect::<Vec<_>>().join(", ");
+    }
+    let head: Vec<String> = secs[..4].iter().map(fmt).collect();
+    let tail: Vec<String> = secs[secs.len() - 4..].iter().map(fmt).collect();
+    format!("{}, .. {} elided .., {}", head.join(", "), secs.len() - 8, tail.join(", "))
 }
 
 impl RunReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
             ("images", Json::num(self.images as f64)),
             ("steps", Json::num(self.steps as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
@@ -442,6 +484,15 @@ impl RunReport {
             ("slab_hits", Json::num(self.slab_hits as f64)),
             ("slab_grows", Json::num(self.slab_grows as f64)),
             ("bytes_alloc_hot", Json::num(self.bytes_alloc_hot as f64)),
+            ("stall_fetch", Json::num(self.stall_fetch)),
+            ("stall_prep", Json::num(self.stall_prep)),
+            ("stall_compute", Json::num(self.stall_compute)),
+            (
+                "stage_hists",
+                Json::arr(self.stage_hists.iter().map(|(stage, h)| {
+                    Json::obj(vec![("stage", Json::str(stage)), ("hist", h.to_json())])
+                })),
+            ),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -477,6 +528,27 @@ impl RunReport {
             self.producer_blocked_secs,
             self.consumer_starved_secs,
         );
+        println!(
+            "  {}",
+            StallAttribution {
+                fetch: self.stall_fetch,
+                prep: self.stall_prep,
+                compute: self.stall_compute,
+            }
+            .summary_line()
+        );
+        if !self.stage_hists.is_empty() {
+            for (stage, h) in &self.stage_hists {
+                println!(
+                    "  span {:<18} n={:<8} p50={:<9} p95={:<9} p99={}",
+                    stage,
+                    h.count(),
+                    hist::fmt_ns(h.percentile(50.0) as f64),
+                    hist::fmt_ns(h.percentile(95.0) as f64),
+                    hist::fmt_ns(h.percentile(99.0) as f64),
+                );
+            }
+        }
         if self.net_in_flight_peak > 0 {
             println!("  remote store: peak {} connections in flight", self.net_in_flight_peak);
         }
@@ -524,13 +596,11 @@ impl RunReport {
             );
         }
         if self.decode_skipped > 0 || self.prep_cache_hit_rate > 0.0 {
-            let epochs: Vec<String> =
-                self.epoch_secs.iter().map(|s| format!("{s:.2}s")).collect();
             println!(
                 "  prep cache: hit rate {:.1}%, {} decodes skipped, epochs [{}]",
                 self.prep_cache_hit_rate * 100.0,
                 self.decode_skipped,
-                epochs.join(", ")
+                format_epochs(&self.epoch_secs)
             );
         }
     }
@@ -565,6 +635,24 @@ mod tests {
         g.set(3);
         assert_eq!(g.value(), 3);
         assert_eq!(g.peak(), 7);
+    }
+
+    /// Regression: `dec` on a zero gauge used to `fetch_sub` and wrap to
+    /// `u64::MAX`; the next `inc` then pushed the poisoned level into
+    /// `peak` forever.
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let g = Gauge::new();
+        g.dec();
+        assert_eq!(g.value(), 0, "dec on empty gauge must saturate");
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.peak(), 1, "peak must not see a wrapped level");
+        g.dec();
+        g.dec();
+        g.dec();
+        assert_eq!(g.value(), 0);
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.peak(), 1);
     }
 
     #[test]
@@ -681,6 +769,85 @@ mod tests {
         assert_eq!(parsed.req("slab_hits").as_usize(), Some(40));
         assert_eq!(parsed.req("slab_grows").as_usize(), Some(5));
         assert_eq!(parsed.req("bytes_alloc_hot").as_usize(), Some(1 << 20));
+    }
+
+    /// Field-parity guard: the exhaustive literal below (no
+    /// `..Default::default()`) fails to compile when a field is added to
+    /// `RunReport`, forcing this test — and therefore `to_json` — to be
+    /// updated in the same change; the key-count assert then catches a
+    /// field that was added here but not serialized.
+    #[test]
+    fn report_serializes_every_field() {
+        let mut h = LogHist::new();
+        h.record(1_000);
+        let r = RunReport {
+            images: 1,
+            steps: 2,
+            wall_secs: 3.5,
+            preproc_ips: 4.5,
+            train_ips: 5.5,
+            cpu_util: 0.25,
+            device_util: 0.75,
+            io_bytes: 6,
+            losses: vec![(1, 2.5)],
+            util_trace: vec![UtilSample { t: 0.5, cpu: 0.1, device: 0.2, io_mbps: 3.0 }],
+            producer_blocked_secs: 7.5,
+            consumer_starved_secs: 8.5,
+            net_in_flight_peak: 9,
+            prep_cache_hit_rate: 0.125,
+            decode_skipped: 10,
+            idct_blocks: 11,
+            idct_blocks_skipped: 12,
+            decode_scale_hist: [13, 14, 15, 16],
+            epoch_secs: vec![17.0, 18.0],
+            images_read: 19,
+            workers_auto: true,
+            workers_final: 20,
+            workers_timeline: vec![(0.0, 21)],
+            work_queue_peak: 22,
+            sample_queue_peak: 23,
+            batch_queue_peak: 24,
+            slab_hits: 25,
+            slab_grows: 26,
+            bytes_alloc_hot: 27,
+            stall_fetch: 0.3,
+            stall_prep: 0.2,
+            stall_compute: 0.5,
+            stage_hists: vec![("decode".to_string(), h)],
+        };
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        let keys = j.as_obj().unwrap();
+        // 33 struct fields + schema_version.
+        assert_eq!(keys.len(), 34, "RunReport field not serialized: {:?}", keys.keys());
+        assert_eq!(j.req("schema_version").as_usize(), Some(REPORT_SCHEMA_VERSION as usize));
+        // Spot-check the distinctive values land under the right keys.
+        assert_eq!(j.req("stall_fetch").as_f64(), Some(0.3));
+        assert_eq!(j.req("stall_prep").as_f64(), Some(0.2));
+        assert_eq!(j.req("stall_compute").as_f64(), Some(0.5));
+        let row = j.req("stage_hists").idx(0).unwrap();
+        assert_eq!(row.req("stage").as_str(), Some("decode"));
+        assert_eq!(
+            LogHist::from_json(row.req("hist")).unwrap().count(),
+            1,
+            "stage hist must round-trip"
+        );
+        assert_eq!(j.req("bytes_alloc_hot").as_usize(), Some(27));
+        assert_eq!(j.req("workers_auto").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn epoch_list_elides_the_middle_beyond_eight() {
+        let short: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let s = format_epochs(&short);
+        assert!(!s.contains("elided"), "{s}");
+        assert_eq!(s.matches("s").count(), 8, "{s}");
+        let long: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let s = format_epochs(&long);
+        assert!(s.contains("0.00s"), "{s}");
+        assert!(s.contains("29.00s"), "{s}");
+        assert!(s.contains("22 elided"), "{s}");
+        assert!(!s.contains("15.00s"), "middle must be elided: {s}");
+        assert_eq!(format_epochs(&[]), "");
     }
 
     #[test]

@@ -1,0 +1,708 @@
+//! Per-stage span tracing with lock-free per-worker rings.
+//!
+//! Each worker thread records sampled `(stage, start, duration, sample,
+//! epoch)` spans into its own fixed-capacity ring of atomic slots: a
+//! recording is four `Relaxed` stores plus a cursor bump, no locks and no
+//! allocation on the hot path (the ring registers itself under a mutex
+//! once per thread).  An `off` tracer is a `None` — every hook is a
+//! single branch, so untraced runs pay nothing.  When the ring wraps the
+//! oldest spans are overwritten and counted as dropped.
+//!
+//! Two consumers, both offline (after the workers have joined, so the
+//! `Relaxed` writes are ordered by the joins):
+//! * [`stage_hists`] — per-stage [`LogHist`] latency distributions for
+//!   the run report (p50/p95/p99 in `dpp trace` / `print_summary`).
+//! * [`chrome_trace`] — Chrome trace-event JSON (open in Perfetto or
+//!   chrome://tracing): one track per worker thread, a complete (`"X"`)
+//!   event per span, plus counter (`"C"`) tracks for queue depths.  The
+//!   DES emits the same format (`sim::des::simulate_traced`), so engine
+//!   and simulated timelines diff visually.
+//!
+//! [`StallAttribution`] is the DS-Analyzer-vocabulary summary (Mohan et
+//! al.): wall-clock decomposed into fetch-stall / prep-stall / compute
+//! shares that sum to 1.
+
+use super::hist::{fmt_ns, LogHist};
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Pipeline stations a span can belong to.  The discriminant is packed
+/// into the ring slot, so variants must stay dense from 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Storage read: a prefetcher ranged GET or a raw-method file read.
+    Fetch = 0,
+    /// Entropy walk + dequant/IDCT (whole decode under `cpu`).
+    Decode,
+    /// CPU-side augmentation (crop/resize/flip/normalize).
+    Augment,
+    /// Decoded-sample cache hit re-entry (rescale + augment).
+    CacheHit,
+    /// The DES's aggregate preprocessing station (decode+augment).
+    Prep,
+    /// Batcher collate/seal.
+    Collate,
+    /// One training step on the device.
+    Train,
+    /// Blocked pushing into / pulling from the three pipeline queues.
+    WorkSendWait,
+    WorkRecvWait,
+    SampleSendWait,
+    SampleRecvWait,
+    BatchSendWait,
+    BatchRecvWait,
+}
+
+impl Stage {
+    pub const COUNT: usize = 13;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Fetch,
+        Stage::Decode,
+        Stage::Augment,
+        Stage::CacheHit,
+        Stage::Prep,
+        Stage::Collate,
+        Stage::Train,
+        Stage::WorkSendWait,
+        Stage::WorkRecvWait,
+        Stage::SampleSendWait,
+        Stage::SampleRecvWait,
+        Stage::BatchSendWait,
+        Stage::BatchRecvWait,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Fetch => "fetch",
+            Stage::Decode => "decode",
+            Stage::Augment => "augment",
+            Stage::CacheHit => "cache_hit",
+            Stage::Prep => "prep",
+            Stage::Collate => "collate",
+            Stage::Train => "train",
+            Stage::WorkSendWait => "work.send_wait",
+            Stage::WorkRecvWait => "work.recv_wait",
+            Stage::SampleSendWait => "sample.send_wait",
+            Stage::SampleRecvWait => "sample.recv_wait",
+            Stage::BatchSendWait => "batch.send_wait",
+            Stage::BatchRecvWait => "batch.recv_wait",
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<Stage> {
+        Stage::ALL.get(b as usize).copied()
+    }
+}
+
+/// Default per-thread ring capacity, in spans (64 Ki × 32 B = 2 MiB).
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// One thread's span ring: 4 atomic words per span
+/// `[start_ns, dur_ns, sample, stage | epoch << 8]`.  Only the owning
+/// thread writes; `drain` reads after the writers have joined.
+struct Ring {
+    label: String,
+    slots: Vec<AtomicU64>,
+    cursor: AtomicU64,
+}
+
+impl Ring {
+    fn new(label: String, cap: usize) -> Ring {
+        let mut slots = Vec::with_capacity(cap * 4);
+        slots.resize_with(cap * 4, || AtomicU64::new(0));
+        Ring { label, slots, cursor: AtomicU64::new(0) }
+    }
+
+    fn cap(&self) -> usize {
+        self.slots.len() / 4
+    }
+
+    fn push(&self, start_ns: u64, dur_ns: u64, sample: u64, meta: u64) {
+        let idx = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let pos = (idx as usize % self.cap()) * 4;
+        self.slots[pos].store(start_ns, Ordering::Relaxed);
+        self.slots[pos + 1].store(dur_ns, Ordering::Relaxed);
+        self.slots[pos + 2].store(sample, Ordering::Relaxed);
+        self.slots[pos + 3].store(meta, Ordering::Relaxed);
+    }
+}
+
+/// Process-unique tracer ids, never reused (ids start at 1 so the
+/// thread-local default of 0 can never collide).  A pointer-based key
+/// would be ABA-prone: a new tracer allocated where a dropped one lived
+/// would silently inherit the old thread-local ring.
+static TRACER_IDS: AtomicU64 = AtomicU64::new(1);
+
+struct TracerInner {
+    id: u64,
+    t0: Instant,
+    /// Keep every `stride`-th span per (thread, stage) — `1/sample_rate`.
+    stride: u64,
+    ring_cap: usize,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+#[derive(Default)]
+struct TlState {
+    /// Which tracer (by unique id) the cached ring belongs to, so
+    /// several tracers on one thread re-register cleanly.
+    key: u64,
+    ring: Option<Arc<Ring>>,
+    ctr: [u64; Stage::COUNT],
+    epoch: u64,
+}
+
+thread_local! {
+    static TL: RefCell<TlState> = RefCell::new(TlState::default());
+}
+
+/// Cheap cloneable handle; `Tracer::off()` is the no-op default.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<TracerInner>>,
+}
+
+impl Tracer {
+    /// Disabled tracer: `start` returns `None` and `record` is a branch.
+    pub fn off() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    pub fn new(sample_rate: f64) -> Tracer {
+        Tracer::with_capacity(sample_rate, DEFAULT_RING_CAP)
+    }
+
+    pub fn with_capacity(sample_rate: f64, ring_cap: usize) -> Tracer {
+        let rate = if sample_rate.is_finite() { sample_rate.clamp(1e-9, 1.0) } else { 1.0 };
+        Tracer {
+            inner: Some(Arc::new(TracerInner {
+                id: TRACER_IDS.fetch_add(1, Ordering::Relaxed),
+                t0: Instant::now(),
+                stride: (1.0 / rate).round().max(1.0) as u64,
+                ring_cap: ring_cap.max(1),
+                rings: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Span start: one clock read when tracing, `None` (no clock) when off.
+    pub fn start(&self) -> Option<Instant> {
+        self.inner.as_ref().map(|_| Instant::now())
+    }
+
+    /// Per-thread epoch hint attached to subsequent spans.
+    pub fn set_epoch(&self, epoch: u64) {
+        if self.inner.is_none() {
+            return;
+        }
+        TL.with(|tl| tl.borrow_mut().epoch = epoch);
+    }
+
+    /// Close a span opened by [`start`](Tracer::start).  Sampling is a
+    /// per-(thread, stage) stride so every stage keeps uniform coverage
+    /// regardless of how stages interleave on a worker.
+    pub fn record(&self, stage: Stage, sample: u64, started: Option<Instant>) {
+        let (inner, started) = match (&self.inner, started) {
+            (Some(i), Some(t)) => (i, t),
+            _ => return,
+        };
+        let dur_ns = started.elapsed().as_nanos() as u64;
+        let start_ns = started.saturating_duration_since(inner.t0).as_nanos() as u64;
+        TL.with(|tl| {
+            let mut tl = tl.borrow_mut();
+            let key = inner.id;
+            if tl.key != key || tl.ring.is_none() {
+                let label =
+                    std::thread::current().name().unwrap_or("main").to_string();
+                let ring = Arc::new(Ring::new(label, inner.ring_cap));
+                inner.rings.lock().unwrap().push(ring.clone());
+                tl.key = key;
+                tl.ring = Some(ring);
+                tl.ctr = [0; Stage::COUNT];
+            }
+            let n = tl.ctr[stage as usize];
+            tl.ctr[stage as usize] += 1;
+            if n % inner.stride != 0 {
+                return;
+            }
+            let meta = stage as u64 | (tl.epoch << 8);
+            tl.ring.as_ref().unwrap().push(start_ns, dur_ns, sample, meta);
+        });
+    }
+
+    /// Collect every ring into a plain dump.  Call after the recording
+    /// threads have joined (the joins order the `Relaxed` slot writes).
+    pub fn drain(&self) -> TraceDump {
+        let mut dump = TraceDump::default();
+        let inner = match &self.inner {
+            Some(i) => i,
+            None => return dump,
+        };
+        for ring in inner.rings.lock().unwrap().iter() {
+            let n = ring.cursor.load(Ordering::Acquire) as usize;
+            let cap = ring.cap();
+            let kept = n.min(cap);
+            dump.dropped += (n as u64).saturating_sub(cap as u64);
+            let first = if n > cap { n % cap } else { 0 };
+            let mut spans = Vec::with_capacity(kept);
+            for k in 0..kept {
+                let pos = ((first + k) % cap) * 4;
+                let word = |o: usize| ring.slots[pos + o].load(Ordering::Relaxed);
+                let meta = word(3);
+                if let Some(stage) = Stage::from_u8((meta & 0xff) as u8) {
+                    spans.push(Span {
+                        stage,
+                        start_ns: word(0),
+                        dur_ns: word(1),
+                        sample: word(2),
+                        epoch: meta >> 8,
+                    });
+                }
+            }
+            dump.tracks.push(Track { label: ring.label.clone(), spans });
+        }
+        dump
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub stage: Stage,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub sample: u64,
+    pub epoch: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Track {
+    pub label: String,
+    pub spans: Vec<Span>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TraceDump {
+    pub tracks: Vec<Track>,
+    /// Spans lost to ring wrap-around (oldest-first overwrite).
+    pub dropped: u64,
+}
+
+impl TraceDump {
+    pub fn span_count(&self) -> usize {
+        self.tracks.iter().map(|t| t.spans.len()).sum()
+    }
+}
+
+/// Aggregate a dump into per-stage latency histograms, in [`Stage::ALL`]
+/// order, skipping stages with no spans.
+pub fn stage_hists(dump: &TraceDump) -> Vec<(String, LogHist)> {
+    let mut hists: Vec<Option<LogHist>> = vec![None; Stage::COUNT];
+    for track in &dump.tracks {
+        for s in &track.spans {
+            hists[s.stage as usize].get_or_insert_with(LogHist::new).record(s.dur_ns);
+        }
+    }
+    Stage::ALL
+        .iter()
+        .zip(hists)
+        .filter_map(|(st, h)| h.map(|h| (st.name().to_string(), h)))
+        .collect()
+}
+
+/// Chrome trace-event JSON for Perfetto / chrome://tracing: one `tid`
+/// per track (named via `"M"` thread_name metadata), `"X"` complete
+/// events in microseconds, and `"C"` counter events for each
+/// `(name, [(t_secs, value)])` series (queue depths, utilization).
+pub fn chrome_trace(dump: &TraceDump, counters: &[(String, Vec<(f64, f64)>)]) -> Json {
+    let mut events = Vec::new();
+    for (tid, track) in dump.tracks.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("name", Json::str("thread_name")),
+            ("args", Json::obj(vec![("name", Json::str(&track.label))])),
+        ]));
+        for s in &track.spans {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("ts", Json::num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+                ("name", Json::str(s.stage.name())),
+                ("cat", Json::str("dpp")),
+                ("args", Json::obj(vec![
+                    ("sample", Json::num(s.sample as f64)),
+                    ("epoch", Json::num(s.epoch as f64)),
+                ])),
+            ]));
+        }
+    }
+    for (name, series) in counters {
+        for &(t, v) in series {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(t * 1e6)),
+                ("name", Json::str(name)),
+                ("args", Json::obj(vec![("value", Json::num(v))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Parse-back validation of the Chrome trace-event format: every event
+/// must carry a known phase with the fields that phase requires.
+/// Returns the event count.
+pub fn validate_chrome_trace(j: &Json) -> Result<usize> {
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("trace must carry a `traceEvents` array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .with_context(|| format!("event {i}: missing `ph`"))?;
+        let num = |k: &str| {
+            ev.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("event {i} ({ph}): `{k}` must be numeric"))
+        };
+        let name = ev.get("name").and_then(|v| v.as_str());
+        ensure!(name.is_some(), "event {i} ({ph}): missing `name`");
+        match ph {
+            "X" => {
+                num("pid")?;
+                num("tid")?;
+                ensure!(num("ts")? >= 0.0, "event {i}: negative ts");
+                ensure!(num("dur")? >= 0.0, "event {i}: negative dur");
+            }
+            "M" => {
+                ensure!(ev.get("args").is_some(), "event {i}: M without args");
+            }
+            "C" => {
+                num("ts")?;
+                let args = ev.get("args").context("C event without args")?;
+                ensure!(
+                    args.as_obj().map(|m| !m.is_empty()).unwrap_or(false),
+                    "event {i}: C event needs a counter value in args"
+                );
+            }
+            other => bail!("event {i}: unknown phase {other:?}"),
+        }
+    }
+    Ok(events.len())
+}
+
+/// DS-Analyzer-style wall-clock decomposition: the share of the run the
+/// device spent computing, waiting on data fetch (storage), and waiting
+/// on preprocessing.  Shares sum to 1 by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StallAttribution {
+    pub fetch: f64,
+    pub prep: f64,
+    pub compute: f64,
+}
+
+impl StallAttribution {
+    /// `compute_share` is the device's busy fraction of wall clock; the
+    /// remaining stall is split between fetch and prep in proportion to
+    /// the two signals (any non-negative, same-unit pair — the engine
+    /// uses worker starved-on-storage seconds vs CPU busy seconds).
+    pub fn from_signals(compute_share: f64, fetch_signal: f64, prep_signal: f64) -> Self {
+        let compute = compute_share.clamp(0.0, 1.0);
+        let stall = 1.0 - compute;
+        let (f, p) = (fetch_signal.max(0.0), prep_signal.max(0.0));
+        let fetch_frac = if f + p > 0.0 { f / (f + p) } else { 0.0 };
+        let fetch = stall * fetch_frac;
+        StallAttribution { fetch, prep: stall - fetch, compute }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.fetch + self.prep + self.compute
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fetch", Json::num(self.fetch)),
+            ("prep", Json::num(self.prep)),
+            ("compute", Json::num(self.compute)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<StallAttribution> {
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("stall attribution missing `{k}`"))
+        };
+        Ok(StallAttribution { fetch: f("fetch")?, prep: f("prep")?, compute: f("compute")? })
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "stalls: fetch {:.1}%  prep {:.1}%  compute {:.1}%",
+            self.fetch * 100.0,
+            self.prep * 100.0,
+            self.compute * 100.0
+        )
+    }
+}
+
+/// Pretty-print the histogram + attribution tables from a saved run
+/// report (`dpp trace <run.json>`).  Pure, so it is testable offline.
+pub fn report_tables(report: &Json) -> Result<String> {
+    let mut out = String::new();
+    if let Some(v) = report.get("schema_version").and_then(|v| v.as_f64()) {
+        out.push_str(&format!("run report (schema v{v:.0})\n"));
+    }
+    let stall = StallAttribution {
+        fetch: report.get("stall_fetch").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        prep: report.get("stall_prep").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        compute: report.get("stall_compute").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    };
+    out.push_str(&stall.summary_line());
+    out.push('\n');
+    let hists = report.get("stage_hists").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    if hists.is_empty() {
+        out.push_str("no stage histograms (run with --trace FILE to record spans)\n");
+        return Ok(out);
+    }
+    out.push_str(&format!(
+        "{:<18} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+        "stage", "count", "mean", "p50", "p95", "p99", "max"
+    ));
+    for row in hists {
+        let stage = row
+            .get("stage")
+            .and_then(|v| v.as_str())
+            .context("stage_hists row missing `stage`")?;
+        let h = LogHist::from_json(row.get("hist").context("stage_hists row missing `hist`")?)?;
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+            stage,
+            h.count(),
+            fmt_ns(h.mean_ns()),
+            fmt_ns(h.percentile(50.0) as f64),
+            fmt_ns(h.percentile(95.0) as f64),
+            fmt_ns(h.percentile(99.0) as f64),
+            fmt_ns(h.max_ns() as f64),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn off_tracer_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.is_on());
+        assert!(t.start().is_none());
+        t.record(Stage::Decode, 1, t.start());
+        t.set_epoch(3);
+        let dump = t.drain();
+        assert_eq!(dump.span_count(), 0);
+        assert_eq!(dump.dropped, 0);
+    }
+
+    #[test]
+    fn spans_round_trip_through_the_ring() {
+        let t = Tracer::new(1.0);
+        t.set_epoch(2);
+        for i in 0..5u64 {
+            let s = t.start();
+            assert!(s.is_some());
+            std::thread::sleep(Duration::from_millis(1));
+            t.record(Stage::Decode, i, s);
+        }
+        let s = t.start();
+        t.record(Stage::Augment, 99, s);
+        let dump = t.drain();
+        assert_eq!(dump.tracks.len(), 1, "one thread, one ring");
+        assert_eq!(dump.span_count(), 6);
+        assert_eq!(dump.dropped, 0);
+        let spans = &dump.tracks[0].spans;
+        let decodes: Vec<_> = spans.iter().filter(|s| s.stage == Stage::Decode).collect();
+        assert_eq!(decodes.len(), 5);
+        assert!(decodes.iter().all(|s| s.epoch == 2));
+        assert_eq!(decodes[3].sample, 3);
+        assert!(decodes[3].dur_ns >= 1_000_000, "slept 1ms: {}", decodes[3].dur_ns);
+        // Spans are chronological within a track.
+        for w in spans.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn per_thread_rings_carry_thread_names() {
+        let t = Tracer::new(1.0);
+        let t2 = t.clone();
+        std::thread::Builder::new()
+            .name("cpu-7".into())
+            .spawn(move || {
+                let s = t2.start();
+                t2.record(Stage::Augment, 1, s);
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        let s = t.start();
+        t.record(Stage::Decode, 0, s);
+        let dump = t.drain();
+        assert_eq!(dump.tracks.len(), 2);
+        let labels: Vec<_> = dump.tracks.iter().map(|tr| tr.label.as_str()).collect();
+        assert!(labels.contains(&"cpu-7"), "{labels:?}");
+    }
+
+    #[test]
+    fn sampling_stride_keeps_every_nth_per_stage() {
+        let t = Tracer::new(0.25); // stride 4
+        for i in 0..16u64 {
+            let s = t.start();
+            t.record(Stage::Decode, i, s);
+            let s = t.start();
+            t.record(Stage::Augment, i, s);
+        }
+        let dump = t.drain();
+        let count = |st: Stage| {
+            dump.tracks[0].spans.iter().filter(|s| s.stage == st).count()
+        };
+        // Per-stage stride: both stages keep 16/4 = 4 spans each, so
+        // interleaving cannot bias coverage toward one stage.
+        assert_eq!(count(Stage::Decode), 4);
+        assert_eq!(count(Stage::Augment), 4);
+        let kept: Vec<u64> = dump.tracks[0]
+            .spans
+            .iter()
+            .filter(|s| s.stage == Stage::Decode)
+            .map(|s| s.sample)
+            .collect();
+        assert_eq!(kept, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn ring_wrap_overwrites_oldest_and_counts_dropped() {
+        let t = Tracer::with_capacity(1.0, 8);
+        for i in 0..20u64 {
+            let s = t.start();
+            t.record(Stage::Fetch, i, s);
+        }
+        let dump = t.drain();
+        assert_eq!(dump.span_count(), 8);
+        assert_eq!(dump.dropped, 12);
+        let samples: Vec<u64> = dump.tracks[0].spans.iter().map(|s| s.sample).collect();
+        assert_eq!(samples, (12..20).collect::<Vec<_>>(), "oldest overwritten first");
+    }
+
+    #[test]
+    fn stage_hists_aggregate_across_tracks() {
+        let mut dump = TraceDump::default();
+        let span = |stage, dur_ns| Span { stage, start_ns: 0, dur_ns, sample: 0, epoch: 0 };
+        dump.tracks.push(Track {
+            label: "cpu-0".into(),
+            spans: vec![span(Stage::Decode, 1000), span(Stage::Augment, 500)],
+        });
+        dump.tracks.push(Track {
+            label: "cpu-1".into(),
+            spans: vec![span(Stage::Decode, 3000)],
+        });
+        let hists = stage_hists(&dump);
+        assert_eq!(hists.len(), 2);
+        assert_eq!(hists[0].0, "decode");
+        assert_eq!(hists[0].1.count(), 2);
+        assert_eq!(hists[1].0, "augment");
+        assert_eq!(hists[1].1.count(), 1);
+    }
+
+    #[test]
+    fn chrome_trace_validates_and_round_trips() {
+        let t = Tracer::new(1.0);
+        for i in 0..3u64 {
+            let s = t.start();
+            t.record(Stage::Decode, i, s);
+        }
+        let dump = t.drain();
+        let counters = vec![("work_queue".to_string(), vec![(0.0, 1.0), (0.5, 3.0)])];
+        let j = chrome_trace(&dump, &counters);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let n = validate_chrome_trace(&parsed).unwrap();
+        // 1 thread-name metadata + 3 spans + 2 counter samples.
+        assert_eq!(n, 6);
+        // And the validator rejects malformed events.
+        assert!(validate_chrome_trace(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"traceEvents":[{"ph":"X","name":"x","pid":1,"tid":0}]}"#).unwrap();
+        assert!(validate_chrome_trace(&bad).is_err(), "X without ts/dur must fail");
+        let unknown = Json::parse(r#"{"traceEvents":[{"ph":"Q","name":"x"}]}"#).unwrap();
+        assert!(validate_chrome_trace(&unknown).is_err());
+    }
+
+    #[test]
+    fn attribution_sums_to_one_and_splits_by_signal() {
+        let a = StallAttribution::from_signals(0.6, 3.0, 1.0);
+        assert!((a.sum() - 1.0).abs() < 1e-12);
+        assert!((a.compute - 0.6).abs() < 1e-12);
+        assert!((a.fetch - 0.3).abs() < 1e-12);
+        assert!((a.prep - 0.1).abs() < 1e-12);
+        // No stall signal: the whole remainder is prep=0/fetch=0 free.
+        let b = StallAttribution::from_signals(1.0, 0.0, 0.0);
+        assert_eq!(b, StallAttribution { fetch: 0.0, prep: 0.0, compute: 1.0 });
+        // Degenerate inputs stay clamped and still sum to 1.
+        let c = StallAttribution::from_signals(1.7, -2.0, 0.0);
+        assert!((c.sum() - 1.0).abs() < 1e-12);
+        let d = StallAttribution::from_signals(0.0, 0.0, 5.0);
+        assert!((d.prep - 1.0).abs() < 1e-12);
+        // JSON round-trip.
+        let j = a.to_json();
+        let back = StallAttribution::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn report_tables_render_hists_and_attribution() {
+        let mut h = LogHist::new();
+        for v in [1_000u64, 2_000, 4_000] {
+            h.record(v);
+        }
+        let report = Json::obj(vec![
+            ("schema_version", Json::num(2.0)),
+            ("stall_fetch", Json::num(0.25)),
+            ("stall_prep", Json::num(0.15)),
+            ("stall_compute", Json::num(0.6)),
+            (
+                "stage_hists",
+                Json::arr([Json::obj(vec![
+                    ("stage", Json::str("decode")),
+                    ("hist", h.to_json()),
+                ])]),
+            ),
+        ]);
+        let txt = report_tables(&report).unwrap();
+        assert!(txt.contains("fetch 25.0%"), "{txt}");
+        assert!(txt.contains("decode"), "{txt}");
+        assert!(txt.contains("p95"), "{txt}");
+        // A report traced off still prints the attribution line.
+        let bare = Json::obj(vec![("stall_compute", Json::num(1.0))]);
+        let txt = report_tables(&bare).unwrap();
+        assert!(txt.contains("no stage histograms"), "{txt}");
+    }
+}

@@ -30,6 +30,7 @@ pub mod source;
 
 use crate::codec::{DecodePlan, DecodeStats};
 use crate::config::{Placement, RunConfig};
+use crate::metrics::trace::{Stage, Tracer};
 use crate::ops::{self, AugParams};
 use prep_cache::{DecodedSample, PrepCache};
 use std::sync::Arc;
@@ -231,6 +232,9 @@ pub struct StageCtx {
     pub prep_cache: Option<Arc<PrepCache>>,
     /// Training output side (the augment target resolution).
     pub out_hw: usize,
+    /// Per-stage span recorder ([`Tracer::off`] by default — the chain
+    /// then pays one branch per would-be span).
+    pub tracer: Tracer,
 }
 
 fn px_bytes(c: usize, h: usize, w: usize) -> usize {
@@ -269,7 +273,13 @@ impl StageCtx {
     /// Plain full-decode chain: no cache, no fused plan (the historical
     /// `cpu_stage` behavior).
     pub fn new(placement: Placement, out_hw: usize) -> Self {
-        StageCtx { placement, decode_opts: DecodeOpts::off(), prep_cache: None, out_hw }
+        StageCtx {
+            placement,
+            decode_opts: DecodeOpts::off(),
+            prep_cache: None,
+            out_hw,
+            tracer: Tracer::off(),
+        }
     }
 
     pub fn with_opts(mut self, opts: DecodeOpts) -> Self {
@@ -282,12 +292,18 @@ impl StageCtx {
         self
     }
 
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
     pub fn from_config(cfg: &RunConfig, prep_cache: Option<Arc<PrepCache>>, out_hw: usize) -> Self {
         StageCtx {
             placement: cfg.placement,
             decode_opts: DecodeOpts::from_config(cfg),
             prep_cache,
             out_hw,
+            tracer: Tracer::off(),
         }
     }
 
@@ -343,8 +359,11 @@ impl StageCtx {
                     sample.scale_log2, 0,
                     "device placements never cache scaled pixels"
                 );
+                let span = self.tracer.start();
                 // Refcount bump: the warm path never copies the pixels.
-                Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() }
+                let p = Payload::Pixels { pixels: sample.pixels.clone(), aug: aug.to_row() };
+                self.tracer.record(Stage::CacheHit, 0, span);
+                p
             }
         }
     }
@@ -402,6 +421,7 @@ impl StageCtx {
         scratch: &mut ops::AugScratch,
         out: &mut [f32],
     ) {
+        let span = self.tracer.start();
         let aug = rescale_aug(&aug, 0, 0, sample.scale_log2, sample.h, sample.w);
         ops::augment_fused_into(
             &sample.pixels,
@@ -414,6 +434,7 @@ impl StageCtx {
             scratch,
             out,
         );
+        self.tracer.record(Stage::CacheHit, 0, span);
     }
 
     /// `cpu` placement: decode + augment both run here.  The allocating
@@ -471,9 +492,11 @@ impl StageCtx {
             };
             let (sh, sw) = (h >> k, w >> k);
             if cache.would_admit(px_bytes(c, sh, sw)) {
+                let span = self.tracer.start();
                 let plan = DecodePlan::full_scaled(c, h, w, k);
                 let dstats = crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
                 scratch.img.to_f32_into(&mut scratch.fbuf);
+                self.tracer.record(Stage::Decode, id, span);
                 // The one copy the admission pays: scratch → the cache's
                 // own resident buffer (which must outlive this sample).
                 let pixels: Arc<[f32]> = Arc::from(&scratch.fbuf[..]);
@@ -487,6 +510,7 @@ impl StageCtx {
                         pixels: pixels.clone(),
                     }),
                 );
+                let span = self.tracer.start();
                 let aug_s = rescale_aug(&aug, 0, 0, k as u8, sh, sw);
                 ops::augment_fused_into(
                     &pixels,
@@ -499,6 +523,7 @@ impl StageCtx {
                     &mut scratch.aug,
                     out,
                 );
+                self.tracer.record(Stage::Augment, id, span);
                 return Ok(StageStats::from_decode(&dstats, k));
             }
         }
@@ -507,12 +532,15 @@ impl StageCtx {
         // (expressed as the full plan — bit-identical to `decode_cpu`,
         // asserted in codec tests — so one decode path serves both).
         if self.decode_opts.fused {
+            let span = self.tracer.start();
             let crop =
                 (aug.y0 as usize, aug.x0 as usize, aug.crop_h as usize, aug.crop_w as usize);
             let max_k = self.decode_opts.max_scale_log2 as usize;
             let plan = DecodePlan::new(c, h, w, crop, self.out_hw, max_k);
             let dstats = crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
             scratch.img.to_f32_into(&mut scratch.fbuf);
+            self.tracer.record(Stage::Decode, id, span);
+            let span = self.tracer.start();
             let (roi_h, roi_w) = (scratch.img.h, scratch.img.w);
             let (vy, vx) = plan.origin();
             if plan.scale_log2 == 0 {
@@ -545,11 +573,15 @@ impl StageCtx {
                     out,
                 );
             }
+            self.tracer.record(Stage::Augment, id, span);
             Ok(StageStats::from_decode(&dstats, plan.scale_log2))
         } else {
+            let span = self.tracer.start();
             let plan = DecodePlan::full(c, h, w);
             crate::codec::decode_cpu_planned_into(bytes, &plan, &mut scratch.img)?;
             scratch.img.to_f32_into(&mut scratch.fbuf);
+            self.tracer.record(Stage::Decode, id, span);
+            let span = self.tracer.start();
             ops::augment_fused_into(
                 &scratch.fbuf,
                 c,
@@ -561,6 +593,7 @@ impl StageCtx {
                 &mut scratch.aug,
                 out,
             );
+            self.tracer.record(Stage::Augment, id, span);
             Ok(full_stage_stats(c, h, w, self.placement))
         }
     }
@@ -579,6 +612,9 @@ impl StageCtx {
         w: usize,
         aug: AugParams,
     ) -> anyhow::Result<(Payload, StageStats)> {
+        // One Decode span for the CPU-side decode work this placement
+        // does: entropy decode plus the admission-time dequant+IDCT.
+        let span = self.tracer.start();
         let ci = crate::codec::entropy_decode(bytes)?;
         let mut stats = full_stage_stats(c, h, w, self.placement);
         if let Some(cache) = &self.prep_cache {
@@ -591,6 +627,7 @@ impl StageCtx {
                 stats.blocks_idct = (c * (h / 8) * (w / 8)) as u64;
             }
         }
+        self.tracer.record(Stage::Decode, id, span);
         Ok((Payload::Coefs { coefs: ci.coefs, qtable: ci.qtable, aug: aug.to_row() }, stats))
     }
 
@@ -610,6 +647,9 @@ impl StageCtx {
         w: usize,
         aug: AugParams,
     ) -> anyhow::Result<(Payload, StageStats)> {
+        // One Decode span per path — hybrid0's CPU work is all decode
+        // (augmentation runs on the device).
+        let span = self.tracer.start();
         if let Some(cache) = &self.prep_cache {
             if cache.would_admit(px_bytes(c, h, w)) {
                 let img = crate::codec::decode_cpu(bytes)?;
@@ -625,6 +665,7 @@ impl StageCtx {
                         pixels: pixels.clone(),
                     }),
                 );
+                self.tracer.record(Stage::Decode, id, span);
                 return Ok((
                     Payload::Pixels { pixels, aug: aug.to_row() },
                     full_stage_stats(c, h, w, self.placement),
@@ -648,12 +689,14 @@ impl StageCtx {
                     }
                 }
             }
+            self.tracer.record(Stage::Decode, id, span);
             Ok((
                 Payload::Pixels { pixels: full.into(), aug: aug.to_row() },
                 StageStats::from_decode(&dstats, 0),
             ))
         } else {
             let img = crate::codec::decode_cpu(bytes)?;
+            self.tracer.record(Stage::Decode, id, span);
             Ok((
                 Payload::Pixels { pixels: img.to_f32().into(), aug: aug.to_row() },
                 full_stage_stats(c, h, w, self.placement),
@@ -1225,6 +1268,82 @@ mod tests {
                 .run_stage_into(&bytes, 0, aug, &mut scratch, &mut out)
                 .is_err());
         }
+    }
+
+    /// Every chain variant reports its work as spans when a tracer is
+    /// attached: cpu miss = Decode + Augment, hybrid/hybrid0 miss =
+    /// Decode, any hit = CacheHit — and the sample id rides along.
+    #[test]
+    fn stage_chains_record_spans_per_placement() {
+        let bytes = encoded_image(21);
+        let aug = AugParams { y0: 2, x0: 3, crop_h: 40, crop_w: 44, flip: false };
+        let count = |tracer: &Tracer, stage: Stage| {
+            tracer
+                .drain()
+                .tracks
+                .iter()
+                .flat_map(|t| t.spans.iter())
+                .filter(|s| s.stage == stage)
+                .count()
+        };
+        // cpu miss: one Decode + one Augment span carrying the id.
+        let tracer = Tracer::new(1.0);
+        let ctx = StageCtx::new(Placement::Cpu, 56).with_tracer(tracer.clone());
+        ctx.run_stage(&bytes, 17, aug).unwrap();
+        let dump = tracer.drain();
+        let spans: Vec<_> = dump.tracks.iter().flat_map(|t| t.spans.iter()).collect();
+        assert_eq!(
+            spans.iter().filter(|s| s.stage == Stage::Decode).count(),
+            1,
+            "cpu miss records one decode span"
+        );
+        assert_eq!(
+            spans.iter().filter(|s| s.stage == Stage::Augment).count(),
+            1,
+            "cpu miss records one augment span"
+        );
+        assert!(spans.iter().all(|s| s.sample == 17));
+        // Fused cpu path and both device placements record Decode too.
+        for (pl, fused_on) in [
+            (Placement::Cpu, true),
+            (Placement::Hybrid, false),
+            (Placement::Hybrid0, false),
+            (Placement::Hybrid0, true),
+        ] {
+            let tracer = Tracer::new(1.0);
+            let mut ctx = StageCtx::new(pl, 56).with_tracer(tracer.clone());
+            if fused_on {
+                ctx = ctx.with_opts(fused(0));
+            }
+            ctx.run_stage(&bytes, 1, aug).unwrap();
+            assert_eq!(
+                count(&tracer, Stage::Decode),
+                1,
+                "{pl:?} fused={fused_on} missing decode span"
+            );
+        }
+        // Hit paths: CacheHit spans on cpu (augment work) and device
+        // (refcount hand-off) placements alike.
+        let img = crate::codec::decode_cpu(&bytes).unwrap();
+        let sample = prep_cache::DecodedSample::new(img.c, img.h, img.w, img.to_f32());
+        for pl in [Placement::Cpu, Placement::Hybrid, Placement::Hybrid0] {
+            let tracer = Tracer::new(1.0);
+            let ctx = StageCtx::new(pl, 56).with_tracer(tracer.clone());
+            ctx.run_stage_cached(&sample, aug);
+            assert_eq!(count(&tracer, Stage::CacheHit), 1, "{pl:?} missing hit span");
+        }
+        // The zero-copy chain records the same spans as the vec chain.
+        let tracer = Tracer::new(1.0);
+        let ctx = StageCtx::new(Placement::Cpu, 56).with_tracer(tracer.clone());
+        let mut scratch = StageScratch::new();
+        let mut out = vec![0f32; 3 * 56 * 56];
+        ctx.run_stage_into(&bytes, 3, aug, &mut scratch, &mut out).unwrap();
+        ctx.run_stage_cached_into(&sample, aug, &mut scratch, &mut out);
+        let dump = tracer.drain();
+        let spans: Vec<_> = dump.tracks.iter().flat_map(|t| t.spans.iter()).collect();
+        assert_eq!(spans.iter().filter(|s| s.stage == Stage::Decode).count(), 1);
+        assert_eq!(spans.iter().filter(|s| s.stage == Stage::Augment).count(), 1);
+        assert_eq!(spans.iter().filter(|s| s.stage == Stage::CacheHit).count(), 1);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Pipeline sources: raw-file work items and record-shard streaming,
 //! optionally through the parallel range-GET prefetcher (remote tiers).
 
+use crate::metrics::trace::Tracer;
 use crate::record::{Record, ShardReader};
 use crate::storage::{PrefetchPlan, PrefetchReader, Storage};
 use anyhow::Result;
@@ -92,13 +93,33 @@ pub fn stream_shards_prefetched(
     shard_names: &[String],
     chunk_size: usize,
     plan: PrefetchPlan,
+    f: impl FnMut(Record) -> Result<bool>,
+) -> Result<()> {
+    stream_shards_prefetched_traced(store, shard_names, chunk_size, plan, Tracer::off(), f)
+}
+
+/// [`stream_shards_prefetched`] with a span recorder handed to the
+/// prefetch workers: each ranged GET becomes a `fetch` span.  Serial
+/// plans read inline on the caller's thread and record nothing here (the
+/// raw-method fetch span lives in the runner's per-item read instead).
+pub fn stream_shards_prefetched_traced(
+    store: Arc<dyn Storage>,
+    shard_names: &[String],
+    chunk_size: usize,
+    plan: PrefetchPlan,
+    tracer: Tracer,
     mut f: impl FnMut(Record) -> Result<bool>,
 ) -> Result<()> {
     for name in shard_names {
         let reader: Box<dyn Read + Send> = if plan.is_serial() {
             Box::new(StorageReader::open(store.clone(), name)?)
         } else {
-            Box::new(PrefetchReader::open(store.clone(), name, plan)?)
+            Box::new(PrefetchReader::open_traced(
+                store.clone(),
+                name,
+                plan,
+                tracer.clone(),
+            )?)
         };
         let mut sr = ShardReader::new(reader, chunk_size);
         while let Some(rec) = sr.next_record()? {

@@ -15,7 +15,9 @@
 
 use super::{calib, Scenario, SimOutput};
 use crate::config::Method;
+use crate::metrics::trace::{self, Span, Stage, StallAttribution, TraceDump, Track};
 use crate::metrics::UtilSample;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -97,8 +99,86 @@ impl Station {
     }
 }
 
+/// Synthetic span collector for [`simulate_traced`]: the DES knows a
+/// job's service start and duration at schedule time, so spans are
+/// recorded as jobs start.  Jobs are assigned to display lanes (one
+/// track per server) greedily by free time, mirroring how the real
+/// engine's per-thread rings render in the viewer.
+struct SpanLog {
+    stage: Stage,
+    label: &'static str,
+    lanes: Vec<Vec<Span>>,
+    lane_free_ns: Vec<u64>,
+    budget: usize,
+    dropped: u64,
+    n: u64,
+}
+
+impl SpanLog {
+    fn new(stage: Stage, label: &'static str, servers: usize, budget: usize) -> SpanLog {
+        SpanLog {
+            stage,
+            label,
+            lanes: vec![Vec::new(); servers.max(1)],
+            lane_free_ns: vec![0; servers.max(1)],
+            budget,
+            dropped: 0,
+            n: 0,
+        }
+    }
+
+    fn record(&mut self, start_s: f64, dur_s: f64) {
+        let sample = self.n;
+        self.n += 1;
+        if self.lanes.iter().map(Vec::len).sum::<usize>() >= self.budget {
+            self.dropped += 1;
+            return;
+        }
+        let start_ns = (start_s * 1e9) as u64;
+        let dur_ns = (dur_s * 1e9).max(1.0) as u64;
+        // First lane free at this start; the station is FIFO so one
+        // exists whenever a server was free — fall back to the
+        // earliest-free lane on float rounding.
+        let lane = (0..self.lanes.len())
+            .find(|&i| self.lane_free_ns[i] <= start_ns)
+            .or_else(|| (0..self.lanes.len()).min_by_key(|&i| self.lane_free_ns[i]))
+            .unwrap_or(0);
+        self.lane_free_ns[lane] = start_ns + dur_ns;
+        self.lanes[lane].push(Span { stage: self.stage, start_ns, dur_ns, sample, epoch: 0 });
+    }
+
+    fn drain_into(self, dump: &mut TraceDump) {
+        dump.dropped += self.dropped;
+        for (i, spans) in self.lanes.into_iter().enumerate() {
+            if !spans.is_empty() {
+                dump.tracks.push(Track { label: format!("{}-{i}", self.label), spans });
+            }
+        }
+    }
+}
+
 /// Run the DES for `scenario.seconds` of simulated time.
 pub fn simulate(s: &Scenario) -> SimOutput {
+    simulate_inner(s, false).0
+}
+
+/// [`simulate`] plus a Chrome trace-event export of the run: synthetic
+/// fetch/prep/train spans on per-server lanes and counter tracks from
+/// the utilization time series — the same JSON shape the engine writes
+/// for `--trace`, so one viewer and one validator cover both.
+pub fn simulate_traced(s: &Scenario) -> (SimOutput, Json) {
+    let (out, dump) = simulate_inner(s, true);
+    let dump = dump.unwrap_or_default();
+    let counters: Vec<(String, Vec<(f64, f64)>)> = vec![
+        ("cpu util".into(), out.util_trace.iter().map(|u| (u.t, u.cpu)).collect()),
+        ("gpu util".into(), out.util_trace.iter().map(|u| (u.t, u.device)).collect()),
+        ("io MB/s".into(), out.util_trace.iter().map(|u| (u.t, u.io_mbps)).collect()),
+    ];
+    let json = trace::chrome_trace(&dump, &counters);
+    (out, json)
+}
+
+fn simulate_inner(s: &Scenario, want_spans: bool) -> (SimOutput, Option<TraceDump>) {
     let m = calib::model(&s.model).expect("validated scenario");
     let batch = m.batch;
 
@@ -161,33 +241,49 @@ pub fn simulate(s: &Scenario) -> SimOutput {
     let mut gpu_ready: VecDeque<usize> = VecDeque::new(); // queued batches
     let mut done: u64 = 0;
     let mut bytes_read: f64 = 0.0;
-    let mut trace: Vec<UtilSample> = Vec::new();
+    let mut util_trace: Vec<UtilSample> = Vec::new();
     let (mut last_cpu, mut last_gpu, mut last_bytes, mut last_t) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
 
     let jitter = |rng: &mut Rng| 0.9 + 0.2 * rng.f64();
-
-    // Prime the closed network: all images start at the storage queue,
-    // and every storage server (1 device, or the remote connection pool)
-    // begins busy.
-    storage.queue = population;
-    while storage.try_start(0.0) {
-        push(&mut heap, read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
-    }
-    push(&mut heap, 1.0, Ev::Sample, &mut seq);
 
     if s.ideal {
         // Ideal mode: every GPU spins on one resident batch; nothing flows.
         let t_batch = m.t_train_ms / 1000.0 * batch as f64;
         let steps = (s.seconds / t_batch.max(1e-12)).floor() * s.gpus as f64;
-        return SimOutput {
+        let out = SimOutput {
             images_done: (steps * batch as f64) as u64,
             throughput_ips: steps * batch as f64 / s.seconds,
             cpu_util: 0.0,
             gpu_util: 1.0,
             io_mbps: 0.0,
             util_trace: vec![],
+            stall: StallAttribution { fetch: 0.0, prep: 0.0, compute: 1.0 },
         };
+        return (out, want_spans.then(TraceDump::default));
     }
+
+    // Span logs, one per station (bounded — a long sim drops the tail
+    // rather than ballooning the export).
+    let mut logs = want_spans.then(|| {
+        [
+            SpanLog::new(Stage::Fetch, "sim-storage", storage_servers, 8_000),
+            SpanLog::new(Stage::Prep, "sim-cpu", s.vcpus, 20_000),
+            SpanLog::new(Stage::Train, "sim-gpu", s.gpus, 8_000),
+        ]
+    });
+
+    // Prime the closed network: all images start at the storage queue,
+    // and every storage server (1 device, or the remote connection pool)
+    // begins busy.
+    storage.queue = population;
+    while storage.try_start(0.0) {
+        let d = read_base * jitter(&mut rng);
+        if let Some(l) = logs.as_mut() {
+            l[0].record(0.0, d);
+        }
+        push(&mut heap, d, Ev::ReadDone, &mut seq);
+    }
+    push(&mut heap, 1.0, Ev::Sample, &mut seq);
 
     let horizon = s.seconds;
     while let Some(Reverse(Event { t, ev, .. })) = heap.pop() {
@@ -200,17 +296,29 @@ pub fn simulate(s: &Scenario) -> SimOutput {
                 bytes_read += calib::IMG_BYTES;
                 cpus.queue += 1;
                 while cpus.try_start(t) {
-                    push(&mut heap, t + cpu_base * jitter(&mut rng), Ev::CpuDone, &mut seq);
+                    let d = cpu_base * jitter(&mut rng);
+                    if let Some(l) = logs.as_mut() {
+                        l[1].record(t, d);
+                    }
+                    push(&mut heap, t + d, Ev::CpuDone, &mut seq);
                 }
                 if storage.try_start(t) {
-                    push(&mut heap, t + read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
+                    let d = read_base * jitter(&mut rng);
+                    if let Some(l) = logs.as_mut() {
+                        l[0].record(t, d);
+                    }
+                    push(&mut heap, t + d, Ev::ReadDone, &mut seq);
                 }
             }
             Ev::CpuDone => {
                 cpus.finish(t);
                 // A server freed: start the next queued CPU job, if any.
                 while cpus.try_start(t) {
-                    push(&mut heap, t + cpu_base * jitter(&mut rng), Ev::CpuDone, &mut seq);
+                    let d = cpu_base * jitter(&mut rng);
+                    if let Some(l) = logs.as_mut() {
+                        l[1].record(t, d);
+                    }
+                    push(&mut heap, t + d, Ev::CpuDone, &mut seq);
                 }
                 ready += 1;
                 if ready >= batch {
@@ -219,12 +327,11 @@ pub fn simulate(s: &Scenario) -> SimOutput {
                     gpu_ready.push_back(batch);
                     while gpus.try_start(t) {
                         let b = gpu_ready.pop_front().unwrap_or(batch);
-                        push(
-                            &mut heap,
-                            t + gpu_img * b as f64 * jitter(&mut rng),
-                            Ev::GpuDone(b),
-                            &mut seq,
-                        );
+                        let d = gpu_img * b as f64 * jitter(&mut rng);
+                        if let Some(l) = logs.as_mut() {
+                            l[2].record(t, d);
+                        }
+                        push(&mut heap, t + d, Ev::GpuDone(b), &mut seq);
                     }
                 }
             }
@@ -234,16 +341,19 @@ pub fn simulate(s: &Scenario) -> SimOutput {
                 // Closed loop: images re-enter at the storage stage.
                 storage.queue += b;
                 while storage.try_start(t) {
-                    push(&mut heap, t + read_base * jitter(&mut rng), Ev::ReadDone, &mut seq);
+                    let d = read_base * jitter(&mut rng);
+                    if let Some(l) = logs.as_mut() {
+                        l[0].record(t, d);
+                    }
+                    push(&mut heap, t + d, Ev::ReadDone, &mut seq);
                 }
                 while gpus.try_start(t) {
                     let nb = gpu_ready.pop_front().unwrap_or(batch);
-                    push(
-                        &mut heap,
-                        t + gpu_img * nb as f64 * jitter(&mut rng),
-                        Ev::GpuDone(nb),
-                        &mut seq,
-                    );
+                    let d = gpu_img * nb as f64 * jitter(&mut rng);
+                    if let Some(l) = logs.as_mut() {
+                        l[2].record(t, d);
+                    }
+                    push(&mut heap, t + d, Ev::GpuDone(nb), &mut seq);
                 }
             }
             Ev::Sample => {
@@ -251,7 +361,7 @@ pub fn simulate(s: &Scenario) -> SimOutput {
                 cpus.account(t);
                 gpus.account(t);
                 let dt = (t - last_t).max(1e-12);
-                trace.push(UtilSample {
+                util_trace.push(UtilSample {
                     t,
                     cpu: (cpus.busy_time - last_cpu) / (dt * cpus.servers as f64),
                     device: (gpus.busy_time - last_gpu) / (dt * gpus.servers as f64),
@@ -271,14 +381,37 @@ pub fn simulate(s: &Scenario) -> SimOutput {
     storage.account(horizon);
     cpus.account(horizon);
     gpus.account(horizon);
-    SimOutput {
+
+    // Measured wall-clock stall attribution, mirroring the analytic
+    // decomposition (`sim::stall_attribution_analytic`): the GPUs' busy
+    // share is compute; storage's utilization in excess of the GPUs' is
+    // the fetch stall; prep absorbs the rest.  Both utilizations are
+    // ≤ 1, so the shares sum to exactly 1.
+    let gpu_util = gpus.utilization(horizon);
+    let fetch = (storage.utilization(horizon) - gpu_util).max(0.0);
+    let stall = StallAttribution {
+        fetch,
+        prep: (1.0 - gpu_util - fetch).max(0.0),
+        compute: gpu_util,
+    };
+
+    let out = SimOutput {
         images_done: done,
         throughput_ips: done as f64 / horizon,
         cpu_util: cpus.utilization(horizon),
-        gpu_util: gpus.utilization(horizon),
+        gpu_util,
         io_mbps: bytes_read / horizon / 1e6,
-        util_trace: trace,
-    }
+        util_trace,
+        stall,
+    };
+    let dump = logs.map(|ls| {
+        let mut dump = TraceDump::default();
+        for l in ls {
+            l.drain_into(&mut dump);
+        }
+        dump
+    });
+    (out, dump)
 }
 
 #[cfg(test)]
@@ -450,5 +583,108 @@ mod tests {
         let a = simulate(&s).images_done;
         let b = simulate(&s).images_done;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn des_attribution_sums_to_one_and_matches_analytic_on_fig2_grid() {
+        // The measured split (station utilizations) must agree with the
+        // closed-form decomposition per component on the Fig. 2 grid —
+        // 20 scenarios spanning gpu-, cpu-, and storage-bound regimes.
+        use crate::sim::stall_attribution_analytic;
+        for model in ["alexnet", "shufflenet", "resnet18", "resnet50", "resnet152"] {
+            for pl in [Placement::Cpu, Placement::Hybrid] {
+                for method in [Method::Record, Method::Raw] {
+                    let s = Scenario {
+                        model: model.into(),
+                        gpus: 8,
+                        vcpus: 64,
+                        placement: pl,
+                        method,
+                        seconds: 30.0,
+                        ..Default::default()
+                    };
+                    let des = simulate(&s).stall;
+                    let ana = stall_attribution_analytic(&s);
+                    assert!(
+                        (des.sum() - 1.0).abs() < 0.01,
+                        "{model} {pl:?} {method:?}: sum {}",
+                        des.sum()
+                    );
+                    for (name, d, a) in [
+                        ("fetch", des.fetch, ana.fetch),
+                        ("prep", des.prep, ana.prep),
+                        ("compute", des.compute, ana.compute),
+                    ] {
+                        assert!(
+                            (d - a).abs() <= 0.20,
+                            "{model} {pl:?} {method:?} {name}: des {d:.3} vs ana {a:.3}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn des_attribution_tracks_the_bottleneck() {
+        // Storage-bound raw-from-s3: the measured split must put the
+        // stall on fetch, not prep.
+        let st = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 64,
+            method: Method::Raw,
+            storage: "s3".into(),
+            net_conns: 1,
+            seconds: 30.0,
+            ..Default::default()
+        };
+        let out = simulate(&st);
+        assert!(
+            out.stall.fetch > out.stall.prep && out.stall.fetch > out.stall.compute,
+            "storage-bound split {:?}",
+            out.stall
+        );
+        // GPU-bound resnet152: essentially all compute.
+        let gpu = Scenario { model: "resnet152".into(), seconds: 30.0, ..Default::default() };
+        assert!(simulate(&gpu).stall.compute > 0.8);
+        // Ideal mode is pure compute by definition.
+        let ideal = Scenario { ideal: true, seconds: 5.0, ..Default::default() };
+        assert_eq!(simulate(&ideal).stall, StallAttribution { fetch: 0.0, prep: 0.0, compute: 1.0 });
+    }
+
+    #[test]
+    fn simulate_traced_exports_valid_chrome_json() {
+        let s = Scenario { model: "alexnet".into(), seconds: 5.0, ..Default::default() };
+        let (out, json) = simulate_traced(&s);
+        assert!(out.images_done > 0);
+        let n = trace::validate_chrome_trace(&json).expect("sim trace must validate");
+        assert!(n > 100, "expected a populated trace, got {n} events");
+        // Every station shows up as named lanes, and spans carry the
+        // engine's stage names so one viewer config covers both.
+        let events = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let labels: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()))
+            .collect();
+        for prefix in ["sim-storage", "sim-cpu", "sim-gpu"] {
+            assert!(
+                labels.iter().any(|l| l.starts_with(prefix)),
+                "missing {prefix} lane in {labels:?}"
+            );
+        }
+        let span_names: std::collections::BTreeSet<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        for want in ["fetch", "prep", "train"] {
+            assert!(span_names.contains(want), "missing {want} spans in {span_names:?}");
+        }
+        // Counter tracks from the utilization series ride along.
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")));
+        // The traced run is the same simulation: identical image count.
+        assert_eq!(out.images_done, simulate(&s).images_done);
     }
 }

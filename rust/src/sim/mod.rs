@@ -12,9 +12,10 @@
 pub mod calib;
 pub mod des;
 
-pub use des::simulate;
+pub use des::{simulate, simulate_traced};
 
 use crate::config::{Method, Placement};
+use crate::metrics::trace::StallAttribution;
 use crate::metrics::UtilSample;
 use crate::pipeline::prep_cache::{self, PrepCachePolicy};
 use crate::util::cli::Args;
@@ -406,6 +407,31 @@ pub fn analytic_throughput(s: &Scenario) -> f64 {
     gpu_cap.min(cpu_cap).min(s.storage_cap_ips())
 }
 
+/// Closed-form stall attribution for the analytic model, in the same
+/// vocabulary the engine's run report uses (DS-Analyzer): `compute` is
+/// the GPUs' busy share at the steady-state rate; `fetch` is the extra
+/// stall the storage ceiling adds on top of an infinitely fast storage
+/// tier; `prep` absorbs the rest (the CPU transform limit).  Shares sum
+/// to 1 by construction, so the engine's measured split and the DES's
+/// can be compared against this per scenario.
+pub fn stall_attribution_analytic(s: &Scenario) -> StallAttribution {
+    if s.ideal {
+        // Ideal mode bypasses storage and preprocessing: all compute.
+        return StallAttribution { fetch: 0.0, prep: 0.0, compute: 1.0 };
+    }
+    let gpu_cap = s.gpus as f64 / (s.gpu_cost_ms() / 1000.0);
+    let st_cap = s.storage_cap_ips();
+    let t = analytic_throughput(s);
+    // Busy share of the GPUs at the realized rate.
+    let compute = (t / gpu_cap).clamp(0.0, 1.0);
+    // Storage's marginal contribution to the stall: how much worse the
+    // GPU's idle share gets when the storage ceiling is applied on top
+    // of the compute ceiling alone.
+    let fetch = ((t / gpu_cap.min(st_cap)).clamp(0.0, 1.0) - compute).max(0.0);
+    let prep = (1.0 - compute - fetch).max(0.0);
+    StallAttribution { fetch, prep, compute }
+}
+
 /// What limits this scenario?
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Bottleneck {
@@ -436,6 +462,9 @@ pub struct SimOutput {
     pub gpu_util: f64,
     pub io_mbps: f64,
     pub util_trace: Vec<UtilSample>,
+    /// Measured wall-clock stall attribution (same vocabulary as the
+    /// engine's run report and [`stall_attribution_analytic`]).
+    pub stall: StallAttribution,
 }
 
 impl SimOutput {
@@ -453,6 +482,91 @@ impl SimOutput {
             self.gpu_util * 100.0,
             self.io_mbps
         )
+    }
+}
+
+#[cfg(test)]
+mod stall_tests {
+    use super::*;
+    use crate::config::{Method, Placement};
+
+    fn fig2_scenarios() -> Vec<Scenario> {
+        let mut v = Vec::new();
+        for model in ["alexnet", "shufflenet", "resnet18", "resnet50", "resnet152"] {
+            for pl in [Placement::Cpu, Placement::Hybrid] {
+                for m in [Method::Record, Method::Raw] {
+                    v.push(Scenario {
+                        model: model.into(),
+                        gpus: 8,
+                        vcpus: 64,
+                        placement: pl,
+                        method: m,
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn analytic_attribution_sums_to_one_on_fig2_grid() {
+        for s in fig2_scenarios() {
+            let a = stall_attribution_analytic(&s);
+            assert!(
+                (a.sum() - 1.0).abs() < 1e-9,
+                "{} {:?} {:?}: sum {}",
+                s.model,
+                s.placement,
+                s.method,
+                a.sum()
+            );
+            assert!(a.fetch >= 0.0 && a.prep >= 0.0 && a.compute >= 0.0);
+        }
+    }
+
+    #[test]
+    fn analytic_attribution_names_the_bottleneck() {
+        // GPU-bound: all compute, no stall.
+        let gpu = Scenario {
+            model: "resnet152".into(),
+            gpus: 8,
+            vcpus: 64,
+            ..Default::default()
+        };
+        assert_eq!(bottleneck(&gpu), Bottleneck::Gpu);
+        let a = stall_attribution_analytic(&gpu);
+        assert!((a.compute - 1.0).abs() < 1e-9, "gpu-bound compute {}", a.compute);
+
+        // CPU-bound (fast model, few vCPUs): prep dominates the stall.
+        let cpu = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 16,
+            ..Default::default()
+        };
+        assert_eq!(bottleneck(&cpu), Bottleneck::Cpu);
+        let a = stall_attribution_analytic(&cpu);
+        assert!(a.prep > a.fetch && a.prep > a.compute, "cpu-bound split {a:?}");
+
+        // Storage-bound (raw from s3, 1 conn): fetch dominates.
+        let st = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 64,
+            method: Method::Raw,
+            storage: "s3".into(),
+            net_conns: 1,
+            ..Default::default()
+        };
+        assert_eq!(bottleneck(&st), Bottleneck::Storage);
+        let a = stall_attribution_analytic(&st);
+        assert!(a.fetch > a.prep && a.fetch > a.compute, "storage-bound split {a:?}");
+
+        // Ideal mode: pure compute by definition.
+        let ideal = Scenario { ideal: true, ..Default::default() };
+        let a = stall_attribution_analytic(&ideal);
+        assert_eq!(a, StallAttribution { fetch: 0.0, prep: 0.0, compute: 1.0 });
     }
 }
 

@@ -18,6 +18,7 @@
 //! consumer by more than `window_parts` parts.
 
 use super::Storage;
+use crate::metrics::trace::{Stage, Tracer};
 use crate::metrics::Gauge;
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
@@ -79,7 +80,14 @@ struct Shared {
     depth: Gauge,
 }
 
-fn worker_loop(shared: &Shared, store: &dyn Storage, name: &str, plan: PrefetchPlan, len: u64) {
+fn worker_loop(
+    shared: &Shared,
+    store: &dyn Storage,
+    name: &str,
+    plan: PrefetchPlan,
+    len: u64,
+    tracer: &Tracer,
+) {
     loop {
         let idx = {
             let mut st = shared.state.lock().unwrap();
@@ -98,7 +106,12 @@ fn worker_loop(shared: &Shared, store: &dyn Storage, name: &str, plan: PrefetchP
         };
         let offset = idx as u64 * plan.part_size as u64;
         let want = (plan.part_size as u64).min(len - offset);
-        match store.read_range(name, offset, want) {
+        // One Fetch span per ranged GET, sample = part index — on a
+        // remote tier this is where fetch-stall time actually lives.
+        let span = tracer.start();
+        let got = store.read_range(name, offset, want);
+        tracer.record(Stage::Fetch, idx as u64, span);
+        match got {
             Ok(bytes) => {
                 let short = (bytes.len() as u64) < want;
                 let mut st = shared.state.lock().unwrap();
@@ -137,6 +150,17 @@ pub struct PrefetchReader {
 
 impl PrefetchReader {
     pub fn open(store: Arc<dyn Storage>, name: &str, plan: PrefetchPlan) -> Result<Self> {
+        Self::open_traced(store, name, plan, Tracer::off())
+    }
+
+    /// [`open`](Self::open) with a span recorder: each worker's ranged
+    /// GETs become `fetch` spans on that worker's own trace track.
+    pub fn open_traced(
+        store: Arc<dyn Storage>,
+        name: &str,
+        plan: PrefetchPlan,
+        tracer: Tracer,
+    ) -> Result<Self> {
         let len = store.len(name).with_context(|| format!("len of {name}"))?;
         let n_parts = (len as usize).div_ceil(plan.part_size);
         let shared = Arc::new(Shared {
@@ -158,9 +182,12 @@ impl PrefetchReader {
             let shared_w = shared.clone();
             let store = store.clone();
             let name = name.to_string();
+            let tracer = tracer.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("prefetch-{w}"))
-                .spawn(move || worker_loop(&shared_w, store.as_ref(), &name, plan, len));
+                .spawn(move || {
+                    worker_loop(&shared_w, store.as_ref(), &name, plan, len, &tracer)
+                });
             match spawned {
                 Ok(h) => workers.push(h),
                 Err(e) => {
@@ -376,5 +403,36 @@ mod tests {
         let n = r.read(&mut buf).unwrap();
         assert!(n > 0);
         drop(r); // must cancel workers and join without deadlock
+    }
+
+    /// A traced reader turns every ranged GET into a `fetch` span on the
+    /// issuing worker's track, tagged with the part index.
+    #[test]
+    fn traced_reader_records_fetch_spans() {
+        use crate::metrics::trace::{Stage, Tracer};
+        let data = blob(16 * 1024);
+        let store = mem("b", data.clone());
+        let tracer = Tracer::new(1.0);
+        let plan = PrefetchPlan::new(2, 4096, 8 * 4096); // 4 parts
+        let mut r =
+            PrefetchReader::open_traced(store, "b", plan, tracer.clone()).unwrap();
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+        drop(r); // join the workers before draining their rings
+        let dump = tracer.drain();
+        let mut parts: Vec<u64> = dump
+            .tracks
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .filter(|s| s.stage == Stage::Fetch)
+            .map(|s| s.sample)
+            .collect();
+        parts.sort();
+        assert_eq!(parts, vec![0, 1, 2, 3], "one fetch span per part");
+        assert!(
+            dump.tracks.iter().any(|t| t.label.starts_with("prefetch-")),
+            "spans must land on the prefetch workers' tracks"
+        );
     }
 }
