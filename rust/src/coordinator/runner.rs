@@ -468,6 +468,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let probes = (work_probe.clone(), sample_probe.clone(), batch_probe.clone());
         let series = queue_series.clone();
         std::thread::Builder::new().name("sampler".into()).spawn(move || {
+            // ordering: Relaxed — shutdown flag polled once per sample
+            // period; the sampler carries no data dependent on it, so
+            // observing the store one sleep late is harmless.
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(std::time::Duration::from_secs_f64(period));
                 if sample_util {
@@ -486,6 +489,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
     // ---- device thread (runs inline on this thread) -----------------------
     let device_out = device_loop(cfg, batch_rx, &dev_clock, &counters, &tracer)?;
+    // ordering: Relaxed — the sampler only polls this flag (see above);
+    // no memory is published through it, so no Release edge is needed.
     stop.store(true, Ordering::Relaxed);
 
     for t in threads {

@@ -15,6 +15,12 @@
 //! Python never runs on the request path; the `dpp` binary is
 //! self-contained once `make artifacts` has produced the HLO files.
 
+// Satellite of the concurrency-correctness PR: every `unsafe` block in
+// the crate must carry a `// SAFETY:` comment.  `dpp audit` enforces the
+// same rule (plus `// ordering:` on relaxed atomics) without clippy, so
+// the invariant holds in plain-cargo environments too.
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 /// The `dpp --help` text.  Lives in the library (not the binary) so the
 /// help-vs-`apply_args` drift test in `config.rs` can assert that every
 /// accepted run flag is documented here.
@@ -87,9 +93,16 @@ SUBCOMMANDS
   trace      <run.json> (pretty-print the per-stage latency histograms
              and the fetch/prep/compute stall attribution from a report
              saved with `run --report-json`)
+  audit      (source-scanning invariant linter: SAFETY comments on
+             unsafe blocks, ordering justifications on relaxed atomics,
+             flag parity across CLI_HELP/DESIGN.md, run-report JSON
+             field parity; prints file:line findings, exits nonzero on
+             any — the same rules `cargo test` enforces, CLI-shaped
+             for CI logs)
   inspect    [--artifacts DIR]
 "#;
 
+pub mod audit;
 pub mod autoconf;
 pub mod bench;
 pub mod codec;

@@ -8,6 +8,7 @@
 //!   autoconf    search resource configurations for a model/objective
 //!   bench       counter-based microbenches (currently: decode)
 //!   trace       pretty-print latency/stall tables from a saved run report
+//!   audit       lint the sources for correctness-convention violations
 //!   inspect     print manifest/artifact info
 
 use anyhow::{bail, Result};
@@ -33,6 +34,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("autoconf") => autoconf(args),
         Some("bench") => bench(args),
         Some("trace") => trace(args),
+        Some("audit") => audit(),
         Some("inspect") => inspect(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -167,6 +169,15 @@ fn trace(args: &Args) -> Result<()> {
     let report = dpp::util::json::Json::parse(&raw)
         .map_err(|e| anyhow::anyhow!("{path} is not valid JSON: {e}"))?;
     print!("{}", dpp::metrics::trace::report_tables(&report)?);
+    Ok(())
+}
+
+fn audit() -> Result<()> {
+    let n = dpp::audit::run_self_audit()?;
+    if n > 0 {
+        bail!("audit: {n} finding(s)");
+    }
+    println!("audit: clean");
     Ok(())
 }
 

@@ -12,8 +12,8 @@ pub use hist::LogHist;
 pub use trace::{Stage, StallAttribution, Tracer};
 
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Version stamp of `RunReport::to_json`'s shape.  Bump when a field is
@@ -42,9 +42,13 @@ pub struct Counters {
 macro_rules! counter_fns {
     ($($field:ident),*) => {
         impl Counters {
+            // ordering: Relaxed — monotonic telemetry counters; readers
+            // take approximate live values or read after the pipeline
+            // threads have joined, so no other data hangs off them.
             $(pub fn $field(&self, n: u64) { self.$field.fetch_add(n, Ordering::Relaxed); })*
             pub fn snapshot(&self) -> CounterSnapshot {
                 CounterSnapshot {
+                    // ordering: Relaxed — approximate snapshot by design.
                     $($field: self.$field.load(Ordering::Relaxed),)*
                 }
             }
@@ -81,10 +85,13 @@ pub struct ScaleHist {
 impl ScaleHist {
     pub fn record(&self, scale_log2: u8) {
         let i = (scale_log2 as usize).min(3);
+        // ordering: Relaxed — telemetry histogram bump; read after join.
         self.buckets[i].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> [u64; 4] {
+        // ordering: Relaxed — approximate or post-join read; the four
+        // buckets need no mutual consistency.
         [
             self.buckets[0].load(Ordering::Relaxed),
             self.buckets[1].load(Ordering::Relaxed),
@@ -111,6 +118,12 @@ impl Gauge {
 
     /// Increment and return the new level.
     pub fn inc(&self) -> u64 {
+        // ordering: Relaxed — the level is a statistic, not a guard: no
+        // consumer dereferences data published by the gauge, and the
+        // atomic RMW keeps the count exact at any ordering.  The peak
+        // may lag the value by a moment (another thread can observe
+        // `value` before this `fetch_max` lands), which the report
+        // tolerates — peak is a high-water mark, not a fence.
         let v = self.value.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak.fetch_max(v, Ordering::Relaxed);
         v
@@ -120,6 +133,8 @@ impl Gauge {
     /// wrap to `u64::MAX` (a wrapped level would also poison the peak on
     /// the next `inc`/`set`).
     pub fn dec(&self) {
+        // ordering: Relaxed — see `inc`; the saturating CAS loop is
+        // exact regardless of ordering.
         let _ = self
             .value
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
@@ -127,15 +142,18 @@ impl Gauge {
 
     /// Set the level directly (for sampled depths like queue lengths).
     pub fn set(&self, v: u64) {
+        // ordering: Relaxed — sampled level overwrite; see `inc`.
         self.value.store(v, Ordering::Relaxed);
         self.peak.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn value(&self) -> u64 {
+        // ordering: Relaxed — approximate instantaneous read.
         self.value.load(Ordering::Relaxed)
     }
 
     pub fn peak(&self) -> u64 {
+        // ordering: Relaxed — high-water mark read, usually post-join.
         self.peak.load(Ordering::Relaxed)
     }
 }
@@ -157,7 +175,7 @@ pub struct BusyClock {
     busy_ns: AtomicU64,
     /// Pool size at creation (the fixed-mode denominator).
     pub workers: usize,
-    cap: std::sync::Mutex<CapState>,
+    cap: Mutex<CapState>,
 }
 
 #[derive(Debug)]
@@ -183,7 +201,7 @@ impl BusyClock {
         Arc::new(BusyClock {
             busy_ns: AtomicU64::new(0),
             workers,
-            cap: std::sync::Mutex::new(CapState {
+            cap: Mutex::new(CapState {
                 last: Instant::now(),
                 cur: workers,
                 acc_secs: 0.0,
@@ -195,15 +213,20 @@ impl BusyClock {
     pub fn track<R>(&self, f: impl FnOnce() -> R) -> R {
         let t = Instant::now();
         let r = f();
+        // ordering: Relaxed — busy-time accumulator; the atomic RMW is
+        // exact at any ordering and readers want a statistic, not a
+        // synchronized view of the work `f` did.
         self.busy_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         r
     }
 
     pub fn add_secs(&self, secs: f64) {
+        // ordering: Relaxed — accumulator, as in `track`.
         self.busy_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
     }
 
     pub fn busy_secs(&self) -> f64 {
+        // ordering: Relaxed — approximate utilization read.
         self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
@@ -259,12 +282,12 @@ impl BusyClock {
 /// what the decoded-sample cache is expected to shrink from epoch 2 on.
 pub struct EpochClock {
     t0: Instant,
-    marks: std::sync::Mutex<Vec<f64>>,
+    marks: Mutex<Vec<f64>>,
 }
 
 impl EpochClock {
     pub fn new() -> Arc<Self> {
-        Arc::new(EpochClock { t0: Instant::now(), marks: std::sync::Mutex::new(Vec::new()) })
+        Arc::new(EpochClock { t0: Instant::now(), marks: Mutex::new(Vec::new()) })
     }
 
     pub fn mark(&self, epoch: usize) {

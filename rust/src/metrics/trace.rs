@@ -2,9 +2,9 @@
 //!
 //! Each worker thread records sampled `(stage, start, duration, sample,
 //! epoch)` spans into its own fixed-capacity ring of atomic slots: a
-//! recording is four `Relaxed` stores plus a cursor bump, no locks and no
-//! allocation on the hot path (the ring registers itself under a mutex
-//! once per thread).  An `off` tracer is a `None` — every hook is a
+//! recording is four `Relaxed` slot stores published by one `Release`
+//! cursor store, no locks and no allocation on the hot path (the ring
+//! registers itself under a mutex once per thread).  An `off` tracer is a `None` — every hook is a
 //! single branch, so untraced runs pay nothing.  When the ring wraps the
 //! oldest spans are overwritten and counted as dropped.
 //!
@@ -24,10 +24,10 @@
 
 use super::hist::{fmt_ns, LogHist};
 use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Context, Result};
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Pipeline stations a span can belong to.  The discriminant is packed
@@ -123,12 +123,29 @@ impl Ring {
     }
 
     fn push(&self, start_ns: u64, dur_ns: u64, sample: u64, meta: u64) {
-        let idx = self.cursor.fetch_add(1, Ordering::Relaxed);
+        // Single-writer ring: only the owning thread pushes, so the
+        // cursor can be read plainly and *published after* the slot
+        // words.  Regression note (PR 7): this used to bump the cursor
+        // *before* the four slot stores, all Relaxed — a concurrent
+        // drain could then count a span whose words were not yet
+        // written and read a torn half-old/half-new record.  Writing
+        // the slots first and publishing with a Release store (paired
+        // with drain's Acquire load) makes every span the cursor admits
+        // fully written.  Wrapped (overwritten) slots still require the
+        // documented drain-after-join contract.
+        // ordering: Relaxed — own thread's previous store; no other
+        // thread ever writes the cursor.
+        let idx = self.cursor.load(Ordering::Relaxed);
         let pos = (idx as usize % self.cap()) * 4;
+        // ordering: Relaxed — slot words are ordered by the Release
+        // cursor publication below, not individually.
         self.slots[pos].store(start_ns, Ordering::Relaxed);
         self.slots[pos + 1].store(dur_ns, Ordering::Relaxed);
         self.slots[pos + 2].store(sample, Ordering::Relaxed);
         self.slots[pos + 3].store(meta, Ordering::Relaxed);
+        // ordering: Release — publishes the slot words above to any
+        // drain that Acquire-loads a cursor value covering this span.
+        self.cursor.store(idx + 1, Ordering::Release);
     }
 }
 
@@ -181,6 +198,8 @@ impl Tracer {
         let rate = if sample_rate.is_finite() { sample_rate.clamp(1e-9, 1.0) } else { 1.0 };
         Tracer {
             inner: Some(Arc::new(TracerInner {
+                // ordering: Relaxed — only uniqueness of the id matters
+                // (atomic RMW at any ordering); it guards no data.
                 id: TRACER_IDS.fetch_add(1, Ordering::Relaxed),
                 t0: Instant::now(),
                 stride: (1.0 / rate).round().max(1.0) as u64,
@@ -248,6 +267,9 @@ impl Tracer {
             None => return dump,
         };
         for ring in inner.rings.lock().unwrap().iter() {
+            // ordering: Acquire — pairs with `push`'s Release cursor
+            // store, so every slot word of the spans this count admits
+            // is visible below.
             let n = ring.cursor.load(Ordering::Acquire) as usize;
             let cap = ring.cap();
             let kept = n.min(cap);
@@ -256,6 +278,9 @@ impl Tracer {
             let mut spans = Vec::with_capacity(kept);
             for k in 0..kept {
                 let pos = ((first + k) % cap) * 4;
+                // ordering: Relaxed — made visible by the Acquire
+                // cursor load above (and by thread join before drain
+                // for wrapped slots).
                 let word = |o: usize| ring.slots[pos + o].load(Ordering::Relaxed);
                 let meta = word(3);
                 if let Some(stage) = Stage::from_u8((meta & 0xff) as u8) {

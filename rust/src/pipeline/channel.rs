@@ -9,9 +9,9 @@
 
 use crate::metrics::trace::{Stage, Tracer};
 use crate::metrics::Gauge;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 struct State<T> {
@@ -72,6 +72,11 @@ impl<T> Inner<T> {
             len: st.q.len(),
             cap: st.cap,
             occupancy_peak: self.occupancy.peak(),
+            // ordering: Relaxed — the completed-wait clocks are only
+            // ever *added to* under `st`'s lock (see `unregister`), and
+            // we hold that lock here, so the lock orders every earlier
+            // update; the atomic merely allows the lock-free reads in
+            // `send_wait_secs`/`recv_wait_secs`.
             send_wait_secs: self.send_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
                 + in_flight(st.send_waiters, st.send_wait_start_sum_ns),
             recv_wait_secs: self.recv_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
@@ -200,6 +205,9 @@ impl<T> Sender<T> {
             if let Some((t, start)) = waited {
                 st.send_waiters -= 1;
                 st.send_wait_start_sum_ns -= start;
+                // ordering: Relaxed — updated only while holding `st`'s
+                // lock (the caller passes the guard), which serializes
+                // all writers; see the note in `stats`.
                 self.0.send_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 if let Some(tr) = &self.0.trace {
                     tr.tracer.record(tr.send_stage, 0, Some(*t));
@@ -231,6 +239,8 @@ impl<T> Sender<T> {
     }
 
     pub fn send_wait_secs(&self) -> f64 {
+        // ordering: Relaxed — lock-free approximate read of the
+        // completed-wait clock (exact once the waiters have returned).
         self.0.send_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
@@ -253,6 +263,8 @@ impl<T> Receiver<T> {
             if let Some((t, start)) = waited {
                 st.recv_waiters -= 1;
                 st.recv_wait_start_sum_ns -= start;
+                // ordering: Relaxed — updated only under `st`'s lock;
+                // see the note in `stats`.
                 self.0.recv_wait_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 if let Some(tr) = &self.0.trace {
                     tr.tracer.record(tr.recv_stage, 0, Some(*t));
@@ -286,6 +298,8 @@ impl<T> Receiver<T> {
     }
 
     pub fn recv_wait_secs(&self) -> f64 {
+        // ordering: Relaxed — lock-free approximate read, as in
+        // `send_wait_secs`.
         self.0.recv_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 

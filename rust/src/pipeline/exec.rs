@@ -32,8 +32,8 @@
 use crate::config::RunConfig;
 use crate::metrics::BusyClock;
 use crate::pipeline::channel::{Receiver, Sender};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use anyhow::{ensure, Result};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Pool geometry + controller cadence.
@@ -136,7 +136,12 @@ pub struct PoolOutcome {
 /// Park/unpark gate shared by workers and the controller.  Worker `w`
 /// processes items only while `w < target`; others wait here.  Shutdown
 /// wakes everyone for exit.
-struct Gate {
+///
+/// `pub` + `#[doc(hidden)]` so `tests/loom_models.rs` can model-check
+/// the park/resize/shutdown protocol in isolation; it is not part of
+/// the crate's API surface.
+#[doc(hidden)]
+pub struct Gate {
     st: Mutex<GateState>,
     cv: Condvar,
 }
@@ -147,12 +152,12 @@ struct GateState {
 }
 
 impl Gate {
-    fn new(target: usize) -> Arc<Self> {
+    pub fn new(target: usize) -> Arc<Self> {
         Arc::new(Gate { st: Mutex::new(GateState { target, shutdown: false }), cv: Condvar::new() })
     }
 
     /// Block until worker `w` is active; `false` means shut down instead.
-    fn wait_active(&self, w: usize) -> bool {
+    pub fn wait_active(&self, w: usize) -> bool {
         let mut st = self.st.lock().unwrap();
         loop {
             if st.shutdown {
@@ -169,27 +174,28 @@ impl Gate {
     /// target (and the pool not shut down)?  The worker loop uses this
     /// to release its per-worker scratch *before* parking on
     /// [`wait_active`] — parked capacity holds no memory.
-    fn is_active(&self, w: usize) -> bool {
+    pub fn is_active(&self, w: usize) -> bool {
         let st = self.st.lock().unwrap();
         !st.shutdown && w < st.target
     }
 
-    fn set_target(&self, n: usize) {
+    pub fn set_target(&self, n: usize) {
         self.st.lock().unwrap().target = n;
         self.cv.notify_all();
     }
 
-    fn target(&self) -> usize {
+    pub fn target(&self) -> usize {
         self.st.lock().unwrap().target
     }
 
-    fn shutdown(&self) {
+    pub fn shutdown(&self) {
         self.st.lock().unwrap().shutdown = true;
         self.cv.notify_all();
     }
 
     /// Controller sleep: returns `true` if shutdown arrived meanwhile.
-    fn sleep(&self, secs: f64) -> bool {
+    #[cfg(not(loom))]
+    pub fn sleep(&self, secs: f64) -> bool {
         let mut st = self.st.lock().unwrap();
         let deadline = Instant::now() + std::time::Duration::from_secs_f64(secs);
         while !st.shutdown {
@@ -202,13 +208,30 @@ impl Gate {
         }
         true
     }
+
+    /// Model-checker variant: loom's `wait_timeout` "elapses" the moment
+    /// no other task can run, so the real-time deadline loop above would
+    /// spin forever at zero elapsed wall time.  One bounded wait per
+    /// call keeps the controller's observable protocol — wake on
+    /// shutdown, wake-and-recheck on notify, proceed on timeout —
+    /// without depending on wall-clock progress.
+    #[cfg(loom)]
+    pub fn sleep(&self, _secs: f64) -> bool {
+        let st = self.st.lock().unwrap();
+        if st.shutdown {
+            return true;
+        }
+        let (st, _timed_out) =
+            self.cv.wait_timeout(st, std::time::Duration::from_millis(1)).unwrap();
+        st.shutdown
+    }
 }
 
 /// The running pool.  `join` after the source has closed the work queue
 /// (or the consumer has dropped) to collect the outcome.
 pub struct ElasticPool {
-    workers: Vec<std::thread::JoinHandle<Result<()>>>,
-    controller: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<Result<()>>>,
+    controller: Option<thread::JoinHandle<()>>,
     gate: Arc<Gate>,
     timeline: Arc<Mutex<Vec<(f64, usize)>>>,
 }
@@ -280,7 +303,7 @@ where
         let init = init.clone();
         let stage = stage.clone();
         workers.push(
-            std::thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
+            thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
                 let res = (|| -> Result<()> {
                     let mut state: Option<S> = None;
                     loop {
@@ -325,7 +348,7 @@ where
         let gate = gate.clone();
         let timeline = timeline.clone();
         let clock = clock.clone();
-        Some(std::thread::Builder::new().name("exec-ctl".into()).spawn(move || {
+        Some(thread::Builder::new().name("exec-ctl".into()).spawn(move || {
             let mut last_work = work_probe.stats();
             let mut last_out = out_probe.stats();
             let mut last_t = Instant::now();

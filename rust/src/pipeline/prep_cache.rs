@@ -25,10 +25,10 @@
 //! asserted in `tests/prep_cache.rs`).
 
 use crate::util::bytelru::ByteLru;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// Eviction policy of the decoded-sample cache.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -142,6 +142,10 @@ impl PrepCache {
             Store::Lru(lru) => lru.get(&id).cloned(),
             Store::Minio { map, .. } => map.get(&id).cloned(),
         };
+        // ordering: Relaxed — hit/miss telemetry counters: exact under
+        // atomic RMW, read for ratios only (hit_rate / run report), and
+        // never used to publish the cached data itself (the mutex above
+        // does that).
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -183,6 +187,7 @@ impl PrepCache {
     }
 
     pub fn hit_rate(&self) -> f64 {
+        // ordering: Relaxed — approximate ratio read; see `get`.
         let h = self.hits.load(Ordering::Relaxed) as f64;
         let m = self.misses.load(Ordering::Relaxed) as f64;
         if h + m == 0.0 {

@@ -140,6 +140,10 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
         shape.iter().product::<usize>(),
         data.len()
     );
+    // SAFETY: viewing `data`'s f32s as raw bytes — the pointer is valid
+    // for `data.len() * 4` bytes (size_of::<f32>() == 4), u8 has
+    // alignment 1 ≤ align_of::<f32>(), f32 has no padding or invalid bit
+    // patterns, and the borrow of `data` outlives `bytes`.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     lit_f32_bytes(shape, bytes)
@@ -148,6 +152,9 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
 /// i32 literal from a slice.
 pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
     ensure!(data.len() == shape.iter().product::<usize>(), "shape/elems mismatch");
+    // SAFETY: viewing `data`'s i32s as raw bytes — valid for
+    // `data.len() * 4` bytes, u8 alignment 1 ≤ align_of::<i32>(), i32
+    // has no padding or invalid bit patterns, borrow outlives `bytes`.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)

@@ -13,9 +13,9 @@
 
 use super::Storage;
 use crate::util::bytelru::ByteLru;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 enum Key {
@@ -42,6 +42,8 @@ impl<S: Storage> CachedStore<S> {
     }
 
     pub fn hit_rate(&self) -> f64 {
+        // ordering: Relaxed — approximate ratio read of telemetry
+        // counters; see `get`.
         let h = self.hits.load(Ordering::Relaxed) as f64;
         let m = self.misses.load(Ordering::Relaxed) as f64;
         if h + m == 0.0 {
@@ -66,6 +68,9 @@ impl<S: Storage> CachedStore<S> {
 
     fn get(&self, key: &Key) -> Option<Arc<[u8]>> {
         let out = self.lru.lock().unwrap().get(key).cloned(); // refcount bump
+        // ordering: Relaxed — hit/miss telemetry: exact under atomic
+        // RMW, consumed as a ratio; the cached bytes themselves are
+        // published by the lru mutex, never by these counters.
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),

@@ -90,11 +90,17 @@ pub struct IoStats {
 
 impl IoStats {
     pub fn record(&self, bytes: u64) {
+        // ordering: Relaxed — monotonic I/O telemetry; exact under
+        // atomic RMW, consumed as approximate rates (Fig. 4 trace) or
+        // read after the pipeline joins.  The data read is published by
+        // the store's own return path, never by these counters.
         self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
         self.reads.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> (u64, u64) {
+        // ordering: Relaxed — approximate paired read; the two fields
+        // need no mutual consistency (rates tolerate a one-op skew).
         (self.bytes_read.load(Ordering::Relaxed), self.reads.load(Ordering::Relaxed))
     }
 }

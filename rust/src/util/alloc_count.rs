@@ -23,30 +23,55 @@ static BYTES: AtomicU64 = AtomicU64::new(0);
 /// System allocator plus monotonic alloc/byte counters.
 pub struct CountingAllocator;
 
+// SAFETY: every method delegates verbatim to `System`, which upholds the
+// GlobalAlloc contract; the only additions are atomic counter bumps that
+// never allocate, never touch the returned pointer, and cannot unwind.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — monotonic telemetry counters; readers only
+        // need an eventually-consistent total, never cross-counter or
+        // cross-thread consistency with the allocation itself.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: caller upholds GlobalAlloc's `alloc` contract (non-zero
+        // sized, valid layout); we forward it unchanged to System.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` come from the caller under dealloc's
+        // contract (allocated by this allocator — which is System — with
+        // this layout); forwarded unchanged.
+        unsafe { System.dealloc(ptr, layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — monotonic telemetry (see `alloc`).
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: caller upholds `alloc_zeroed`'s contract; forwarded
+        // unchanged to System.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // ordering: Relaxed — monotonic telemetry (see `alloc`).
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller upholds `realloc`'s contract (`ptr` from this
+        // allocator with `layout`, `new_size` non-zero); forwarded
+        // unchanged to System.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 
+// Miri interprets `#[global_allocator]` hooks on every interpreter-level
+// allocation, which both slows the whole suite an order of magnitude and
+// trips its leak-check bookkeeping on the registration itself.  Under
+// miri the crate falls back to the default allocator and these counters
+// simply stay at zero — `snapshot`/`delta`/`measure` keep their types
+// and monotonicity, only the values are degenerate (tests gate on this).
+#[cfg(not(miri))]
 #[global_allocator]
 static GLOBAL: CountingAllocator = CountingAllocator;
 
@@ -58,6 +83,9 @@ pub struct AllocSnapshot {
 }
 
 pub fn snapshot() -> AllocSnapshot {
+    // ordering: Relaxed — approximate paired read of two monotonic
+    // telemetry counters; a one-allocation skew between them is within
+    // the documented process-wide noise of this instrument.
     AllocSnapshot { allocs: ALLOCS.load(Ordering::Relaxed), bytes: BYTES.load(Ordering::Relaxed) }
 }
 
@@ -89,8 +117,12 @@ mod tests {
     fn measure_sees_allocations() {
         let (d, v) = measure(|| vec![0u8; 4096]);
         assert_eq!(v.len(), 4096);
-        assert!(d.allocs >= 1, "{d:?}");
-        assert!(d.bytes >= 4096, "{d:?}");
+        // Under miri the counting allocator is not registered (see the
+        // `#[cfg(not(miri))]` note above) and the counters stay at zero.
+        if !cfg!(miri) {
+            assert!(d.allocs >= 1, "{d:?}");
+            assert!(d.bytes >= 4096, "{d:?}");
+        }
     }
 
     #[test]
@@ -98,7 +130,9 @@ mod tests {
         let s0 = snapshot();
         let _v = vec![0u64; 100];
         let d = delta(s0);
-        assert!(d.allocs >= 1);
+        if !cfg!(miri) {
+            assert!(d.allocs >= 1);
+        }
         // A later snapshot never reads below an earlier one.
         let s1 = snapshot();
         assert!(s1.allocs >= s0.allocs && s1.bytes >= s0.bytes);

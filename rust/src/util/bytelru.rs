@@ -114,6 +114,15 @@ impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
     pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
         self.map.iter().map(|(k, e)| (k, &e.value))
     }
+
+    /// Resident keys in eviction order: least-recently-used first.  The
+    /// reference-model harness (`tests/bytelru_model.rs`) compares this
+    /// against a naive recency list, pinning not just *what* is resident
+    /// but *who goes next* — a recency bug that happens to keep byte
+    /// accounting intact still fails here.
+    pub fn lru_order(&self) -> Vec<K> {
+        self.by_tick.values().cloned().collect()
+    }
 }
 
 #[cfg(test)]

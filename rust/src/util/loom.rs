@@ -1,0 +1,1002 @@
+//! In-tree bounded model checker behind the `util::sync` facade.
+//!
+//! The build container has no network access, so the real `loom` crate
+//! cannot be added as a dev-dependency.  This module provides the
+//! subset of loom's interface the codebase needs — `model()`, checked
+//! `Mutex`/`Condvar`, checked atomics, and a `thread` facade —
+//! implemented as a depth-first enumeration of thread interleavings
+//! with a bounded number of preemptions (`LOOM_MAX_PREEMPTIONS`,
+//! default 2), the same exploration strategy loom uses for schedule
+//! nondeterminism.
+//!
+//! Honest scope statement: this checker explores **sequentially
+//! consistent** interleavings only.  Every modeled atomic op maps to a
+//! `SeqCst` op on a real atomic with a scheduler yield point in front,
+//! so it finds lost updates, statement-level publication-before-init
+//! races, lost notifications, double-handouts, and deadlocks — but it
+//! does not model C++11 weak memory (store buffering, IRIW).  Weak
+//! memory is instead covered by the `// ordering:` audit rule
+//! (`dpp audit`) plus the ThreadSanitizer CI job.
+//!
+//! How a model runs: `model(f)` executes `f` once per explored
+//! schedule.  Model tasks run on real OS threads, but a global
+//! scheduler serializes them: exactly one task is runnable at a time,
+//! and at every yield point (each atomic op, lock acquire, condvar op,
+//! spawn/join) the scheduler consults a recorded decision path to pick
+//! the next task.  After each execution the last not-yet-exhausted
+//! decision is advanced DFS-style until the bounded space is drained
+//! (hard iteration cap `LOOM_MAX_ITERS`, default 100 000).
+//!
+//! Rules for writing models:
+//! * create all shared state *inside* the closure — resource ids are
+//!   registered per execution;
+//! * join every spawned thread — a detached, permanently-blocked
+//!   thread is reported as a deadlock;
+//! * don't assert on wall-clock time (`Instant` is real time, which is
+//!   meaningless under the model); assert on counters instead;
+//! * `Condvar::wait_timeout` "fires" its timeout only when no other
+//!   task can make progress, so timeout-based control loops terminate
+//!   without producing false lost-wakeup reports.
+
+use std::cell::{RefCell, UnsafeCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, OnceLock};
+use std::time::Duration;
+
+const DEFAULT_MAX_PREEMPTIONS: usize = 2;
+const DEFAULT_MAX_ITERS: usize = 100_000;
+
+/// Sentinel unwind payload used to tear down tasks once an execution
+/// aborts (failure found elsewhere).  Raised with `resume_unwind` so
+/// the global panic hook stays quiet.
+struct ModelAbort;
+
+fn abort_unwind() -> ! {
+    resume_unwind(Box::new(ModelAbort))
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Wait {
+    Mutex(usize),
+    Cond(usize),
+    CondTimed(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TaskState {
+    Runnable,
+    Blocked(Wait),
+    Finished,
+}
+
+struct SchedState {
+    tasks: Vec<TaskState>,
+    current: usize,
+    /// DFS decision path: `(choice_taken, n_options)` per choice point.
+    path: Vec<(usize, usize)>,
+    cursor: usize,
+    preemptions: usize,
+    max_preemptions: usize,
+    abort: bool,
+    failure: Option<String>,
+    /// One entry per registered mutex: the owning task, if locked.
+    mutex_owners: Vec<Option<usize>>,
+    n_condvars: usize,
+    /// Per task: did the last `wait_timeout` end by timeout?
+    timed_out: Vec<bool>,
+}
+
+struct Sched {
+    m: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+type StGuard<'a> = std::sync::MutexGuard<'a, SchedState>;
+
+impl Sched {
+    fn new(max_preemptions: usize) -> Self {
+        Sched {
+            m: StdMutex::new(SchedState {
+                tasks: Vec::new(),
+                current: 0,
+                path: Vec::new(),
+                cursor: 0,
+                preemptions: 0,
+                max_preemptions,
+                abort: false,
+                failure: None,
+                mutex_owners: Vec::new(),
+                n_condvars: 0,
+                timed_out: Vec::new(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock_state(&self) -> StGuard<'_> {
+        self.m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Consume (replay) or append (extend) one DFS decision.
+    fn choose(st: &mut SchedState, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        if st.cursor < st.path.len() {
+            let (c, m) = st.path[st.cursor];
+            if m != n {
+                st.failure
+                    .get_or_insert_with(|| "nondeterministic replay (schedule shape changed between executions)".into());
+                st.abort = true;
+                return 0;
+            }
+            st.cursor += 1;
+            c
+        } else {
+            st.path.push((0, n));
+            st.cursor += 1;
+            0
+        }
+    }
+
+    /// Pick the next task to run.  Fires pending timeouts only when
+    /// nothing else is runnable; declares deadlock when no task can
+    /// ever run again.
+    fn schedule(&self, st: &mut SchedState) {
+        loop {
+            let runnable: Vec<usize> = (0..st.tasks.len())
+                .filter(|&t| st.tasks[t] == TaskState::Runnable)
+                .collect();
+            if runnable.is_empty() {
+                let timed: Vec<usize> = (0..st.tasks.len())
+                    .filter(|&t| matches!(st.tasks[t], TaskState::Blocked(Wait::CondTimed(_))))
+                    .collect();
+                if !timed.is_empty() {
+                    for t in timed {
+                        st.timed_out[t] = true;
+                        st.tasks[t] = TaskState::Runnable;
+                    }
+                    continue;
+                }
+                if st.tasks.iter().all(|t| *t == TaskState::Finished) {
+                    return;
+                }
+                st.failure
+                    .get_or_insert_with(|| format!("deadlock: all live tasks blocked ({:?})", st.tasks));
+                st.abort = true;
+                return;
+            }
+            let cur = st.current;
+            let cur_runnable = st.tasks.get(cur) == Some(&TaskState::Runnable);
+            let chosen = if cur_runnable {
+                if st.preemptions >= st.max_preemptions {
+                    cur
+                } else {
+                    let mut cands = vec![cur];
+                    cands.extend(runnable.iter().copied().filter(|&t| t != cur));
+                    let c = Self::choose(st, cands.len());
+                    if st.abort {
+                        return;
+                    }
+                    let ch = cands[c];
+                    if ch != cur {
+                        st.preemptions += 1;
+                    }
+                    ch
+                }
+            } else {
+                let c = Self::choose(st, runnable.len());
+                if st.abort {
+                    return;
+                }
+                runnable[c]
+            };
+            st.current = chosen;
+            return;
+        }
+    }
+
+    /// Block until this task is scheduled (or the execution aborts).
+    fn wait_mine<'a>(&'a self, mut st: StGuard<'a>, me: usize) -> StGuard<'a> {
+        loop {
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            if st.current == me && st.tasks[me] == TaskState::Runnable {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// A plain interleaving point: offer the scheduler a chance to
+    /// switch to another task, then wait until this task runs again.
+    fn yield_point(&self, me: usize) {
+        let mut st = self.lock_state();
+        if st.abort {
+            drop(st);
+            abort_unwind();
+        }
+        self.schedule(&mut st);
+        self.cv.notify_all();
+        let st = self.wait_mine(st, me);
+        drop(st);
+    }
+
+    /// Mark `me` blocked on `w`, schedule someone else, and return once
+    /// `me` has been made runnable and scheduled again.
+    fn block_on(&self, me: usize, w: Wait) {
+        let mut st = self.lock_state();
+        if st.abort {
+            drop(st);
+            abort_unwind();
+        }
+        st.tasks[me] = TaskState::Blocked(w);
+        self.schedule(&mut st);
+        self.cv.notify_all();
+        let st = self.wait_mine(st, me);
+        drop(st);
+    }
+}
+
+#[derive(Clone)]
+struct TaskCtx {
+    sched: Arc<Sched>,
+    id: usize,
+}
+
+thread_local! {
+    static TASK: RefCell<Option<TaskCtx>> = const { RefCell::new(None) };
+}
+
+fn cur_ctx() -> Option<TaskCtx> {
+    TASK.with(|t| t.borrow().clone())
+}
+
+fn require_ctx(what: &str) -> TaskCtx {
+    cur_ctx().unwrap_or_else(|| panic!("loom {what} used outside model()"))
+}
+
+/// Yield point used by the checked atomics: interleave only when
+/// running inside a model; a no-op otherwise so const-init statics and
+/// non-model code keep working in `--cfg loom` builds.
+fn hook() {
+    if let Some(ctx) = cur_ctx() {
+        ctx.sched.yield_point(ctx.id);
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model task panicked".to_string()
+    }
+}
+
+/// Spawn the real OS thread backing model task `id` (already
+/// registered in the scheduler).  Returns the real handle and the slot
+/// the task's return value is parked in.
+fn spawn_task<T: Send + 'static>(
+    sched: &Arc<Sched>,
+    id: usize,
+    f: impl FnOnce() -> T + Send + 'static,
+    name: Option<String>,
+) -> (std::thread::JoinHandle<()>, Arc<StdMutex<Option<T>>>) {
+    let slot = Arc::new(StdMutex::new(None));
+    let slot2 = Arc::clone(&slot);
+    let s2 = Arc::clone(sched);
+    let mut b = std::thread::Builder::new();
+    if let Some(n) = &name {
+        b = b.name(n.clone());
+    }
+    let h = b
+        .spawn(move || {
+            TASK.with(|t| *t.borrow_mut() = Some(TaskCtx { sched: Arc::clone(&s2), id }));
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                let st = s2.lock_state();
+                let st = s2.wait_mine(st, id);
+                drop(st);
+                f()
+            }));
+            let mut st = s2.lock_state();
+            match res {
+                Ok(v) => {
+                    *slot2.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                }
+                Err(p) => {
+                    if p.downcast_ref::<ModelAbort>().is_none() {
+                        let msg = panic_msg(p.as_ref());
+                        st.failure.get_or_insert(msg);
+                        st.abort = true;
+                    }
+                }
+            }
+            st.tasks[id] = TaskState::Finished;
+            for t in 0..st.tasks.len() {
+                if st.tasks[t] == TaskState::Blocked(Wait::Join(id)) {
+                    st.tasks[t] = TaskState::Runnable;
+                }
+            }
+            if st.current == id && !st.abort {
+                s2.schedule(&mut st);
+            }
+            s2.cv.notify_all();
+        })
+        .expect("spawn model task thread");
+    (h, slot)
+}
+
+/// Advance the DFS path to the next unexplored schedule.  Returns
+/// false when the space is exhausted.
+fn advance(path: &mut Vec<(usize, usize)>) -> bool {
+    while let Some(&(c, n)) = path.last() {
+        if c + 1 < n {
+            path.last_mut().expect("non-empty").0 = c + 1;
+            return true;
+        }
+        path.pop();
+    }
+    false
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` under every schedule the bounded explorer can reach,
+/// returning the number of executions explored.  Panics (on the
+/// calling thread) with the recorded failure if any execution asserts,
+/// panics, or deadlocks.
+pub fn explore<F>(f: F) -> usize
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", DEFAULT_MAX_PREEMPTIONS);
+    let max_iters = env_usize("LOOM_MAX_ITERS", DEFAULT_MAX_ITERS);
+    let sched = Arc::new(Sched::new(max_preemptions));
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            panic!("loom: exceeded LOOM_MAX_ITERS={max_iters} executions; shrink the model or raise the cap");
+        }
+        {
+            let mut st = sched.lock_state();
+            st.tasks.clear();
+            st.tasks.push(TaskState::Runnable); // task 0: the model body
+            st.current = 0;
+            st.cursor = 0;
+            st.preemptions = 0;
+            st.abort = false;
+            for o in &mut st.mutex_owners {
+                *o = None;
+            }
+            st.timed_out.clear();
+            st.timed_out.push(false);
+        }
+        let body = Arc::clone(&f);
+        let (h, _slot) = spawn_task(&sched, 0, move || (&*body)(), Some("main".into()));
+        {
+            let mut st = sched.lock_state();
+            while !st.tasks.iter().all(|t| *t == TaskState::Finished) {
+                st = sched.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let _ = h.join();
+        let mut st = sched.lock_state();
+        if let Some(fail) = st.failure.clone() {
+            panic!(
+                "loom model failed after {iters} execution(s): {fail}\nschedule path: {:?}",
+                st.path
+            );
+        }
+        if !advance(&mut st.path) {
+            return iters;
+        }
+    }
+}
+
+/// loom-compatible entry point: explore every bounded schedule of `f`.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    explore(f);
+}
+
+// ---------------------------------------------------------------------------
+// Checked sync primitives
+// ---------------------------------------------------------------------------
+
+/// Mirror of `std::sync::PoisonError`, so `.lock().unwrap()` and
+/// `.unwrap_or_else(|e| e.into_inner())` both compile against the shim.
+#[derive(Debug)]
+pub struct PoisonError<T>(T);
+
+impl<T> PoisonError<T> {
+    pub fn into_inner(self) -> T {
+        self.0
+    }
+}
+
+pub type LockResult<T> = Result<T, PoisonError<T>>;
+
+/// Model-checked mutex: ownership lives in the scheduler, data behind
+/// an `UnsafeCell`.  Barging (unfair): unlock wakes every waiter and
+/// lets the scheduler pick who retries first.
+pub struct Mutex<T> {
+    id: OnceLock<usize>,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: the model scheduler runs exactly one task at a time and the
+// `mutex_owners` table grants at most one task ownership of `data`
+// between lock and unlock, so sharing the cell across model threads
+// cannot produce concurrent access; `T: Send` keeps the payload itself
+// movable across those threads.
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: see the `Send` impl above — scheduler-serialized exclusive
+// ownership stands in for the real mutex's synchronization.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub const fn new(data: T) -> Self {
+        Mutex { id: OnceLock::new(), data: UnsafeCell::new(data) }
+    }
+
+    fn mid(&self, st: &mut SchedState) -> usize {
+        *self.id.get_or_init(|| {
+            st.mutex_owners.push(None);
+            st.mutex_owners.len() - 1
+        })
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let ctx = require_ctx("Mutex");
+        ctx.sched.yield_point(ctx.id);
+        loop {
+            let mut st = ctx.sched.lock_state();
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            let mid = self.mid(&mut st);
+            if st.mutex_owners[mid].is_none() {
+                st.mutex_owners[mid] = Some(ctx.id);
+                drop(st);
+                return Ok(MutexGuard { lock: self });
+            }
+            st.tasks[ctx.id] = TaskState::Blocked(Wait::Mutex(mid));
+            ctx.sched.schedule(&mut st);
+            ctx.sched.cv.notify_all();
+            let st = ctx.sched.wait_mine(st, ctx.id);
+            drop(st);
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: this guard exists only while the scheduler's
+        // `mutex_owners` entry names the current task, and the
+        // scheduler serializes all model tasks, so no other reference
+        // to the cell's contents can be live.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as in `deref` — exclusive, scheduler-enforced
+        // ownership for the guard's lifetime.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Must stay panic-free: guards also drop while unwinding a
+        // ModelAbort.  Releases ownership and wakes all waiters.
+        if let Some(ctx) = cur_ctx() {
+            let mut st = ctx.sched.lock_state();
+            if let Some(&mid) = self.lock.id.get() {
+                if mid < st.mutex_owners.len() {
+                    st.mutex_owners[mid] = None;
+                    for t in 0..st.tasks.len() {
+                        if st.tasks[t] == TaskState::Blocked(Wait::Mutex(mid)) {
+                            st.tasks[t] = TaskState::Runnable;
+                        }
+                    }
+                }
+            }
+            ctx.sched.cv.notify_all();
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Model-checked condvar.  Timeouts fire only when every other task is
+/// blocked (see module docs).
+pub struct Condvar {
+    id: OnceLock<usize>,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { id: OnceLock::new() }
+    }
+
+    fn cid(&self, st: &mut SchedState) -> usize {
+        *self.id.get_or_init(|| {
+            st.n_condvars += 1;
+            st.n_condvars - 1
+        })
+    }
+
+    fn release_mutex(st: &mut SchedState, mid: usize) {
+        st.mutex_owners[mid] = None;
+        for t in 0..st.tasks.len() {
+            if st.tasks[t] == TaskState::Blocked(Wait::Mutex(mid)) {
+                st.tasks[t] = TaskState::Runnable;
+            }
+        }
+    }
+
+    fn wait_inner<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        timed: bool,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let ctx = require_ctx("Condvar");
+        let lock = guard.lock;
+        std::mem::forget(guard); // release manually below; avoid double-unlock
+        {
+            let mut st = ctx.sched.lock_state();
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            let cid = self.cid(&mut st);
+            let mid = lock.mid(&mut st);
+            Self::release_mutex(&mut st, mid);
+            st.timed_out[ctx.id] = false;
+            let wait = if timed { Wait::CondTimed(cid) } else { Wait::Cond(cid) };
+            st.tasks[ctx.id] = TaskState::Blocked(wait);
+            ctx.sched.schedule(&mut st);
+            ctx.sched.cv.notify_all();
+            let st = ctx.sched.wait_mine(st, ctx.id);
+            drop(st);
+        }
+        let reacquired = lock.lock().unwrap_or_else(|e| e.into_inner());
+        let fired = {
+            let st = ctx.sched.lock_state();
+            st.timed_out[ctx.id]
+        };
+        (reacquired, fired)
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let (g, _) = self.wait_inner(guard, false);
+        Ok(g)
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let (g, fired) = self.wait_inner(guard, true);
+        Ok((g, WaitTimeoutResult { timed_out: fired }))
+    }
+
+    fn wake(&self, all: bool) {
+        let ctx = require_ctx("Condvar");
+        ctx.sched.yield_point(ctx.id);
+        let mut st = ctx.sched.lock_state();
+        if st.abort {
+            drop(st);
+            abort_unwind();
+        }
+        let cid = self.cid(&mut st);
+        let waiters: Vec<usize> = (0..st.tasks.len())
+            .filter(|&t| {
+                st.tasks[t] == TaskState::Blocked(Wait::Cond(cid))
+                    || st.tasks[t] == TaskState::Blocked(Wait::CondTimed(cid))
+            })
+            .collect();
+        if waiters.is_empty() {
+            return;
+        }
+        if all {
+            for t in waiters {
+                st.timed_out[t] = false;
+                st.tasks[t] = TaskState::Runnable;
+            }
+        } else {
+            let c = Sched::choose(&mut st, waiters.len());
+            if st.abort {
+                drop(st);
+                abort_unwind();
+            }
+            let t = waiters[c];
+            st.timed_out[t] = false;
+            st.tasks[t] = TaskState::Runnable;
+        }
+        ctx.sched.cv.notify_all();
+    }
+
+    pub fn notify_one(&self) {
+        self.wake(false);
+    }
+
+    pub fn notify_all(&self) {
+        self.wake(true);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked atomics
+// ---------------------------------------------------------------------------
+
+pub mod atomic {
+    //! Checked atomics: every op is a yield point, executed `SeqCst` on
+    //! a real atomic regardless of the ordering the caller asked for
+    //! (sequentially-consistent exploration only; see module docs).
+    use super::hook;
+    pub use std::sync::atomic::Ordering;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    macro_rules! int_atomic {
+        ($name:ident, $std:path, $int:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                v: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $int) -> Self {
+                    Self { v: <$std>::new(v) }
+                }
+
+                pub fn load(&self, _o: Ordering) -> $int {
+                    hook();
+                    self.v.load(SeqCst)
+                }
+
+                pub fn store(&self, x: $int, _o: Ordering) {
+                    hook();
+                    self.v.store(x, SeqCst)
+                }
+
+                pub fn swap(&self, x: $int, _o: Ordering) -> $int {
+                    hook();
+                    self.v.swap(x, SeqCst)
+                }
+
+                pub fn fetch_add(&self, x: $int, _o: Ordering) -> $int {
+                    hook();
+                    self.v.fetch_add(x, SeqCst)
+                }
+
+                pub fn fetch_sub(&self, x: $int, _o: Ordering) -> $int {
+                    hook();
+                    self.v.fetch_sub(x, SeqCst)
+                }
+
+                pub fn fetch_max(&self, x: $int, _o: Ordering) -> $int {
+                    hook();
+                    self.v.fetch_max(x, SeqCst)
+                }
+
+                pub fn fetch_min(&self, x: $int, _o: Ordering) -> $int {
+                    hook();
+                    self.v.fetch_min(x, SeqCst)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    cur: $int,
+                    new: $int,
+                    _ok: Ordering,
+                    _err: Ordering,
+                ) -> Result<$int, $int> {
+                    hook();
+                    self.v.compare_exchange(cur, new, SeqCst, SeqCst)
+                }
+
+                pub fn fetch_update<F: FnMut($int) -> Option<$int>>(
+                    &self,
+                    _ok: Ordering,
+                    _err: Ordering,
+                    f: F,
+                ) -> Result<$int, $int> {
+                    hook();
+                    self.v.fetch_update(SeqCst, SeqCst, f)
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    int_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        v: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self { v: std::sync::atomic::AtomicBool::new(v) }
+        }
+
+        pub fn load(&self, _o: Ordering) -> bool {
+            hook();
+            self.v.load(SeqCst)
+        }
+
+        pub fn store(&self, x: bool, _o: Ordering) {
+            hook();
+            self.v.store(x, SeqCst)
+        }
+
+        pub fn swap(&self, x: bool, _o: Ordering) -> bool {
+            hook();
+            self.v.swap(x, SeqCst)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread facade
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    //! Scheduler-controlled stand-ins for `std::thread`.  Tasks run on
+    //! real OS threads (so `std::thread::current().name()` still works
+    //! for the tracer) but only ever one at a time.
+    use super::{
+        abort_unwind, hook, require_ctx, spawn_task, Arc, Sched, StdMutex, TaskState, Wait,
+    };
+    use std::time::Duration;
+
+    pub struct JoinHandle<T> {
+        sched: Arc<Sched>,
+        id: usize,
+        slot: Arc<StdMutex<Option<T>>>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            let ctx = require_ctx("JoinHandle::join");
+            loop {
+                let mut st = self.sched.lock_state();
+                if st.abort {
+                    drop(st);
+                    abort_unwind();
+                }
+                if st.tasks[self.id] == TaskState::Finished {
+                    drop(st);
+                    let v = self
+                        .slot
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .take()
+                        .expect("loom join: task finished without a result");
+                    return Ok(v);
+                }
+                st.tasks[ctx.id] = TaskState::Blocked(Wait::Join(self.id));
+                self.sched.schedule(&mut st);
+                self.sched.cv.notify_all();
+                let st = self.sched.wait_mine(st, ctx.id);
+                drop(st);
+            }
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let ctx = require_ctx("thread::spawn");
+            let id = {
+                let mut st = ctx.sched.lock_state();
+                st.tasks.push(TaskState::Runnable);
+                st.timed_out.push(false);
+                st.tasks.len() - 1
+            };
+            let (real, slot) = spawn_task(&ctx.sched, id, f, self.name);
+            drop(real); // detach; the scheduler tracks task lifetime
+            Ok(JoinHandle { sched: Arc::clone(&ctx.sched), id, slot })
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("loom spawn")
+    }
+
+    /// Model time does not advance: sleeping is just a yield point.
+    pub fn sleep(_dur: Duration) {
+        hook();
+    }
+
+    pub fn yield_now() {
+        hook();
+    }
+
+    // Re-exported so callers can keep `thread::current().name()`:
+    // model tasks run on real named OS threads.
+    pub use std::thread::current;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicU64, Ordering};
+    use super::{explore, model, thread, Condvar, Mutex};
+    use std::sync::Arc;
+
+    #[test]
+    fn fetch_add_is_atomic_and_explores_multiple_schedules() {
+        let n = explore(|| {
+            let c = Arc::new(AtomicU64::new(0));
+            let c2 = Arc::clone(&c);
+            let t = thread::spawn(move || {
+                c2.fetch_add(1, Ordering::Relaxed);
+            });
+            c.fetch_add(1, Ordering::Relaxed);
+            t.join().unwrap();
+            assert_eq!(c.load(Ordering::Relaxed), 2);
+        });
+        assert!(n > 1, "expected >1 interleaving, got {n}");
+    }
+
+    #[test]
+    #[should_panic(expected = "loom model failed")]
+    fn lost_update_is_found() {
+        model(|| {
+            let c = Arc::new(AtomicU64::new(0));
+            let c2 = Arc::clone(&c);
+            let t = thread::spawn(move || {
+                let v = c2.load(Ordering::Relaxed);
+                c2.store(v + 1, Ordering::Relaxed);
+            });
+            let v = c.load(Ordering::Relaxed);
+            c.store(v + 1, Ordering::Relaxed);
+            t.join().unwrap();
+            // Non-atomic read-modify-write: some schedule loses one.
+            assert_eq!(c.load(Ordering::Relaxed), 2);
+        });
+    }
+
+    #[test]
+    fn mutex_provides_mutual_exclusion() {
+        model(|| {
+            let m = Arc::new(Mutex::new(0u64));
+            let m2 = Arc::clone(&m);
+            let t = thread::spawn(move || {
+                let mut g = m2.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            });
+            {
+                let mut g = m.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            }
+            t.join().unwrap();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn ab_ba_deadlock_is_detected() {
+        model(|| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = thread::spawn(move || {
+                let _gb = b2.lock().unwrap();
+                let _ga = a2.lock().unwrap();
+            });
+            {
+                let _ga = a.lock().unwrap();
+                let _gb = b.lock().unwrap();
+            }
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_is_never_lost() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let pair2 = Arc::clone(&pair);
+            let t = thread::spawn(move || {
+                let (m, cv) = &*pair2;
+                let mut ready = m.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            });
+            {
+                let (m, cv) = &*pair;
+                *m.lock().unwrap() = true;
+                cv.notify_one();
+            }
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn wait_timeout_fires_when_nothing_else_can_run() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(()), Condvar::new()));
+            let (m, cv) = &*pair;
+            let g = m.lock().unwrap();
+            let (_g, res) = cv
+                .wait_timeout(g, std::time::Duration::from_millis(1))
+                .unwrap();
+            assert!(res.timed_out());
+        });
+    }
+
+    #[test]
+    fn join_returns_the_value() {
+        model(|| {
+            let t = thread::spawn(|| 41u64 + 1);
+            assert_eq!(t.join().unwrap(), 42);
+        });
+    }
+}

@@ -5,9 +5,11 @@ pub mod alloc_count;
 pub mod bytelru;
 pub mod cli;
 pub mod json;
+pub mod loom;
 pub mod rng;
 pub mod slab;
 pub mod stats;
+pub mod sync;
 
 /// Human-readable byte count.
 pub fn human_bytes(n: u64) -> String {

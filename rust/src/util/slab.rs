@@ -31,9 +31,9 @@
 //! arenas (`max_free`); arenas beyond the bound free normally, so a
 //! transient burst cannot pin memory forever.
 
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, Weak};
 use std::ops::Deref;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, Weak};
 
 /// Arena alignment: batch tensors feed SIMD-friendly kernels, and a
 /// cache-line start keeps neighboring slots from sharing a line head.
@@ -46,9 +46,12 @@ struct Arena {
     len: usize,
 }
 
-// SAFETY: a plain heap block; all access goes through raw pointers the
-// slice/tensor layer guards.
+// SAFETY: a plain owned heap block (no thread affinity); all access
+// goes through raw pointers the slice/tensor layer guards.
 unsafe impl Send for Arena {}
+// SAFETY: the arena itself exposes no interior mutation — every write
+// goes through an exclusive `SlabSlice` (`&mut self`) covering a
+// disjoint slot range, so sharing `&Arena` across threads is sound.
 unsafe impl Sync for Arena {}
 
 impl Arena {
@@ -63,6 +66,8 @@ impl Arena {
         // Zeroed on first allocation so a never-filled slot can never
         // leak unrelated heap contents; recycled arenas are fully
         // overwritten slot by slot before they are ever read.
+        // SAFETY: `layout` has non-zero size (`len > 0` asserted above)
+        // and a valid power-of-two alignment (SLAB_ALIGN).
         let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f32;
         let Some(ptr) = std::ptr::NonNull::new(raw) else {
             std::alloc::handle_alloc_error(layout)
@@ -73,6 +78,9 @@ impl Arena {
 
 impl Drop for Arena {
     fn drop(&mut self) {
+        // SAFETY: `ptr` came from `alloc_zeroed` with exactly this
+        // layout (`len` is immutable after construction), and Drop runs
+        // at most once on the sole owner.
         unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) }
     }
 }
@@ -166,14 +174,22 @@ impl SlabPool {
         if open.is_none() {
             let arena = match self.free.lock().unwrap().pop() {
                 Some(a) => {
+                    // ordering: Relaxed — monotonic telemetry counter,
+                    // only read after the threads quiesce (or as an
+                    // approximate live stat); orders nothing.
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     a
                 }
                 None => {
+                    // ordering: Relaxed — telemetry counter, as above.
                     self.grows.fetch_add(1, Ordering::Relaxed);
                     Arena::new(self.sample_len * self.batch)
                 }
             };
+            // ordering: Relaxed — uniqueness of the sequence number is
+            // all that matters (fetch_add is atomic at any ordering);
+            // callers never infer cross-thread visibility from it, and
+            // this call already runs under the `open` mutex.
             let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
             *open = Some(OpenSlab {
                 inner: Arc::new(SlabInner {
@@ -207,11 +223,13 @@ impl SlabPool {
 
     /// Arenas served from the free list (recycles that saved an alloc).
     pub fn hits(&self) -> u64 {
+        // ordering: Relaxed — approximate telemetry read; see `slice`.
         self.hits.load(Ordering::Relaxed)
     }
 
     /// Fresh arena allocations (pool cold or burst beyond the free list).
     pub fn grows(&self) -> u64 {
+        // ordering: Relaxed — approximate telemetry read; see `slice`.
         self.grows.load(Ordering::Relaxed)
     }
 
@@ -254,12 +272,18 @@ impl SlabSlice {
     /// shared read view ([`SlabTensor`]) only exists after `seal`
     /// consumed every slice — so this `&mut` never aliases.
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: `slot_ptr` is in-bounds and aligned; exclusivity per
+        // the doc argument above (one slice per slot, disjoint ranges,
+        // no reader until `seal`), and `&mut self` pins this slice.
         unsafe {
             std::slice::from_raw_parts_mut(self.inner.slot_ptr(self.slot), self.inner.sample_len)
         }
     }
 
     pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: in-bounds slot range; the only possible writer is
+        // this same slice via `&mut self`, which cannot coexist with
+        // this `&self` borrow.
         unsafe {
             std::slice::from_raw_parts(self.inner.slot_ptr(self.slot), self.inner.sample_len)
         }
@@ -274,6 +298,10 @@ impl Clone for SlabSlice {
     /// are not sealable alongside the originals.
     fn clone(&self) -> Self {
         let arena = Arena::new(self.inner.sample_len);
+        // SAFETY: source is this slice's own in-bounds slot, the
+        // destination is a freshly allocated arena of the same length —
+        // distinct allocations cannot overlap, both are valid for
+        // `sample_len` f32s.
         unsafe {
             std::ptr::copy_nonoverlapping(
                 self.inner.slot_ptr(self.slot),
@@ -516,7 +544,9 @@ mod tests {
     #[test]
     fn concurrent_checkout_never_double_hands_a_slot() {
         let workers = 8usize;
-        let per_worker = 200usize;
+        // Miri interprets every access; keep its schedule short (the
+        // full-size run still executes under plain `cargo test`).
+        let per_worker = if cfg!(miri) { 16usize } else { 200usize };
         let pool = SlabPool::new(4, 8, 3);
         let seen = std::sync::Arc::new(Mutex::new(HashSet::new()));
         let hs: Vec<_> = (0..workers)

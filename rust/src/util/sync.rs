@@ -1,0 +1,40 @@
+//! Sync facade: `std::sync`/`std::thread` primitives normally, the
+//! in-tree bounded model checker (`util::loom`) under `--cfg loom`.
+//!
+//! Every concurrent core in the crate (`util::slab`, `metrics::trace`,
+//! `metrics` gauges/`BusyClock`, `pipeline::channel`,
+//! `pipeline::prep_cache`, `pipeline::exec`, `storage::cache`,
+//! `storage` IoStats) imports its primitives from here instead of
+//! `std::sync`, so `RUSTFLAGS="--cfg loom" cargo test --test
+//! loom_models` model-checks the exact code that ships.  `Arc`/`Weak`
+//! stay `std` in both configurations (reference counting is not part
+//! of the modeled state), as does `Instant`.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult, Weak};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{current, sleep, spawn, yield_now, Builder, JoinHandle};
+}
+
+#[cfg(loom)]
+pub use crate::util::loom::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(loom)]
+pub use std::sync::{Arc, Weak};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use crate::util::loom::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use crate::util::loom::thread::{current, sleep, spawn, yield_now, Builder, JoinHandle};
+}

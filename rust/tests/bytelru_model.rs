@@ -1,0 +1,128 @@
+//! ByteLru vs a naive reference model (satellite of the concurrency
+//! correctness PR): seeded random workloads drive the real tick-indexed
+//! implementation and a deliberately dumb `Vec`-backed model through the
+//! same operation stream, comparing after *every* operation:
+//!
+//! * exact byte accounting (`bytes == Σ resident sizes <= budget`),
+//! * the resident key set,
+//! * full **eviction order** (`lru_order` vs the model's recency list) —
+//!   which pins who-goes-next, not just what-is-resident, so a recency
+//!   bug that happens to keep the byte totals intact still fails.
+//!
+//! The model is obviously-correct by inspection: a recency-ordered
+//! `Vec<(key, size)>` (LRU at the front) with O(n) scans everywhere.
+//! Runs under plain `cargo test` and under miri (reduced case counts —
+//! the interpreter is ~2 orders of magnitude slower).
+
+use dpp::util::bytelru::ByteLru;
+use dpp::util::rng::Rng;
+
+/// The reference: recency list, LRU first, O(n) everything.
+struct NaiveLru {
+    budget: usize,
+    /// `(key, size)` ordered least-recently-used → most-recently-used.
+    entries: Vec<(u64, usize)>,
+}
+
+impl NaiveLru {
+    fn new(budget: usize) -> Self {
+        NaiveLru { budget, entries: Vec::new() }
+    }
+
+    fn bytes(&self) -> usize {
+        self.entries.iter().map(|&(_, s)| s).sum()
+    }
+
+    fn get(&mut self, key: u64) -> bool {
+        if let Some(i) = self.entries.iter().position(|&(k, _)| k == key) {
+            let e = self.entries.remove(i);
+            self.entries.push(e); // most recently used: back
+            true
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, key: u64, size: usize) {
+        if size > self.budget {
+            return; // oversized values bypass, mirroring ByteLru
+        }
+        // Replacement credits the old entry before sizing the eviction
+        // target — the exact contract the real implementation documents.
+        if let Some(i) = self.entries.iter().position(|&(k, _)| k == key) {
+            self.entries.remove(i);
+        }
+        while self.bytes() + size > self.budget {
+            self.entries.remove(0); // evict the LRU head
+        }
+        self.entries.push((key, size));
+    }
+
+    fn order(&self) -> Vec<u64> {
+        self.entries.iter().map(|&(k, _)| k).collect()
+    }
+}
+
+/// Drive both implementations through one seeded workload, comparing
+/// bytes, resident set, and eviction order after every operation.
+fn run_case(case: u64, ops: usize, keyspace: u64, budget: usize, max_size: usize) {
+    let mut rng = Rng::new(0x1b17_e1b1).fork(case);
+    let mut real: ByteLru<u64, usize> = ByteLru::new(budget);
+    let mut model = NaiveLru::new(budget);
+    for op in 0..ops {
+        let key = rng.gen_range(keyspace);
+        if rng.bool() {
+            let size = 1 + rng.gen_range(max_size as u64) as usize;
+            real.insert(key, size, size);
+            model.insert(key, size);
+        } else {
+            let hit_real = real.get(&key).is_some();
+            let hit_model = model.get(key);
+            assert_eq!(
+                hit_real, hit_model,
+                "case {case} op {op}: hit/miss diverged on key {key}"
+            );
+        }
+        // Byte accounting: exact and within budget.
+        assert_eq!(real.bytes(), model.bytes(), "case {case} op {op}: byte totals diverged");
+        assert!(real.bytes() <= budget, "case {case} op {op}: budget exceeded");
+        let recount: usize = real.iter().map(|(_, &s)| s).sum();
+        assert_eq!(real.bytes(), recount, "case {case} op {op}: bytes() != Σ resident");
+        // Eviction order: identical key sequence, LRU first.  This also
+        // subsumes the resident-set comparison.
+        assert_eq!(
+            real.lru_order(),
+            model.order(),
+            "case {case} op {op}: eviction order diverged"
+        );
+        assert_eq!(real.len(), model.entries.len(), "case {case} op {op}: len diverged");
+    }
+}
+
+#[test]
+fn bytelru_matches_reference_model_small_keyspace() {
+    // Small keyspace → heavy replacement + recency churn.
+    let (cases, ops) = if cfg!(miri) { (4, 60) } else { (64, 400) };
+    for case in 0..cases {
+        run_case(case, ops, 8, 64 + (case as usize * 37) % 512, 96);
+    }
+}
+
+#[test]
+fn bytelru_matches_reference_model_wide_keyspace() {
+    // Wide keyspace → eviction-dominated (most inserts are fresh keys).
+    let (cases, ops) = if cfg!(miri) { (4, 60) } else { (64, 400) };
+    for case in 0..cases {
+        run_case(1000 + case, ops, 64, 128 + (case as usize * 53) % 1024, 160);
+    }
+}
+
+#[test]
+fn bytelru_matches_reference_model_tight_budget() {
+    // Budget barely above max item size → near-every insert evicts, and
+    // oversized-bypass triggers regularly.
+    let (cases, ops) = if cfg!(miri) { (4, 60) } else { (32, 300) };
+    for case in 0..cases {
+        run_case(2000 + case, ops, 16, 100, 110);
+    }
+}

@@ -1,0 +1,300 @@
+//! Model-checked concurrency invariants (tentpole of the correctness
+//! PR).  Compiled only under `RUSTFLAGS="--cfg loom"`, where the
+//! `util::sync` facade swaps every `Mutex`/`Condvar`/atomic/`thread`
+//! in the crate for the in-tree bounded model checker (`util::loom`):
+//! each test body is re-run once per explored thread schedule, with a
+//! preemption bound (`LOOM_MAX_PREEMPTIONS`, default 2) keeping the
+//! state space tractable.
+//!
+//! What the checker covers — and what it does not: it explores
+//! *interleavings* of sequentially-consistent executions (every atomic
+//! is modeled as SeqCst, every lock/condvar op is a scheduling point),
+//! so lost-wakeup, deadlock, double-handout, and torn-read-under-
+//! interleaving bugs are in scope; *weak-memory* reorderings are not.
+//! The `// ordering:` audit rule (`dpp audit`) and the ThreadSanitizer
+//! CI job carry the weak-memory half of the argument.
+//!
+//! Run with:
+//! ```sh
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=2 \
+//!     cargo test --release --test loom_models
+//! ```
+#![cfg(loom)]
+
+use dpp::metrics::trace::{Stage, Tracer};
+use dpp::pipeline::channel::bounded;
+use dpp::pipeline::exec::Gate;
+use dpp::util::bytelru::ByteLru;
+use dpp::util::loom::model;
+use dpp::util::slab::{seal, SlabPool};
+use dpp::util::sync::thread;
+use dpp::util::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------------
+// Slab pool: slots are handed out exactly once, and seal happens-after
+// every slot write.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slab_slots_never_handed_out_twice_and_seal_sees_all_writes() {
+    model(|| {
+        // batch = 2: the two workers' checkouts must land on distinct
+        // slots of one slab, whatever the interleaving.
+        let pool = SlabPool::new(4, 2, 2);
+        let mut handles = Vec::new();
+        for w in 0..2u32 {
+            let pool = pool.clone();
+            handles.push(thread::spawn(move || {
+                let mut s = pool.slice();
+                let fill = (w + 1) as f32;
+                for x in s.as_mut_slice() {
+                    *x = fill;
+                }
+                (s.slab_seq(), s.slot(), fill, s)
+            }));
+        }
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Handout uniqueness: no (slab, slot) pair appears twice.
+        assert_ne!(
+            (outs[0].0, outs[0].1),
+            (outs[1].0, outs[1].1),
+            "one slot handed out to two workers"
+        );
+        // Seal happens-after the writes: the sealed read-only view shows
+        // each worker's fill in its own slot, never zeros or a mix.
+        let mut expect = [0f32; 2];
+        let mut slices = Vec::new();
+        for (_seq, slot, fill, s) in outs {
+            expect[slot] = fill;
+            slices.push(s);
+        }
+        let t = seal(slices).expect("both slots of one slab");
+        for slot in 0..2 {
+            assert_eq!(&t[slot * 4..(slot + 1) * 4], &[expect[slot]; 4], "slot {slot} torn");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trace ring: a drain racing the writer never observes a torn span, and
+// the dropped counter is exact after the writer joins.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_ring_drain_never_tears_a_span() {
+    model(|| {
+        // sample_rate 1.0 → every record lands; cap 4 → no wrap, so the
+        // Release-cursor contract alone must order the slot words.
+        let tracer = Tracer::with_capacity(1.0, 4);
+        let t2 = tracer.clone();
+        let writer = thread::spawn(move || {
+            for v in 1..=2u64 {
+                // Pin all controllable words of span v to v: epoch rides
+                // in the meta word, v in the sample word.  A torn read
+                // (words from two different pushes) breaks the equality.
+                t2.set_epoch(v);
+                let started = t2.start();
+                t2.record(Stage::Decode, v, started);
+            }
+        });
+        // Race a drain against the two pushes: whatever prefix the
+        // Acquire-load of the cursor admits must be fully written.
+        let mid = tracer.drain();
+        assert!(mid.span_count() <= 2);
+        assert_eq!(mid.dropped, 0);
+        for track in &mid.tracks {
+            for s in &track.spans {
+                assert_eq!(s.sample, s.epoch, "torn span: sample/meta words from different pushes");
+            }
+        }
+        writer.join().unwrap();
+        // Post-join the dump is total and ordered.
+        let fin = tracer.drain();
+        assert_eq!(fin.span_count(), 2);
+        assert_eq!(fin.dropped, 0);
+        let samples: Vec<u64> =
+            fin.tracks.iter().flat_map(|t| t.spans.iter().map(|s| s.sample)).collect();
+        assert_eq!(samples, vec![1, 2]);
+    });
+}
+
+#[test]
+fn trace_ring_dropped_counter_is_exact_after_wrap() {
+    model(|| {
+        // cap 2, 5 spans: exactly the 2 newest survive, exactly 3 drop.
+        let tracer = Tracer::with_capacity(1.0, 2);
+        let t2 = tracer.clone();
+        let writer = thread::spawn(move || {
+            for v in 1..=5u64 {
+                t2.set_epoch(v);
+                let started = t2.start();
+                t2.record(Stage::Decode, v, started);
+            }
+        });
+        writer.join().unwrap();
+        let dump = tracer.drain();
+        assert_eq!(dump.span_count(), 2);
+        assert_eq!(dump.dropped, 3);
+        let samples: Vec<u64> =
+            dump.tracks.iter().flat_map(|t| t.spans.iter().map(|s| s.sample)).collect();
+        assert_eq!(samples, vec![4, 5], "wrap must keep the newest spans in order");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Channel: items are delivered exactly once, and the blocked-time
+// accounting leaves no phantom waiter behind (the double-charge bug
+// shape: a waiter that is counted in the in-flight term after it
+// already added its completed wait to the clock).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn channel_delivers_exactly_once_and_waiter_accounting_drains_to_zero() {
+    model(|| {
+        // cap 1 with two senders: at least one schedule blocks a sender;
+        // a consumer thread drains both items.
+        let (tx, rx) = bounded::<u32>(1);
+        let probe = tx.probe();
+        let mut senders = Vec::new();
+        for v in 1..=2u32 {
+            let tx = tx.clone();
+            senders.push(thread::spawn(move || {
+                tx.send(v).unwrap();
+            }));
+        }
+        drop(tx);
+        let consumer = thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = rx.recv() {
+                got.push(v);
+            }
+            got
+        });
+        for s in senders {
+            s.join().unwrap();
+        }
+        let mut got = consumer.join().unwrap();
+        got.sort();
+        assert_eq!(got, vec![1, 2], "channel lost or duplicated an item");
+        // Every waiter has returned: the in-flight term must be exactly
+        // zero, so the stats clock is frozen.  A leaked waiter count
+        // keeps charging wall time, so two reads straddling a real
+        // ~300µs spin would diverge by ≥ 3e-4 s.
+        let s1 = probe.stats();
+        assert_eq!(s1.len, 0);
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < std::time::Duration::from_micros(300) {
+            std::hint::spin_loop();
+        }
+        let s2 = probe.stats();
+        assert!(
+            (s2.send_wait_secs - s1.send_wait_secs).abs() < 1e-4
+                && (s2.recv_wait_secs - s1.recv_wait_secs).abs() < 1e-4,
+            "blocked-time clock still running: phantom waiter ({s1:?} -> {s2:?})"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ByteLru under the callers' Mutex: byte accounting stays exact under
+// concurrent replacement of the same key.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bytelru_accounting_exact_under_concurrent_replacement() {
+    model(|| {
+        let lru: Arc<Mutex<ByteLru<u32, u32>>> = Arc::new(Mutex::new(ByteLru::new(100)));
+        let mut handles = Vec::new();
+        for w in 0..2u32 {
+            let lru = Arc::clone(&lru);
+            handles.push(thread::spawn(move || {
+                // Both threads fight over key 0 (replacement path) and
+                // add a private key (eviction path).
+                let size = 50 + w as usize * 10;
+                lru.lock().unwrap().insert(0, w, size);
+                lru.lock().unwrap().insert(10 + w, w, 40);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let l = lru.lock().unwrap();
+        // Sizes aren't stored in the value, but each value determines
+        // the size its insert charged (key 0 ↔ 50 + 10·w, others ↔ 40),
+        // so an exact recount is possible: bytes() must equal the sum of
+        // the resident entries' charges on EVERY interleaving.
+        let recount: usize =
+            l.iter().map(|(k, &v)| if *k == 0 { 50 + v as usize * 10 } else { 40 }).sum();
+        assert_eq!(l.bytes(), recount, "byte accounting diverged from resident charges");
+        assert!(l.bytes() <= 100, "budget exceeded");
+        let order = l.lru_order();
+        assert_eq!(order.len(), l.len(), "tick index and map diverged");
+        for k in &order {
+            assert!(l.peek(k).is_some(), "index names a non-resident key");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Executor gate: a resize (set_target) or shutdown notification is never
+// lost — a parked worker and a sleeping controller always wake.  A lost
+// wakeup shows up as a deadlock, which the model checker reports.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gate_never_loses_a_resize_notification() {
+    model(|| {
+        let gate = Gate::new(1);
+        let g = Arc::clone(&gate);
+        // Worker 1 starts outside the target (1 < 1 is false), so on
+        // most schedules it parks on the condvar.  The resize to 2 must
+        // wake it — a lost set_target notification is a deadlock, which
+        // the model checker reports as such.
+        let worker = thread::spawn(move || {
+            assert!(g.wait_active(1), "resize to 2 must activate worker 1");
+        });
+        let g2 = Arc::clone(&gate);
+        let controller = thread::spawn(move || {
+            g2.set_target(2);
+        });
+        controller.join().unwrap();
+        worker.join().unwrap();
+        assert_eq!(gate.target(), 2);
+        assert!(gate.is_active(1));
+    });
+}
+
+#[test]
+fn gate_never_loses_a_shutdown_notification() {
+    model(|| {
+        let gate = Gate::new(1);
+        let g = Arc::clone(&gate);
+        // Worker 1 parks (never inside the target); shutdown must wake
+        // it with `false`.  Lost shutdown = deadlock = model failure.
+        let worker = thread::spawn(move || {
+            assert!(!g.wait_active(1), "shutdown must release the parked worker");
+        });
+        gate.shutdown();
+        worker.join().unwrap();
+        assert!(!gate.is_active(0), "no worker is active after shutdown");
+        assert!(!gate.wait_active(1), "post-shutdown wait must return immediately");
+    });
+}
+
+#[test]
+fn gate_sleep_always_wakes_for_shutdown() {
+    model(|| {
+        let gate = Gate::new(1);
+        let g = Arc::clone(&gate);
+        // The controller loop shape from exec.rs: sleep until shutdown.
+        let ctl = thread::spawn(move || {
+            let mut ticks = 0u32;
+            while !g.sleep(0.25) {
+                ticks += 1;
+                assert!(ticks < 100, "sleep never observed shutdown");
+            }
+        });
+        gate.shutdown();
+        ctl.join().unwrap();
+    });
+}
