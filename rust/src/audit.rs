@@ -13,9 +13,14 @@
 //!    `clippy::undocumented_unsafe_blocks`, which lints blocks/impls).
 //! 2. **ordering-comment** — every `Ordering::Relaxed` in non-test code
 //!    carries an `ordering:` justification comment the same way.
-//! 3. **flag-parity** — every flag in `RunConfig::accepted_flags()`
+//! 3. **poison-comment** — every `.lock().unwrap()` on a mutex in
+//!    non-test code carries a `poison:` comment arguing why poisoning is
+//!    impossible or fatal-by-design there (the fault-tolerant data plane
+//!    contains worker panics, so an unconsidered poison unwrap is how a
+//!    contained panic becomes a cascade).
+//! 4. **flag-parity** — every flag in `RunConfig::accepted_flags()`
 //!    appears as `--flag` in both `CLI_HELP` and `DESIGN.md`.
-//! 4. **report-parity** — every field of `pub struct RunReport` appears
+//! 5. **report-parity** — every field of `pub struct RunReport` appears
 //!    as a quoted `"field"` JSON key in the serialization in the same
 //!    file.
 //!
@@ -263,8 +268,10 @@ pub fn scan_justifications(file: &str, lines: &[LexedLine]) -> Vec<Finding> {
     // flag (or have to exempt) itself.
     let unsafe_kw: String = ["un", "safe"].concat();
     let relaxed: String = ["Ordering::", "Rel", "axed"].concat();
+    let lock_unwrap: String = ["lock().", "unwr", "ap()"].concat();
     let safety_needle: String = ["SAF", "ETY:"].concat();
     let ordering_needle: String = ["order", "ing:"].concat();
+    let poison_needle: String = ["pois", "on:"].concat();
     let test_attr: String = ["#[cfg(", "test)]"].concat();
     let cutoff = test_cutoff(lines, &test_attr);
     for (idx, l) in lines.iter().enumerate().take(cutoff) {
@@ -295,6 +302,18 @@ pub fn scan_justifications(file: &str, lines: &[LexedLine]) -> Vec<Finding> {
                 message: format!(
                     "`{relaxed}` without an `{ordering_needle}` justification on this line \
                      or within {LOOKBACK_LINES} lines above"
+                ),
+            });
+        }
+        if l.code.contains(lock_unwrap.as_str()) && !justified(lines, idx, &poison_needle) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: "poison-comment",
+                message: format!(
+                    "`.{lock_unwrap}` without a `{poison_needle}` justification on this \
+                     line or within {LOOKBACK_LINES} lines above — argue why lock \
+                     poisoning is impossible (no panic under the lock) or fatal by design"
                 ),
             });
         }
@@ -529,6 +548,20 @@ mod tests {
         assert_eq!((f[0].line, f[0].rule), (1, "ordering-comment"));
         let good = "// ordering: Relaxed — telemetry only.\nx.fetch_add(1, Ordering::Relaxed);\n";
         assert!(scan_justifications("x.rs", &lex(good)).is_empty());
+    }
+
+    #[test]
+    fn unjustified_lock_unwrap_is_flagged_and_poison_comment_passes() {
+        let bad = "let g = self.names.lock().unwrap();\n";
+        let f = scan_justifications("x.rs", &lex(bad));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].line, f[0].rule), (1, "poison-comment"));
+        let good =
+            "// poison: only Vec ops run under this lock.\nlet g = self.names.lock().unwrap();\n";
+        assert!(scan_justifications("x.rs", &lex(good)).is_empty());
+        // Non-mutex unwraps are someone else's business.
+        let unrelated = "let v = maybe.unwrap();\n";
+        assert!(scan_justifications("x.rs", &lex(unrelated)).is_empty());
     }
 
     #[test]

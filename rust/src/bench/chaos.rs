@@ -1,0 +1,246 @@
+//! `dpp bench chaos` — fault-injection resilience smoke (CI gate).
+//!
+//! One record shard streams through the *real* fault plane — seeded
+//! `FaultyStore` under the parallel prefetcher with retry + hedging —
+//! at a sweep of transient-fault rates.  Every gate is deterministic
+//! (seeded faults, seeded retry jitter, counter-based arithmetic), so
+//! CI asserts behavior, never a wall clock:
+//!
+//! * fault-free baseline: zero faults, zero retries, every record;
+//! * 1% transients with retries: the epoch completes with zero
+//!   trainer-visible errors and the retry overhead — extra read
+//!   attempts per delivered part, the service-capacity cost that sets
+//!   goodput — stays within 10% of fault-free;
+//! * the analytic model agrees: end-to-end throughput at a 1% fault
+//!   rate holds within 10% of fault-free at paper scale;
+//! * retries off: the same seed reproduces the same failure, verbatim.
+//!
+//! Writes the rows as JSON (`BENCH_chaos.json`) for the CI artifact.
+
+use crate::pipeline::source::stream_shards_resilient;
+use crate::record::ShardWriter;
+use crate::sim::{analytic_throughput, Scenario};
+use crate::storage::prefetch::Resilience;
+use crate::storage::{
+    FaultProfile, FaultyStore, MemStore, PrefetchPlan, RetryPolicy, RetryStats, Storage,
+};
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Records in the bench shard (sized so the part sweep sees ~100 parts).
+const RECORDS: u64 = 2000;
+/// Prefetch part size / connection count for the streamed reads.
+const PART: usize = 8 << 10;
+const CONNS: usize = 4;
+/// Seed shared by the fault layer and the retry jitter.
+const SEED: u64 = 7;
+
+/// One profile's outcome.
+pub struct ChaosBenchRow {
+    pub profile: &'static str,
+    pub retries: u32,
+    /// Records delivered to the (stand-in) trainer.
+    pub records: u64,
+    /// Faults the seeded layer injected.
+    pub faults: u64,
+    /// Re-issued read attempts (the goodput overhead numerator).
+    pub retried: u64,
+    pub hedges_won: u64,
+    /// Successful reads the backing store served (≈ delivered parts).
+    pub reads: u64,
+    /// First error the stream surfaced (empty when it completed).
+    pub error: String,
+}
+
+impl ChaosBenchRow {
+    /// Extra attempts per delivered read — the capacity the fault plane
+    /// burned re-fetching, which is exactly what erodes goodput.
+    pub fn overhead(&self) -> f64 {
+        self.retried as f64 / self.reads.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::str(self.profile)),
+            ("retries", Json::num(self.retries as f64)),
+            ("records", Json::num(self.records as f64)),
+            ("faults", Json::num(self.faults as f64)),
+            ("retried", Json::num(self.retried as f64)),
+            ("hedges_won", Json::num(self.hedges_won as f64)),
+            ("reads", Json::num(self.reads as f64)),
+            ("overhead", Json::num(self.overhead())),
+            ("error", Json::str(&self.error)),
+        ])
+    }
+}
+
+/// Build the bench shard once and hand back its bytes.
+fn shard_bytes() -> Result<Vec<u8>> {
+    let dir = std::env::temp_dir().join(format!("dpp-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("shard.rec");
+    let mut w = ShardWriter::create(&path)?;
+    for i in 0..RECORDS {
+        // Variable-length payloads so parts cut records at odd offsets.
+        w.append(i, (i % 10) as u16, &vec![i as u8; 200 + (i as usize % 300)])?;
+    }
+    w.finish()?;
+    let bytes = std::fs::read(&path)?;
+    std::fs::remove_dir_all(dir).ok();
+    Ok(bytes)
+}
+
+/// Stream the shard through a seeded fault layer with the given retry
+/// budget; counters come back in the row.
+fn run_profile(bytes: &[u8], profile: &'static str, retries: u32) -> Result<ChaosBenchRow> {
+    let m = MemStore::new();
+    m.write("records/shard-00000.rec", bytes.to_vec());
+    let faulty = match FaultProfile::parse(profile)? {
+        Some(p) => Arc::new(FaultyStore::new(m, p)),
+        None => Arc::new(FaultyStore::new(m, FaultProfile::default())),
+    };
+    let store: Arc<dyn Storage> = faulty.clone();
+    let policy = if retries > 0 {
+        RetryPolicy::with_retries(retries, 30.0, SEED)
+    } else {
+        RetryPolicy::none()
+    };
+    let stats = Arc::new(RetryStats::default());
+    let res = Resilience::new(policy, true, stats.clone());
+    let shards = vec!["records/shard-00000.rec".to_string()];
+    let mut records = 0u64;
+    let streamed = stream_shards_resilient(
+        store.clone(),
+        &shards,
+        PART,
+        PrefetchPlan::new(CONNS, PART, 16 * PART),
+        crate::metrics::trace::Tracer::off(),
+        res,
+        |_, e| Err(e), // zero skip tolerance: every record must arrive
+        |_rec| {
+            records += 1;
+            Ok(true)
+        },
+    );
+    let (retried, hedges_won, _give_ups) = stats.snapshot();
+    Ok(ChaosBenchRow {
+        profile,
+        retries,
+        records,
+        faults: faulty.counts().total(),
+        retried,
+        hedges_won,
+        reads: store.stats().1,
+        error: streamed.err().map(|e| format!("{e:#}")).unwrap_or_default(),
+    })
+}
+
+/// Run the sweep; optionally write `BENCH_chaos.json` to `out`.
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    let bytes = shard_bytes()?;
+    println!("== chaos sweep ({RECORDS} records, {CONNS}-conn prefetch, seed {SEED}) ==");
+    println!(
+        "{:<34} {:>7} {:>8} {:>7} {:>8} {:>9}",
+        "profile", "retries", "records", "faults", "retried", "overhead"
+    );
+    let sweep: [(&'static str, u32); 4] = [
+        ("off", 3),
+        ("transient=0.01,seed=7", 3),
+        ("transient=0.05,seed=7", 3),
+        ("transient=0.5,seed=7", 0), // retries disabled: must fail
+    ];
+    let mut rows = Vec::new();
+    for (profile, retries) in sweep {
+        let row = run_profile(&bytes, profile, retries)?;
+        println!(
+            "{:<34} {:>7} {:>8} {:>7} {:>8} {:>8.1}%",
+            row.profile,
+            row.retries,
+            row.records,
+            row.faults,
+            row.retried,
+            row.overhead() * 100.0,
+        );
+        rows.push(row);
+    }
+
+    // Gate 1: the fault-free baseline is exactly clean.
+    ensure!(
+        rows[0].records == RECORDS && rows[0].faults == 0 && rows[0].retried == 0,
+        "baseline must stream every record with zero faults/retries"
+    );
+    // Gate 2: at 1% transients, retry+hedging delivers the full epoch
+    // with zero trainer-visible errors and holds the goodput overhead
+    // (re-fetched attempts per delivered read) within 10% of fault-free.
+    ensure!(
+        rows[1].records == RECORDS && rows[1].error.is_empty(),
+        "1% transients with retries must complete: {}",
+        rows[1].error
+    );
+    ensure!(rows[1].faults > 0, "1% profile injected nothing — seed drift?");
+    ensure!(
+        rows[1].overhead() <= 0.10,
+        "1% transients must stay within 10% of fault-free goodput, got {:.1}%",
+        rows[1].overhead() * 100.0
+    );
+    // Gate 3: 5% transients still complete under the default budget.
+    ensure!(
+        rows[2].records == RECORDS && rows[2].error.is_empty(),
+        "5% transients with retries must complete: {}",
+        rows[2].error
+    );
+    // Gate 4: retries off fails — and replays the identical failure,
+    // fault for fault, when re-run with the same seed.
+    ensure!(
+        !rows[3].error.is_empty() && rows[3].records < RECORDS,
+        "50% transients with no retries must fail the stream"
+    );
+    let replay = run_profile(&bytes, rows[3].profile, 0)?;
+    ensure!(
+        replay.error == rows[3].error && replay.faults == rows[3].faults,
+        "same seed must reproduce the same failure: {:?} vs {:?}",
+        replay.error,
+        rows[3].error
+    );
+    // Gate 5: the analytic model agrees at paper scale — 1% transients
+    // under retry cost a storage-bound run under 10% end to end.
+    let base = Scenario { storage: "s3".into(), net_conns: 1, ..Default::default() };
+    let faulty = Scenario { fault_rate: 0.01, ..base.clone() };
+    let (t0, t1) = (analytic_throughput(&base), analytic_throughput(&faulty));
+    ensure!(
+        t1 >= t0 * 0.9,
+        "analytic: 1% faults must hold within 10% of fault-free ({t1:.0} vs {t0:.0})"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("chaos")),
+        ("records", Json::num(RECORDS as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("analytic_fault_free_ips", Json::num(t0)),
+        ("analytic_faulty_ips", Json::num(t1)),
+        ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_bench_gates_hold_without_io() {
+        // The same gates `dpp bench chaos` enforces, minus the file.
+        let json = run(None).unwrap();
+        let dump = json.dump();
+        assert!(dump.contains("\"bench\":\"chaos\""));
+        for profile in ["off", "transient=0.01", "transient=0.5"] {
+            assert!(dump.contains(profile), "{profile} row missing");
+        }
+    }
+}

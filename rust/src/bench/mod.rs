@@ -3,6 +3,7 @@
 //! shared by `cargo bench` targets and `dpp reproduce`.
 
 pub mod alloc;
+pub mod chaos;
 pub mod decode;
 pub mod figures;
 pub mod harness;

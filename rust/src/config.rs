@@ -261,6 +261,25 @@ pub struct RunConfig {
     /// (`--trace-sample-rate`, in (0, 1]); implemented as a keep-every-
     /// Nth stride so sampled histograms stay unbiased per stage.
     pub trace_sample_rate: f64,
+    /// Seeded fault injection on the storage layer (`--faults off|SPEC`
+    /// where SPEC is `k=v,...` over `transient`, `throttle`, `burst`,
+    /// `straggler`, `slowdown`, `corrupt`, `seed` — see
+    /// `storage::FaultProfile::parse`).  `off` (default) injects nothing.
+    pub faults: String,
+    /// Graceful-degradation budget: max fraction of expected samples that
+    /// may be quarantined (skipped) before the run fails loudly.  0
+    /// (default) = zero tolerance: the first undecodable sample errors.
+    pub max_skip_rate: f64,
+    /// Extra read attempts after the first on transient storage errors
+    /// (`--retries N`; 0 disables retrying — the pre-fault behavior).
+    pub retries: u32,
+    /// Hedged duplicate range-GETs for straggler parts in the prefetcher
+    /// (`--hedge on|off`): duplicate a part once its latency passes the
+    /// trailing p95, first answer wins.
+    pub hedge: bool,
+    /// Per-request retry budget, seconds (`--retry-deadline`): a request
+    /// failing for this long stops retrying even with attempts left.
+    pub retry_deadline: f64,
 }
 
 impl Default for RunConfig {
@@ -299,6 +318,11 @@ impl Default for RunConfig {
             slab_pool: SlabPoolCfg::Auto,
             trace: "off".into(),
             trace_sample_rate: 1.0,
+            faults: "off".into(),
+            max_skip_rate: 0.0,
+            retries: 3,
+            hedge: true,
+            retry_deadline: 30.0,
         }
     }
 }
@@ -355,6 +379,11 @@ impl RunConfig {
             "slab-pool",
             "trace",
             "trace-sample-rate",
+            "faults",
+            "max-skip-rate",
+            "retries",
+            "hedge",
+            "retry-deadline",
             "ideal",
             "no-train",
             // Consumed by the `run` driver (report export), not RunConfig.
@@ -406,6 +435,16 @@ impl RunConfig {
                 "trace-sample-rate must be in (0, 1], got {}",
                 self.trace_sample_rate
             );
+        }
+        // Parse (and thereby validate) the fault spec; the storage
+        // builder re-parses the same string, so a bad spec fails here,
+        // before any data is touched.
+        crate::storage::FaultProfile::parse(&self.faults)?;
+        if !(0.0..1.0).contains(&self.max_skip_rate) {
+            bail!("max-skip-rate must be in [0, 1), got {}", self.max_skip_rate);
+        }
+        if !(self.retry_deadline > 0.0) {
+            bail!("retry-deadline must be > 0 seconds, got {}", self.retry_deadline);
         }
         Ok(())
     }
@@ -515,6 +554,19 @@ impl RunConfig {
         }
         self.trace_sample_rate =
             num(args, "trace-sample-rate", self.trace_sample_rate)?;
+        if let Some(v) = args.get("faults") {
+            self.faults = v.to_string();
+        }
+        self.max_skip_rate = num(args, "max-skip-rate", self.max_skip_rate)?;
+        self.retries = num(args, "retries", self.retries)?;
+        if let Some(v) = args.get("hedge") {
+            self.hedge = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                _ => bail!("hedge must be on|off, got {v}"),
+            };
+        }
+        self.retry_deadline = num(args, "retry-deadline", self.retry_deadline)?;
         if args.has_flag("ideal") {
             self.ideal = true;
         }
@@ -554,6 +606,11 @@ impl RunConfig {
             ("slab_pool", Json::str(&self.slab_pool.name())),
             ("trace", Json::str(&self.trace)),
             ("trace_sample_rate", Json::num(self.trace_sample_rate)),
+            ("faults", Json::str(&self.faults)),
+            ("max_skip_rate", Json::num(self.max_skip_rate)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedge", Json::Bool(self.hedge)),
+            ("retry_deadline", Json::num(self.retry_deadline)),
         ])
     }
 }
@@ -917,6 +974,55 @@ mod tests {
         let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
         assert_eq!(parsed.req("trace").as_str(), Some("/tmp/spans.json"));
         assert_eq!(parsed.req("trace_sample_rate").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn fault_flags_parse_validate_and_roundtrip() {
+        // Defaults: no injection, zero skip tolerance, retry+hedge armed
+        // (they only engage when something actually fails).
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.faults, "off");
+        assert_eq!(cfg.max_skip_rate, 0.0);
+        assert_eq!(cfg.retries, 3);
+        assert!(cfg.hedge);
+        assert_eq!(cfg.retry_deadline, 30.0);
+        assert!(cfg.validate().is_ok());
+        // CLI → config.
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "run --faults transient=0.01,seed=7 --max-skip-rate 0.02 \
+             --retries 5 --hedge off --retry-deadline 10"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.faults, "transient=0.01,seed=7");
+        assert_eq!(cfg.max_skip_rate, 0.02);
+        assert_eq!(cfg.retries, 5);
+        assert!(!cfg.hedge);
+        assert_eq!(cfg.retry_deadline, 10.0);
+        // Bad values fail loudly at apply/validate time.
+        let mut bad = RunConfig::default();
+        let args =
+            Args::parse("run --faults transient=2".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err(), "rate > 1 accepted");
+        let mut bad = RunConfig::default();
+        let args = Args::parse("run --faults gremlins=1".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err(), "unknown fault key accepted");
+        let mut bad = RunConfig::default();
+        let args = Args::parse("run --hedge maybe".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
+        let bad = RunConfig { max_skip_rate: 1.0, ..RunConfig::default() };
+        assert!(bad.validate().is_err(), "skip rate 1.0 would allow dropping everything");
+        let bad = RunConfig { retry_deadline: 0.0, ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        // JSON round-trip carries all five fields.
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("faults").as_str(), Some("transient=0.01,seed=7"));
+        assert_eq!(parsed.req("max_skip_rate").as_f64(), Some(0.02));
+        assert_eq!(parsed.req("retries").as_usize(), Some(5));
+        assert_eq!(parsed.req("hedge").as_bool(), Some(false));
+        assert_eq!(parsed.req("retry_deadline").as_f64(), Some(10.0));
     }
 
     #[test]

@@ -6,15 +6,18 @@ use crate::metrics::trace::{self, Stage, StallAttribution, Tracer};
 use crate::metrics::{BusyClock, Counters, EpochClock, RunReport, ScaleHist, UtilSampler};
 use crate::ops::sample_aug_params;
 use crate::pipeline::channel::{bounded_traced, Receiver};
-use crate::pipeline::exec::{self, ExecConfig};
+use crate::pipeline::exec::{self, ExecConfig, PanicGuard};
 use crate::pipeline::prep_cache::PrepCache;
+use crate::pipeline::quarantine::Quarantine;
 use crate::pipeline::shuffle::ShuffleBuffer;
-use crate::pipeline::source::{list_shards, stream_shards_prefetched_traced, WorkItem};
+use crate::pipeline::source::{list_shards, stream_shards_resilient, WorkItem};
 use crate::pipeline::{collate, Batch, Payload, Sample, StageCtx, StageScratch};
 use crate::runtime::{lit_f32, Engine};
+use crate::storage::prefetch::Resilience;
+use crate::storage::retry::with_retry;
 use crate::storage::{
-    CachedStore, DirStore, MemStore, NetProfile, PrefetchPlan, RemoteStore, Storage,
-    StorageProfile, ThrottledStore,
+    CachedStore, DirStore, FaultProfile, FaultyStore, MemStore, NetProfile, PrefetchPlan,
+    RemoteStore, RetryPolicy, RetryStats, Storage, StorageProfile, ThrottledStore,
 };
 use crate::trainer::TrainSession;
 use crate::util::rng::Rng;
@@ -56,6 +59,9 @@ pub fn prepare_data(dir: &std::path::Path, gen: &GenConfig, n_shards: usize) -> 
 struct StorageStack {
     store: Arc<dyn Storage>,
     remote: Option<Arc<RemoteStore<DirStore>>>,
+    /// Fault-injection layer (when `--faults` is active), kept concrete
+    /// so the run report can read its injection counters.
+    faults: Option<Arc<FaultyStore<Arc<dyn Storage>>>>,
 }
 
 fn build_storage(cfg: &RunConfig) -> Result<StorageStack> {
@@ -77,24 +83,50 @@ fn build_storage(cfg: &RunConfig) -> Result<StorageStack> {
             }
         }
     };
+    // The fault layer wraps the tier itself, *beneath* the cache: a
+    // cache hit never touched the (faulty) device, so it must not draw
+    // a fault — exactly like a real SSD cache in front of flaky S3.
+    let mut faults = None;
+    let store: Arc<dyn Storage> = if let Some(profile) = FaultProfile::parse(&cfg.faults)? {
+        let f = Arc::new(FaultyStore::new(store, profile));
+        faults = Some(f.clone());
+        f
+    } else {
+        store
+    };
     let store = if cfg.cache_mb > 0 {
         Arc::new(CachedStore::new(store, cfg.cache_mb << 20)) as Arc<dyn Storage>
     } else {
         store
     };
-    Ok(StorageStack { store, remote })
+    Ok(StorageStack { store, remote, faults })
 }
 
 /// Run the full pipeline per the config; returns the run report.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     cfg.validate()?;
-    let StorageStack { store: storage, remote } = build_storage(cfg)?;
-    let meta = dataset::parse_metadata(std::str::from_utf8(
-        &storage.read(dataset::META_FILE)?,
-    )?)?;
+    let StorageStack { store: storage, remote, faults } = build_storage(cfg)?;
+    // Fault tolerance: one retry policy for every storage read — the
+    // metadata read below included, since it goes through the (possibly
+    // faulty) tier too — and one quarantine bounding how many
+    // undecodable samples the whole run may skip before failing loudly.
+    let retry_policy = if cfg.retries > 0 {
+        RetryPolicy::with_retries(cfg.retries, cfg.retry_deadline, cfg.seed)
+    } else {
+        RetryPolicy::none()
+    };
+    let retry_stats = Arc::new(RetryStats::default());
+    let meta = dataset::parse_metadata(std::str::from_utf8(&with_retry(
+        &retry_policy,
+        &retry_stats,
+        0,
+        || storage.read(dataset::META_FILE),
+    )?)?)?;
     ensure!(!meta.is_empty(), "empty dataset at {:?}", cfg.data_dir);
 
     let counters = Arc::new(Counters::default());
+    let quarantine =
+        Arc::new(Quarantine::new(cfg.max_skip_rate, meta.len() as u64 * cfg.epochs as u64));
     // The elastic executor owns the pool geometry; a live-denominator
     // clock keeps cpu_util honest while the pool resizes.
     let exec_cfg = ExecConfig::from_run_config(cfg);
@@ -171,6 +203,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let meta = meta.clone();
         let counters = counters.clone();
         let tracer = tracer.clone();
+        let res = Resilience::new(retry_policy, cfg.hedge, retry_stats.clone());
+        let quarantine = quarantine.clone();
         threads.push(std::thread::Builder::new().name("source".into()).spawn(move || {
             'epochs: for epoch in 0..cfg.epochs as u64 {
                 match cfg.method {
@@ -217,7 +251,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                         } else {
                             PrefetchPlan::serial(cfg.record_chunk)
                         };
-                        stream_shards_prefetched_traced(storage.clone(), &shards, cfg.record_chunk, plan, tracer.clone(), |rec| {
+                        stream_shards_resilient(storage.clone(), &shards, cfg.record_chunk, plan, tracer.clone(), res.clone(), |id, e| {
+                            // A record whose payload arrived corrupt
+                            // (bit flip survived the fetch) is skipped
+                            // under the quarantine budget instead of
+                            // wedging the shard stream.
+                            quarantine.admit(format!("record {id} (epoch {epoch})"), e)
+                        }, |rec| {
                             // Counted at the actual storage read (the
                             // record just left the shard stream) — the
                             // raw path's counterpart lives at the worker
@@ -267,6 +307,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let pool = {
         let storage = storage.clone();
         let counters = counters.clone();
+        let retry_stats = retry_stats.clone();
+        let quarantine = quarantine.clone();
         // One shared clock: the stage closure tracks busy time on it,
         // the executor's controller resizes its live denominator.
         let stage_clock = cpu_clock.clone();
@@ -321,7 +363,19 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             let bytes: &[u8] = match item {
                 WorkItem::RawRef { path, .. } => {
                     let span = ctx.tracer.start();
-                    raw_buf = storage.read(&path)?;
+                    // Transient storage faults retry with backoff under
+                    // the per-request deadline; a read that exhausts its
+                    // attempts is quarantined (skip-budget permitting)
+                    // rather than killing the worker.
+                    raw_buf = match with_retry(&retry_policy, &retry_stats, id, || {
+                        storage.read(&path)
+                    }) {
+                        Ok(buf) => buf,
+                        Err(e) => {
+                            quarantine.admit(format!("raw {path}"), e)?;
+                            return Ok(None);
+                        }
+                    };
                     ctx.tracer.record(Stage::Fetch, id, span);
                     // `images_read` counts at the actual storage read on
                     // both paths: here for raw (a prep-cache hit above
@@ -339,19 +393,39 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             };
             // This probe is a few-byte header parse; run_stage re-probes
             // internally — the accepted price of keeping the chain at
-            // two public entry points (no pre-probed variant).
-            let (c, h, wid, _q) = crate::codec::probe(bytes)?;
-            ensure!(c == 3, "expected RGB, got {c} channels");
+            // two public entry points (no pre-probed variant).  An
+            // undecodable payload (corrupt header or pixel data) is
+            // quarantined under the skip budget, not a worker error.
+            let probed = crate::codec::probe(bytes).and_then(|(c, h, wid, _q)| {
+                ensure!(c == 3, "expected RGB, got {c} channels");
+                Ok((h, wid))
+            });
+            let (h, wid) = match probed {
+                Ok(dims) => dims,
+                Err(e) => {
+                    quarantine.admit(format!("sample {id} (epoch {epoch})"), e)?;
+                    return Ok(None);
+                }
+            };
             let aug = sample_aug_params(&mut rng, h as u32, wid as u32);
-            let (payload, dstats) = if let Some(pool) = &slab {
+            let staged = if let Some(pool) = &slab {
                 // Zero-copy miss: decode into worker scratch, augment
-                // into the batch slot — no per-sample allocation.
+                // into the batch slot — no per-sample allocation.  An
+                // error drops `slice` unfilled; its slab recycles once
+                // the remaining slices drop.
                 let mut slice = pool.slice();
-                let dstats = stage_clock
-                    .track(|| ctx.run_stage_into(bytes, id, aug, scratch, slice.as_mut_slice()))?;
-                (Payload::Slot(slice), dstats)
+                stage_clock
+                    .track(|| ctx.run_stage_into(bytes, id, aug, scratch, slice.as_mut_slice()))
+                    .map(|dstats| (Payload::Slot(slice), dstats))
             } else {
-                stage_clock.track(|| ctx.run_stage(bytes, id, aug))?
+                stage_clock.track(|| ctx.run_stage(bytes, id, aug))
+            };
+            let (payload, dstats) = match staged {
+                Ok(out) => out,
+                Err(e) => {
+                    quarantine.admit(format!("sample {id} (epoch {epoch})"), e)?;
+                    return Ok(None);
+                }
             };
             counters.idct_blocks(dstats.blocks_idct);
             counters.idct_blocks_skipped(dstats.blocks_skipped);
@@ -370,13 +444,24 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             epoch_clock.mark(epoch as usize);
             Ok(Some(Sample { id, label, payload }))
         };
-        exec::spawn_stateful(
+        // A panicking transform poisons just that item: the worker's
+        // scratch is rebuilt in place and the panic is charged to the
+        // same skip budget as any other undecodable sample.
+        let guard: PanicGuard = {
+            let quarantine = quarantine.clone();
+            Arc::new(move |msg: String| {
+                quarantine
+                    .admit(format!("worker panic: {msg}"), anyhow::anyhow!("worker panicked: {msg}"))
+            })
+        };
+        exec::spawn_guarded(
             exec_cfg,
             work_rx,
             sample_tx,
             cpu_clock.clone(),
             StageScratch::new,
             stage,
+            Some(guard),
         )?
     };
 
@@ -474,10 +559,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(std::time::Duration::from_secs_f64(period));
                 if sample_util {
+                    // poison: the sampler owns both locks' panic surface —
+                    // only Vec pushes and float math run under them (here
+                    // and in the drains below), neither can panic.
                     util.lock().unwrap().sample(&cpu_clock, &dev_clock, storage.stats().0);
                 }
                 if trace_on {
                     let t = t0.elapsed().as_secs_f64();
+                    // poison: see above — Vec pushes only.
                     let mut s = series.lock().unwrap();
                     s[0].push((t, probes.0.stats().len as f64));
                     s[1].push((t, probes.1.stats().len as f64));
@@ -518,6 +607,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let snap = counters.snapshot();
     let (io_bytes, _) = storage.stats();
     let trained_images = device_out.steps * cfg.batch_size as u64;
+    // poison: see the sampler thread — Vec ops only under this lock.
     let util_trace = std::mem::take(&mut util.lock().unwrap().samples);
 
     // Wall-clock stall attribution (DS-Analyzer vocabulary): the
@@ -536,6 +626,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let dump = tracer.drain();
     let stage_hists = trace::stage_hists(&dump);
     if cfg.trace != "off" {
+        // poison: see the sampler thread — Vec ops only under this lock.
         let qs = std::mem::take(&mut *queue_series.lock().unwrap());
         let counter_tracks: Vec<(String, Vec<(f64, f64)>)> = ["work", "sample", "batch"]
             .iter()
@@ -580,6 +671,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         stall_fetch: stall.fetch,
         stall_prep: stall.prep,
         stall_compute: stall.compute,
+        retries: retry_stats.snapshot().0,
+        hedges_won: retry_stats.snapshot().1,
+        faults_injected: faults.as_ref().map(|f| f.counts().total()).unwrap_or(0),
+        samples_skipped: quarantine.count(),
         stage_hists,
     })
 }

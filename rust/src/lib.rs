@@ -64,6 +64,22 @@ SUBCOMMANDS
              [--trace-sample-rate R] (default 1.0: keep every
               1/R-strided span per (thread, stage); lower it on long
               runs to bound ring memory without losing coverage)
+             [--faults off|SPEC] (default off: seeded fault injection on
+              the storage tier — SPEC is key=value pairs `transient=P,
+              throttle=P,burst=N,straggler=P,slowdown=X,corrupt=P,
+              seed=S`; same seed replays the same faults, so a failing
+              chaos run is a reproducible bug report)
+             [--retries N] (default 3: per-read retry budget with
+              exponential backoff + decorrelated jitter; 0 disables)
+             [--retry-deadline S] (default 30: per-request wall-clock
+              deadline across all attempts)
+             [--hedge on|off] (default on: re-issue straggling prefetch
+              parts through the window; first response wins)
+             [--max-skip-rate R] (default 0: graceful degradation —
+              quarantine up to R x expected samples that are
+              undecodable (bit flips, exhausted retries, worker
+              panics) instead of failing; one skip past the budget
+              fails the run loudly, naming what was quarantined)
              [--queue-depth Q] [--time-scale T] [--lr R] [--seed S]
              [--artifacts DIR] [--report-json PATH]
              [--steps N] [--batch B] [--ideal] [--no-train]
@@ -73,6 +89,9 @@ SUBCOMMANDS
              [--fused-decode on|off] [--decode-scale 1|2|4|8]
              [--slab-pool on|off] (model the zero-copy engine: the
               transform share thins by the collate-copy fraction)
+             [--fault-rate P] (model a transient-fault rate: the
+              storage ceiling thins by (1-P) — expected attempts per
+              delivered read are 1/(1-P))
              [--trace-json PATH] (write the DES's synthetic span
               timeline in the same Chrome trace format as `run --trace`)
   reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)
@@ -90,15 +109,21 @@ SUBCOMMANDS
              microbench: ns/sample untraced vs full-rate traced; fails
              if tracing costs more than the committed 3% limit, plus
              exact span/drop accounting gates)
+  bench      chaos [--out BENCH_chaos.json] (fault-injection smoke: a
+             record shard streamed through the seeded fault layer under
+             retry+hedging at a sweep of transient rates; gates that 1%
+             faults complete with <=10% goodput overhead and that a
+             retries-off failure replays identically per seed — all
+             counter-based, no wall clock)
   trace      <run.json> (pretty-print the per-stage latency histograms
              and the fetch/prep/compute stall attribution from a report
              saved with `run --report-json`)
   audit      (source-scanning invariant linter: SAFETY comments on
              unsafe blocks, ordering justifications on relaxed atomics,
-             flag parity across CLI_HELP/DESIGN.md, run-report JSON
-             field parity; prints file:line findings, exits nonzero on
-             any — the same rules `cargo test` enforces, CLI-shaped
-             for CI logs)
+             poison justifications on mutex lock-unwraps, flag parity
+             across CLI_HELP/DESIGN.md, run-report JSON field parity;
+             prints file:line findings, exits nonzero on any — the same
+             rules `cargo test` enforces, CLI-shaped for CI logs)
   inspect    [--artifacts DIR]
 "#;
 

@@ -154,8 +154,13 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::trace::run(Some(&out))?;
             Ok(())
         }
+        Some("chaos") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_chaos.json"));
+            dpp::bench::chaos::run(Some(&out))?;
+            Ok(())
+        }
         other => bail!(
-            "bench target must be `decode`, `workers`, `alloc`, or `trace-overhead`, got {other:?}"
+            "bench target must be `decode`, `workers`, `alloc`, `trace-overhead`, or `chaos`, got {other:?}"
         ),
     }
 }

@@ -18,8 +18,10 @@ use std::time::Instant;
 
 /// Version stamp of `RunReport::to_json`'s shape.  Bump when a field is
 /// added/renamed/removed so saved reports are self-describing (`dpp
-/// trace` prints it).  v1 was the unstamped pre-tracing shape.
-pub const REPORT_SCHEMA_VERSION: u64 = 2;
+/// trace` prints it).  v1 was the unstamped pre-tracing shape; v2 added
+/// span histograms and stall attribution; v3 added the fault-tolerance
+/// counters (retries, hedges, injected faults, quarantined samples).
+pub const REPORT_SCHEMA_VERSION: u64 = 3;
 
 /// Pipeline-wide event counters (all monotonic).
 #[derive(Debug, Default)]
@@ -233,6 +235,8 @@ impl BusyClock {
     /// Record a pool resize (switches the clock into live mode): offered
     /// capacity accrues at the old size up to now, at `n` afterwards.
     pub fn set_workers(&self, n: usize) {
+        // poison: every holder of `cap` (here through `utilization`)
+        // only does float/int arithmetic under the lock — no panic path.
         let mut c = self.cap.lock().unwrap();
         let now = Instant::now();
         c.acc_secs += c.cur as f64 * now.duration_since(c.last).as_secs_f64();
@@ -243,6 +247,7 @@ impl BusyClock {
 
     /// Pool size right now (== `workers` unless resized).
     pub fn current_workers(&self) -> usize {
+        // poison: see `set_workers`.
         self.cap.lock().unwrap().cur
     }
 
@@ -250,6 +255,7 @@ impl BusyClock {
     /// the utilization denominator in live mode, and exactly
     /// `workers * elapsed` for a never-resized clock.
     pub fn capacity_secs(&self) -> f64 {
+        // poison: see `set_workers`.
         let c = self.cap.lock().unwrap();
         c.acc_secs + c.cur as f64 * c.last.elapsed().as_secs_f64()
     }
@@ -259,6 +265,7 @@ impl BusyClock {
     /// (`elapsed` is ignored — the clock carries its own denominator).
     pub fn utilization(&self, elapsed: f64) -> f64 {
         let (live, cap) = {
+            // poison: see `set_workers`.
             let c = self.cap.lock().unwrap();
             (c.live, c.acc_secs + c.cur as f64 * c.last.elapsed().as_secs_f64())
         };
@@ -292,6 +299,8 @@ impl EpochClock {
 
     pub fn mark(&self, epoch: usize) {
         let t = self.t0.elapsed().as_secs_f64();
+        // poison: Vec resize/index and float max only under this lock
+        // (here and in `epoch_secs`).
         let mut marks = self.marks.lock().unwrap();
         if marks.len() <= epoch {
             marks.resize(epoch + 1, 0.0);
@@ -302,6 +311,7 @@ impl EpochClock {
     /// Duration of each epoch: the gap between consecutive last-sample
     /// times (epoch 0 is measured from the clock's creation).
     pub fn epoch_secs(&self) -> Vec<f64> {
+        // poison: see `mark`.
         let marks = self.marks.lock().unwrap();
         marks
             .iter()
@@ -448,6 +458,16 @@ pub struct RunReport {
     pub stall_fetch: f64,
     pub stall_prep: f64,
     pub stall_compute: f64,
+    /// Storage reads re-attempted after a transient failure (raw-path
+    /// inline retries + prefetcher part re-issues).
+    pub retries: u64,
+    /// Hedged duplicate range-GETs that beat the original request.
+    pub hedges_won: u64,
+    /// Faults the `--faults` layer injected (0 when faults are off).
+    pub faults_injected: u64,
+    /// Undecodable samples quarantined under `--max-skip-rate` instead
+    /// of failing the run.
+    pub samples_skipped: u64,
     /// Per-stage latency histograms from the span tracer, in pipeline
     /// order (empty when the run was not traced).
     pub stage_hists: Vec<(String, LogHist)>,
@@ -510,6 +530,10 @@ impl RunReport {
             ("stall_fetch", Json::num(self.stall_fetch)),
             ("stall_prep", Json::num(self.stall_prep)),
             ("stall_compute", Json::num(self.stall_compute)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedges_won", Json::num(self.hedges_won as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("samples_skipped", Json::num(self.samples_skipped as f64)),
             (
                 "stage_hists",
                 Json::arr(self.stage_hists.iter().map(|(stage, h)| {
@@ -624,6 +648,15 @@ impl RunReport {
                 self.prep_cache_hit_rate * 100.0,
                 self.decode_skipped,
                 format_epochs(&self.epoch_secs)
+            );
+        }
+        if self.retries + self.hedges_won + self.faults_injected + self.samples_skipped > 0 {
+            println!(
+                "  fault plane: {} faults injected, {} retries, {} hedges won, {} samples quarantined",
+                self.faults_injected,
+                self.retries,
+                self.hedges_won,
+                self.samples_skipped,
             );
         }
     }
@@ -836,14 +869,22 @@ mod tests {
             stall_fetch: 0.3,
             stall_prep: 0.2,
             stall_compute: 0.5,
+            retries: 28,
+            hedges_won: 29,
+            faults_injected: 30,
+            samples_skipped: 31,
             stage_hists: vec![("decode".to_string(), h)],
         };
         let j = Json::parse(&r.to_json().dump()).unwrap();
         let keys = j.as_obj().unwrap();
-        // 33 struct fields + schema_version.
-        assert_eq!(keys.len(), 34, "RunReport field not serialized: {:?}", keys.keys());
+        // 37 struct fields + schema_version.
+        assert_eq!(keys.len(), 38, "RunReport field not serialized: {:?}", keys.keys());
         assert_eq!(j.req("schema_version").as_usize(), Some(REPORT_SCHEMA_VERSION as usize));
         // Spot-check the distinctive values land under the right keys.
+        assert_eq!(j.req("retries").as_usize(), Some(28));
+        assert_eq!(j.req("hedges_won").as_usize(), Some(29));
+        assert_eq!(j.req("faults_injected").as_usize(), Some(30));
+        assert_eq!(j.req("samples_skipped").as_usize(), Some(31));
         assert_eq!(j.req("stall_fetch").as_f64(), Some(0.3));
         assert_eq!(j.req("stall_prep").as_f64(), Some(0.2));
         assert_eq!(j.req("stall_compute").as_f64(), Some(0.5));

@@ -56,10 +56,14 @@ pub enum Stage {
     SampleRecvWait,
     BatchSendWait,
     BatchRecvWait,
+    /// Fault recovery: a re-issued (retry) or hedged duplicate read —
+    /// first attempts stay [`Stage::Fetch`], so the trace separates
+    /// recovery work from steady-state fetching.
+    Retry,
 }
 
 impl Stage {
-    pub const COUNT: usize = 13;
+    pub const COUNT: usize = 14;
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::Fetch,
         Stage::Decode,
@@ -74,6 +78,7 @@ impl Stage {
         Stage::SampleRecvWait,
         Stage::BatchSendWait,
         Stage::BatchRecvWait,
+        Stage::Retry,
     ];
 
     pub fn name(self) -> &'static str {
@@ -91,6 +96,7 @@ impl Stage {
             Stage::SampleRecvWait => "sample.recv_wait",
             Stage::BatchSendWait => "batch.send_wait",
             Stage::BatchRecvWait => "batch.recv_wait",
+            Stage::Retry => "retry",
         }
     }
 
@@ -243,6 +249,8 @@ impl Tracer {
                 let label =
                     std::thread::current().name().unwrap_or("main").to_string();
                 let ring = Arc::new(Ring::new(label, inner.ring_cap));
+                // poison: registry of ring handles — only Vec push/iter
+                // run under this lock (here and in `drain`).
                 inner.rings.lock().unwrap().push(ring.clone());
                 tl.key = key;
                 tl.ring = Some(ring);
@@ -266,6 +274,7 @@ impl Tracer {
             Some(i) => i,
             None => return dump,
         };
+        // poison: see `record` — Vec ops only under the registry lock.
         for ring in inner.rings.lock().unwrap().iter() {
             // ordering: Acquire — pairs with `push`'s Release cursor
             // store, so every slot word of the spans this count admits

@@ -60,6 +60,9 @@ struct Inner<T> {
 
 impl<T> Inner<T> {
     fn stats(&self) -> ChannelStats {
+        // poison: every holder of `st` (stats, send/recv, the drop
+        // bookkeeping) runs only queue ops and counter arithmetic under
+        // the lock; a worker panic happens in user code *outside* it.
         let st = self.st.lock().unwrap();
         // Read the clock under the lock: every recorded start offset was
         // taken under this lock at an earlier instant, so `now` bounds
@@ -161,6 +164,7 @@ pub fn bounded_traced<T>(
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
+        // poison: see `stats` — counter bump only under the lock.
         self.0.st.lock().unwrap().senders += 1;
         Sender(self.0.clone())
     }
@@ -168,6 +172,7 @@ impl<T> Clone for Sender<T> {
 
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
+        // poison: see `stats` — counter bump only under the lock.
         let mut st = self.0.st.lock().unwrap();
         st.senders -= 1;
         if st.senders == 0 {
@@ -178,6 +183,7 @@ impl<T> Drop for Sender<T> {
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
+        // poison: see `stats` — counter bump only under the lock.
         self.0.st.lock().unwrap().receivers += 1;
         Receiver(self.0.clone())
     }
@@ -185,6 +191,7 @@ impl<T> Clone for Receiver<T> {
 
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
+        // poison: see `stats` — counter bump only under the lock.
         let mut st = self.0.st.lock().unwrap();
         st.receivers -= 1;
         if st.receivers == 0 {
@@ -196,6 +203,7 @@ impl<T> Drop for Receiver<T> {
 impl<T> Sender<T> {
     /// Blocking send; returns `Err(Closed(v))` if all receivers dropped.
     pub fn send(&self, v: T) -> Result<(), Closed<T>> {
+        // poison: see `stats` — queue/bookkeeping ops only.
         let mut st = self.0.st.lock().unwrap();
         // (wall-clock anchor, start offset) of an in-progress wait; the
         // offset is registered in the state so `stats()` can see the
@@ -257,6 +265,7 @@ impl<T> Receiver<T> {
     /// Blocking receive; `None` when the queue is empty and all senders
     /// have dropped.
     pub fn recv(&self) -> Option<T> {
+        // poison: see `stats` — queue/bookkeeping ops only.
         let mut st = self.0.st.lock().unwrap();
         let mut waited: Option<(Instant, u128)> = None;
         let unregister = |st: &mut State<T>, waited: &Option<(Instant, u128)>| {
@@ -312,6 +321,7 @@ impl<T> Receiver<T> {
     }
 
     pub fn len(&self) -> usize {
+        // poison: see `stats` — queue length read only.
         self.0.st.lock().unwrap().q.len()
     }
 

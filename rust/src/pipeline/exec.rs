@@ -158,6 +158,9 @@ impl Gate {
 
     /// Block until worker `w` is active; `false` means shut down instead.
     pub fn wait_active(&self, w: usize) -> bool {
+        // poison: every Gate holder (through `sleep`) only reads/writes
+        // two plain fields under the lock — no panic can occur there, so
+        // poisoning is unreachable.
         let mut st = self.st.lock().unwrap();
         loop {
             if st.shutdown {
@@ -175,20 +178,24 @@ impl Gate {
     /// to release its per-worker scratch *before* parking on
     /// [`wait_active`] — parked capacity holds no memory.
     pub fn is_active(&self, w: usize) -> bool {
+        // poison: see `wait_active`.
         let st = self.st.lock().unwrap();
         !st.shutdown && w < st.target
     }
 
     pub fn set_target(&self, n: usize) {
+        // poison: see `wait_active`.
         self.st.lock().unwrap().target = n;
         self.cv.notify_all();
     }
 
     pub fn target(&self) -> usize {
+        // poison: see `wait_active`.
         self.st.lock().unwrap().target
     }
 
     pub fn shutdown(&self) {
+        // poison: see `wait_active`.
         self.st.lock().unwrap().shutdown = true;
         self.cv.notify_all();
     }
@@ -196,6 +203,7 @@ impl Gate {
     /// Controller sleep: returns `true` if shutdown arrived meanwhile.
     #[cfg(not(loom))]
     pub fn sleep(&self, secs: f64) -> bool {
+        // poison: see `wait_active`.
         let mut st = self.st.lock().unwrap();
         let deadline = Instant::now() + std::time::Duration::from_secs_f64(secs);
         while !st.shutdown {
@@ -217,6 +225,7 @@ impl Gate {
     /// without depending on wall-clock progress.
     #[cfg(loom)]
     pub fn sleep(&self, _secs: f64) -> bool {
+        // poison: see `wait_active`.
         let st = self.st.lock().unwrap();
         if st.shutdown {
             return true;
@@ -282,6 +291,49 @@ where
     G: Fn() -> S + Send + Sync + 'static,
     F: Fn(&mut S, I) -> Result<Option<O>> + Send + Sync + 'static,
 {
+    spawn_guarded(cfg, work_rx, out_tx, clock, init, stage, None)
+}
+
+/// Decides what a contained worker panic does to the pool: `Ok(())`
+/// swallows it (the item is poisoned and dropped, the worker keeps
+/// serving — graceful degradation under a skip budget), `Err` ends the
+/// pool with that error.  `None` means every panic is fatal (the
+/// pre-fault-tolerance behavior, minus the lost thread).
+pub type PanicGuard = Arc<dyn Fn(String) -> Result<()> + Send + Sync>;
+
+/// Best-effort text of a panic payload for error messages.
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// [`spawn_stateful`] with panic containment: each stage call runs under
+/// `catch_unwind`, so a panicking transform poisons *that item* instead
+/// of killing its worker thread.  The worker's scratch is dropped (the
+/// panic may have left it mid-mutation) and rebuilt on the next item —
+/// the in-place "respawn".  `guard` arbitrates whether the epoch
+/// continues; see [`PanicGuard`].
+pub fn spawn_guarded<I, O, S, G, F>(
+    cfg: ExecConfig,
+    work_rx: Receiver<I>,
+    out_tx: Sender<O>,
+    clock: Arc<BusyClock>,
+    init: G,
+    stage: F,
+    guard: Option<PanicGuard>,
+) -> Result<ElasticPool>
+where
+    I: Send + 'static,
+    O: Send + 'static,
+    S: Send + 'static,
+    G: Fn() -> S + Send + Sync + 'static,
+    F: Fn(&mut S, I) -> Result<Option<O>> + Send + Sync + 'static,
+{
     cfg.validate()?;
     let gate = Gate::new(cfg.workers_initial);
     let timeline = Arc::new(Mutex::new(vec![(0.0f64, cfg.workers_initial)]));
@@ -302,6 +354,7 @@ where
         let out_tx = out_tx.clone();
         let init = init.clone();
         let stage = stage.clone();
+        let guard = guard.clone();
         workers.push(
             thread::Builder::new().name(format!("cpu-{w}")).spawn(move || {
                 let res = (|| -> Result<()> {
@@ -326,9 +379,29 @@ where
                         // AND the source is done: nothing is dropped.
                         let Some(item) = work_rx.recv() else { return Ok(()) };
                         let st = state.get_or_insert_with(|| (*init)());
-                        if let Some(out) = (*stage)(st, item)? {
-                            if out_tx.send(out).is_err() {
-                                return Ok(()); // consumer gone (early stop)
+                        let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || (*stage)(st, item),
+                        ));
+                        match ran {
+                            Ok(out) => {
+                                if let Some(out) = out? {
+                                    if out_tx.send(out).is_err() {
+                                        return Ok(()); // consumer gone (early stop)
+                                    }
+                                }
+                            }
+                            Err(payload) => {
+                                // The item is poisoned; the scratch may be
+                                // mid-mutation — drop it and rebuild on the
+                                // next item (the in-place worker respawn).
+                                state = None;
+                                let msg = panic_text(payload);
+                                match &guard {
+                                    Some(g) => g(msg)?,
+                                    None => anyhow::bail!(
+                                        "cpu worker panicked: {msg} (item poisoned)"
+                                    ),
+                                }
                             }
                         }
                     }
@@ -385,6 +458,7 @@ where
                 if next != cur {
                     gate.set_target(next);
                     clock.set_workers(next);
+                    // poison: Vec push only under the timeline lock.
                     timeline.lock().unwrap().push((t0.elapsed().as_secs_f64(), next));
                 }
                 last_work = work;
@@ -429,6 +503,7 @@ impl ElasticPool {
         if let Some(c) = self.controller {
             let _ = c.join();
         }
+        // poison: Vec take only under the timeline lock.
         let mut timeline = self.timeline.lock().unwrap();
         let report = PoolReport {
             workers_final: self.gate.target(),
@@ -619,6 +694,95 @@ mod tests {
             1,
             "only the one active worker may hold scratch"
         );
+    }
+
+    #[test]
+    fn unguarded_panic_is_contained_but_fatal() {
+        let (work_tx, work_rx) = bounded(8);
+        let (out_tx, out_rx) = bounded::<u32>(8);
+        let clock = BusyClock::new(1);
+        let pool = spawn(ExecConfig::fixed(1), work_rx, out_tx, clock, |x: u32| {
+            if x == 1 {
+                panic!("decode exploded on item {x}");
+            }
+            Ok(Some(x))
+        })
+        .unwrap();
+        work_tx.send(0).unwrap();
+        work_tx.send(1).unwrap();
+        drop(work_tx);
+        assert_eq!(out_rx.recv(), Some(0));
+        assert_eq!(out_rx.recv(), None);
+        let out = pool.join();
+        let msg = format!("{:#}", out.result.unwrap_err());
+        // The panic became a proper error (not a dead thread): its
+        // message survives into the pool outcome.
+        assert!(msg.contains("cpu worker panicked"), "{msg}");
+        assert!(msg.contains("decode exploded on item 1"), "{msg}");
+    }
+
+    #[test]
+    fn guarded_panics_poison_items_and_keep_the_pool_alive() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let poisoned = Arc::new(AtomicUsize::new(0));
+        let (work_tx, work_rx) = bounded(32);
+        let (out_tx, out_rx) = bounded(32);
+        let clock = BusyClock::new(2);
+        let p = poisoned.clone();
+        let guard: PanicGuard = Arc::new(move |_msg| {
+            p.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        let pool = spawn_guarded(
+            ExecConfig::fixed(2),
+            work_rx,
+            out_tx,
+            clock,
+            || 0u32,
+            |_s: &mut u32, x: u32| {
+                if x % 5 == 0 {
+                    panic!("poisoned item {x}");
+                }
+                Ok(Some(x))
+            },
+            Some(guard),
+        )
+        .unwrap();
+        for i in 0..20u32 {
+            work_tx.send(i).unwrap();
+        }
+        drop(work_tx);
+        let mut got: Vec<u32> = std::iter::from_fn(|| out_rx.recv()).collect();
+        got.sort();
+        // Every non-poisoned item made it through — the epoch survived
+        // four panics without losing a worker.
+        assert_eq!(got, (0..20).filter(|i| i % 5 != 0).collect::<Vec<_>>());
+        assert_eq!(poisoned.load(Ordering::SeqCst), 4);
+        assert!(pool.join().result.is_ok());
+    }
+
+    #[test]
+    fn guard_error_ends_the_pool() {
+        let (work_tx, work_rx) = bounded(8);
+        let (out_tx, out_rx) = bounded::<u32>(8);
+        let clock = BusyClock::new(1);
+        let guard: PanicGuard =
+            Arc::new(|msg| anyhow::bail!("skip budget exceeded after: {msg}"));
+        let pool = spawn_guarded(
+            ExecConfig::fixed(1),
+            work_rx,
+            out_tx,
+            clock,
+            || (),
+            |_: &mut (), _x: u32| -> Result<Option<u32>> { panic!("always") },
+            Some(guard),
+        )
+        .unwrap();
+        work_tx.send(1).unwrap();
+        drop(work_tx);
+        assert_eq!(out_rx.recv(), None);
+        let out = pool.join();
+        assert!(format!("{:#}", out.result.unwrap_err()).contains("skip budget exceeded"));
     }
 
     #[test]

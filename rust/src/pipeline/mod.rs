@@ -25,6 +25,7 @@
 pub mod channel;
 pub mod exec;
 pub mod prep_cache;
+pub mod quarantine;
 pub mod shuffle;
 pub mod source;
 

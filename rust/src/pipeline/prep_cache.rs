@@ -138,6 +138,9 @@ impl PrepCache {
     /// Look a sample up, counting the hit/miss.  LRU refreshes recency;
     /// minio needs no bookkeeping (nothing is ever evicted).
     pub fn get(&self, id: u64) -> Option<Arc<DecodedSample>> {
+        // poison: every holder of `inner` (get/would_admit/admit/
+        // cached_bytes/len) runs only map/LRU ops and integer arithmetic
+        // under the lock — no panic can originate there.
         let out = match &mut *self.inner.lock().unwrap() {
             Store::Lru(lru) => lru.get(&id).cloned(),
             Store::Minio { map, .. } => map.get(&id).cloned(),
@@ -161,6 +164,7 @@ impl PrepCache {
         if bytes > self.budget {
             return false;
         }
+        // poison: see `get`.
         match &*self.inner.lock().unwrap() {
             Store::Lru(_) => true,
             Store::Minio { bytes: resident, .. } => resident + bytes <= self.budget,
@@ -172,6 +176,7 @@ impl PrepCache {
         if size > self.budget {
             return;
         }
+        // poison: see `get`.
         match &mut *self.inner.lock().unwrap() {
             // Replacement credit + eviction are the shared core's job.
             Store::Lru(lru) => lru.insert(id, sample, size),
@@ -198,6 +203,7 @@ impl PrepCache {
     }
 
     pub fn cached_bytes(&self) -> usize {
+        // poison: see `get`.
         match &*self.inner.lock().unwrap() {
             Store::Lru(lru) => lru.bytes(),
             Store::Minio { bytes, .. } => *bytes,
@@ -205,6 +211,7 @@ impl PrepCache {
     }
 
     pub fn len(&self) -> usize {
+        // poison: see `get`.
         match &*self.inner.lock().unwrap() {
             Store::Lru(lru) => lru.len(),
             Store::Minio { map, .. } => map.len(),

@@ -1,0 +1,135 @@
+//! Sample quarantine: bounded graceful degradation for a faulty data
+//! plane.
+//!
+//! When storage or decode produces an undecodable sample (bit-flipped
+//! payload, exhausted retries, a panicking transform), failing the whole
+//! epoch for one bad image is the wrong trade — but silently dropping
+//! arbitrarily many is worse (the trained distribution drifts).  The
+//! quarantine holds the middle ground: each bad sample is *skipped and
+//! recorded*, and the total is bounded by `--max-skip-rate` × the
+//! expected sample count.  One skip past the budget fails the run
+//! loudly, naming what was quarantined — with the default budget of
+//! zero, the very first bad sample surfaces (wrapped around its
+//! original cause), so fault-free behavior is unchanged.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// How many quarantined-sample descriptions are kept verbatim for the
+/// failure message; skips beyond this still count, they just aren't
+/// named individually.
+const NAMED_CAP: usize = 16;
+
+#[derive(Debug)]
+pub struct Quarantine {
+    /// Max skips tolerated: `floor(max_skip_rate * expected_samples)`.
+    limit: u64,
+    /// The rate the limit came from (for the failure message).
+    rate: f64,
+    skipped: AtomicU64,
+    names: Mutex<Vec<String>>,
+}
+
+impl Quarantine {
+    /// Budget for a run expected to process `expected_samples` samples
+    /// end to end (dataset size × epochs).  `max_skip_rate` of 0 means
+    /// zero tolerance: the first skip attempt returns its cause.
+    pub fn new(max_skip_rate: f64, expected_samples: u64) -> Self {
+        Quarantine {
+            limit: (max_skip_rate * expected_samples as f64).floor() as u64,
+            rate: max_skip_rate,
+            skipped: AtomicU64::new(0),
+            names: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Zero-tolerance quarantine (the default-config behavior).
+    pub fn zero() -> Self {
+        Quarantine::new(0.0, 0)
+    }
+
+    /// Try to absorb one bad sample.  Within budget: records it and
+    /// returns `Ok(())` — the caller drops the sample and keeps going.
+    /// Over budget: returns `cause` wrapped in a loud budget report that
+    /// names the quarantined samples, for the caller to propagate.
+    pub fn admit(&self, desc: String, cause: anyhow::Error) -> Result<()> {
+        // ordering: Relaxed — the count is a budget check, not a
+        // synchronization point; concurrent workers racing the last slot
+        // may each see a distinct pre-limit value, and whichever
+        // increments past the limit fails the run, which is the intent.
+        let n = self.skipped.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            // poison: holders only push/read a Vec<String>; no panic
+            // can originate under the lock.
+            let mut names = self.names.lock().unwrap();
+            if names.len() < NAMED_CAP {
+                names.push(desc);
+            }
+        }
+        if n <= self.limit {
+            return Ok(());
+        }
+        let named = self.names();
+        Err(cause.context(format!(
+            "skip budget exceeded: {n} sample(s) quarantined, budget {} \
+             (--max-skip-rate {}); quarantined: [{}]",
+            self.limit,
+            self.rate,
+            named.join(", "),
+        )))
+    }
+
+    /// Samples quarantined so far.
+    pub fn count(&self) -> u64 {
+        // ordering: Relaxed — monotonic telemetry read (see `admit`).
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Descriptions of the first [`NAMED_CAP`] quarantined samples.
+    pub fn names(&self) -> Vec<String> {
+        // poison: see `admit` — only Vec ops run under this lock.
+        self.names.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn zero_budget_surfaces_the_first_failure() {
+        let q = Quarantine::zero();
+        let err = q.admit("img/7.mjx".into(), anyhow!("injected: bit flip")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("skip budget exceeded"), "{msg}");
+        assert!(msg.contains("img/7.mjx"), "{msg}");
+        assert!(msg.contains("injected: bit flip"), "budget report must keep the cause: {msg}");
+        assert_eq!(q.count(), 1);
+    }
+
+    #[test]
+    fn skips_within_budget_are_absorbed_and_counted() {
+        // 1% of 1000 expected samples -> 10 skips allowed.
+        let q = Quarantine::new(0.01, 1000);
+        for i in 0..10 {
+            q.admit(format!("sample {i}"), anyhow!("bad")).unwrap();
+        }
+        assert_eq!(q.count(), 10);
+        let err = q.admit("sample 10".into(), anyhow!("bad")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("11 sample(s) quarantined, budget 10"), "{msg}");
+        assert!(msg.contains("sample 0") && msg.contains("sample 10"), "{msg}");
+    }
+
+    #[test]
+    fn named_list_is_capped_but_count_is_not() {
+        let q = Quarantine::new(1.0, 100);
+        for i in 0..40 {
+            q.admit(format!("s{i}"), anyhow!("bad")).unwrap();
+        }
+        assert_eq!(q.count(), 40);
+        assert_eq!(q.names().len(), NAMED_CAP);
+    }
+}

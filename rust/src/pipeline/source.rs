@@ -3,6 +3,7 @@
 
 use crate::metrics::trace::Tracer;
 use crate::record::{Record, ShardReader};
+use crate::storage::prefetch::Resilience;
 use crate::storage::{PrefetchPlan, PrefetchReader, Storage};
 use anyhow::Result;
 use std::io::Read;
@@ -108,23 +109,62 @@ pub fn stream_shards_prefetched_traced(
     chunk_size: usize,
     plan: PrefetchPlan,
     tracer: Tracer,
+    f: impl FnMut(Record) -> Result<bool>,
+) -> Result<()> {
+    // No fault policy, no skip tolerance: a corrupt record propagates.
+    stream_shards_resilient(
+        store,
+        shard_names,
+        chunk_size,
+        plan,
+        tracer,
+        Resilience::none(),
+        |_, e| Err(e),
+        f,
+    )
+}
+
+/// [`stream_shards_prefetched_traced`] with fault handling: failed parts
+/// are retried through the prefetcher's sliding window and stragglers
+/// hedged per `res` (serial plans read inline with no retry machinery —
+/// the runner's `with_retry` covers that path), and a corrupt record is
+/// handed to `on_skip(record id, cause)` instead of wedging the stream —
+/// return `Ok(())` to skip it (quarantine accounting lives with the
+/// caller) or `Err` to fail the stream.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_shards_resilient(
+    store: Arc<dyn Storage>,
+    shard_names: &[String],
+    chunk_size: usize,
+    plan: PrefetchPlan,
+    tracer: Tracer,
+    res: Resilience,
+    mut on_skip: impl FnMut(u64, anyhow::Error) -> Result<()>,
     mut f: impl FnMut(Record) -> Result<bool>,
 ) -> Result<()> {
     for name in shard_names {
         let reader: Box<dyn Read + Send> = if plan.is_serial() {
             Box::new(StorageReader::open(store.clone(), name)?)
         } else {
-            Box::new(PrefetchReader::open_traced(
+            Box::new(PrefetchReader::open_resilient(
                 store.clone(),
                 name,
                 plan,
                 tracer.clone(),
+                res.clone(),
             )?)
         };
         let mut sr = ShardReader::new(reader, chunk_size);
-        while let Some(rec) = sr.next_record()? {
-            if !f(rec)? {
-                return Ok(());
+        while let Some(ev) = sr.next_event()? {
+            match ev {
+                crate::record::RecordEvent::Record(rec) => {
+                    if !f(rec)? {
+                        return Ok(());
+                    }
+                }
+                crate::record::RecordEvent::Skipped { id, err } => {
+                    on_skip(id, anyhow::anyhow!("shard {name}: {err}"))?;
+                }
             }
         }
     }

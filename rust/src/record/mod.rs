@@ -224,6 +224,19 @@ impl<R: Read> ShardReader<R> {
     }
 
     pub fn next_record(&mut self) -> Result<Option<Record>> {
+        match self.next_event()? {
+            None => Ok(None),
+            Some(RecordEvent::Record(rec)) => Ok(Some(rec)),
+            Some(RecordEvent::Skipped { err, .. }) => bail!("{err}"),
+        }
+    }
+
+    /// Fault-tolerant read: a complete-but-corrupt record (checksum
+    /// mismatch) is *skipped* by its framed length instead of wedging
+    /// the stream — the caller decides whether the skip fits its budget.
+    /// Truncation (a frame that can never complete) still errors: there
+    /// is no resync point to hop to.
+    pub fn next_event(&mut self) -> Result<Option<RecordEvent>> {
         if !self.started {
             self.start()?;
         }
@@ -237,7 +250,16 @@ impl<R: Read> ShardReader<R> {
                     self.remaining -= 1;
                     return Ok(Some(rec));
                 }
-                Err(_) => {
+                Err(e) => {
+                    // A fully-framed record that still fails to parse is
+                    // corrupt payload, not missing bytes: hop over the
+                    // frame (its length header tells us how far) and
+                    // report the skip.
+                    if let Some((id, used)) = framed_corrupt(&self.buf[..self.valid], self.pos) {
+                        self.pos += used;
+                        self.remaining -= 1;
+                        return Ok(Some(RecordEvent::Skipped { id, err: format!("{e:#}") }));
+                    }
                     if self.fill()? == 0 {
                         // Cannot make progress: genuinely truncated/corrupt.
                         parse_record(&self.buf[..self.valid], self.pos)?;
@@ -247,6 +269,36 @@ impl<R: Read> ShardReader<R> {
             }
         }
     }
+}
+
+/// One event from a fault-tolerant shard stream: a good record, or a
+/// note that one corrupt record was hopped over.
+#[derive(Clone, Debug)]
+pub enum RecordEvent {
+    Record(Record),
+    /// A complete frame whose payload failed its checksum.  `id` is the
+    /// id the (possibly corrupt) header claims.
+    Skipped { id: u64, err: String },
+}
+
+/// If `buf[pos..]` holds a *complete* record frame whose payload fails
+/// its checksum, return `(claimed id, frame length)` so a reader can hop
+/// past it.  Incomplete frames return `None` (more bytes may fix them).
+fn framed_corrupt(buf: &[u8], pos: usize) -> Option<(u64, usize)> {
+    if buf.len() < pos + REC_META_LEN {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+    let id = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
+    let want_fnv = u32::from_le_bytes(buf[pos + 14..pos + 18].try_into().unwrap());
+    let body_at = pos + REC_META_LEN;
+    if buf.len() < body_at + len {
+        return None;
+    }
+    if fnv1a(&buf[body_at..body_at + len]) == want_fnv {
+        return None;
+    }
+    Some((id, REC_META_LEN + len))
 }
 
 #[cfg(test)]
@@ -352,6 +404,44 @@ mod tests {
         let n = buf.len();
         buf[n - 3] ^= 0xFF; // flip a payload byte
         assert!(parse_shard(&buf).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn next_event_hops_over_a_corrupt_record() {
+        let dir = tmpdir("hop");
+        let shard = dir.join("s0.rec");
+        let mut w = ShardWriter::create(&shard).unwrap();
+        for i in 0..5u64 {
+            w.append(i, 0, &vec![i as u8; 64]).unwrap();
+        }
+        let metas = w.finish().unwrap();
+        let mut buf = std::fs::read(&shard).unwrap();
+        // Flip a payload byte in the middle record (id 2).
+        buf[metas[2].offset as usize + REC_META_LEN + 10] ^= 0xFF;
+
+        // Strict reader: wedges exactly at the corrupt record.
+        let mut strict = ShardReader::new(Cursor::new(buf.clone()), 64);
+        assert_eq!(strict.next_record().unwrap().unwrap().id, 0);
+        assert_eq!(strict.next_record().unwrap().unwrap().id, 1);
+        let err = strict.next_record().unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+
+        // Tolerant reader: reports the skip, then keeps streaming.
+        let mut ids = Vec::new();
+        let mut skips = Vec::new();
+        let mut r = ShardReader::new(Cursor::new(buf), 64);
+        while let Some(ev) = r.next_event().unwrap() {
+            match ev {
+                RecordEvent::Record(rec) => ids.push(rec.id),
+                RecordEvent::Skipped { id, err } => {
+                    assert!(err.contains("checksum mismatch"), "{err}");
+                    skips.push(id);
+                }
+            }
+        }
+        assert_eq!(ids, vec![0, 1, 3, 4]);
+        assert_eq!(skips, vec![2]);
         std::fs::remove_dir_all(dir).ok();
     }
 

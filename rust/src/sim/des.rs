@@ -217,6 +217,11 @@ fn simulate_inner(s: &Scenario, want_spans: bool) -> (SimOutput, Option<TraceDum
     } else {
         read_base
     };
+    // Transient faults under retry (`fault_rate`): each read re-issues
+    // with probability p, so expected attempts per delivered image is
+    // 1/(1-p) — service-time inflation, matching the analytic model's
+    // (1-p) ceiling scaling.
+    let read_base = read_base / (1.0 - s.fault_rate);
     // vCPU efficiency knee: inflate per-image cost so k nominal servers
     // deliver eff(k) worth of capacity.
     let cpu_scale = s.vcpus as f64 / calib::eff_vcpus(s.vcpus as f64);
@@ -575,6 +580,35 @@ mod tests {
         assert!(out.cpu_util == 0.0 && out.io_mbps == 0.0);
         let ana = analytic_throughput(&s);
         assert!((out.throughput_ips - ana).abs() / ana < 0.1);
+    }
+
+    #[test]
+    fn des_fault_inflation_matches_analytic() {
+        // Storage-bound remote raw run at a 25% transient rate: the
+        // DES's retried-read service inflation must agree with the
+        // analytic (1-p) ceiling scaling.
+        let st = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 64,
+            method: Method::Raw,
+            storage: "s3".into(),
+            net_conns: 1,
+            fault_rate: 0.25,
+            seconds: 30.0,
+            ..Default::default()
+        };
+        let des = simulate(&st).throughput_ips;
+        let ana = analytic_throughput(&st);
+        let rel = (des - ana).abs() / ana;
+        assert!(rel < 0.15, "faulty storage-bound: des {des:.0} ana {ana:.0} rel {rel:.3}");
+        // The chaos gate at paper scale: a 1% transient rate under
+        // retry costs a GPU-bound run under 10% end to end.
+        let base = Scenario { model: "resnet50".into(), seconds: 30.0, ..Default::default() };
+        let faulty = Scenario { fault_rate: 0.01, ..base.clone() };
+        let t0 = simulate(&base).throughput_ips;
+        let t1 = simulate(&faulty).throughput_ips;
+        assert!(t1 > t0 * 0.9, "1% faults must stay within 10%: {t1:.0} vs {t0:.0}");
     }
 
     #[test]

@@ -70,6 +70,12 @@ pub struct Scenario {
     /// sim's baseline is the paper's per-sample-buffer loader; turn it
     /// on to model our slab engine.
     pub slab_pool: bool,
+    /// Transient-fault rate on storage reads (`--faults transient=p` in
+    /// the engine, with retries on): each faulted read is re-attempted,
+    /// so the mean storage service time inflates by `1/(1-p)` — the
+    /// storage ceiling scales by `(1-p)`.  Models only the retry-path
+    /// capacity cost; backoff sleeps overlap other reads and are ignored.
+    pub fault_rate: f64,
     /// Simulated duration in seconds (DES only).
     pub seconds: f64,
     pub seed: u64,
@@ -92,6 +98,7 @@ impl Default for Scenario {
             fused_decode: false,
             decode_scale: 1,
             slab_pool: false,
+            fault_rate: 0.0,
             seconds: 60.0,
             seed: 7,
         }
@@ -141,6 +148,7 @@ impl Scenario {
                 _ => anyhow::bail!("sim slab-pool must be on|off, got {v}"),
             };
         }
+        s.fault_rate = args.get_f64("fault-rate", s.fault_rate);
         s.seconds = args.get_f64("seconds", s.seconds);
         s.seed = args.get_u64("seed", s.seed);
         s.validate()?;
@@ -161,6 +169,11 @@ impl Scenario {
             matches!(self.decode_scale, 1 | 2 | 4 | 8),
             "decode_scale must be 1|2|4|8, got {}",
             self.decode_scale
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.fault_rate),
+            "fault_rate must be in [0, 1), got {}",
+            self.fault_rate
         );
         Ok(())
     }
@@ -291,14 +304,20 @@ impl Scenario {
     /// what the engine does — so its storage demand is NOT reduced; only
     /// the decode is amortized.
     pub fn storage_cap_ips(&self) -> f64 {
+        // Transient faults under retry: a read draws a fault with
+        // probability p and re-issues, so the device serves `1/(1-p)`
+        // attempts per delivered image — the ceiling thins by `(1-p)`.
+        let fault_scale = 1.0 - self.fault_rate;
         if self.method != Method::Raw {
-            return self.storage_cap_ips_cold();
+            return self.storage_cap_ips_cold() * fault_scale;
         }
         let hit = self.prep_cache_hit();
         if hit >= 1.0 {
+            // Fully resident corpus: storage (and its faults) are out of
+            // the picture entirely.
             return f64::INFINITY;
         }
-        self.storage_cap_ips_cold() / (1.0 - hit)
+        self.storage_cap_ips_cold() / (1.0 - hit) * fault_scale
     }
 
     /// Storage ceiling without the decoded cache (every image fetched).
@@ -910,6 +929,39 @@ mod tests {
             ..scaled.clone()
         };
         assert!((h0.prep_cache_hit() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_rate_thins_exactly_the_storage_ceiling() {
+        // The model: only the storage cap scales, by (1-p); CPU and GPU
+        // costs are untouched.
+        let base = Scenario { storage: "s3".into(), net_conns: 8, ..Default::default() };
+        let faulty = Scenario { fault_rate: 0.01, ..base.clone() };
+        assert!((faulty.storage_cap_ips() - base.storage_cap_ips() * 0.99).abs() < 1e-9);
+        assert_eq!(base.cpu_cost_ms(), faulty.cpu_cost_ms());
+        assert_eq!(base.gpu_cost_ms(), faulty.gpu_cost_ms());
+        // A storage-bound scenario's throughput scales by exactly (1-p).
+        let st = Scenario {
+            model: "alexnet".into(),
+            gpus: 8,
+            vcpus: 64,
+            method: Method::Raw,
+            storage: "s3".into(),
+            net_conns: 1,
+            ..Default::default()
+        };
+        assert_eq!(bottleneck(&st), Bottleneck::Storage);
+        let stf = Scenario { fault_rate: 0.25, ..st.clone() };
+        let r = analytic_throughput(&stf) / analytic_throughput(&st);
+        assert!((r - 0.75).abs() < 1e-9, "{r}");
+        // A fully resident raw corpus never touches storage, faults or
+        // not — the cap stays infinite.
+        let full = calib::decoded_dataset_bytes() / 1e9;
+        let resident = Scenario { prep_cache_gb: full, fault_rate: 0.5, ..st.clone() };
+        assert!(resident.storage_cap_ips().is_infinite());
+        // And validation rejects out-of-range rates.
+        assert!(Scenario { fault_rate: 1.0, ..Default::default() }.validate().is_err());
+        assert!(Scenario { fault_rate: -0.1, ..Default::default() }.validate().is_err());
     }
 
     #[test]

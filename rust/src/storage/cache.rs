@@ -54,6 +54,8 @@ impl<S: Storage> CachedStore<S> {
     }
 
     pub fn cached_bytes(&self) -> usize {
+        // poison: only ByteLru map/accounting ops run under this lock
+        // (here and in every holder below) — no user code can panic.
         self.lru.lock().unwrap().bytes()
     }
 
@@ -63,11 +65,13 @@ impl<S: Storage> CachedStore<S> {
     /// went stale against the values they account for.
     #[cfg(test)]
     fn recount_bytes(&self) -> usize {
+        // poison: see `cached_bytes`.
         self.lru.lock().unwrap().iter().map(|(_, v)| v.len()).sum()
     }
 
     fn get(&self, key: &Key) -> Option<Arc<[u8]>> {
-        let out = self.lru.lock().unwrap().get(key).cloned(); // refcount bump
+        // poison: see `cached_bytes`.  refcount bump on the hit.
+        let out = self.lru.lock().unwrap().get(key).cloned();
         // ordering: Relaxed — hit/miss telemetry: exact under atomic
         // RMW, consumed as a ratio; the cached bytes themselves are
         // published by the lru mutex, never by these counters.
@@ -82,6 +86,7 @@ impl<S: Storage> CachedStore<S> {
         // Replacement credit, eviction, and the oversized-value bypass
         // are the shared core's contract (see util/bytelru.rs).
         let size = value.len();
+        // poison: see `cached_bytes`.
         self.lru.lock().unwrap().insert(key, value, size);
     }
 }

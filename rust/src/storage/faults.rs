@@ -1,0 +1,469 @@
+//! Deterministic, seeded fault injection over any [`Storage`] tier.
+//!
+//! The paper's setting is preprocessing against *public-cloud* object
+//! storage, where transient read errors, 503 SlowDown throttling,
+//! straggler requests, and the occasional corrupted payload are normal
+//! operating conditions — not exceptional ones.  [`FaultyStore`] wraps
+//! any tier (dir/mem/s3/s3-cold, throttled or not) and injects exactly
+//! those fault classes per a [`FaultProfile`], configured from the CLI
+//! as `--faults off|spec`.
+//!
+//! **Replayability is the design constraint.**  Every fault decision is
+//! a pure function of `(profile.seed, request key, k)` where the key
+//! hashes `(name, offset, len)` and `k` counts how many times that exact
+//! request has been made.  Two consequences:
+//! * the *same seed replays the same faults* regardless of thread
+//!   interleaving — a failing chaos run is a reproducible bug report;
+//! * a retry of a failed request is the *next* occurrence `k+1`, so it
+//!   redraws — transient faults are transient, exactly like the real
+//!   thing, and the retry layer (`storage/retry.rs`) can be tested
+//!   end to end.
+//!
+//! Fault classes (disjoint per draw, checked in this order):
+//! * **transient** — the read fails with a retryable error;
+//! * **throttle** — the read starts a 503 burst: it and the next
+//!   `burst-1` reads through the store fail with `503 SlowDown`;
+//! * **straggler** — the read succeeds but takes `slowdown`× the
+//!   backing store's service time (the hedging target);
+//! * **corrupt** — the read succeeds with one deterministic bit flipped
+//!   (the quarantine/skip-budget target — checksums catch it downstream).
+
+use super::Storage;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What to inject, with what probability.  Parsed from `--faults`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Probability a read fails with a retryable transient error.
+    pub transient: f64,
+    /// Probability a read starts a 503 SlowDown burst.
+    pub throttle: f64,
+    /// Reads per 503 burst (the triggering read included).
+    pub burst: u32,
+    /// Probability a read is served `slowdown`x slower than the tier.
+    pub straggler: f64,
+    /// Straggler service-time multiplier (>= 1).
+    pub slowdown: f64,
+    /// Probability a read returns payload with one bit flipped.
+    pub corrupt: f64,
+    /// Fault seed: same seed, same faults.
+    pub seed: u64,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile {
+            transient: 0.0,
+            throttle: 0.0,
+            burst: 4,
+            straggler: 0.0,
+            slowdown: 10.0,
+            corrupt: 0.0,
+            seed: 0xFA_017,
+        }
+    }
+}
+
+impl FaultProfile {
+    /// Parse the `--faults` value: `off` disables injection entirely;
+    /// otherwise a comma list of `key=value` with keys `transient`,
+    /// `throttle`, `burst`, `straggler`, `slowdown`, `corrupt`, `seed`
+    /// (e.g. `transient=0.01,straggler=0.005,slowdown=20,seed=42`).
+    pub fn parse(spec: &str) -> Result<Option<Self>> {
+        if spec == "off" || spec.is_empty() {
+            return Ok(None);
+        }
+        let mut p = FaultProfile::default();
+        for kv in spec.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("--faults entry {kv:?} is not key=value"))?;
+            let num =
+                |v: &str| v.parse::<f64>().with_context(|| format!("--faults {k}={v:?}: bad number"));
+            match k {
+                "transient" => p.transient = num(v)?,
+                "throttle" => p.throttle = num(v)?,
+                "burst" => p.burst = num(v)? as u32,
+                "straggler" => p.straggler = num(v)?,
+                "slowdown" => p.slowdown = num(v)?,
+                "corrupt" => p.corrupt = num(v)?,
+                "seed" => p.seed = num(v)? as u64,
+                other => bail!(
+                    "--faults key {other:?} unknown (want transient|throttle|burst|straggler|slowdown|corrupt|seed)"
+                ),
+            }
+        }
+        p.validate()?;
+        Ok(Some(p))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("transient", self.transient),
+            ("throttle", self.throttle),
+            ("straggler", self.straggler),
+            ("corrupt", self.corrupt),
+        ] {
+            ensure!((0.0..=1.0).contains(&rate), "--faults {name} must be in [0,1], got {rate}");
+        }
+        ensure!(
+            self.transient + self.throttle + self.straggler + self.corrupt <= 1.0,
+            "--faults rates must sum to <= 1 (disjoint classes per read)"
+        );
+        ensure!(self.slowdown >= 1.0, "--faults slowdown must be >= 1, got {}", self.slowdown);
+        ensure!(self.burst >= 1, "--faults burst must be >= 1");
+        Ok(())
+    }
+
+    /// Does this profile inject anything at all?
+    pub fn active(&self) -> bool {
+        self.transient > 0.0 || self.throttle > 0.0 || self.straggler > 0.0 || self.corrupt > 0.0
+    }
+}
+
+/// Per-class injection counts (all monotonic).
+#[derive(Debug, Default)]
+pub struct FaultCounts {
+    pub transient: AtomicU64,
+    pub throttled: AtomicU64,
+    pub stragglers: AtomicU64,
+    pub corrupted: AtomicU64,
+}
+
+impl FaultCounts {
+    /// Total faults injected so far (the run-report number).
+    pub fn total(&self) -> u64 {
+        // ordering: Relaxed — monotonic telemetry counters summed
+        // approximately or after the pipeline joins.
+        self.transient.load(Ordering::Relaxed)
+            + self.throttled.load(Ordering::Relaxed)
+            + self.stragglers.load(Ordering::Relaxed)
+            + self.corrupted.load(Ordering::Relaxed)
+    }
+}
+
+/// What one fault draw decided.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Fault {
+    None,
+    Transient,
+    ThrottleBurst,
+    Straggler,
+    Corrupt { bit: u64 },
+}
+
+/// Seeded fault-injecting wrapper over any inner store.
+pub struct FaultyStore<S: Storage> {
+    inner: S,
+    profile: FaultProfile,
+    counts: FaultCounts,
+    /// k-th occurrence of each request key — the redraw index that makes
+    /// transient faults transient under retry while staying replayable.
+    occurrences: Mutex<HashMap<u64, u32>>,
+    /// Reads left in the current 503 burst.
+    burst_left: Mutex<u32>,
+}
+
+impl<S: Storage> FaultyStore<S> {
+    pub fn new(inner: S, profile: FaultProfile) -> Self {
+        FaultyStore {
+            inner,
+            profile,
+            counts: FaultCounts::default(),
+            occurrences: Mutex::new(HashMap::new()),
+            burst_left: Mutex::new(0),
+        }
+    }
+
+    pub fn counts(&self) -> &FaultCounts {
+        &self.counts
+    }
+
+    pub fn profile(&self) -> FaultProfile {
+        self.profile
+    }
+
+    /// FNV-1a over the request identity (name, offset, len).
+    fn request_key(name: &str, offset: u64, len: u64) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x1_0000_01b3);
+        };
+        name.bytes().for_each(&mut eat);
+        offset.to_le_bytes().iter().copied().for_each(&mut eat);
+        len.to_le_bytes().iter().copied().for_each(&mut eat);
+        h
+    }
+
+    /// Draw the fault for occurrence `k` of request `key` — a pure
+    /// function of (seed, key, k), independent of thread interleaving.
+    fn draw(&self, key: u64, k: u32, payload_bits: u64) -> Fault {
+        let p = &self.profile;
+        let salt = key
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(u64::from(k).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        let mut rng = Rng::new(p.seed ^ salt);
+        let u = rng.f64();
+        if u < p.transient {
+            Fault::Transient
+        } else if u < p.transient + p.throttle {
+            Fault::ThrottleBurst
+        } else if u < p.transient + p.throttle + p.straggler {
+            Fault::Straggler
+        } else if u < p.transient + p.throttle + p.straggler + p.corrupt && payload_bits > 0 {
+            Fault::Corrupt { bit: rng.gen_range(payload_bits) }
+        } else {
+            Fault::None
+        }
+    }
+
+    /// Shared fault path for `read`/`read_range`: decide, then either
+    /// fail, slow, or corrupt the inner read.
+    fn faulted_read(
+        &self,
+        name: &str,
+        offset: u64,
+        len_hint: u64,
+        fetch: impl FnOnce() -> Result<Arc<[u8]>>,
+    ) -> Result<Arc<[u8]>> {
+        // An active burst throttles every read through the store,
+        // whatever its own draw would have been — that is what SlowDown
+        // does to a prefix of the request stream.
+        {
+            // poison: only integer bookkeeping runs under the lock.
+            let mut left = self.burst_left.lock().unwrap();
+            if *left > 0 {
+                *left -= 1;
+                // ordering: Relaxed — telemetry counter (see FaultCounts).
+                self.counts.throttled.fetch_add(1, Ordering::Relaxed);
+                bail!("injected: 503 SlowDown (throttled; {left} more in burst) for {name}@{offset}");
+            }
+        }
+        let key = Self::request_key(name, offset, len_hint);
+        let k = {
+            // poison: only a HashMap counter bump runs under the lock.
+            let mut occ = self.occurrences.lock().unwrap();
+            let e = occ.entry(key).or_insert(0);
+            *e += 1;
+            *e
+        };
+        match self.draw(key, k, len_hint.saturating_mul(8)) {
+            Fault::None => fetch(),
+            Fault::Transient => {
+                // ordering: Relaxed — telemetry counter (see FaultCounts).
+                self.counts.transient.fetch_add(1, Ordering::Relaxed);
+                bail!("injected: transient read error for {name}@{offset} (attempt {k})")
+            }
+            Fault::ThrottleBurst => {
+                {
+                    // poison: integer store under the lock, no panic source.
+                    let mut left = self.burst_left.lock().unwrap();
+                    *left = self.profile.burst.saturating_sub(1);
+                }
+                // ordering: Relaxed — telemetry counter (see FaultCounts).
+                self.counts.throttled.fetch_add(1, Ordering::Relaxed);
+                bail!("injected: 503 SlowDown (burst start) for {name}@{offset}")
+            }
+            Fault::Straggler => {
+                // Pay (slowdown - 1)x the tier's real service time on
+                // top of the read itself — a straggler, not an error.
+                let t0 = Instant::now();
+                let out = fetch()?;
+                let extra = t0.elapsed().as_secs_f64() * (self.profile.slowdown - 1.0);
+                if extra > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(extra));
+                }
+                // ordering: Relaxed — telemetry counter (see FaultCounts).
+                self.counts.stragglers.fetch_add(1, Ordering::Relaxed);
+                Ok(out)
+            }
+            Fault::Corrupt { bit } => {
+                let clean = fetch()?;
+                let mut bytes = clean.to_vec();
+                let idx = (bit / 8) as usize;
+                if idx < bytes.len() {
+                    bytes[idx] ^= 1 << (bit % 8);
+                }
+                // ordering: Relaxed — telemetry counter (see FaultCounts).
+                self.counts.corrupted.fetch_add(1, Ordering::Relaxed);
+                Ok(bytes.into())
+            }
+        }
+    }
+}
+
+impl<S: Storage> Storage for FaultyStore<S> {
+    fn read(&self, name: &str) -> Result<Arc<[u8]>> {
+        let len = self.inner.len(name).unwrap_or(0);
+        self.faulted_read(name, 0, len, || self.inner.read(name))
+    }
+
+    fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
+        self.faulted_read(name, offset, len, || self.inner.read_range(name, offset, len))
+    }
+
+    // Metadata stays reliable: fault injection targets the data path,
+    // where retries/hedging/quarantine live — a flaky `list` would fail
+    // runs before the machinery under test ever engages.
+    fn len(&self, name: &str) -> Result<u64> {
+        self.inner.len(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::retry::is_transient;
+    use crate::storage::MemStore;
+
+    fn store_with(profile: FaultProfile) -> FaultyStore<MemStore> {
+        let m = MemStore::new();
+        m.write("a", (0u8..=255).cycle().take(4096).collect::<Vec<u8>>());
+        FaultyStore::new(m, profile)
+    }
+
+    #[test]
+    fn parse_off_and_specs() {
+        assert!(FaultProfile::parse("off").unwrap().is_none());
+        assert!(FaultProfile::parse("").unwrap().is_none());
+        let p = FaultProfile::parse("transient=0.01,straggler=0.005,slowdown=20,seed=42")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.transient, 0.01);
+        assert_eq!(p.straggler, 0.005);
+        assert_eq!(p.slowdown, 20.0);
+        assert_eq!(p.seed, 42);
+        assert!(p.active());
+        assert!(FaultProfile::parse("transient=2").is_err(), "rate > 1 must be rejected");
+        assert!(FaultProfile::parse("bogus=1").is_err());
+        assert!(FaultProfile::parse("transient").is_err(), "missing =value");
+        assert!(FaultProfile::parse("slowdown=0.5,straggler=0.1").is_err());
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_faults() {
+        let profile =
+            FaultProfile { transient: 0.2, seed: 99, ..FaultProfile::default() };
+        let run = || {
+            let s = store_with(profile);
+            (0..200u64)
+                .map(|i| s.read_range("a", i * 16, 16).is_err())
+                .collect::<Vec<bool>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must inject identical faults");
+        let n = a.iter().filter(|&&e| e).count();
+        assert!(n > 10 && n < 100, "≈20% of 200 reads should fail, got {n}");
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let mk = |seed| {
+            let s = store_with(FaultProfile {
+                transient: 0.2,
+                seed,
+                ..FaultProfile::default()
+            });
+            (0..200u64)
+                .map(|i| s.read_range("a", i * 16, 16).is_err())
+                .collect::<Vec<bool>>()
+        };
+        assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn retrying_a_transient_fault_redraws() {
+        // transient=0.5: a failed request retried enough times succeeds,
+        // because occurrence k+1 is a fresh draw.
+        let s = store_with(FaultProfile { transient: 0.5, seed: 3, ..FaultProfile::default() });
+        let mut recovered = 0;
+        for i in 0..50u64 {
+            let mut ok = false;
+            for _ in 0..16 {
+                if s.read_range("a", i * 64, 64).is_ok() {
+                    ok = true;
+                    break;
+                }
+            }
+            assert!(ok, "16 redraws at p=0.5 must succeed (read {i})");
+            recovered += 1;
+        }
+        assert_eq!(recovered, 50);
+        assert!(s.counts().total() > 0);
+    }
+
+    #[test]
+    fn injected_errors_classify_as_transient() {
+        let s = store_with(FaultProfile { transient: 1.0, seed: 1, ..FaultProfile::default() });
+        let err = s.read_range("a", 0, 64).unwrap_err();
+        assert!(is_transient(&format!("{err:#}")), "{err:#}");
+        let s = store_with(FaultProfile { throttle: 1.0, seed: 1, ..FaultProfile::default() });
+        let err = s.read_range("a", 0, 64).unwrap_err();
+        assert!(is_transient(&format!("{err:#}")), "{err:#}");
+    }
+
+    #[test]
+    fn throttle_bursts_fail_following_reads() {
+        let s = store_with(FaultProfile {
+            throttle: 1.0,
+            burst: 3,
+            seed: 5,
+            ..FaultProfile::default()
+        });
+        // Burst start + 2 follow-ups, then (throttle=1.0) a new burst —
+        // every read fails, and the counter sees each one.
+        for i in 0..6u64 {
+            assert!(s.read_range("a", i * 8, 8).is_err(), "read {i}");
+        }
+        // ordering: Relaxed — test-side counter read after the calls.
+        assert_eq!(s.counts().throttled.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit() {
+        let s = store_with(FaultProfile { corrupt: 1.0, seed: 7, ..FaultProfile::default() });
+        let clean: Vec<u8> = (0u8..=255).cycle().take(4096).collect();
+        let got = s.read_range("a", 0, 4096).unwrap();
+        let diff: u32 = clean
+            .iter()
+            .zip(got.iter())
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "exactly one bit must flip");
+        // Replay: same request, next occurrence — same seed still fully
+        // corrupts (rate 1.0), and the flipped bit is deterministic for
+        // a fixed occurrence index.
+        let again = s.read_range("a", 0, 4096).unwrap();
+        let s2 = store_with(FaultProfile { corrupt: 1.0, seed: 7, ..FaultProfile::default() });
+        let _ = s2.read_range("a", 0, 4096).unwrap();
+        let again2 = s2.read_range("a", 0, 4096).unwrap();
+        assert_eq!(again[..], again2[..], "occurrence-indexed corruption must replay");
+    }
+
+    #[test]
+    fn inactive_profile_is_transparent() {
+        let s = store_with(FaultProfile::default());
+        assert!(!s.profile().active());
+        for i in 0..64u64 {
+            assert!(s.read_range("a", i * 8, 8).is_ok());
+        }
+        assert_eq!(s.counts().total(), 0);
+        assert_eq!(s.read("a").unwrap().len(), 4096);
+        assert_eq!(s.list().unwrap(), vec!["a".to_string()]);
+    }
+}

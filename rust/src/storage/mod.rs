@@ -12,12 +12,16 @@
 //! parallel range-GET prefetcher in `prefetch` hiding their latency.
 
 pub mod cache;
+pub mod faults;
 pub mod prefetch;
 pub mod remote;
+pub mod retry;
 
 pub use cache::CachedStore;
+pub use faults::{FaultProfile, FaultyStore};
 pub use prefetch::{fetch_parallel, PrefetchPlan, PrefetchReader};
 pub use remote::{NetProfile, RemoteStore};
+pub use retry::{RetryPolicy, RetryStats};
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -146,6 +150,19 @@ impl<S: Storage + ?Sized> Storage for std::sync::Arc<S> {
 // DirStore: real files in a directory
 // ---------------------------------------------------------------------------
 
+/// Blob name of `path` relative to `root`.  A walked entry that does not
+/// live under the root (symlink escape, mount-point oddity, a `..`
+/// component the OS resolved differently than the lexical prefix) is a
+/// hard error naming the offending path — it used to be an `unwrap`
+/// panic deep inside `list`, which aborted the whole process instead of
+/// surfacing a diagnosable storage error.
+fn rel_name(root: &Path, path: &Path) -> Result<String> {
+    let rel = path.strip_prefix(root).map_err(|_| {
+        anyhow::anyhow!("walked entry {path:?} is not under storage root {root:?}")
+    })?;
+    Ok(rel.to_string_lossy().into_owned())
+}
+
 pub struct DirStore {
     root: PathBuf,
     stats: IoStats,
@@ -210,8 +227,7 @@ impl Storage for DirStore {
                 if ft.is_dir() {
                     walk(root, &e.path(), out)?;
                 } else if ft.is_file() {
-                    let rel = e.path().strip_prefix(root).unwrap().to_string_lossy().into_owned();
-                    out.push(rel);
+                    out.push(rel_name(root, &e.path())?);
                 }
             }
             Ok(())
@@ -243,6 +259,9 @@ impl MemStore {
     }
 
     pub fn write(&self, name: &str, bytes: impl Into<Arc<[u8]>>) {
+        // poison: holders only touch the HashMap, which never panics
+        // mid-update here; a poisoned map means a crashed thread and the
+        // run is already lost — propagating the panic is correct.
         self.blobs.lock().unwrap().insert(name.to_string(), bytes.into());
     }
 
@@ -261,6 +280,7 @@ impl MemStore {
 impl Storage for MemStore {
     fn read(&self, name: &str) -> Result<Arc<[u8]>> {
         // Whole-object reads are refcount bumps, not copies.
+        // poison: see `write` — map ops can't panic under the lock.
         let b = self
             .blobs
             .lock()
@@ -273,6 +293,7 @@ impl Storage for MemStore {
     }
 
     fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
+        // poison: see `write` — map ops can't panic under the lock.
         let g = self.blobs.lock().unwrap();
         let b = g.get(name).with_context(|| format!("no blob {name}"))?;
         let start = (offset as usize).min(b.len());
@@ -282,11 +303,13 @@ impl Storage for MemStore {
     }
 
     fn len(&self, name: &str) -> Result<u64> {
+        // poison: see `write` — map ops can't panic under the lock.
         let g = self.blobs.lock().unwrap();
         Ok(g.get(name).with_context(|| format!("no blob {name}"))?.len() as u64)
     }
 
     fn list(&self) -> Result<Vec<String>> {
+        // poison: see `write` — map ops can't panic under the lock.
         let mut names: Vec<String> = self.blobs.lock().unwrap().keys().cloned().collect();
         names.sort();
         Ok(names)
@@ -340,6 +363,8 @@ impl<S: Storage> ThrottledStore<S> {
         let now = self.t0.elapsed().as_secs_f64();
         let wake;
         {
+            // poison: only f64 arithmetic runs under the lock — no panic
+            // source; a poisoned bucket means a crashed reader thread.
             let mut b = self.bucket.lock().unwrap();
             let start = b.busy_until.max(now);
             b.busy_until = start + service;
@@ -435,6 +460,20 @@ mod tests {
         assert_eq!(s.read_range("x.bin", 990, 100).unwrap().len(), 10);
         assert_eq!(s.list().unwrap(), vec!["x.bin".to_string(), "y.bin".to_string()]);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Regression for the `DirStore::list` panic: an entry outside the
+    /// root used to hit `strip_prefix(..).unwrap()` and abort the
+    /// process.  The relative-name helper now returns an error that
+    /// names the offending path, and stays correct for ordinary
+    /// (nested) entries.
+    #[test]
+    fn rel_name_errors_instead_of_panicking_outside_root() {
+        let root = Path::new("/data/corpus");
+        assert_eq!(rel_name(root, Path::new("/data/corpus/img/x.mjx")).unwrap(), "img/x.mjx");
+        let err = rel_name(root, Path::new("/other/place/x.mjx")).unwrap_err().to_string();
+        assert!(err.contains("/other/place/x.mjx"), "must name the offending path: {err}");
+        assert!(err.contains("/data/corpus"), "must name the root: {err}");
     }
 
     #[test]

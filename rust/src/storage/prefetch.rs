@@ -16,15 +16,41 @@
 //! may finish parts out of order, and the reader must block on exactly the
 //! next part while the window bound keeps workers from racing ahead of the
 //! consumer by more than `window_parts` parts.
+//!
+//! ## Fault tolerance ([`Resilience`])
+//!
+//! Object stores fail; a prefetcher that wedges its whole window on one
+//! failed or straggling part turns a transient blip into a dead epoch.
+//! With a [`Resilience`] policy attached:
+//!
+//! * **window re-issue** — a part whose ranged GET fails transiently is
+//!   pushed back into the scheduler with a backoff deadline instead of
+//!   poisoning the stream; *any* idle worker re-issues it when its
+//!   backoff expires, so the failed connection never parks the window.
+//!   Attempts and per-part wall time are bounded by the
+//!   [`RetryPolicy`]; exhaustion (or a permanent error) still fails the
+//!   stream with a part-and-attempt-count diagnosis.
+//! * **hedged GETs** — once enough parts have completed to estimate a
+//!   trailing p95 latency, an idle worker duplicates the oldest
+//!   in-flight part that has been outstanding longer than that p95.
+//!   First answer wins; the loser's bytes are discarded on arrival (a
+//!   blocking read cannot be aborted mid-flight, so "cancelled" means
+//!   its result is dropped and its connection returns to the pool).
+//!
+//! Retried and hedged attempts are recorded as [`Stage::Retry`] spans so
+//! the Chrome trace shows exactly where the fault machinery engaged;
+//! first attempts stay [`Stage::Fetch`].
 
+use super::retry::{is_transient, RetryPolicy, RetryStats};
 use super::Storage;
 use crate::metrics::trace::{Stage, Tracer};
 use crate::metrics::Gauge;
 use anyhow::{ensure, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::Read;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// How a shard/object stream is parallelized.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,6 +84,46 @@ impl PrefetchPlan {
     }
 }
 
+/// Completed-latency samples needed before hedging may engage (a p95
+/// from fewer observations is noise, and hedging on noise doubles load
+/// for nothing).
+const HEDGE_MIN_SAMPLES: usize = 8;
+/// Floor on the hedge trigger: never duplicate a part that has been in
+/// flight for less than this, whatever the trailing p95 says.
+const HEDGE_MIN_SECS: f64 = 1e-3;
+/// Trailing-latency window size for the p95 estimate.
+const LATENCY_WINDOW: usize = 64;
+
+/// Fault-handling policy for a prefetch stream: bounded retry with
+/// backoff for failed parts, optional hedged duplicates for stragglers,
+/// shared counters for the run report.
+#[derive(Clone)]
+pub struct Resilience {
+    pub retry: RetryPolicy,
+    pub hedge: bool,
+    pub stats: Arc<RetryStats>,
+}
+
+impl Resilience {
+    /// The pre-fault-layer behavior: no retry, no hedging.
+    pub fn none() -> Self {
+        Resilience { retry: RetryPolicy::none(), hedge: false, stats: Arc::default() }
+    }
+
+    pub fn new(retry: RetryPolicy, hedge: bool, stats: Arc<RetryStats>) -> Self {
+        Resilience { retry, hedge, stats }
+    }
+}
+
+/// One in-flight part: issue times and how many copies are racing.
+struct Inflight {
+    /// Seconds (since stream start) the *current primary* was issued —
+    /// the age the hedger compares against the trailing p95.
+    since: f64,
+    copies: u32,
+    hedged: bool,
+}
+
 struct State {
     /// Next part index to hand to a worker.
     next_issue: usize,
@@ -66,18 +132,218 @@ struct State {
     n_parts: usize,
     /// Completed parts waiting for in-order delivery.
     done: BTreeMap<usize, Arc<[u8]>>,
+    /// Parts currently being fetched (by at least one worker).
+    inflight: HashMap<usize, Inflight>,
+    /// Transient-failed parts awaiting re-issue: (part, not-before secs).
+    retry_queue: Vec<(usize, f64)>,
+    /// Per-part (attempts so far, first-issue secs) — cleared on success.
+    attempts: HashMap<usize, (u32, f64)>,
+    /// Trailing completed-part latencies for the hedge p95.
+    latencies: VecDeque<f64>,
     error: Option<String>,
     cancelled: bool,
+}
+
+impl State {
+    /// Trailing p95 of completed-part latencies (`None` until enough
+    /// samples arrived for the estimate to mean anything).
+    fn hedge_threshold(&self) -> Option<f64> {
+        if self.latencies.len() < HEDGE_MIN_SAMPLES {
+            return None;
+        }
+        let mut v: Vec<f64> = self.latencies.iter().copied().collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((v.len() as f64) * 0.95) as usize;
+        Some(v[idx.min(v.len() - 1)].max(HEDGE_MIN_SECS))
+    }
 }
 
 struct Shared {
     state: Mutex<State>,
     /// Reader waits here for the next in-order part.
     avail: Condvar,
-    /// Workers wait here for window space.
+    /// Workers wait here for window space / retry deadlines / hedge ages.
     space: Condvar,
     /// Completed-parts queue depth (level + peak).
     depth: Gauge,
+    t0: Instant,
+    res: Resilience,
+}
+
+/// One unit of worker work: which part, which attempt, primary or hedge.
+struct Job {
+    idx: usize,
+    attempt: u32,
+    hedge: bool,
+    issued_at: f64,
+}
+
+/// Pick the next job under the scheduler lock: ripe retries first (a
+/// failed part must not starve behind fresh issues), then fresh parts
+/// within the window, then hedge candidates.  Blocks when nothing is
+/// actionable; returns `None` when the stream is finished, failed, or
+/// cancelled.
+fn next_job(shared: &Shared, plan: PrefetchPlan) -> Option<Job> {
+    // poison: scheduler state only — no user code panics under the lock;
+    // a poisoned scheduler means a crashed sibling worker and the whole
+    // stream is already lost.
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.cancelled || st.error.is_some() {
+            return None;
+        }
+        // Every part issued, nothing pending anywhere: the stream is
+        // complete (parts still in `done` are the reader's business).
+        if st.next_issue >= st.n_parts && st.retry_queue.is_empty() && st.inflight.is_empty() {
+            return None;
+        }
+        let now = shared.t0.elapsed().as_secs_f64();
+        // 1. A failed part whose backoff expired.
+        if let Some(pos) = st.retry_queue.iter().position(|&(_, nb)| nb <= now) {
+            let (idx, _) = st.retry_queue.swap_remove(pos);
+            let e = st.attempts.entry(idx).or_insert((0, now));
+            e.0 += 1;
+            let attempt = e.0;
+            st.inflight.insert(idx, Inflight { since: now, copies: 1, hedged: false });
+            return Some(Job { idx, attempt, hedge: false, issued_at: now });
+        }
+        // 2. A fresh part within the sliding window.
+        if st.next_issue < st.n_parts && st.next_issue < st.next_deliver + plan.window_parts {
+            let idx = st.next_issue;
+            st.next_issue += 1;
+            st.attempts.insert(idx, (1, now));
+            st.inflight.insert(idx, Inflight { since: now, copies: 1, hedged: false });
+            return Some(Job { idx, attempt: 1, hedge: false, issued_at: now });
+        }
+        // 3. Hedge the oldest straggler past the trailing p95.
+        let threshold = if shared.res.hedge { st.hedge_threshold() } else { None };
+        if let Some(thr) = threshold {
+            let cand = st
+                .inflight
+                .iter()
+                .filter(|(_, p)| p.copies == 1 && !p.hedged && now - p.since >= thr)
+                .map(|(&idx, p)| (idx, p.since))
+                .min_by(|a, b| a.1.total_cmp(&b.1));
+            if let Some((idx, _)) = cand {
+                let attempt = st.attempts.get(&idx).map_or(1, |e| e.0);
+                let p = st.inflight.get_mut(&idx).expect("candidate came from inflight");
+                p.hedged = true;
+                p.copies += 1;
+                return Some(Job { idx, attempt, hedge: true, issued_at: now });
+            }
+        }
+        // 4. Nothing actionable: sleep until the nearest deadline (a
+        // retry's backoff or a straggler crossing the hedge threshold),
+        // or indefinitely when neither exists.
+        let mut wake: Option<f64> = st.retry_queue.iter().map(|&(_, nb)| nb).fold(None, |a, b| {
+            Some(a.map_or(b, |a: f64| a.min(b)))
+        });
+        if let Some(thr) = threshold {
+            let oldest = st
+                .inflight
+                .values()
+                .filter(|p| p.copies == 1 && !p.hedged)
+                .map(|p| p.since + thr)
+                .fold(f64::INFINITY, f64::min);
+            if oldest.is_finite() {
+                wake = Some(wake.map_or(oldest, |w| w.min(oldest)));
+            }
+        }
+        st = match wake {
+            Some(at) => {
+                let dur = Duration::from_secs_f64((at - now).clamp(1e-4, 0.05));
+                // poison: see the lock at the top of `next_job`.
+                shared.space.wait_timeout(st, dur).unwrap().0
+            }
+            // poison: see the lock at the top of `next_job`.
+            None => shared.space.wait(st).unwrap(),
+        };
+    }
+}
+
+/// Handle one finished attempt: deliver a winning read, discard a losing
+/// hedge, re-queue a transient failure with backoff, or fail the stream.
+fn complete(
+    shared: &Shared,
+    name: &str,
+    job: &Job,
+    want: u64,
+    got: Result<Arc<[u8]>>,
+) {
+    let now = shared.t0.elapsed().as_secs_f64();
+    // poison: see `next_job` — scheduler bookkeeping only.
+    let mut st = shared.state.lock().unwrap();
+    let remaining = match st.inflight.get_mut(&job.idx) {
+        Some(p) => {
+            p.copies = p.copies.saturating_sub(1);
+            let left = p.copies;
+            if left == 0 {
+                st.inflight.remove(&job.idx);
+            }
+            left
+        }
+        None => 0, // the race was already decided and cleaned up
+    };
+    let already_delivered = job.idx < st.next_deliver || st.done.contains_key(&job.idx);
+    let outcome = match got {
+        Ok(bytes) if bytes.len() as u64 == want => Ok(bytes),
+        Ok(bytes) => Err(format!(
+            "short read of {name}: part {} got {} of {want} bytes",
+            job.idx,
+            bytes.len()
+        )),
+        Err(e) => Err(format!("{e:#}")),
+    };
+    match outcome {
+        Ok(bytes) => {
+            if already_delivered {
+                // Losing copy of a hedged race: first answer already won;
+                // "cancelling" the loser is dropping its bytes here.
+                shared.space.notify_all();
+                return;
+            }
+            if st.latencies.len() >= LATENCY_WINDOW {
+                st.latencies.pop_front();
+            }
+            st.latencies.push_back(now - job.issued_at);
+            if job.hedge {
+                shared.res.stats.record_hedge_won();
+            }
+            st.attempts.remove(&job.idx);
+            st.inflight.remove(&job.idx);
+            st.done.insert(job.idx, bytes);
+            shared.depth.set(st.done.len() as u64);
+            shared.avail.notify_all();
+            shared.space.notify_all();
+        }
+        Err(msg) => {
+            if already_delivered || remaining > 0 {
+                // A hedge copy is still racing (or already won) — this
+                // failure costs nothing; let the survivor decide.
+                shared.space.notify_all();
+                return;
+            }
+            let (att, first) = *st.attempts.get(&job.idx).unwrap_or(&(job.attempt, job.issued_at));
+            let policy = &shared.res.retry;
+            let within = att < policy.attempts && (now - first) < policy.deadline;
+            if within && is_transient(&msg) {
+                shared.res.stats.record_retry();
+                let not_before = now + policy.backoff_secs(att + 1, job.idx as u64);
+                st.retry_queue.push((job.idx, not_before));
+                shared.space.notify_all();
+                return;
+            }
+            if att > 1 {
+                shared.res.stats.record_give_up();
+            }
+            if st.error.is_none() {
+                st.error =
+                    Some(format!("part {} of {name}: {msg} (after {att} attempt(s))", job.idx));
+            }
+            shared.avail.notify_all();
+            shared.space.notify_all();
+        }
+    }
 }
 
 fn worker_loop(
@@ -88,55 +354,18 @@ fn worker_loop(
     len: u64,
     tracer: &Tracer,
 ) {
-    loop {
-        let idx = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if st.cancelled || st.error.is_some() || st.next_issue >= st.n_parts {
-                    return;
-                }
-                if st.next_issue < st.next_deliver + plan.window_parts {
-                    break;
-                }
-                st = shared.space.wait(st).unwrap();
-            }
-            let i = st.next_issue;
-            st.next_issue += 1;
-            i
-        };
-        let offset = idx as u64 * plan.part_size as u64;
+    while let Some(job) = next_job(shared, plan) {
+        let offset = job.idx as u64 * plan.part_size as u64;
         let want = (plan.part_size as u64).min(len - offset);
-        // One Fetch span per ranged GET, sample = part index — on a
-        // remote tier this is where fetch-stall time actually lives.
+        // One span per ranged GET, sample = part index — first attempts
+        // are Fetch (where fetch-stall time lives on a remote tier);
+        // re-issues and hedge duplicates are Retry, so the Chrome trace
+        // separates fault-recovery work from steady-state fetching.
         let span = tracer.start();
         let got = store.read_range(name, offset, want);
-        tracer.record(Stage::Fetch, idx as u64, span);
-        match got {
-            Ok(bytes) => {
-                let short = (bytes.len() as u64) < want;
-                let mut st = shared.state.lock().unwrap();
-                if short && st.error.is_none() {
-                    st.error = Some(format!(
-                        "short read of {name}: part {idx} got {} of {want} bytes",
-                        bytes.len()
-                    ));
-                } else {
-                    st.done.insert(idx, bytes);
-                    shared.depth.set(st.done.len() as u64);
-                }
-                shared.avail.notify_all();
-                shared.space.notify_all();
-            }
-            Err(e) => {
-                let mut st = shared.state.lock().unwrap();
-                if st.error.is_none() {
-                    st.error = Some(format!("{e:#}"));
-                }
-                shared.avail.notify_all();
-                shared.space.notify_all();
-                return;
-            }
-        }
+        let stage = if job.attempt > 1 || job.hedge { Stage::Retry } else { Stage::Fetch };
+        tracer.record(stage, job.idx as u64, span);
+        complete(shared, name, &job, want, got);
     }
 }
 
@@ -161,6 +390,19 @@ impl PrefetchReader {
         plan: PrefetchPlan,
         tracer: Tracer,
     ) -> Result<Self> {
+        Self::open_resilient(store, name, plan, tracer, Resilience::none())
+    }
+
+    /// [`open_traced`](Self::open_traced) with a fault policy: failed
+    /// parts re-issue with backoff through the window and stragglers are
+    /// hedged (see the module docs).
+    pub fn open_resilient(
+        store: Arc<dyn Storage>,
+        name: &str,
+        plan: PrefetchPlan,
+        tracer: Tracer,
+        res: Resilience,
+    ) -> Result<Self> {
         let len = store.len(name).with_context(|| format!("len of {name}"))?;
         let n_parts = (len as usize).div_ceil(plan.part_size);
         let shared = Arc::new(Shared {
@@ -169,12 +411,18 @@ impl PrefetchReader {
                 next_deliver: 0,
                 n_parts,
                 done: BTreeMap::new(),
+                inflight: HashMap::new(),
+                retry_queue: Vec::new(),
+                attempts: HashMap::new(),
+                latencies: VecDeque::new(),
                 error: None,
                 cancelled: false,
             }),
             avail: Condvar::new(),
             space: Condvar::new(),
             depth: Gauge::new(),
+            t0: Instant::now(),
+            res,
         });
         let n_workers = plan.conns.min(n_parts.max(1));
         let mut workers = Vec::with_capacity(n_workers);
@@ -193,6 +441,7 @@ impl PrefetchReader {
                 Err(e) => {
                     // A partial pool must not leak: cancel and reap the
                     // workers already running before surfacing the error.
+                    // poison: see `next_job` — scheduler bookkeeping only.
                     shared.state.lock().unwrap().cancelled = true;
                     shared.space.notify_all();
                     shared.avail.notify_all();
@@ -213,6 +462,7 @@ impl PrefetchReader {
 
     /// Block until the next in-order part is ready; Ok(false) = EOF.
     fn next_part(&mut self) -> std::io::Result<bool> {
+        // poison: see `next_job` — scheduler bookkeeping only.
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if let Some(bytes) = st.done.remove(&st.next_deliver) {
@@ -230,6 +480,7 @@ impl PrefetchReader {
             if st.next_deliver >= st.n_parts {
                 return Ok(false); // clean EOF
             }
+            // poison: see `next_job` — scheduler bookkeeping only.
             st = self.shared.avail.wait(st).unwrap();
         }
     }
@@ -252,6 +503,7 @@ impl Read for PrefetchReader {
 impl Drop for PrefetchReader {
     fn drop(&mut self) {
         {
+            // poison: see `next_job` — scheduler bookkeeping only.
             let mut st = self.shared.state.lock().unwrap();
             st.cancelled = true;
         }
@@ -295,6 +547,17 @@ mod tests {
         let m = MemStore::new();
         m.write(name, data);
         Arc::new(m)
+    }
+
+    /// Zero-backoff bounded retry for tests (no wall-clock waits).
+    fn fast_retry(attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            attempts,
+            base_backoff: 0.0,
+            max_backoff: 0.0,
+            deadline: f64::INFINITY,
+            seed: 1,
+        }
     }
 
     #[test]
@@ -434,5 +697,205 @@ mod tests {
             dump.tracks.iter().any(|t| t.label.starts_with("prefetch-")),
             "spans must land on the prefetch workers' tracks"
         );
+    }
+
+    /// Storage whose first read of each range fails transiently; the
+    /// retry (occurrence 2+) succeeds.
+    struct FlakyFirst {
+        inner: MemStore,
+        seen: Mutex<std::collections::HashSet<u64>>,
+        fails: AtomicU64,
+    }
+
+    impl Storage for FlakyFirst {
+        fn read(&self, name: &str) -> Result<Arc<[u8]>> {
+            self.inner.read(name)
+        }
+        fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
+            // poison: test-only set insert under the lock.
+            if self.seen.lock().unwrap().insert(offset) {
+                self.fails.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("transient glitch at offset {offset}");
+            }
+            self.inner.read_range(name, offset, len)
+        }
+        fn len(&self, name: &str) -> Result<u64> {
+            self.inner.len(name)
+        }
+        fn list(&self) -> Result<Vec<String>> {
+            self.inner.list()
+        }
+        fn stats(&self) -> (u64, u64) {
+            self.inner.stats()
+        }
+    }
+
+    /// The window-re-issue path: every part fails once, every part is
+    /// re-issued and delivered, the stream stays byte-identical, and the
+    /// retry counters see each re-attempt.
+    #[test]
+    fn transient_part_failures_reissue_and_complete() {
+        let data = blob(64 * 1024); // 16 parts of 4 KiB
+        let inner = MemStore::new();
+        inner.write("b", data.clone());
+        let store: Arc<dyn Storage> = Arc::new(FlakyFirst {
+            inner,
+            seen: Mutex::new(std::collections::HashSet::new()),
+            fails: AtomicU64::new(0),
+        });
+        let stats = Arc::new(RetryStats::default());
+        let res = Resilience::new(fast_retry(4), false, stats.clone());
+        let mut r = PrefetchReader::open_resilient(
+            store,
+            "b",
+            PrefetchPlan::new(4, 4096, 8 * 4096),
+            Tracer::off(),
+            res,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data, "retried stream must stay byte-identical");
+        let (retries, _, give_ups) = stats.snapshot();
+        assert_eq!(retries, 16, "each of the 16 parts fails once then recovers");
+        assert_eq!(give_ups, 0);
+    }
+
+    /// Retried attempts show up as `retry` spans (first attempts stay
+    /// `fetch`), so the Chrome trace separates recovery work.
+    #[test]
+    fn retried_attempts_record_retry_spans() {
+        let data = blob(16 * 1024); // 4 parts
+        let inner = MemStore::new();
+        inner.write("b", data.clone());
+        let store: Arc<dyn Storage> = Arc::new(FlakyFirst {
+            inner,
+            seen: Mutex::new(std::collections::HashSet::new()),
+            fails: AtomicU64::new(0),
+        });
+        let tracer = Tracer::new(1.0);
+        let res = Resilience::new(fast_retry(4), false, Arc::default());
+        let mut r = PrefetchReader::open_resilient(
+            store,
+            "b",
+            PrefetchPlan::new(2, 4096, 8 * 4096),
+            tracer.clone(),
+            res,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+        drop(r);
+        let dump = tracer.drain();
+        let spans: Vec<(Stage, u64)> = dump
+            .tracks
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .map(|s| (s.stage, s.sample))
+            .collect();
+        let fetches = spans.iter().filter(|(st, _)| *st == Stage::Fetch).count();
+        let retries = spans.iter().filter(|(st, _)| *st == Stage::Retry).count();
+        assert_eq!(fetches, 4, "one first-attempt fetch span per part");
+        assert_eq!(retries, 4, "one retry span per re-issued part");
+    }
+
+    /// Exhausting the retry budget fails the stream with the part and
+    /// attempt count — bounded, loud degradation instead of a hang.
+    #[test]
+    fn exhausted_retries_surface_part_and_attempts() {
+        let inner = MemStore::new();
+        inner.write("b", blob(16 * 1024));
+        let store: Arc<dyn Storage> =
+            Arc::new(FailAfter { inner, limit: 8 * 1024, reads: AtomicU64::new(0) });
+        let stats = Arc::new(RetryStats::default());
+        let res = Resilience::new(fast_retry(3), false, stats.clone());
+        let mut r = PrefetchReader::open_resilient(
+            store,
+            "b",
+            PrefetchPlan::new(2, 4096, 8 * 4096),
+            Tracer::off(),
+            res,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        let err = r.read_to_end(&mut out).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("after 3 attempt(s)"), "{msg}");
+        assert!(msg.contains("connection reset"), "{msg}");
+        let (retries, _, give_ups) = stats.snapshot();
+        assert!(retries >= 2, "both failing parts should have retried: {retries}");
+        assert!(give_ups >= 1, "exhaustion must be counted: {give_ups}");
+    }
+
+    /// Storage where one part's *first* read stalls for a long time;
+    /// every other read (including the hedge duplicate of the stalled
+    /// part) is instant.
+    struct OneStraggler {
+        inner: MemStore,
+        slow_offset: u64,
+        stalled: AtomicU64,
+    }
+
+    impl Storage for OneStraggler {
+        fn read(&self, name: &str) -> Result<Arc<[u8]>> {
+            self.inner.read(name)
+        }
+        fn read_range(&self, name: &str, offset: u64, len: u64) -> Result<Arc<[u8]>> {
+            if offset == self.slow_offset
+                && self.stalled.fetch_add(1, Ordering::Relaxed) == 0
+            {
+                std::thread::sleep(std::time::Duration::from_millis(300));
+            }
+            self.inner.read_range(name, offset, len)
+        }
+        fn len(&self, name: &str) -> Result<u64> {
+            self.inner.len(name)
+        }
+        fn list(&self) -> Result<Vec<String>> {
+            self.inner.list()
+        }
+        fn stats(&self) -> (u64, u64) {
+            self.inner.stats()
+        }
+    }
+
+    /// Hedging: the straggling part is duplicated once its age passes
+    /// the trailing p95, the duplicate wins, the stream finishes *long*
+    /// before the straggler's 300 ms stall, and the win is counted.
+    #[test]
+    fn hedged_duplicate_beats_straggler() {
+        let data = blob(128 * 1024); // 32 parts of 4 KiB
+        let inner = MemStore::new();
+        inner.write("b", data.clone());
+        // Stall a late part so the p95 estimate (8+ samples) is warm by
+        // the time the straggler is issued.
+        let store: Arc<dyn Storage> = Arc::new(OneStraggler {
+            inner,
+            slow_offset: 20 * 4096,
+            stalled: AtomicU64::new(0),
+        });
+        let stats = Arc::new(RetryStats::default());
+        let res = Resilience::new(fast_retry(1), true, stats.clone());
+        let t0 = Instant::now();
+        let mut r = PrefetchReader::open_resilient(
+            store,
+            "b",
+            PrefetchPlan::new(4, 4096, 16 * 4096),
+            Tracer::off(),
+            res,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data, "hedged stream must stay byte-identical");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(250),
+            "hedge must beat the 300ms straggler (took {:?})",
+            t0.elapsed()
+        );
+        let (_, hedges_won, _) = stats.snapshot();
+        assert!(hedges_won >= 1, "the duplicate's win must be counted");
+        drop(r); // the stalled loser thread joins here without wedging
     }
 }

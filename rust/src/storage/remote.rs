@@ -117,6 +117,8 @@ impl Semaphore {
     }
 
     fn acquire(&self) {
+        // poison: only the counter +=/-= runs under this lock (here and
+        // in `release`) — no panic path.
         let mut free = self.free.lock().unwrap();
         while *free == 0 {
             free = self.cv.wait(free).unwrap();
@@ -125,6 +127,7 @@ impl Semaphore {
     }
 
     fn release(&self) {
+        // poison: see `acquire`.
         *self.free.lock().unwrap() += 1;
         self.cv.notify_one();
     }
@@ -185,6 +188,8 @@ impl<S: Storage> RemoteStore<S> {
         let now = self.now();
         // Request-rate admission: starts are spaced 1/max_rps apart.
         let start = if self.profile.max_rps > 0.0 {
+            // poison: float bookkeeping only under both pacing locks
+            // (this one and `bw_busy_until` below).
             let mut next = self.next_request_at.lock().unwrap();
             let s = next.max(now);
             *next = s + self.time_scale / self.profile.max_rps;
@@ -196,6 +201,7 @@ impl<S: Storage> RemoteStore<S> {
         // latency share overlaps across connections (the whole point).
         let xfer_agg = len as f64 / self.profile.agg_bw * self.time_scale;
         let bw_done = {
+            // poison: see the pacing note above.
             let mut busy = self.bw_busy_until.lock().unwrap();
             let s = busy.max(start);
             *busy = s + xfer_agg;

@@ -1,0 +1,282 @@
+//! Retry policy for remote/faulty reads: bounded attempts with
+//! exponential backoff + deterministic jitter under a per-request
+//! deadline.
+//!
+//! Object stores fail as a matter of course — transient 5xx, dropped
+//! connections, 503 SlowDown throttling — and the standard client cure
+//! (what the AWS SDKs and s3bfg-style fetchers do) is to retry with
+//! exponential backoff and jitter, giving up only when a per-request
+//! time budget is exhausted.  The policy here is deliberately small and
+//! *deterministic*: jitter derives from a seed + request key, never from
+//! wall-clock entropy, so a failing run replays exactly under the same
+//! seed (the property `storage/faults.rs` injection is built around).
+//!
+//! Two consumers:
+//! * [`with_retry`] — inline loop around a blocking read (the runner's
+//!   raw-file path).
+//! * `storage/prefetch.rs` — re-issues failed parts through its sliding
+//!   window instead of looping inline, so a backoff never parks a
+//!   connection; it uses [`RetryPolicy::backoff_secs`] and
+//!   [`RetryStats`] directly.
+
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Bounded-retry policy.  `attempts` counts *total* tries, so `1`
+/// disables retrying entirely (the pre-fault-layer behavior).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Max total attempts per request (1 = no retry).
+    pub attempts: u32,
+    /// First backoff, seconds; doubles per attempt.
+    pub base_backoff: f64,
+    /// Backoff ceiling, seconds.
+    pub max_backoff: f64,
+    /// Per-request wall-clock budget, seconds: once a request has been
+    /// failing for this long, stop retrying even with attempts left.
+    /// Checked between attempts — a blocking read in flight cannot be
+    /// cancelled, so this bounds *queued* retry time, not one read.
+    pub deadline: f64,
+    /// Jitter seed (mixed with the request key per attempt).
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// No retrying at all: first failure surfaces immediately.
+    pub fn none() -> Self {
+        RetryPolicy {
+            attempts: 1,
+            base_backoff: 0.0,
+            max_backoff: 0.0,
+            deadline: f64::INFINITY,
+            seed: 0,
+        }
+    }
+
+    /// `retries` extra attempts after the first, with the default
+    /// backoff/deadline shape (2 ms doubling to 100 ms, 30 s budget).
+    pub fn with_retries(retries: u32, deadline: f64, seed: u64) -> Self {
+        RetryPolicy {
+            attempts: retries + 1,
+            base_backoff: 2e-3,
+            max_backoff: 0.1,
+            deadline,
+            seed,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.attempts > 1
+    }
+
+    /// Backoff before attempt `attempt` (2, 3, ...) of request `key`:
+    /// `base * 2^(attempt-2)`, capped, with deterministic jitter in
+    /// [0.5, 1.0]x — the decorrelation that keeps a burst of failed
+    /// requests from retrying in lockstep, yet replays exactly by seed.
+    pub fn backoff_secs(&self, attempt: u32, key: u64) -> f64 {
+        if self.base_backoff <= 0.0 {
+            return 0.0;
+        }
+        let exp = attempt.saturating_sub(2).min(16);
+        let raw = (self.base_backoff * f64::from(1u32 << exp)).min(self.max_backoff);
+        // SplitMix-style mix of (seed, key, attempt) → one jitter draw.
+        let salt = key
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(u64::from(attempt).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        let mut rng = Rng::new(self.seed ^ salt);
+        raw * (0.5 + 0.5 * rng.f64())
+    }
+}
+
+/// Is this error worth retrying?  Transient markers follow what the
+/// fault injector and the remote tier emit (and what real object-store
+/// clients classify as retryable); anything else — missing blob, parse
+/// error, checksum mismatch — is permanent and fails fast.
+pub fn is_transient(msg: &str) -> bool {
+    ["transient", "503", "SlowDown", "timed out", "timeout", "connection", "short read"]
+        .iter()
+        .any(|m| msg.contains(m))
+}
+
+/// Shared fault-handling telemetry: how often the retry/hedge machinery
+/// actually engaged.  Flows into `RunReport` via the runner.
+#[derive(Debug, Default)]
+pub struct RetryStats {
+    /// Re-attempts performed (attempt 2 and later).
+    pub retries: AtomicU64,
+    /// Hedged duplicate requests that beat the original.
+    pub hedges_won: AtomicU64,
+    /// Requests abandoned after exhausting attempts or the deadline.
+    pub give_ups: AtomicU64,
+}
+
+impl RetryStats {
+    pub fn record_retry(&self) {
+        // ordering: Relaxed — monotonic telemetry counter; read
+        // approximately live or after the pipeline joins.
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_hedge_won(&self) {
+        // ordering: Relaxed — telemetry counter, as `record_retry`.
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_give_up(&self) {
+        // ordering: Relaxed — telemetry counter, as `record_retry`.
+        self.give_ups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (retries, hedges_won, give_ups).
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        // ordering: Relaxed — approximate triple; the three counters
+        // need no mutual consistency.
+        (
+            self.retries.load(Ordering::Relaxed),
+            self.hedges_won.load(Ordering::Relaxed),
+            self.give_ups.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Run `op` under `policy`: retry transient failures with backoff until
+/// success, attempts exhausted, the deadline passes, or a permanent
+/// error surfaces.  `key` identifies the request for jitter replay
+/// (e.g. a sample id or a name hash).
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    stats: &RetryStats,
+    key: u64,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let t0 = Instant::now();
+    let mut attempt = 1u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let give_up = attempt >= policy.attempts
+                    || !is_transient(&msg)
+                    || t0.elapsed().as_secs_f64() >= policy.deadline;
+                if give_up {
+                    if attempt > 1 {
+                        stats.record_give_up();
+                    }
+                    return Err(e.context(format!("after {attempt} attempt(s)")));
+                }
+                attempt += 1;
+                stats.record_retry();
+                let backoff = policy.backoff_secs(attempt, key);
+                if backoff > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(backoff));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_shapes() {
+        assert!(!RetryPolicy::none().enabled());
+        let p = RetryPolicy::with_retries(3, 30.0, 7);
+        assert!(p.enabled());
+        assert_eq!(p.attempts, 4);
+        // Backoff grows but stays within [base/2, max].
+        let b2 = p.backoff_secs(2, 1);
+        let b5 = p.backoff_secs(5, 1);
+        assert!(b2 >= p.base_backoff * 0.5 && b2 <= p.base_backoff, "{b2}");
+        assert!(b5 <= p.max_backoff, "{b5}");
+        // Deterministic by (seed, key, attempt); different keys decorrelate.
+        assert_eq!(p.backoff_secs(3, 42), p.backoff_secs(3, 42));
+        assert_ne!(p.backoff_secs(3, 42), p.backoff_secs(3, 43));
+        assert_eq!(RetryPolicy::none().backoff_secs(2, 1), 0.0);
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(is_transient("transient read error injected"));
+        assert!(is_transient("503 SlowDown (throttled)"));
+        assert!(is_transient("connection reset at offset 4096"));
+        assert!(is_transient("request timed out"));
+        assert!(!is_transient("no blob img/x.mjx"));
+        assert!(!is_transient("record 7: checksum mismatch"));
+    }
+
+    #[test]
+    fn with_retry_recovers_from_transient_failures() {
+        let stats = RetryStats::default();
+        let p = RetryPolicy {
+            attempts: 4,
+            base_backoff: 0.0,
+            max_backoff: 0.0,
+            deadline: f64::INFINITY,
+            seed: 1,
+        };
+        let mut calls = 0;
+        let out = with_retry(&p, &stats, 9, || {
+            calls += 1;
+            anyhow::ensure!(calls >= 3, "transient glitch {calls}");
+            Ok(calls)
+        })
+        .unwrap();
+        assert_eq!(out, 3);
+        assert_eq!(stats.snapshot(), (2, 0, 0));
+    }
+
+    #[test]
+    fn with_retry_fails_fast_on_permanent_errors() {
+        let stats = RetryStats::default();
+        let p = RetryPolicy::with_retries(5, 30.0, 1);
+        let mut calls = 0;
+        let err = with_retry(&p, &stats, 9, || -> Result<()> {
+            calls += 1;
+            anyhow::bail!("no blob x")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "permanent errors must not be retried");
+        assert!(format!("{err:#}").contains("no blob x"));
+        assert_eq!(stats.snapshot(), (0, 0, 0));
+    }
+
+    #[test]
+    fn with_retry_exhausts_attempts_and_reports_them() {
+        let stats = RetryStats::default();
+        let p = RetryPolicy {
+            attempts: 3,
+            base_backoff: 0.0,
+            max_backoff: 0.0,
+            deadline: f64::INFINITY,
+            seed: 1,
+        };
+        let mut calls = 0;
+        let err = with_retry(&p, &stats, 9, || -> Result<()> {
+            calls += 1;
+            anyhow::bail!("transient glitch")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3);
+        assert!(format!("{err:#}").contains("after 3 attempt(s)"), "{err:#}");
+        assert_eq!(stats.snapshot(), (2, 0, 1));
+    }
+
+    #[test]
+    fn with_retry_respects_deadline() {
+        let stats = RetryStats::default();
+        // Zero deadline: the first failure is already over budget.
+        let p = RetryPolicy { deadline: 0.0, ..RetryPolicy::with_retries(10, 0.0, 1) };
+        let mut calls = 0;
+        let err = with_retry(&p, &stats, 9, || -> Result<()> {
+            calls += 1;
+            anyhow::bail!("transient glitch")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "deadline must stop retrying: {err:#}");
+    }
+}

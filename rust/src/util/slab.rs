@@ -170,8 +170,13 @@ impl SlabPool {
     /// it recycles.  Never blocks — outstanding slabs are bounded by the
     /// pipeline's bounded queues, not by the pool.
     pub fn slice(self: &Arc<Self>) -> SlabSlice {
+        // poison: holders of `open` and `free` (here, `recycle`,
+        // `free_len`) only move arenas and bump counters — allocation
+        // aside, nothing under either lock can panic, and an allocation
+        // failure aborts rather than poisons.
         let mut open = self.open.lock().unwrap();
         if open.is_none() {
+            // poison: see above.
             let arena = match self.free.lock().unwrap().pop() {
                 Some(a) => {
                     // ordering: Relaxed — monotonic telemetry counter,
@@ -214,6 +219,7 @@ impl SlabPool {
     }
 
     fn recycle(&self, arena: Arena) {
+        // poison: see `slice` — Vec ops only under this lock.
         let mut free = self.free.lock().unwrap();
         if free.len() < self.max_free {
             free.push(arena);
@@ -235,6 +241,7 @@ impl SlabPool {
 
     /// Idle arenas currently held (≤ `max_free` by construction).
     pub fn free_len(&self) -> usize {
+        // poison: see `slice` — Vec ops only under this lock.
         self.free.lock().unwrap().len()
     }
 }

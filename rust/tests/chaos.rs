@@ -1,0 +1,289 @@
+//! Chaos acceptance tests for the fault-tolerant data plane: seeded
+//! fault injection (`FaultyStore`), retry + hedging (`Resilience`), and
+//! bounded graceful degradation (`Quarantine`), both at the record
+//! stream layer (always run) and through the full coordinator (gated on
+//! `make artifacts`, like the rest of the e2e suite).
+//!
+//! The acceptance gates from the issue:
+//! * seeded 1% faults + retry/hedging => the epoch completes with zero
+//!   trainer-visible errors and goodput within 10% of fault-free;
+//! * faults on + retries off => the same seed reproduces the same
+//!   failure, deterministically;
+//! * skip budget exceeded => the run fails loudly, naming the
+//!   quarantined samples.
+
+use dpp::config::{Method, RunConfig};
+use dpp::coordinator::{self, prepare_data};
+use dpp::dataset::GenConfig;
+use dpp::metrics::trace::Tracer;
+use dpp::pipeline::quarantine::Quarantine;
+use dpp::pipeline::source::stream_shards_resilient;
+use dpp::record::{ShardWriter, REC_HEADER_LEN};
+use dpp::storage::prefetch::Resilience;
+use dpp::storage::{
+    FaultProfile, FaultyStore, MemStore, PrefetchPlan, RetryPolicy, RetryStats, Storage,
+};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+const RECORDS: u64 = 1200;
+const PART: usize = 8 << 10;
+const SHARD: &str = "records/shard-00000.rec";
+
+/// One record shard with variable-length payloads, built once.
+fn shard_bytes() -> &'static Vec<u8> {
+    static BYTES: OnceLock<Vec<u8>> = OnceLock::new();
+    BYTES.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("dpp-chaos-it-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.rec");
+        let mut w = ShardWriter::create(&path).unwrap();
+        for i in 0..RECORDS {
+            w.append(i, (i % 7) as u16, &vec![i as u8; 150 + (i as usize % 277)]).unwrap();
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_dir_all(dir).ok();
+        bytes
+    })
+}
+
+struct StreamOutcome {
+    records: u64,
+    faults: u64,
+    retried: u64,
+    /// Successful reads the backing store served.
+    reads: u64,
+    /// First error the stream surfaced (empty when it completed).
+    error: String,
+}
+
+/// Stream the shard through a seeded fault layer with the given retry
+/// budget; corrupt-record skips go to `quarantine`.
+fn run_stream(spec: &str, retries: u32, quarantine: &Quarantine) -> StreamOutcome {
+    let m = MemStore::new();
+    m.write(SHARD, shard_bytes().clone());
+    let profile = FaultProfile::parse(spec).unwrap().unwrap_or_default();
+    let faulty = Arc::new(FaultyStore::new(m, profile));
+    let store: Arc<dyn Storage> = faulty.clone();
+    let policy = if retries > 0 {
+        RetryPolicy::with_retries(retries, 30.0, 7)
+    } else {
+        RetryPolicy::none()
+    };
+    let stats = Arc::new(RetryStats::default());
+    let res = Resilience::new(policy, true, stats.clone());
+    let mut records = 0u64;
+    let streamed = stream_shards_resilient(
+        store.clone(),
+        &[SHARD.to_string()],
+        PART,
+        PrefetchPlan::new(4, PART, 16 * PART),
+        Tracer::off(),
+        res,
+        |id, e| quarantine.admit(format!("record {id}"), e),
+        |_rec| {
+            records += 1;
+            Ok(true)
+        },
+    );
+    StreamOutcome {
+        records,
+        faults: faulty.counts().total(),
+        retried: stats.snapshot().0,
+        reads: store.stats().1,
+        error: streamed.err().map(|e| format!("{e:#}")).unwrap_or_default(),
+    }
+}
+
+/// Acceptance gate 1, stream layer: 1% seeded transients under
+/// retry+hedging deliver every record with zero consumer-visible errors,
+/// and the goodput overhead (re-issued attempts per delivered read — the
+/// service capacity faults burned) stays within 10% of fault-free.
+#[test]
+fn one_percent_faults_with_retries_complete_within_goodput_budget() {
+    let clean = run_stream("off", 3, &Quarantine::zero());
+    assert_eq!(clean.records, RECORDS);
+    assert_eq!((clean.faults, clean.retried), (0, 0), "baseline must be untouched");
+    assert!(clean.error.is_empty(), "{}", clean.error);
+
+    let faulty = run_stream("transient=0.01,seed=7", 3, &Quarantine::zero());
+    assert_eq!(faulty.records, RECORDS, "faulty epoch must still deliver every record");
+    assert!(faulty.error.is_empty(), "trainer saw an error: {}", faulty.error);
+    assert!(faulty.faults > 0, "1% profile injected nothing — seed drift?");
+    let overhead = faulty.retried as f64 / faulty.reads.max(1) as f64;
+    assert!(
+        overhead <= 0.10,
+        "goodput overhead {:.1}% exceeds the 10% budget",
+        overhead * 100.0
+    );
+}
+
+/// Acceptance gate 2, stream layer: with retries disabled the stream
+/// fails — and the same seed replays the identical failure, fault for
+/// fault, so a chaos run is a reproducible bug report.
+#[test]
+fn retries_off_fails_and_same_seed_replays_the_same_failure() {
+    let a = run_stream("transient=0.5,seed=7", 0, &Quarantine::zero());
+    assert!(!a.error.is_empty(), "50% transients with no retries must fail");
+    assert!(a.records < RECORDS);
+    let b = run_stream("transient=0.5,seed=7", 0, &Quarantine::zero());
+    assert_eq!(a.error, b.error, "same seed must reproduce the same failure");
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.records, b.records);
+}
+
+/// Payload corruption (bit flips survive retries — they are not read
+/// errors) is absorbed by the skip budget up to its bound, then fails
+/// loudly naming the quarantined records.
+#[test]
+fn skip_budget_absorbs_corrupt_records_then_fails_naming_them() {
+    // Corrupt two known payload bytes: record 0 and a mid-shard record.
+    // Frames are meta (18 B) + payload; record 0's payload starts at
+    // header(16) + 18 = 34, so offset 60 is inside it.  bytes.len()/2
+    // lands mid-payload of a middle record (payloads dwarf metas).
+    let mut bytes = shard_bytes().clone();
+    bytes[60] ^= 0x01;
+    let n = bytes.len();
+    bytes[n / 2] ^= 0x01;
+    assert!(60 > REC_HEADER_LEN as usize);
+
+    let stream = |budget: &Quarantine| {
+        let m = MemStore::new();
+        m.write(SHARD, bytes.clone());
+        let store: Arc<dyn Storage> = Arc::new(m);
+        let mut records = 0u64;
+        let r = stream_shards_resilient(
+            store,
+            &[SHARD.to_string()],
+            PART,
+            PrefetchPlan::new(4, PART, 16 * PART),
+            Tracer::off(),
+            Resilience::none(),
+            |id, e| budget.admit(format!("record {id}"), e),
+            |_rec| {
+                records += 1;
+                Ok(true)
+            },
+        );
+        (records, r)
+    };
+
+    // Budget of 2 (0.2% of 1200 -> floor 2): both skips absorbed.
+    let q = Quarantine::new(2.0 / RECORDS as f64, RECORDS);
+    let (records, r) = stream(&q);
+    r.unwrap();
+    assert_eq!(records, RECORDS - 2, "exactly the two corrupt records are skipped");
+    assert_eq!(q.count(), 2);
+    assert!(q.names().iter().any(|n| n == "record 0"), "{:?}", q.names());
+
+    // Zero tolerance: the first corrupt record fails the stream, and the
+    // error names it with its checksum cause intact.
+    let q0 = Quarantine::zero();
+    let (_, r0) = stream(&q0);
+    let msg = format!("{:#}", r0.unwrap_err());
+    assert!(msg.contains("skip budget exceeded"), "{msg}");
+    assert!(msg.contains("record 0"), "{msg}");
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Full-coordinator chaos runs (gated on `make artifacts`, like the e2e
+// suite: the device loop needs compiled model artifacts).
+// ---------------------------------------------------------------------------
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+fn corpus() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("dpp-chaos-e2e-{}", std::process::id()));
+        prepare_data(&dir, &GenConfig { n_images: 80, ..Default::default() }, 3).unwrap();
+        dir
+    })
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        data_dir: corpus().clone(),
+        artifact_dir: artifact_dir(),
+        model: "resnet_t".into(),
+        batch_size: 8,
+        cpu_workers: 2,
+        steps: 0,
+        lr: 0.2,
+        ..Default::default()
+    }
+}
+
+/// Seeded transients through the whole pipeline: the run completes the
+/// epoch, the trainer sees every image, nothing is quarantined, and the
+/// report carries the fault-plane telemetry.
+#[test]
+fn full_run_completes_under_seeded_transient_faults() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig {
+        method: Method::Record,
+        faults: "transient=0.05,seed=11".into(),
+        ..base_cfg()
+    };
+    let r = coordinator::run(&cfg).unwrap();
+    assert_eq!(r.images, 80, "faulty epoch must still train on every image");
+    assert_eq!(r.samples_skipped, 0);
+    assert!(r.faults_injected > 0, "5% profile injected nothing — seed drift?");
+    assert!(r.retries > 0, "retries absorbed nothing at a 5% fault rate?");
+    assert!(r.losses.iter().all(|(_, l)| l.is_finite()));
+}
+
+/// Give-ups (retries off) with a zero skip budget fail the run loudly,
+/// naming the quarantined sample — and the same seed reproduces the
+/// same failure.
+#[test]
+fn full_run_skip_budget_failure_is_loud_and_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig {
+        method: Method::Raw,
+        faults: "transient=0.9,seed=3".into(),
+        retries: 0,
+        cpu_workers: 1,
+        ..base_cfg()
+    };
+    let msg = format!("{:#}", coordinator::run(&cfg).unwrap_err());
+    assert!(msg.contains("skip budget exceeded"), "{msg}");
+    assert!(msg.contains("raw "), "failure must name the quarantined sample: {msg}");
+    let again = format!("{:#}", coordinator::run(&cfg).unwrap_err());
+    assert_eq!(msg, again, "same seed must reproduce the same failure");
+}
+
+/// A nonzero `--max-skip-rate` absorbs give-ups: the epoch completes
+/// short of a full corpus, and the report counts what was dropped.
+#[test]
+fn full_run_nonzero_skip_budget_degrades_gracefully() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = RunConfig {
+        method: Method::Raw,
+        faults: "transient=0.3,seed=5".into(),
+        retries: 0,
+        max_skip_rate: 1.0,
+        ..base_cfg()
+    };
+    let r = coordinator::run(&cfg).unwrap();
+    assert!(r.samples_skipped > 0, "30% give-ups must quarantine something");
+    assert_eq!(
+        r.images + r.samples_skipped,
+        80,
+        "every sample is either trained on or quarantined"
+    );
+}

@@ -2,8 +2,9 @@
 //! sizes smaller than one record header, and corruption/truncation
 //! surfacing as clean errors (not panics or silent data loss).
 
+use dpp::pipeline::quarantine::Quarantine;
 use dpp::pipeline::source::StorageReader;
-use dpp::record::{parse_shard, ShardReader, ShardWriter, REC_HEADER_LEN};
+use dpp::record::{parse_shard, RecordEvent, ShardReader, ShardWriter, REC_HEADER_LEN};
 use dpp::storage::MemStore;
 use std::io::Cursor;
 use std::path::PathBuf;
@@ -107,6 +108,64 @@ fn corrupted_fnv_surfaces_clean_error() {
     assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
     // Whole-shard parsing agrees.
     assert!(parse_shard(&bytes).is_err());
+}
+
+#[test]
+fn corruption_between_samples_skips_forward_under_budget() {
+    let dir = tmpdir("skip");
+    let path = dir.join("s.rec");
+    let mut w = ShardWriter::create(&path).unwrap();
+    for i in 0..20u64 {
+        w.append(i, 0, &vec![i as u8 + 1; 400]).unwrap();
+    }
+    w.finish().unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_dir_all(dir).ok();
+
+    // Flip one payload byte in two separate records: frames are 18-byte
+    // meta + 400-byte payload after the 16-byte header, so record k's
+    // payload spans [16 + k*418 + 18, 16 + k*418 + 418).
+    bytes[16 + 3 * 418 + 18 + 57] ^= 0x10; // record 3
+    bytes[16 + 11 * 418 + 18 + 200] ^= 0x10; // record 11
+
+    // The fault-tolerant event stream hops both corrupt frames (their
+    // intact length headers are the resync points) and delivers every
+    // other record in order; a 2-skip quarantine budget absorbs them.
+    let q = Quarantine::new(0.1, 20); // floor(0.1 * 20) = 2 skips
+    let mut r = ShardReader::new(Cursor::new(bytes.clone()), 64);
+    let mut got = Vec::new();
+    while let Some(ev) = r.next_event().unwrap() {
+        match ev {
+            RecordEvent::Record(rec) => got.push(rec.id),
+            RecordEvent::Skipped { id, err } => {
+                q.admit(format!("record {id}"), anyhow::anyhow!(err)).unwrap();
+            }
+        }
+    }
+    let want: Vec<u64> = (0..20).filter(|i| *i != 3 && *i != 11).collect();
+    assert_eq!(got, want, "skips must not lose or reorder intact records");
+    assert_eq!(q.count(), 2);
+    assert_eq!(q.names(), ["record 3", "record 11"]);
+
+    // One more corrupt record than the budget: the third skip fails
+    // loudly, naming everything quarantined so far.
+    bytes[16 + 15 * 418 + 18 + 9] ^= 0x10; // record 15
+    let q1 = Quarantine::new(0.1, 20);
+    let mut r = ShardReader::new(Cursor::new(bytes), 64);
+    let err = loop {
+        match r.next_event().unwrap() {
+            Some(RecordEvent::Record(_)) => {}
+            Some(RecordEvent::Skipped { id, err }) => {
+                if let Err(e) = q1.admit(format!("record {id}"), anyhow::anyhow!(err)) {
+                    break e;
+                }
+            }
+            None => panic!("third corrupt record never surfaced"),
+        }
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("skip budget exceeded"), "{msg}");
+    assert!(msg.contains("record 15"), "{msg}");
 }
 
 #[test]
