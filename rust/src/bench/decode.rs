@@ -18,6 +18,10 @@ pub struct DecodeBenchRow {
     pub name: &'static str,
     pub blocks_idct: u64,
     pub blocks_skipped: u64,
+    /// IDCT blocks per fractional scale (`[k]` = the `1/2^k` kernel) —
+    /// sums to `blocks_idct`, so a SIMD speedup measured per kernel in
+    /// `dpp bench simd` can be attributed without guessing the mix.
+    pub blocks_by_scale: [u64; 4],
     pub scale: usize,
     pub ns_per_image: f64,
 }
@@ -28,6 +32,10 @@ impl DecodeBenchRow {
             ("name", Json::str(self.name)),
             ("blocks_idct", Json::num(self.blocks_idct as f64)),
             ("blocks_skipped", Json::num(self.blocks_skipped as f64)),
+            (
+                "blocks_by_scale",
+                Json::arr(self.blocks_by_scale.iter().map(|&n| Json::num(n as f64))),
+            ),
             ("scale", Json::num(self.scale as f64)),
             ("ns_per_image", Json::num(self.ns_per_image)),
         ])
@@ -66,6 +74,7 @@ pub fn run(out: Option<&Path>) -> Result<Json> {
             name: "full",
             blocks_idct: full_blocks,
             blocks_skipped: 0,
+            blocks_by_scale: [full_blocks, 0, 0, 0],
             scale: 1,
             ns_per_image: full.mean_ns,
         },
@@ -73,6 +82,7 @@ pub fn run(out: Option<&Path>) -> Result<Json> {
             name: "fused-roi",
             blocks_idct: roi_stats.blocks_idct,
             blocks_skipped: roi_stats.blocks_skipped,
+            blocks_by_scale: roi_stats.blocks_by_scale,
             scale: 1,
             ns_per_image: roi.mean_ns,
         },
@@ -80,17 +90,27 @@ pub fn run(out: Option<&Path>) -> Result<Json> {
             name: "fused-roi+scale",
             blocks_idct: scaled_stats.blocks_idct,
             blocks_skipped: scaled_stats.blocks_skipped,
+            blocks_by_scale: scaled_stats.blocks_by_scale,
             scale: 1 << scaled_plan.scale_log2,
             ns_per_image: scaled.mean_ns,
         },
     ];
 
     println!("== decode microbench (64x64 q85, crop 40x40 -> out 56) ==");
-    println!("{:<18} {:>12} {:>14} {:>7} {:>14}", "path", "blocks idct", "blocks skipped", "scale", "ns/image");
+    println!(
+        "{:<18} {:>12} {:>14} {:>20} {:>7} {:>14}",
+        "path", "blocks idct", "blocks skipped", "by scale 8/4/2/1", "scale", "ns/image"
+    );
     for r in &rows {
+        let by = r.blocks_by_scale;
         println!(
-            "{:<18} {:>12} {:>14} {:>6}x {:>14.0}",
-            r.name, r.blocks_idct, r.blocks_skipped, r.scale, r.ns_per_image
+            "{:<18} {:>12} {:>14} {:>20} {:>6}x {:>14.0}",
+            r.name,
+            r.blocks_idct,
+            r.blocks_skipped,
+            format!("{}/{}/{}/{}", by[0], by[1], by[2], by[3]),
+            r.scale,
+            r.ns_per_image
         );
     }
     let ratio = full_blocks as f64 / roi_stats.blocks_idct.max(1) as f64;
@@ -139,7 +159,13 @@ mod tests {
         assert_eq!(roi.blocks_idct, 3 * 25);
         assert!(roi.blocks_idct * 2 <= full_blocks, "must halve block ops");
         assert_eq!(roi.blocks_idct + roi.blocks_skipped, full_blocks);
+        // Per-scale attribution: the unscaled ROI is all 1/1-kernel
+        // blocks; the 1/2-scale plan books all of its under scale 1.
+        assert_eq!(roi.blocks_by_scale, [3 * 25, 0, 0, 0]);
         let scaled_plan = DecodePlan::new(3, 64, 64, (0, 0, 32, 32), 16, 3);
         assert_eq!(1 << scaled_plan.scale_log2, 2);
+        let (_, scaled) = codec::decode_cpu_planned(&bytes, &scaled_plan).unwrap();
+        assert_eq!(scaled.blocks_by_scale, [0, 3 * 16, 0, 0]);
+        assert_eq!(scaled.blocks_by_scale.iter().sum::<u64>(), scaled.blocks_idct);
     }
 }

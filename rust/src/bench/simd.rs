@@ -1,0 +1,376 @@
+//! `dpp bench simd` — SIMD kernel microbench (CI smoke).
+//!
+//! Times each vectorized kernel against its scalar reference on hot,
+//! cache-resident working sets and writes `BENCH_simd.json` for the CI
+//! artifact.  Two layers of acceptance:
+//!
+//! * **Bit identity** (always, any ISA): every kernel's vector output is
+//!   asserted `==` scalar *before* any timing — a speedup that changed a
+//!   pixel is a bug, not a result.
+//! * **Speedup gates** (AVX2 only): scaled IDCT and normalize must beat
+//!   scalar by ≥2× and stay within a +10% band of the committed-baseline
+//!   speedups below.  On SSE2-only or non-x86 hosts the timing rows are
+//!   informational (scalar autovectorizes to SSE2-width code, so the
+//!   honest headroom to gate on is AVX2's).
+//!
+//! The sim's `calib::SIMD_*_SPEEDUP` constants are calibrated from these
+//! rows (see DESIGN.md "SIMD kernels").
+
+use crate::bench::Bencher;
+use crate::codec::dct::{dequant_idct_block_level, dequant_idct_block_scaled_level};
+use crate::codec::{qtable_for_quality, EntropyReader, EntropyWriter};
+use crate::ops::{self, AugParams, AugScratch};
+use crate::simd::{detect, SimdLevel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// Committed-baseline AVX2-over-scalar speedups (dev-box measurement);
+/// the regression gate allows a +10% band below each before failing.
+/// `2.2 / 1.10 = 2.0`, so the band floor coincides with the ISSUE's
+/// hard ≥2× acceptance line.
+const BASELINE_IDCT_SPEEDUP: f64 = 2.2;
+const BASELINE_NORM_SPEEDUP: f64 = 2.2;
+const BASELINE_BAND: f64 = 1.10;
+
+/// One benched kernel: scalar vs the best detected tier.
+pub struct SimdBenchRow {
+    pub name: &'static str,
+    /// "block" or "pixel" — what `scalar_ns`/`simd_ns` are per.
+    pub unit: &'static str,
+    pub scalar_ns: f64,
+    pub simd_ns: f64,
+    pub speedup: f64,
+    /// Whether the AVX2 regression gate applies to this row.
+    pub gated: bool,
+}
+
+impl SimdBenchRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("unit", Json::str(self.unit)),
+            ("scalar_ns", Json::num(self.scalar_ns)),
+            ("simd_ns", Json::num(self.simd_ns)),
+            ("speedup", Json::num(self.speedup)),
+            ("gated", Json::Bool(self.gated)),
+        ])
+    }
+}
+
+/// Dense quantized coefficient blocks (every AC nonzero, so the
+/// DC-only fast path never fires and both tiers do full work) plus the
+/// matching qtable.
+fn gen_dense_blocks(n: usize, seed: u64) -> (Vec<[f32; 64]>, [f32; 64]) {
+    let mut rng = Rng::new(seed);
+    let q = qtable_for_quality(85);
+    let blocks = (0..n)
+        .map(|_| {
+            let mut b = [0f32; 64];
+            for v in b.iter_mut() {
+                let mag = 1 + (rng.next_u32() % 50) as i32;
+                let signed = if rng.next_u32() & 1 == 0 { mag } else { -mag };
+                *v = signed as f32;
+            }
+            b
+        })
+        .collect();
+    (blocks, q)
+}
+
+/// A realistic entropy stream: sparse blocks with runs and multi-byte
+/// varint coefficients, plus the decoded reference values.
+fn gen_entropy_stream(nblocks: usize, seed: u64) -> (Vec<u8>, Vec<[i32; 64]>) {
+    let mut rng = Rng::new(seed);
+    let mut buf = Vec::new();
+    let mut writer = EntropyWriter::new(&mut buf);
+    let mut blocks = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        let mut b = [0i32; 64];
+        b[0] = (rng.next_u32() % 4000) as i32 - 2000;
+        // ~12 nonzero ACs per block, occasionally large (multi-byte).
+        for _ in 0..12 {
+            let zi = 1 + (rng.next_u32() % 63) as usize;
+            let mag = 1 + (rng.next_u32() % 300_000) as i32;
+            b[zi] = if rng.next_u32() & 1 == 0 { mag } else { -mag };
+        }
+        writer.write_block(&b).expect("write_block");
+        blocks.push(b);
+    }
+    writer.finish().expect("finish");
+    (buf, blocks)
+}
+
+fn decode_all(buf: &[u8], nblocks: usize, fast: bool) -> Vec<[i32; 64]> {
+    let mut reader = EntropyReader::with_table_decode(buf, fast);
+    let mut out = Vec::with_capacity(nblocks);
+    let mut q = [0i32; 64];
+    for _ in 0..nblocks {
+        reader.read_block(&mut q).expect("read_block");
+        out.push(q);
+    }
+    out
+}
+
+/// Run the microbench; optionally write `BENCH_simd.json` to `out`.
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    run_with(out, 200, true)
+}
+
+/// [`run`] with an explicit per-kernel timing budget and gate switch —
+/// the unit test uses a small budget and no timing gates (timing under
+/// test-harness contention flakes; bit identity is asserted either way).
+pub fn run_with(out: Option<&Path>, budget_ms: u64, gate: bool) -> Result<Json> {
+    let best = detect();
+    let b = Bencher::with_budget(budget_ms);
+    let mut rows = Vec::new();
+
+    // --- scaled IDCT, 8-point (full-resolution kernel), dense blocks ---
+    let nblocks = 64usize;
+    let (blocks, q) = gen_dense_blocks(nblocks, 11);
+    let mut got = [0f32; 64];
+    let mut want = [0f32; 64];
+    for blk in &blocks {
+        dequant_idct_block_level(blk, &q, &mut want, SimdLevel::Scalar);
+        dequant_idct_block_level(blk, &q, &mut got, best);
+        ensure!(got == want, "idct8 not bit-identical at {:?}", best);
+    }
+    let time_idct8 = |level: SimdLevel| {
+        b.run(&format!("idct8:{}", level.name()), || {
+            let mut pix = [0f32; 64];
+            for blk in &blocks {
+                dequant_idct_block_level(blk, &q, &mut pix, level);
+            }
+            pix
+        })
+        .mean_ns
+            / nblocks as f64
+    };
+    let (s, v) = (time_idct8(SimdLevel::Scalar), time_idct8(best));
+    rows.push(SimdBenchRow {
+        name: "idct8",
+        unit: "block",
+        scalar_ns: s,
+        simd_ns: v,
+        speedup: s / v,
+        gated: true,
+    });
+
+    // --- scaled IDCT, 4-point (1/2-scale kernel) ---
+    let mut got4 = [0f32; 16];
+    let mut want4 = [0f32; 16];
+    for blk in &blocks {
+        dequant_idct_block_scaled_level(blk, &q, 1, &mut want4, SimdLevel::Scalar);
+        dequant_idct_block_scaled_level(blk, &q, 1, &mut got4, best);
+        ensure!(got4 == want4, "idct4 not bit-identical at {:?}", best);
+    }
+    let time_idct4 = |level: SimdLevel| {
+        b.run(&format!("idct4:{}", level.name()), || {
+            let mut pix = [0f32; 16];
+            for blk in &blocks {
+                dequant_idct_block_scaled_level(blk, &q, 1, &mut pix, level);
+            }
+            pix
+        })
+        .mean_ns
+            / nblocks as f64
+    };
+    let (s, v) = (time_idct4(SimdLevel::Scalar), time_idct4(best));
+    rows.push(SimdBenchRow {
+        name: "idct4",
+        unit: "block",
+        scalar_ns: s,
+        simd_ns: v,
+        speedup: s / v,
+        gated: false,
+    });
+
+    // --- normalize (L1-resident 3×32×32 tile) ---
+    let hw = 32 * 32;
+    let mut rng = Rng::new(12);
+    let src: Vec<f32> = (0..3 * hw).map(|_| (rng.next_u32() % 256) as f32).collect();
+    let mut dst_s = vec![0f32; 3 * hw];
+    let mut dst_v = vec![0f32; 3 * hw];
+    ops::normalize_into_level(&src, 3, hw, &mut dst_s, SimdLevel::Scalar);
+    ops::normalize_into_level(&src, 3, hw, &mut dst_v, best);
+    ensure!(dst_s == dst_v, "normalize not bit-identical at {:?}", best);
+    let time_norm = |level: SimdLevel| {
+        let mut dst = vec![0f32; 3 * hw];
+        b.run(&format!("normalize:{}", level.name()), || {
+            ops::normalize_into_level(&src, 3, hw, &mut dst, level);
+            dst[0]
+        })
+        .mean_ns
+            / (3 * hw) as f64
+    };
+    let (s, v) = (time_norm(SimdLevel::Scalar), time_norm(best));
+    rows.push(SimdBenchRow {
+        name: "normalize",
+        unit: "pixel",
+        scalar_ns: s,
+        simd_ns: v,
+        speedup: s / v,
+        gated: true,
+    });
+
+    // --- fused resize-bilerp+normalize (48×48 crop of 64×64 → 56×56) ---
+    let (c, h, w, oh, ow) = (3usize, 64usize, 64usize, 56usize, 56usize);
+    let img: Vec<f32> = (0..c * h * w).map(|_| (rng.next_u32() % 256) as f32).collect();
+    let p = AugParams { y0: 4, x0: 4, crop_h: 48, crop_w: 48, flip: false };
+    let mut aug_s = vec![0f32; c * oh * ow];
+    let mut aug_v = vec![0f32; c * oh * ow];
+    let mut scratch = AugScratch::new();
+    ops::augment_fused_view_into_level(
+        &img, c, h, w, (0, 0, h, w), &p, oh, ow, &mut scratch, &mut aug_s,
+        SimdLevel::Scalar,
+    );
+    ops::augment_fused_view_into_level(
+        &img, c, h, w, (0, 0, h, w), &p, oh, ow, &mut scratch, &mut aug_v, best,
+    );
+    ensure!(aug_s == aug_v, "bilerp+normalize not bit-identical at {:?}", best);
+    let time_aug = |level: SimdLevel| {
+        let mut o = vec![0f32; c * oh * ow];
+        let mut sc = AugScratch::new();
+        b.run(&format!("bilerp-norm:{}", level.name()), || {
+            ops::augment_fused_view_into_level(
+                &img, c, h, w, (0, 0, h, w), &p, oh, ow, &mut sc, &mut o, level,
+            );
+            o[0]
+        })
+        .mean_ns
+            / (c * oh * ow) as f64
+    };
+    let (s, v) = (time_aug(SimdLevel::Scalar), time_aug(best));
+    rows.push(SimdBenchRow {
+        name: "bilerp-norm",
+        unit: "pixel",
+        scalar_ns: s,
+        simd_ns: v,
+        speedup: s / v,
+        gated: false,
+    });
+
+    // --- entropy decode: byte-at-a-time reference vs table+window ---
+    let nstream = 256usize;
+    let (stream, blocks_ref) = gen_entropy_stream(nstream, 13);
+    ensure!(
+        decode_all(&stream, nstream, false) == blocks_ref
+            && decode_all(&stream, nstream, true) == blocks_ref,
+        "entropy fast path not identical to slow path"
+    );
+    let time_entropy = |fast: bool| {
+        b.run(if fast { "entropy:table" } else { "entropy:slow" }, || {
+            let mut reader = EntropyReader::with_table_decode(&stream, fast);
+            let mut q = [0i32; 64];
+            for _ in 0..nstream {
+                reader.read_block(&mut q).unwrap();
+            }
+            q[0]
+        })
+        .mean_ns
+            / nstream as f64
+    };
+    let (s, v) = (time_entropy(false), time_entropy(true));
+    rows.push(SimdBenchRow {
+        name: "entropy",
+        unit: "block",
+        scalar_ns: s,
+        simd_ns: v,
+        speedup: s / v,
+        gated: false,
+    });
+
+    println!("== simd microbench (best detected tier: {}) ==", best.name());
+    println!(
+        "{:<14} {:>7} {:>14} {:>14} {:>9} {:>6}",
+        "kernel", "unit", "scalar ns/u", "simd ns/u", "speedup", "gated"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:>7} {:>14.1} {:>14.1} {:>8.2}x {:>6}",
+            r.name, r.unit, r.scalar_ns, r.simd_ns, r.speedup, r.gated
+        );
+    }
+
+    // Regression gates: AVX2 only — that is where the committed baseline
+    // was measured, and scalar autovectorizes to SSE2 width anyway.
+    if gate && best == SimdLevel::Avx2 {
+        for (name, baseline) in
+            [("idct8", BASELINE_IDCT_SPEEDUP), ("normalize", BASELINE_NORM_SPEEDUP)]
+        {
+            let row = rows.iter().find(|r| r.name == name).expect("row exists");
+            let floor = (baseline / BASELINE_BAND).max(2.0);
+            ensure!(
+                row.speedup >= floor,
+                "{name} speedup {:.2}x regressed below {:.2}x \
+                 (committed baseline {:.1}x, +10% band)",
+                row.speedup,
+                floor,
+                baseline
+            );
+        }
+    } else if gate {
+        println!("  (no AVX2 on this host — speedup gates skipped, identity still asserted)");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("simd")),
+        ("detected", Json::str(best.name())),
+        ("baseline_idct_speedup", Json::num(BASELINE_IDCT_SPEEDUP)),
+        ("baseline_norm_speedup", Json::num(BASELINE_NORM_SPEEDUP)),
+        ("baseline_band", Json::num(BASELINE_BAND)),
+        ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The bench's bit-identity layer and JSON shape, with a tiny budget
+    /// and the timing gates off (wall-clock ratios under test-harness
+    /// contention are not a signal; CI's bench smoke step runs them).
+    #[test]
+    fn bench_asserts_identity_and_reports_all_kernels() {
+        let json = run_with(None, 20, false).unwrap();
+        assert_eq!(json.req("bench").as_str(), Some("simd"));
+        assert_eq!(json.req("detected").as_str(), Some(detect().name()));
+        let rows = json.req("rows").as_arr().expect("rows array");
+        let names: Vec<_> =
+            rows.iter().map(|r| r.req("name").as_str().unwrap().to_string()).collect();
+        for want in ["idct8", "idct4", "normalize", "bilerp-norm", "entropy"] {
+            assert!(names.iter().any(|n| n == want), "missing row {want}");
+        }
+        for r in rows {
+            assert!(r.req("scalar_ns").as_f64().unwrap() > 0.0);
+            assert!(r.req("simd_ns").as_f64().unwrap() > 0.0);
+            assert!(r.req("speedup").as_f64().unwrap() > 0.0);
+        }
+    }
+
+    /// The generators feed both decode paths identical, nontrivial data
+    /// (dense IDCT blocks; entropy streams with runs + multi-byte
+    /// varints) — miri-friendly: no timing, no intrinsics.
+    #[test]
+    fn generators_produce_identical_fast_and_slow_decodes() {
+        let n = if cfg!(miri) { 4 } else { 64 };
+        let (stream, blocks) = gen_entropy_stream(n, 99);
+        assert_eq!(decode_all(&stream, n, false), blocks);
+        assert_eq!(decode_all(&stream, n, true), blocks);
+        let (dense, q) = gen_dense_blocks(8, 3);
+        let mut a = [0f32; 64];
+        let mut b = [0f32; 64];
+        for blk in &dense {
+            assert!(blk.iter().all(|&v| v != 0.0), "dense blocks must defeat DC fast path");
+            dequant_idct_block_level(blk, &q, &mut a, SimdLevel::Scalar);
+            dequant_idct_block_level(blk, &q, &mut b, detect());
+            assert_eq!(a, b);
+        }
+    }
+}

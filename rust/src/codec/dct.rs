@@ -75,11 +75,33 @@ pub fn idct_block(coef: &[f32; 64], block: &mut [f32; 64]) {
 }
 
 /// Fused dequantize + IDCT with a DC-only fast path — the decode hot path
-/// (§Perf): quantization zeroes most AC coefficients on natural images,
-/// so flat blocks skip both matrix passes entirely, and the general path
-/// folds the dequant multiply into the first pass with a contiguous,
-/// vectorizable inner loop.
+/// (§Perf).  Dispatches to the process-active SIMD tier (`--simd`); the
+/// scalar kernel below is the portable fallback and the bit-identity
+/// reference (`tests/simd_kernels.rs`).
 pub fn dequant_idct_block(coef: &[f32; 64], q: &[f32; 64], block: &mut [f32; 64]) {
+    dequant_idct_block_level(coef, q, block, crate::simd::active());
+}
+
+/// [`dequant_idct_block`] at an explicit SIMD tier — the per-image hoist
+/// for decode loops (one `active()` read per image, not per block) and
+/// the A/B entry point for the property harness and `dpp bench simd`.
+pub fn dequant_idct_block_level(
+    coef: &[f32; 64],
+    q: &[f32; 64],
+    block: &mut [f32; 64],
+    level: crate::simd::SimdLevel,
+) {
+    if crate::simd::dequant_idct8(coef, q, &DCT_MAT, block, level) {
+        return;
+    }
+    dequant_idct_block_scalar(coef, q, block);
+}
+
+/// Scalar reference kernel: quantization zeroes most AC coefficients on
+/// natural images, so flat blocks skip both matrix passes entirely, and
+/// the general path folds the dequant multiply into the first pass with
+/// a contiguous, vectorizable inner loop.
+pub fn dequant_idct_block_scalar(coef: &[f32; 64], q: &[f32; 64], block: &mut [f32; 64]) {
     // DC-only check: one pass over the ACs (cheap; usually succeeds on
     // smooth content).
     let mut any_ac = 0f32;
@@ -159,12 +181,30 @@ pub fn dequant_idct_block_scaled(
     scale_log2: usize,
     out: &mut [f32],
 ) {
+    dequant_idct_block_scaled_level(coef, q, scale_log2, out, crate::simd::active());
+}
+
+/// [`dequant_idct_block_scaled`] at an explicit SIMD tier.  The 8- and
+/// 4-point kernels vectorize (8 and 4 lanes per row); the 2- and
+/// 1-point kernels stay scalar — 4 and 1 outputs leave nothing to
+/// vectorize — so they are their own A/B reference.
+pub fn dequant_idct_block_scaled_level(
+    coef: &[f32; 64],
+    q: &[f32; 64],
+    scale_log2: usize,
+    out: &mut [f32],
+    level: crate::simd::SimdLevel,
+) {
     match scale_log2 {
         0 => {
             let buf: &mut [f32; 64] = out.try_into().expect("out must be 8x8");
-            dequant_idct_block(coef, q, buf);
+            dequant_idct_block_level(coef, q, buf, level);
         }
-        1 => idct_corner::<4>(coef, q, &*DCT_MAT4, out),
+        1 => {
+            if !crate::simd::dequant_idct4(coef, q, &DCT_MAT4, out, level) {
+                idct_corner::<4>(coef, q, &*DCT_MAT4, out);
+            }
+        }
         2 => idct_corner::<2>(coef, q, &*DCT_MAT2, out),
         3 => {
             assert_eq!(out.len(), 1, "out must be 1x1");
@@ -367,6 +407,57 @@ mod perf_tests {
             dequant_idct_block_scaled(&coef, &q, k, &mut out);
             for &v in &out {
                 assert!((v - want).abs() < 1e-4, "scale 1/{}: {v} vs {want}", 1 << k);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_idct_levels_are_bit_identical_to_scalar() {
+        use crate::simd::{detect, SimdLevel};
+        let levels: Vec<SimdLevel> =
+            [SimdLevel::Sse2, SimdLevel::Avx2].into_iter().filter(|&l| l <= detect()).collect();
+        let mut rng = Rng::new(41);
+        let cases = if cfg!(miri) { 8 } else { 200 };
+        for case in 0..cases {
+            let mut coef = [0f32; 64];
+            coef[0] = rng.uniform(-500.0, 500.0).round() as f32;
+            match case % 4 {
+                0 => {
+                    // Dense.
+                    for v in coef.iter_mut().skip(1) {
+                        *v = rng.uniform(-200.0, 200.0).round() as f32;
+                    }
+                }
+                1 => {
+                    // Sparse (exercises the zero-row mask).
+                    for v in coef.iter_mut().skip(1) {
+                        if rng.f64() < 0.1 {
+                            *v = rng.uniform(-200.0, 200.0).round() as f32;
+                        }
+                    }
+                }
+                2 => {
+                    // Single nonzero row (every mask pattern over cases).
+                    let k = case % 8;
+                    for j in 0..8 {
+                        coef[k * 8 + j] = rng.uniform(-100.0, 100.0).round() as f32;
+                    }
+                }
+                _ => {} // DC-only fast path.
+            }
+            let mut q = [0f32; 64];
+            for v in q.iter_mut() {
+                *v = rng.uniform(1.0, 60.0).round() as f32;
+            }
+            for scale in 0..=3usize {
+                let n = 8 >> scale;
+                let mut want = vec![0f32; n * n];
+                dequant_idct_block_scaled_level(&coef, &q, scale, &mut want, SimdLevel::Scalar);
+                for &level in &levels {
+                    let mut got = vec![1e9f32; n * n]; // poison
+                    dequant_idct_block_scaled_level(&coef, &q, scale, &mut got, level);
+                    assert_eq!(want, got, "case {case} scale 1/{} {level:?}", 1 << scale);
+                }
             }
         }
     }

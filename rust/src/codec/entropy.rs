@@ -82,14 +82,56 @@ impl<'a> EntropyWriter<'a> {
     }
 }
 
+/// Token classes of the flat 256-entry decode table: every possible
+/// token byte is pre-classified so the hot loop replaces its range
+/// compares with one indexed load (the table-driven half of the SIMD
+/// PR; the table itself is tiny and read-only, so it lives in rodata).
+const TOK_RUN: u8 = 0;
+const TOK_EOB: u8 = 1;
+const TOK_BAD: u8 = 2;
+
+const fn build_token_class() -> [u8; 256] {
+    let mut t = [TOK_BAD; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        if i == EOB as usize {
+            t[i] = TOK_EOB;
+        } else if i <= MAX_RUN as usize {
+            t[i] = TOK_RUN;
+        }
+        i += 1;
+    }
+    t
+}
+
+static TOKEN_CLASS: [u8; 256] = build_token_class();
+
+/// The longest symbol (token + 5-byte varint) a single 64-bit window
+/// load must cover; windows shorter than a full load fall back to the
+/// byte-at-a-time tail.
+const WINDOW_BYTES: usize = 8;
+
 pub struct EntropyReader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// Table-driven fast decode (`--simd`): one unaligned 64-bit load
+    /// per symbol + the flat token table.  `false` pins the
+    /// byte-at-a-time reference loop.  Both paths produce identical
+    /// coefficients, consume identical byte counts, and fail with
+    /// identical errors at identical positions (`tests/simd_kernels.rs`
+    /// drives the A/B).
+    fast: bool,
 }
 
 impl<'a> EntropyReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        EntropyReader { buf, pos: 0 }
+        Self::with_table_decode(buf, crate::simd::entropy_fast())
+    }
+
+    /// [`EntropyReader::new`] with the fast path pinned explicitly —
+    /// the A/B constructor for tests and `dpp bench simd`.
+    pub fn with_table_decode(buf: &'a [u8], fast: bool) -> Self {
+        EntropyReader { buf, pos: 0, fast }
     }
 
     #[inline]
@@ -122,6 +164,15 @@ impl<'a> EntropyReader<'a> {
     /// Read one block into `quantized` (natural order, zigzag inverted
     /// by the caller if it wants scan order — we fill natural directly).
     pub fn read_block(&mut self, quantized: &mut [i32; 64]) -> Result<()> {
+        if self.fast {
+            return self.read_block_table(quantized);
+        }
+        self.read_block_slow(quantized)
+    }
+
+    /// Byte-at-a-time reference decode — the `--simd off` path and the
+    /// oracle the table path is A/B'd against.
+    fn read_block_slow(&mut self, quantized: &mut [i32; 64]) -> Result<()> {
         quantized.fill(0);
         let mut zi = 0usize;
         loop {
@@ -146,6 +197,100 @@ impl<'a> EntropyReader<'a> {
         }
     }
 
+    /// Table-driven decode: while ≥ 8 bytes remain, one unaligned
+    /// little-endian `u64` window covers the longest possible symbol
+    /// (token + 5 varint bytes), the flat table classifies the token,
+    /// and the varint peels off the window without re-touching memory.
+    /// The validation sequence — token class, run bound *before* the
+    /// varint, varint length, overflow position — replicates
+    /// [`read_block_slow`] exactly, so errors, messages, and
+    /// `bytes_consumed` cannot diverge between the paths.
+    fn read_block_table(&mut self, quantized: &mut [i32; 64]) -> Result<()> {
+        quantized.fill(0);
+        // Per-block hoist: one table borrow for the whole coefficient
+        // loop instead of a static re-borrow per symbol.
+        let class = &TOKEN_CLASS;
+        let mut zi = 0usize;
+        loop {
+            if self.buf.len() - self.pos < WINDOW_BYTES {
+                // Near EOF the window no longer fits — finish with the
+                // byte-at-a-time refill (identical semantics).
+                if self.read_pair_slow(quantized, &mut zi)? {
+                    return Ok(());
+                }
+                continue;
+            }
+            let w = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+            let tok = w as u8;
+            match class[tok as usize] {
+                TOK_RUN => {}
+                TOK_EOB => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => {
+                    self.pos += 1;
+                    bail!("bad entropy token {tok:#x}");
+                }
+            }
+            zi += tok as usize;
+            if zi >= 64 {
+                self.pos += 1;
+                bail!("zero run past block end");
+            }
+            // Varint from the window: byte k of w, k = 1..=5.
+            let mut u: u32 = 0;
+            let mut shift = 0;
+            let mut k = 1usize;
+            loop {
+                let b = (w >> (8 * k)) as u8;
+                u |= ((b & 0x7F) as u32) << shift;
+                if b & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+                if shift > 28 {
+                    // Same position the slow path stops at: token + 5
+                    // varint bytes consumed.
+                    self.pos += k + 1;
+                    bail!("varint overflow");
+                }
+                k += 1;
+            }
+            self.pos += k + 1;
+            quantized[zi] = zz_dec(u); // zigzag position, as in the slow path
+            zi += 1;
+            if zi > 64 {
+                bail!("block overflow");
+            }
+        }
+    }
+
+    /// One (token, varint) step of the byte-at-a-time loop — the cold
+    /// refill tail the fast path takes only inside the final 8 bytes of
+    /// the stream.  Returns `true` on EOB.
+    #[cold]
+    fn read_pair_slow(&mut self, quantized: &mut [i32; 64], zi: &mut usize) -> Result<bool> {
+        let tok = self.byte()?;
+        if tok == EOB {
+            return Ok(true);
+        }
+        if tok > MAX_RUN {
+            bail!("bad entropy token {tok:#x}");
+        }
+        *zi += tok as usize;
+        if *zi >= 64 {
+            bail!("zero run past block end");
+        }
+        let v = zz_dec(self.get_varint()?);
+        quantized[*zi] = v;
+        *zi += 1;
+        if *zi > 64 {
+            bail!("block overflow");
+        }
+        Ok(false)
+    }
+
     /// Advance past one block without materializing coefficients — the
     /// fused-decode fast path for blocks outside the crop ROI (§Perf):
     /// the stream is still walked token by token (blocks are
@@ -155,6 +300,13 @@ impl<'a> EntropyReader<'a> {
     /// length, truncation), so a corrupt stream fails identically
     /// whether a block is decoded or skipped.
     pub fn skip_block(&mut self) -> Result<()> {
+        if self.fast {
+            return self.skip_block_table();
+        }
+        self.skip_block_slow()
+    }
+
+    fn skip_block_slow(&mut self) -> Result<()> {
         let mut zi = 0usize;
         loop {
             let tok = self.byte()?;
@@ -174,6 +326,81 @@ impl<'a> EntropyReader<'a> {
                 bail!("block overflow");
             }
         }
+    }
+
+    /// Table-driven [`skip_block`]: the window walk of
+    /// [`read_block_table`] minus the value materialization — same
+    /// validation, same positions.
+    fn skip_block_table(&mut self) -> Result<()> {
+        let class = &TOKEN_CLASS; // hoisted per block, as in read
+        let mut zi = 0usize;
+        loop {
+            if self.buf.len() - self.pos < WINDOW_BYTES {
+                if self.skip_pair_slow(&mut zi)? {
+                    return Ok(());
+                }
+                continue;
+            }
+            let w = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+            let tok = w as u8;
+            match class[tok as usize] {
+                TOK_RUN => {}
+                TOK_EOB => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => {
+                    self.pos += 1;
+                    bail!("bad entropy token {tok:#x}");
+                }
+            }
+            zi += tok as usize;
+            if zi >= 64 {
+                self.pos += 1;
+                bail!("zero run past block end");
+            }
+            let mut shift = 0;
+            let mut k = 1usize;
+            loop {
+                let b = (w >> (8 * k)) as u8;
+                if b & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+                if shift > 28 {
+                    self.pos += k + 1;
+                    bail!("varint overflow");
+                }
+                k += 1;
+            }
+            self.pos += k + 1;
+            zi += 1;
+            if zi > 64 {
+                bail!("block overflow");
+            }
+        }
+    }
+
+    /// Cold byte-at-a-time step for [`skip_block_table`]'s EOF tail.
+    #[cold]
+    fn skip_pair_slow(&mut self, zi: &mut usize) -> Result<bool> {
+        let tok = self.byte()?;
+        if tok == EOB {
+            return Ok(true);
+        }
+        if tok > MAX_RUN {
+            bail!("bad entropy token {tok:#x}");
+        }
+        *zi += tok as usize;
+        if *zi >= 64 {
+            bail!("zero run past block end");
+        }
+        self.skip_varint()?;
+        *zi += 1;
+        if *zi > 64 {
+            bail!("block overflow");
+        }
+        Ok(false)
     }
 
     /// Skip one varint, enforcing the same length bound as `get_varint`.
@@ -326,6 +553,131 @@ mod tests {
                 assert_eq!(a, b2, "prefix {j}");
             }
             assert_eq!(skip.bytes_consumed(), out.len());
+        }
+    }
+
+    #[test]
+    fn table_decode_matches_slow_decode_values_positions_and_errors() {
+        // Valid streams: identical coefficients and positions per block.
+        let mut rng = Rng::new(17);
+        let mut blocks = Vec::new();
+        let n_blocks = if cfg!(miri) { 6 } else { 60 };
+        for _ in 0..n_blocks {
+            let mut b = [0i32; 64];
+            for v in b.iter_mut() {
+                if rng.f64() < 0.2 {
+                    *v = rng.uniform(-100_000.0, 100_000.0) as i32; // multi-byte varints
+                }
+            }
+            blocks.push(b);
+        }
+        blocks.push([0i32; 64]);
+        let mut out = Vec::new();
+        let mut w = EntropyWriter::new(&mut out);
+        for b in &blocks {
+            w.write_block(b).unwrap();
+        }
+        let mut fast = EntropyReader::with_table_decode(&out, true);
+        let mut slow = EntropyReader::with_table_decode(&out, false);
+        for i in 0..blocks.len() {
+            let mut a = [0i32; 64];
+            let mut b2 = [0i32; 64];
+            fast.read_block(&mut a).unwrap();
+            slow.read_block(&mut b2).unwrap();
+            assert_eq!(a, b2, "block {i}");
+            assert_eq!(fast.bytes_consumed(), slow.bytes_consumed(), "block {i}");
+        }
+        assert_eq!(fast.bytes_consumed(), out.len());
+        // Skip path lands at the same positions too.
+        let mut fs = EntropyReader::with_table_decode(&out, true);
+        let mut ss = EntropyReader::with_table_decode(&out, false);
+        for i in 0..blocks.len() {
+            fs.skip_block().unwrap();
+            ss.skip_block().unwrap();
+            assert_eq!(fs.bytes_consumed(), ss.bytes_consumed(), "skip block {i}");
+        }
+        // Every truncation cut and every corrupt prefix must fail both
+        // paths with the same message at the same position.
+        let mut corrupt: Vec<Vec<u8>> = (1..out.len().min(24)).map(|c| out[..out.len() - c].to_vec()).collect();
+        corrupt.push(vec![0x41, 0x00]); // bad token
+        corrupt.push(vec![MAX_RUN - 1, 0x00, MAX_RUN - 1, 0x00, MAX_RUN - 1, 0x00]); // run past end (tail path)
+        corrupt.push(vec![MAX_RUN - 1, 0x00, MAX_RUN - 1, 0x00, MAX_RUN - 1, 0x00, 0, 0, 0, 0]); // run past end (window path)
+        corrupt.push(vec![0x41, 0x00, 0, 0, 0, 0, 0, 0, 0]); // bad token (window path)
+        corrupt.push(vec![0x00, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x00, 0x00]); // varint overflow
+        corrupt.push(vec![0x00, 0x80, 0x80, 0x80, 0x80, 0x80]); // overflow inside the EOF tail
+        corrupt.push(Vec::new()); // empty stream
+        for (ci, bad) in corrupt.iter().enumerate() {
+            let mut fast = EntropyReader::with_table_decode(bad, true);
+            let mut slow = EntropyReader::with_table_decode(bad, false);
+            let mut a = [0i32; 64];
+            let mut b2 = [0i32; 64];
+            let (ea, eb) = loop {
+                match (fast.read_block(&mut a), slow.read_block(&mut b2)) {
+                    (Ok(()), Ok(())) => {
+                        assert_eq!(a, b2, "corrupt case {ci}");
+                        assert_eq!(fast.bytes_consumed(), slow.bytes_consumed(), "case {ci}");
+                    }
+                    (Err(ea), Err(eb)) => break (ea, eb),
+                    (a, b) => panic!("case {ci}: paths diverged: {a:?} vs {b:?}"),
+                }
+            };
+            assert_eq!(format!("{ea:#}"), format!("{eb:#}"), "case {ci}");
+            assert_eq!(fast.bytes_consumed(), slow.bytes_consumed(), "case {ci} error position");
+            // skip_block fails identically too.
+            let mut fast = EntropyReader::with_table_decode(bad, true);
+            let mut slow = EntropyReader::with_table_decode(bad, false);
+            let (ea, eb) = loop {
+                match (fast.skip_block(), slow.skip_block()) {
+                    (Ok(()), Ok(())) => {
+                        assert_eq!(fast.bytes_consumed(), slow.bytes_consumed(), "case {ci}");
+                    }
+                    (Err(ea), Err(eb)) => break (ea, eb),
+                    (a, b) => panic!("case {ci}: skip paths diverged: {a:?} vs {b:?}"),
+                }
+            };
+            assert_eq!(format!("{ea:#}"), format!("{eb:#}"), "skip case {ci}");
+            assert_eq!(fast.bytes_consumed(), slow.bytes_consumed(), "skip case {ci}");
+        }
+    }
+
+    #[test]
+    fn table_decode_refill_at_eof_boundary() {
+        // The fast path's 64-bit window stops fitting inside the last 8
+        // bytes of the stream; the tail refill must decode a symbol that
+        // ends with *exactly* the bytes remaining.  Build a block whose
+        // final coefficient's varint runs flush to the buffer end, and
+        // pad the front so the window path is exercised first.
+        let mut b = [0i32; 64];
+        b[ZIGZAG[0]] = 1_000_000; // earlier symbols keep the window busy
+        b[ZIGZAG[1]] = -2_000_000;
+        b[ZIGZAG[63]] = 100_000; // last symbol: 3-byte varint + EOB at EOF
+        let mut out = Vec::new();
+        EntropyWriter::new(&mut out).write_block(&b).unwrap();
+        for fast in [true, false] {
+            let mut r = EntropyReader::with_table_decode(&out, fast);
+            let mut got = [0i32; 64];
+            r.read_block(&mut got).unwrap();
+            assert_eq!(r.bytes_consumed(), out.len(), "fast={fast}");
+            assert_eq!(got[63], 100_000, "fast={fast}");
+            let mut s = EntropyReader::with_table_decode(&out, fast);
+            s.skip_block().unwrap();
+            assert_eq!(s.bytes_consumed(), out.len(), "skip fast={fast}");
+        }
+        // Streams shorter than one window take the tail refill from the
+        // very first symbol: a 7-byte stream decoded entirely cold.
+        let mut tiny = [0i32; 64];
+        tiny[ZIGZAG[0]] = 70; // 1-byte varint
+        tiny[ZIGZAG[1]] = -900; // 2-byte varint
+        let mut out2 = Vec::new();
+        EntropyWriter::new(&mut out2).write_block(&tiny).unwrap();
+        assert!(out2.len() < 8, "{} bytes", out2.len());
+        for fast in [true, false] {
+            let mut r = EntropyReader::with_table_decode(&out2, fast);
+            let mut got = [0i32; 64];
+            r.read_block(&mut got).unwrap();
+            assert_eq!(got[0], 70, "fast={fast}");
+            assert_eq!(got[1], -900, "fast={fast}");
+            assert_eq!(r.bytes_consumed(), out2.len(), "fast={fast}");
         }
     }
 

@@ -18,8 +18,8 @@
 //! the CPU IDCT here implements the *same math* so both paths agree
 //! (cross-checked in `rust/tests/artifact_parity.rs`).
 
-mod dct;
-mod entropy;
+pub mod dct;
+pub mod entropy;
 mod quant;
 
 pub use dct::{dequant_idct_block, dequant_idct_block_scaled, fdct_block, idct_block, DCT_MAT};
@@ -176,12 +176,14 @@ pub fn coefs_to_image(ci: &CoefImage) -> Image {
     let mut img = Image::new(ci.c, ci.h, ci.w);
     let (bh, bw) = (ci.h / 8, ci.w / 8);
     let mut pix = [0f32; 64];
+    // One atomic read of the SIMD mode per image, not per block.
+    let level = crate::simd::active();
     for ch in 0..ci.c {
         for by in 0..bh {
             for bx in 0..bw {
                 let b = (ch * bh + by) * bw + bx;
                 let src: &[f32; 64] = ci.coefs[b * 64..][..64].try_into().unwrap();
-                dequant_idct_block(src, &ci.qtable, &mut pix);
+                dct::dequant_idct_block_level(src, &ci.qtable, &mut pix, level);
                 let base = ch * ci.h * ci.w + by * 8 * ci.w + bx * 8;
                 for y in 0..8 {
                     let prow = &pix[y * 8..y * 8 + 8];
@@ -235,6 +237,11 @@ pub struct DecodeStats {
     pub blocks_idct: u64,
     /// Blocks entropy-skipped without materializing coefficients.
     pub blocks_skipped: u64,
+    /// IDCT blocks by fractional scale (`blocks_by_scale[k]` counts the
+    /// `1/2^k` kernel, i.e. 8/4/2/1-pixel output), so a bench can
+    /// attribute per-kernel time instead of guessing the scale mix.
+    /// Sums to `blocks_idct`.
+    pub blocks_by_scale: [u64; 4],
 }
 
 impl DecodePlan {
@@ -383,6 +390,8 @@ pub fn decode_cpu_planned_into(
     let mut coef = [0f32; 64];
     let mut pix = [0f32; 64]; // scaled kernels fill only the bs*bs prefix
     let mut stats = DecodeStats::default();
+    // One atomic read of the SIMD mode per image, not per block.
+    let level = crate::simd::active();
     for ch in 0..c {
         for by in 0..bh {
             let in_rows = by >= plan.by0 && by < plan.by1;
@@ -401,8 +410,15 @@ pub fn decode_cpu_planned_into(
                 for (zi, &nat) in ZIGZAG.iter().enumerate() {
                     coef[nat] = quantized[zi] as f32;
                 }
-                dequant_idct_block_scaled(&coef, &q, plan.scale_log2, &mut pix[..bs * bs]);
+                dct::dequant_idct_block_scaled_level(
+                    &coef,
+                    &q,
+                    plan.scale_log2,
+                    &mut pix[..bs * bs],
+                    level,
+                );
                 stats.blocks_idct += 1;
+                stats.blocks_by_scale[plan.scale_log2] += 1;
                 // Same clamp/round as `coefs_to_image`, which is what
                 // keeps the full-scale path bit-identical to it.
                 let base = ch * oh * ow + (by - plan.by0) * bs * ow + (bx - plan.bx0) * bs;
@@ -555,6 +571,21 @@ mod tests {
         assert_eq!(full, planned);
         assert_eq!(stats.blocks_idct, 3 * 8 * 6);
         assert_eq!(stats.blocks_skipped, 0);
+        assert_eq!(stats.blocks_by_scale, [3 * 8 * 6, 0, 0, 0]);
+    }
+
+    #[test]
+    fn per_scale_block_counters_attribute_each_kernel() {
+        let img = smooth_image(11, 3, 64, 64);
+        let bytes = encode(&img, 80).unwrap();
+        for k in 0..4usize {
+            let plan = DecodePlan::full_scaled(3, 64, 64, k);
+            let (_, stats) = decode_cpu_planned(&bytes, &plan).unwrap();
+            let mut want = [0u64; 4];
+            want[k] = 3 * 8 * 8;
+            assert_eq!(stats.blocks_by_scale, want, "scale {k}");
+            assert_eq!(stats.blocks_by_scale.iter().sum::<u64>(), stats.blocks_idct);
+        }
     }
 
     #[test]

@@ -252,6 +252,12 @@ pub struct RunConfig {
     /// augmented output directly into their batch slot and collate
     /// becomes a seal — `off` preserves the per-sample Vec path for A/B.
     pub slab_pool: SlabPoolCfg,
+    /// SIMD kernel dispatch (`--simd on|off|auto`): `auto` (default)
+    /// uses the best ISA tier the CPU reports, `off` pins the scalar
+    /// reference kernels for A/B.  Outputs are bit-identical either
+    /// way (see DESIGN.md "SIMD kernels"), so this is a speed knob,
+    /// never a quality knob.
+    pub simd: crate::simd::SimdMode,
     /// Span tracing (`--trace off|PATH`): `off` (default) disables the
     /// tracer entirely; any other value enables per-stage span recording
     /// and writes a Chrome trace-event JSON (open in Perfetto or
@@ -316,6 +322,7 @@ impl Default for RunConfig {
             fused_decode: true,
             decode_scale: DecodeScale::Fixed(1),
             slab_pool: SlabPoolCfg::Auto,
+            simd: crate::simd::SimdMode::Auto,
             trace: "off".into(),
             trace_sample_rate: 1.0,
             faults: "off".into(),
@@ -377,6 +384,7 @@ impl RunConfig {
             "fused-decode",
             "decode-scale",
             "slab-pool",
+            "simd",
             "trace",
             "trace-sample-rate",
             "faults",
@@ -549,6 +557,9 @@ impl RunConfig {
         if let Some(v) = args.get("slab-pool") {
             self.slab_pool = SlabPoolCfg::parse(v)?;
         }
+        if let Some(v) = args.get("simd") {
+            self.simd = crate::simd::SimdMode::parse(v)?;
+        }
         if let Some(v) = args.get("trace") {
             self.trace = v.to_string();
         }
@@ -604,6 +615,7 @@ impl RunConfig {
             ("fused_decode", Json::Bool(self.fused_decode)),
             ("decode_scale", Json::str(self.decode_scale.name())),
             ("slab_pool", Json::str(&self.slab_pool.name())),
+            ("simd", Json::str(self.simd.name())),
             ("trace", Json::str(&self.trace)),
             ("trace_sample_rate", Json::num(self.trace_sample_rate)),
             ("faults", Json::str(&self.faults)),
@@ -820,6 +832,40 @@ mod tests {
         let mut bad = RunConfig::default();
         let args =
             Args::parse("run --slab-pool maybe".split_whitespace().map(String::from));
+        assert!(bad.apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn simd_flag_parses_validates_and_roundtrips() {
+        use crate::simd::SimdMode;
+        // Default: auto — best detected ISA, bit-identical to scalar.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.simd, SimdMode::Auto);
+        // on | off | auto all parse and round-trip through name().
+        for (s, want) in [
+            ("on", SimdMode::On),
+            ("off", SimdMode::Off),
+            ("auto", SimdMode::Auto),
+        ] {
+            let parsed = SimdMode::parse(s).unwrap();
+            assert_eq!(parsed, want);
+            assert_eq!(SimdMode::parse(parsed.name()).unwrap(), parsed);
+        }
+        for bad in ["", "avx2", "sse2", "1", "maybe"] {
+            assert!(SimdMode::parse(bad).is_err(), "{bad:?} accepted");
+        }
+        // CLI → config → JSON.
+        let mut cfg = RunConfig::default();
+        let args = Args::parse("run --simd off".split_whitespace().map(String::from));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.simd, SimdMode::Off);
+        let parsed = Json::parse(&cfg.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("simd").as_str(), Some("off"));
+        let args = Args::parse("run --simd on".split_whitespace().map(String::from));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.simd, SimdMode::On);
+        let mut bad = RunConfig::default();
+        let args = Args::parse("run --simd fast".split_whitespace().map(String::from));
         assert!(bad.apply_args(&args).is_err());
     }
 

@@ -105,6 +105,10 @@ fn build_storage(cfg: &RunConfig) -> Result<StorageStack> {
 /// Run the full pipeline per the config; returns the run report.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     cfg.validate()?;
+    // Pin the kernel dispatch tier for every worker this run spawns.
+    // Safe even if runs overlap in one process: all tiers are
+    // bit-identical, so a racing mode switch can change speed only.
+    crate::simd::set_mode(cfg.simd);
     let StorageStack { store: storage, remote, faults } = build_storage(cfg)?;
     // Fault tolerance: one retry policy for every storage read — the
     // metadata read below included, since it goes through the (possibly

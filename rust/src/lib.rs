@@ -56,6 +56,11 @@ SUBCOMMANDS
               straight into their batch slot, collate becomes a seal,
               drained batches recycle their arena; N bounds the idle
               arenas kept; off restores the per-sample Vec path for A/B)
+             [--simd on|off|auto] (default auto: vectorized IDCT /
+              resize+normalize / table-driven entropy kernels at the
+              best ISA the CPU reports (AVX2 > SSE2 > scalar); off pins
+              the scalar reference kernels; outputs are bit-identical
+              either way, so this is purely a speed A/B)
              [--trace PATH|off] (default off: per-stage span tracing,
               written as Chrome trace-event JSON — open in Perfetto or
               chrome://tracing; one track per pipeline thread plus
@@ -89,6 +94,9 @@ SUBCOMMANDS
              [--fused-decode on|off] [--decode-scale 1|2|4|8]
              [--slab-pool on|off] (model the zero-copy engine: the
               transform share thins by the collate-copy fraction)
+             [--simd on|off] (model the SIMD kernels: the entropy,
+              transform, and resize+normalize shares thin by the
+              bench-calibrated speedups in sim/calib.rs)
              [--fault-rate P] (model a transient-fault rate: the
               storage ceiling thins by (1-P) — expected attempts per
               delivered read are 1/(1-P))
@@ -109,6 +117,12 @@ SUBCOMMANDS
              microbench: ns/sample untraced vs full-rate traced; fails
              if tracing costs more than the committed 3% limit, plus
              exact span/drop accounting gates)
+  bench      simd [--out BENCH_simd.json] (SIMD kernel microbench:
+             ns/block scaled IDCT + entropy decode, ns/pixel fused
+             resize+normalize and normalize, scalar vs best detected
+             ISA; asserts bit identity before timing and, under AVX2,
+             gates IDCT and normalize at >=2x scalar with a +10% band
+             over the committed-baseline speedups)
   bench      chaos [--out BENCH_chaos.json] (fault-injection smoke: a
              record shard streamed through the seeded fault layer under
              retry+hedging at a sweep of transient rates; gates that 1%
@@ -141,6 +155,7 @@ pub mod pipeline;
 pub mod record;
 pub mod runtime;
 pub mod sim;
+pub mod simd;
 pub mod storage;
 pub mod testing;
 pub mod trainer;

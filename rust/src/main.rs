@@ -6,7 +6,7 @@
 //!   sim         run the calibrated testbed simulator for one scenario
 //!   reproduce   regenerate a paper figure/table (--fig 2|3|4|5|6|t1)
 //!   autoconf    search resource configurations for a model/objective
-//!   bench       counter-based microbenches (currently: decode)
+//!   bench       microbenches: decode, workers, alloc, trace-overhead, chaos, simd
 //!   trace       pretty-print latency/stall tables from a saved run report
 //!   audit       lint the sources for correctness-convention violations
 //!   inspect     print manifest/artifact info
@@ -159,8 +159,13 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::chaos::run(Some(&out))?;
             Ok(())
         }
+        Some("simd") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_simd.json"));
+            dpp::bench::simd::run(Some(&out))?;
+            Ok(())
+        }
         other => bail!(
-            "bench target must be `decode`, `workers`, `alloc`, `trace-overhead`, or `chaos`, got {other:?}"
+            "bench target must be `decode`, `workers`, `alloc`, `trace-overhead`, `chaos`, or `simd`, got {other:?}"
         ),
     }
 }

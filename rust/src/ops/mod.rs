@@ -94,10 +94,21 @@ pub fn sample_aug_params(rng: &mut Rng, h: u32, w: u32) -> AugParams {
 /// sampler.  The allocating entry points build these per call; the
 /// `_into` variants take one from the caller so a worker's steady state
 /// allocates nothing (the zero-copy hot path, `util/slab.rs`).
+///
+/// The column tables are structure-of-arrays and carry `1 − wx`
+/// precomputed (`omwx`): the old loop recomputed that subtraction per
+/// row × column even though it is row-invariant, and the split arrays
+/// are what the SIMD row kernel loads directly (`x0`/`x1` as i32 for
+/// the AVX2 gather).  Both changes are value-identical — f32
+/// subtraction is deterministic — so outputs stay bit-identical
+/// (pinned by `soa_column_tables_match_inline_reference_loop`).
 #[derive(Clone, Debug, Default)]
 pub struct AugScratch {
     ys: Vec<(usize, usize, f32)>,
-    xs: Vec<(usize, usize, f32)>,
+    x0: Vec<i32>,
+    x1: Vec<i32>,
+    wx: Vec<f32>,
+    omwx: Vec<f32>,
 }
 
 impl AugScratch {
@@ -184,6 +195,26 @@ pub fn augment_fused_view_into(
     scratch: &mut AugScratch,
     out: &mut [f32],
 ) {
+    augment_fused_view_into_level(img, c, h, w, view, p, oh, ow, scratch, out, crate::simd::active())
+}
+
+/// [`augment_fused_view_into`] at an explicit SIMD tier — the A/B entry
+/// point for the property harness and `dpp bench simd` (every public
+/// wrapper funnels here with the process-active tier).
+#[allow(clippy::too_many_arguments)]
+pub fn augment_fused_view_into_level(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    view: (usize, usize, usize, usize),
+    p: &AugParams,
+    oh: usize,
+    ow: usize,
+    scratch: &mut AugScratch,
+    out: &mut [f32],
+    level: crate::simd::SimdLevel,
+) {
     let (vy, vx, vh, vw) = view;
     assert_eq!(img.len(), c * vh * vw);
     assert_eq!(out.len(), c * oh * ow);
@@ -209,9 +240,14 @@ pub fn augment_fused_view_into(
         let y1 = (y0 + 1).min(h - 1).min(vy + vh - 1);
         *e = (y0 - vy, y1 - vy, sy - y0 as f32);
     }
-    scratch.xs.clear();
-    scratch.xs.resize(ow, (0usize, 0usize, 0f32));
-    for (j, e) in scratch.xs.iter_mut().enumerate() {
+    // Column tables are row-invariant: index pairs, the lerp weight,
+    // and its complement `1 − wx` are computed once per image here
+    // (the inner loop previously redid the subtraction per row).
+    scratch.x0.clear();
+    scratch.x1.clear();
+    scratch.wx.clear();
+    scratch.omwx.clear();
+    for j in 0..ow {
         let mut ix = (j as f32 + 0.5) * cwf / ow as f32 - 0.5;
         if p.flip {
             ix = (cwf - 1.0) - ix;
@@ -220,7 +256,11 @@ pub fn augment_fused_view_into(
         let sx = (ix + p.x0 as f32).clamp(0.0, (w - 1) as f32);
         let x0 = sx.floor() as usize;
         let x1 = (x0 + 1).min(w - 1).min(vx + vw - 1);
-        *e = (x0 - vx, x1 - vx, sx - x0 as f32);
+        let fx = sx - x0 as f32;
+        scratch.x0.push((x0 - vx) as i32);
+        scratch.x1.push((x1 - vx) as i32);
+        scratch.wx.push(fx);
+        scratch.omwx.push(1.0 - fx);
     }
 
     for ch in 0..c {
@@ -232,12 +272,19 @@ pub fn augment_fused_view_into(
             let r0 = &plane[y0 * vw..y0 * vw + vw];
             let r1 = &plane[y1 * vw..y1 * vw + vw];
             let orow = &mut oplane[i * ow..(i + 1) * ow];
-            for (j, &(x0, x1, wx)) in scratch.xs.iter().enumerate() {
-                let top = r0[x0] * (1.0 - wx) + r0[x1] * wx;
-                let bot = r1[x0] * (1.0 - wx) + r1[x1] * wx;
-                let v = top * (1.0 - wy) + bot * wy;
-                orow[j] = (v - mean) * istd;
-            }
+            crate::simd::bilerp_norm_row(
+                r0,
+                r1,
+                &scratch.x0,
+                &scratch.x1,
+                &scratch.wx,
+                &scratch.omwx,
+                wy,
+                mean,
+                istd,
+                orow,
+                level,
+            );
         }
     }
 }
@@ -319,12 +366,16 @@ pub fn resize_bilinear_into(
 
 /// Normalize in place with the ImageNet constants.
 pub fn normalize(img: &mut [f32], c: usize, hw: usize) {
+    normalize_level(img, c, hw, crate::simd::active());
+}
+
+/// [`normalize`] at an explicit SIMD tier (lane-parallel `(v−mean)·istd`
+/// per plane; scalar tier is the bit-identity reference).
+pub fn normalize_level(img: &mut [f32], c: usize, hw: usize, level: crate::simd::SimdLevel) {
     for ch in 0..c {
         let mean = NORM_MEAN[ch.min(2)];
         let istd = 1.0 / NORM_STD[ch.min(2)];
-        for v in &mut img[ch * hw..(ch + 1) * hw] {
-            *v = (*v - mean) * istd;
-        }
+        crate::simd::normalize_inplace(&mut img[ch * hw..(ch + 1) * hw], mean, istd, level);
     }
 }
 
@@ -332,14 +383,23 @@ pub fn normalize(img: &mut [f32], c: usize, hw: usize) {
 /// mean)/std`, the out-of-place sibling of [`normalize`] for hot paths
 /// whose destination is a batch-slab slot.
 pub fn normalize_into(img: &[f32], c: usize, hw: usize, out: &mut [f32]) {
+    normalize_into_level(img, c, hw, out, crate::simd::active());
+}
+
+/// [`normalize_into`] at an explicit SIMD tier.
+pub fn normalize_into_level(
+    img: &[f32],
+    c: usize,
+    hw: usize,
+    out: &mut [f32],
+    level: crate::simd::SimdLevel,
+) {
     assert_eq!(img.len(), c * hw);
     assert_eq!(out.len(), c * hw);
     for ch in 0..c {
         let mean = NORM_MEAN[ch.min(2)];
         let istd = 1.0 / NORM_STD[ch.min(2)];
-        for (o, &v) in out[ch * hw..(ch + 1) * hw].iter_mut().zip(&img[ch * hw..(ch + 1) * hw]) {
-            *o = (v - mean) * istd;
-        }
+        crate::simd::normalize_copy(&img[ch * hw..(ch + 1) * hw], &mut out[ch * hw..(ch + 1) * hw], mean, istd, level);
     }
 }
 
@@ -528,6 +588,76 @@ mod tests {
             let mut n2 = vec![0f32; img.len()];
             normalize_into(&img, c, h * w, &mut n2);
             assert_eq!(n, n2, "normalize round {round}");
+        }
+    }
+
+    /// Satellite regression: the SoA column tables with `1 − wx`
+    /// precomputed once per image must be bit-identical to the original
+    /// inner loop (AoS tuples, the subtraction redone per row × column).
+    /// Checked at the scalar tier (isolates the table refactor from the
+    /// vector kernels) and at the detected tier (the full stack).
+    #[test]
+    fn soa_column_tables_match_inline_reference_loop() {
+        let mut rng = Rng::new(55);
+        let mut scratch = AugScratch::new();
+        let rounds = if cfg!(miri) { 4 } else { 40 };
+        for round in 0..rounds {
+            let (c, h, w) = (3usize, 64usize, 64usize);
+            let mut img = ramp_image(c, h, w);
+            img[round % img.len()] = (round % 251) as f32;
+            let p = sample_aug_params(&mut rng, h as u32, w as u32);
+            // Odd output sizes, including non-multiple-of-lane widths.
+            let (oh, ow) = (1 + (round % 8) * 9, 1 + (round % 7) * 11);
+
+            // Reference: the pre-SIMD loop, verbatim (full-image view).
+            let chf = p.crop_h as f32;
+            let cwf = p.crop_w as f32;
+            let mut ys = vec![(0usize, 0usize, 0f32); oh];
+            for (i, e) in ys.iter_mut().enumerate() {
+                let iy = ((i as f32 + 0.5) * chf / oh as f32 - 0.5).clamp(0.0, chf - 1.0);
+                let sy = (iy + p.y0 as f32).clamp(0.0, (h - 1) as f32);
+                let y0 = sy.floor() as usize;
+                let y1 = (y0 + 1).min(h - 1);
+                *e = (y0, y1, sy - y0 as f32);
+            }
+            let mut xs = vec![(0usize, 0usize, 0f32); ow];
+            for (j, e) in xs.iter_mut().enumerate() {
+                let mut ix = (j as f32 + 0.5) * cwf / ow as f32 - 0.5;
+                if p.flip {
+                    ix = (cwf - 1.0) - ix;
+                }
+                let ix = ix.clamp(0.0, cwf - 1.0);
+                let sx = (ix + p.x0 as f32).clamp(0.0, (w - 1) as f32);
+                let x0 = sx.floor() as usize;
+                let x1 = (x0 + 1).min(w - 1);
+                *e = (x0, x1, sx - x0 as f32);
+            }
+            let mut want = vec![0f32; c * oh * ow];
+            for ch in 0..c {
+                let plane = &img[ch * h * w..(ch + 1) * h * w];
+                let mean = NORM_MEAN[ch.min(2)];
+                let istd = 1.0 / NORM_STD[ch.min(2)];
+                let oplane = &mut want[ch * oh * ow..(ch + 1) * oh * ow];
+                for (i, &(y0, y1, wy)) in ys.iter().enumerate() {
+                    let r0 = &plane[y0 * w..y0 * w + w];
+                    let r1 = &plane[y1 * w..y1 * w + w];
+                    let orow = &mut oplane[i * ow..(i + 1) * ow];
+                    for (j, &(x0, x1, wx)) in xs.iter().enumerate() {
+                        let top = r0[x0] * (1.0 - wx) + r0[x1] * wx;
+                        let bot = r1[x0] * (1.0 - wx) + r1[x1] * wx;
+                        let v = top * (1.0 - wy) + bot * wy;
+                        orow[j] = (v - mean) * istd;
+                    }
+                }
+            }
+
+            for level in [crate::simd::SimdLevel::Scalar, crate::simd::detect()] {
+                let mut got = vec![0f32; c * oh * ow];
+                augment_fused_view_into_level(
+                    &img, c, h, w, (0, 0, h, w), &p, oh, ow, &mut scratch, &mut got, level,
+                );
+                assert_eq!(want, got, "round {round} {level:?} {p:?} {oh}x{ow}");
+            }
         }
     }
 

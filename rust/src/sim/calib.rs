@@ -83,6 +83,25 @@ pub const FUSED_BLOCK_FRACTION: f64 = 0.85;
 /// ratio a few points but must stay inside the band.
 pub const COPY_SHARE: f64 = 4.0 / 13.0;
 
+/// Measured speedups of the `--simd` kernel tier over the scalar
+/// reference, from `dpp bench simd` on the dev box (AVX2), used by the
+/// sim to thin the corresponding Fig. 3 shares when modeling `--simd
+/// on`.  Calibrated like `COPY_SHARE`/`FUSED_BLOCK_FRACTION`: a single
+/// committed number per share, validated against the live bench's
+/// regression gate (BENCH_simd.json, +10% band) rather than remeasured
+/// per run.
+///
+/// Entropy decode: the 64-bit-window + flat-class-table reader is
+/// refill-bound, not lane-parallel, so its gain is the smallest.
+pub const SIMD_ENTROPY_SPEEDUP: f64 = 1.5;
+/// Dequant+IDCT transform: 8-lane row/column passes (the bench's
+/// >=2x-at-AVX2 gate, plus headroom measured on dense blocks).
+pub const SIMD_XFORM_SPEEDUP: f64 = 2.6;
+/// Resize+normalize (the vectorizable augment sub-shares; crop and flip
+/// are index shuffles the vector ISA does not help): fused
+/// gather-bilerp-normalize rows at 8 pixels per iteration.
+pub const SIMD_AUG_SPEEDUP: f64 = 2.3;
+
 /// Mean encoded image size (ImageNet-train JPEG average ≈ 110 KB).
 pub const IMG_BYTES: f64 = 110_000.0;
 
@@ -231,6 +250,15 @@ mod tests {
         // desynchronize it from the bench-alloc validation band.
         assert!((COPY_SHARE - 4.0 / 13.0).abs() < 1e-12);
         assert!((0.0..1.0).contains(&COPY_SHARE));
+        // SIMD speedups are ratios > 1 (a value < 1 would model the
+        // vector tier as a slowdown — a calibration typo, not a tune).
+        for (name, s) in [
+            ("entropy", SIMD_ENTROPY_SPEEDUP),
+            ("xform", SIMD_XFORM_SPEEDUP),
+            ("aug", SIMD_AUG_SPEEDUP),
+        ] {
+            assert!(s > 1.0 && s < 10.0, "SIMD_{name}_SPEEDUP = {s} out of range");
+        }
     }
 
     #[test]

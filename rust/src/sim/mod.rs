@@ -70,6 +70,13 @@ pub struct Scenario {
     /// sim's baseline is the paper's per-sample-buffer loader; turn it
     /// on to model our slab engine.
     pub slab_pool: bool,
+    /// SIMD kernels (`--simd on`): the entropy, transform, and
+    /// resize+normalize shares thin by the bench-calibrated speedups
+    /// (`calib::SIMD_*_SPEEDUP`, measured by `dpp bench simd`).  Crop
+    /// and flip are index shuffles the vector ISA does not help, so
+    /// their shares are untouched.  Off by default: the sim's baseline
+    /// is the paper's scalar loader; turn it on to model our kernels.
+    pub simd: bool,
     /// Transient-fault rate on storage reads (`--faults transient=p` in
     /// the engine, with retries on): each faulted read is re-attempted,
     /// so the mean storage service time inflates by `1/(1-p)` — the
@@ -98,6 +105,7 @@ impl Default for Scenario {
             fused_decode: false,
             decode_scale: 1,
             slab_pool: false,
+            simd: false,
             fault_rate: 0.0,
             seconds: 60.0,
             seed: 7,
@@ -146,6 +154,13 @@ impl Scenario {
                 "on" | "true" => true,
                 "off" | "false" => false,
                 _ => anyhow::bail!("sim slab-pool must be on|off, got {v}"),
+            };
+        }
+        if let Some(v) = args.get("simd") {
+            s.simd = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                _ => anyhow::bail!("sim simd must be on|off, got {v}"),
             };
         }
         s.fault_rate = args.get_f64("fault-rate", s.fault_rate);
@@ -210,23 +225,35 @@ impl Scenario {
         // scale applies on the cpu path only — hybrid0's device payload
         // shape pins it to full resolution, exactly like the engine.
         let xform_share = |scaled: bool| -> f64 {
-            if !self.fused_decode {
-                return calib::SHARE_XFORM;
+            let mut x = calib::SHARE_XFORM;
+            if self.fused_decode {
+                x *= calib::FUSED_BLOCK_FRACTION;
+                if scaled {
+                    x /= (self.decode_scale as f64).powi(2);
+                }
             }
-            let mut x = calib::SHARE_XFORM * calib::FUSED_BLOCK_FRACTION;
-            if scaled {
-                x /= (self.decode_scale as f64).powi(2);
+            // SIMD: the vectorized dequant+IDCT thins whatever per-block
+            // work the fused plan left (the two knobs compose).
+            if self.simd {
+                x /= calib::SIMD_XFORM_SPEEDUP;
             }
             x
         };
+        // SIMD: the table-driven 64-bit-window entropy reader thins the
+        // entropy walk in every placement (it always runs on the CPU).
+        let entropy_share = if self.simd {
+            calib::SHARE_ENTROPY / calib::SIMD_ENTROPY_SPEEDUP
+        } else {
+            calib::SHARE_ENTROPY
+        };
         let base = match self.placement {
             Placement::Cpu => {
-                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(true) + self.aug_share())
+                (calib::SHARE_READ + entropy_share + xform_share(true) + self.aug_share())
                     * calib::CPU_PREPROC_MS
             }
-            Placement::Hybrid => (calib::SHARE_READ + calib::SHARE_ENTROPY) * calib::CPU_PREPROC_MS,
+            Placement::Hybrid => (calib::SHARE_READ + entropy_share) * calib::CPU_PREPROC_MS,
             Placement::Hybrid0 => {
-                (calib::SHARE_READ + calib::SHARE_ENTROPY + xform_share(false))
+                (calib::SHARE_READ + entropy_share + xform_share(false))
                     * calib::CPU_PREPROC_MS
             }
         };
@@ -249,7 +276,14 @@ impl Scenario {
         // slower than no cache at all, in the engine and here alike.
         let admit_cost = match (self.placement, self.prep_cache_policy) {
             (Placement::Hybrid, PrepCachePolicy::Lru) if self.prep_cache_gb > 0.0 => {
-                calib::SHARE_XFORM * calib::CPU_PREPROC_MS
+                // The cache-only dequant+IDCT is a CPU transform too, so
+                // the SIMD kernels thin it the same way.
+                let x = if self.simd {
+                    calib::SHARE_XFORM / calib::SIMD_XFORM_SPEEDUP
+                } else {
+                    calib::SHARE_XFORM
+                };
+                x * calib::CPU_PREPROC_MS
             }
             _ => 0.0,
         };
@@ -264,10 +298,20 @@ impl Scenario {
     /// slab path exists only where the CPU hand-off is the final
     /// tensor).
     fn aug_share(&self) -> f64 {
-        if self.slab_pool {
-            calib::SHARE_AUG * (1.0 - calib::COPY_SHARE)
+        // SIMD thins only the lane-parallel augment sub-shares (the
+        // fused resize+normalize rows); crop and flip are index
+        // shuffles the vector ISA does not accelerate.
+        let aug = if self.simd {
+            calib::SHARE_CROP
+                + calib::SHARE_FLIP
+                + (calib::SHARE_RESIZE + calib::SHARE_NORM) / calib::SIMD_AUG_SPEEDUP
         } else {
             calib::SHARE_AUG
+        };
+        if self.slab_pool {
+            aug * (1.0 - calib::COPY_SHARE)
+        } else {
+            aug
         }
     }
 
@@ -910,6 +954,81 @@ mod tests {
         let both = Scenario { fused_decode: true, slab_pool: true, ..base.clone() };
         let fused_only = Scenario { fused_decode: true, ..base.clone() };
         assert!((fused_only.cpu_cost_ms() - both.cpu_cost_ms() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simd_thins_exactly_the_vectorized_shares() {
+        // The model: entropy thins by SIMD_ENTROPY_SPEEDUP everywhere
+        // (the entropy walk is always on the CPU), the transform by
+        // SIMD_XFORM_SPEEDUP where the placement runs it on the CPU,
+        // and only the resize+normalize sub-shares of augment by
+        // SIMD_AUG_SPEEDUP (crop/flip are index shuffles); read is
+        // untouched, as are GPU cost and the storage ceiling.
+        let e_saved = calib::SHARE_ENTROPY * (1.0 - 1.0 / calib::SIMD_ENTROPY_SPEEDUP);
+        let x_saved = calib::SHARE_XFORM * (1.0 - 1.0 / calib::SIMD_XFORM_SPEEDUP);
+        let a_saved = (calib::SHARE_RESIZE + calib::SHARE_NORM)
+            * (1.0 - 1.0 / calib::SIMD_AUG_SPEEDUP);
+        let ms = calib::CPU_PREPROC_MS;
+        for (pl, want) in [
+            (Placement::Cpu, (e_saved + x_saved + a_saved) * ms),
+            (Placement::Hybrid, e_saved * ms),
+            (Placement::Hybrid0, (e_saved + x_saved) * ms),
+        ] {
+            let base = scen("alexnet", 8, 24, pl, Method::Record);
+            let simd = Scenario { simd: true, ..base.clone() };
+            let saved = base.cpu_cost_ms() - simd.cpu_cost_ms();
+            assert!((saved - want).abs() < 1e-9, "{pl:?}: saved {saved} want {want}");
+            assert_eq!(base.gpu_cost_ms(), simd.gpu_cost_ms(), "{pl:?} GPU untouched");
+            assert!(
+                (base.storage_cap_ips() - simd.storage_cap_ips()).abs() < 1e-9,
+                "{pl:?} storage untouched"
+            );
+        }
+        // A CPU-bound scenario strictly speeds up; the default stays the
+        // paper's scalar baseline.
+        let base = scen("alexnet", 8, 24, Placement::Cpu, Method::Record);
+        let simd = Scenario { simd: true, ..base.clone() };
+        assert!(analytic_throughput(&simd) > analytic_throughput(&base));
+        assert!(!Scenario::default().simd);
+        // Composes with the slab pool: the thinned augment share is what
+        // the collate-copy fraction multiplies.
+        let slab = Scenario { slab_pool: true, ..base.clone() };
+        let both = Scenario { simd: true, ..slab.clone() };
+        let want_slab =
+            (e_saved + x_saved + a_saved * (1.0 - calib::COPY_SHARE)) * ms;
+        let saved_slab = slab.cpu_cost_ms() - both.cpu_cost_ms();
+        assert!(
+            (saved_slab - want_slab).abs() < 1e-9,
+            "slab+simd saved {saved_slab} want {want_slab}"
+        );
+        // Composes with the fused decoder: SIMD divides whatever
+        // per-block transform work the fused plan left behind.
+        let fused = Scenario { fused_decode: true, ..base.clone() };
+        let fused_simd = Scenario { simd: true, ..fused.clone() };
+        let want_fused = (e_saved
+            + calib::SHARE_XFORM
+                * calib::FUSED_BLOCK_FRACTION
+                * (1.0 - 1.0 / calib::SIMD_XFORM_SPEEDUP)
+            + a_saved)
+            * ms;
+        let saved_fused = fused.cpu_cost_ms() - fused_simd.cpu_cost_ms();
+        assert!(
+            (saved_fused - want_fused).abs() < 1e-9,
+            "fused+simd saved {saved_fused} want {want_fused}"
+        );
+        // The hit path thins too: cpu-placement cache hits still run the
+        // (now vectorized) resize+normalize on the CPU.
+        let half = calib::decoded_dataset_bytes() / 2.0 / 1e9;
+        let warm = Scenario { prep_cache_gb: half, ..base.clone() };
+        let warm_simd = Scenario { simd: true, ..warm.clone() };
+        let hit = warm.prep_cache_hit();
+        let want_warm =
+            ((1.0 - hit) * (e_saved + x_saved + a_saved) + hit * a_saved) * ms;
+        let saved_warm = warm.cpu_cost_ms() - warm_simd.cpu_cost_ms();
+        assert!(
+            (saved_warm - want_warm).abs() < 1e-9,
+            "warm saved {saved_warm} want {want_warm}"
+        );
     }
 
     #[test]

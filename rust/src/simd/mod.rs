@@ -1,0 +1,814 @@
+//! SIMD kernel layer for the four hottest preprocessing loops (§Perf,
+//! DESIGN.md "SIMD kernels"): the 8/4-point scaled IDCT, the fused
+//! bilinear-sample+normalize row, the normalize copy, and (via
+//! `codec/entropy.rs`) the table-driven entropy decode.
+//!
+//! Dispatch strategy: `std::arch` x86-64 intrinsics with SSE2 as the
+//! baseline tier (architecturally guaranteed on x86_64, no runtime
+//! check) and AVX2 selected by `is_x86_feature_detected!` once per
+//! process.  The scalar code stays the portable fallback — every other
+//! target, miri, and `--simd off` — and the A/B reference.
+//!
+//! **Bit-identity policy**: every vector kernel performs the *same*
+//! per-lane f32 operations in the *same* order as its scalar reference —
+//! separate multiply and add intrinsics (no FMA contraction), identical
+//! accumulation order, identical zero-row masks — so outputs are
+//! bit-identical (`assert_eq!`, not tolerance) across Scalar/Sse2/Avx2.
+//! That invariant is what makes the process-global mode switch benign:
+//! a thread racing `set_mode` can only ever observe a level whose output
+//! is bit-for-bit the same.  `tests/simd_kernels.rs` is the enforcing
+//! property harness.
+//!
+//! Intrinsic paths are gated `#[cfg(all(target_arch = "x86_64",
+//! not(miri)))]`: miri cannot execute vendor intrinsics, so under miri
+//! (and on every non-x86 target) `detect()` reports `Scalar` and the
+//! dispatch/fallback logic itself stays checkable.
+
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set tier a kernel call runs at.  Ordered: a level only
+/// ever *adds* lanes, so clamping with `min(detect())` is always sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    Scalar = 0,
+    Sse2 = 1,
+    Avx2 = 2,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The `--simd` flag: `off` pins the scalar reference path, `on` and
+/// `auto` both resolve to the best runtime-detected ISA (`on` is the
+/// explicit A/B spelling; on a target with no SIMD tier it still
+/// resolves to scalar rather than failing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    Off,
+    On,
+    #[default]
+    Auto,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" => SimdMode::Off,
+            "on" => SimdMode::On,
+            "auto" => SimdMode::Auto,
+            _ => bail!("--simd must be on|off|auto, got {s}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::On => "on",
+            SimdMode::Auto => "auto",
+        }
+    }
+}
+
+fn detect_uncached() -> SimdLevel {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        // SSE2 is part of the x86-64 baseline ABI.
+        SimdLevel::Sse2
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    SimdLevel::Scalar
+}
+
+static DETECTED: Lazy<SimdLevel> = Lazy::new(detect_uncached);
+
+/// Best ISA tier this CPU supports (cached; `Scalar` under miri and on
+/// non-x86-64 targets).
+pub fn detect() -> SimdLevel {
+    *DETECTED
+}
+
+const LEVEL_UNSET: u8 = 0xFF;
+
+/// Process-wide active level, set once by the coordinator from the
+/// `--simd` flag.  Safe to read from any worker at any time because all
+/// levels produce bit-identical outputs (see module docs).
+static ACTIVE: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn level_from_u8(v: u8) -> SimdLevel {
+    match v {
+        2 => SimdLevel::Avx2,
+        1 => SimdLevel::Sse2,
+        _ => SimdLevel::Scalar,
+    }
+}
+
+/// Resolve a mode to the level it pins (pure; `set_mode` stores this).
+pub fn resolve_mode(mode: SimdMode) -> SimdLevel {
+    match mode {
+        SimdMode::Off => SimdLevel::Scalar,
+        SimdMode::On | SimdMode::Auto => detect(),
+    }
+}
+
+/// Install the `--simd` mode for the process (called by
+/// `coordinator::run` before any decode work starts).
+pub fn set_mode(mode: SimdMode) {
+    let level = resolve_mode(mode);
+    // ordering: Relaxed — a standalone u8 with no payload to publish;
+    // every level yields bit-identical outputs, so a racing reader that
+    // observes a stale level is semantically invisible.
+    ACTIVE.store(level as u8, Ordering::Relaxed);
+}
+
+/// The level hot paths should run at (defaults to `detect()` until
+/// `set_mode` is called).
+pub fn active() -> SimdLevel {
+    // ordering: Relaxed — see `set_mode`; single independent u8.
+    match ACTIVE.load(Ordering::Relaxed) {
+        LEVEL_UNSET => detect(),
+        v => level_from_u8(v),
+    }
+}
+
+/// Whether the entropy reader should take its table-driven fast path
+/// (safe Rust, but A/B-gated with the rest of the SIMD layer so
+/// `--simd off` pins the byte-at-a-time reference loop).
+pub fn entropy_fast() -> bool {
+    active() != SimdLevel::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// Kernel dispatch
+// ---------------------------------------------------------------------------
+
+/// Vectorized fused dequant+IDCT of a full 8×8 block (the scalar
+/// reference is `codec::dct::dequant_idct_block_scalar`).  Returns
+/// `false` when no vector tier applies — the caller then runs scalar.
+pub fn dequant_idct8(
+    coef: &[f32; 64],
+    q: &[f32; 64],
+    c: &[[f32; 8]; 8],
+    block: &mut [f32; 64],
+    level: SimdLevel,
+) -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        match level.min(detect()) {
+            SimdLevel::Avx2 => {
+                // SAFETY: the level is clamped to detect(), which only
+                // reports Avx2 after is_x86_feature_detected!("avx2").
+                unsafe { x86::dequant_idct8_avx2(coef, q, c, block) };
+                return true;
+            }
+            SimdLevel::Sse2 => {
+                x86::dequant_idct8_sse2(coef, q, c, block);
+                return true;
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    let _ = (coef, q, c, block, level);
+    false
+}
+
+/// Vectorized fused dequant + 4-point corner IDCT (scale 1/2; the
+/// scalar reference is `codec::dct`'s `idct_corner::<4>`).  `out` must
+/// hold 16 values.  Returns `false` when no vector tier applies.
+pub fn dequant_idct4(
+    coef: &[f32; 64],
+    q: &[f32; 64],
+    c: &[[f32; 4]; 4],
+    out: &mut [f32],
+    level: SimdLevel,
+) -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        if level.min(detect()) >= SimdLevel::Sse2 {
+            // One __m128 row covers the whole 4-lane output: the same
+            // kernel serves both the Sse2 and Avx2 tiers.
+            x86::dequant_idct4_sse2(coef, q, c, out);
+            return true;
+        }
+    }
+    let _ = (coef, q, c, out, level);
+    false
+}
+
+/// One output row of the fused crop+flip+bilinear+normalize sampler:
+/// `orow[j] = ((r0[x0]·omwx + r0[x1]·wx)·(1−wy) + (r1[x0]·omwx +
+/// r1[x1]·wx)·wy − mean)·istd`, the exact per-lane operation order of
+/// the scalar loop in `ops::augment_fused_view_into`.  Complete in
+/// itself: dispatches to the best tier ≤ `level` and handles the
+/// non-multiple-of-lane tail (and the Scalar tier) with the scalar loop.
+#[allow(clippy::too_many_arguments)]
+pub fn bilerp_norm_row(
+    r0: &[f32],
+    r1: &[f32],
+    x0: &[i32],
+    x1: &[i32],
+    wx: &[f32],
+    omwx: &[f32],
+    wy: f32,
+    mean: f32,
+    istd: f32,
+    orow: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert!(x0.len() >= orow.len() && x1.len() >= orow.len());
+    debug_assert!(wx.len() >= orow.len() && omwx.len() >= orow.len());
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        match level.min(detect()) {
+            SimdLevel::Avx2 => {
+                // SAFETY: level clamped to detect(); AVX2 runtime-verified.
+                unsafe { x86::bilerp_norm_row_avx2(r0, r1, x0, x1, wx, omwx, wy, mean, istd, orow) };
+                return;
+            }
+            SimdLevel::Sse2 => {
+                x86::bilerp_norm_row_sse2(r0, r1, x0, x1, wx, omwx, wy, mean, istd, orow);
+                return;
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    let _ = level;
+    bilerp_norm_row_scalar(r0, r1, x0, x1, wx, omwx, wy, mean, istd, orow);
+}
+
+/// Scalar reference/tail for [`bilerp_norm_row`] — the exact operation
+/// sequence of the pre-SIMD `ops::augment_fused_view_into` inner loop
+/// (`omwx[j]` carries the `1.0 - wx` the old loop recomputed per row,
+/// which is value-identical because f32 subtraction is deterministic).
+#[allow(clippy::too_many_arguments)]
+pub fn bilerp_norm_row_scalar(
+    r0: &[f32],
+    r1: &[f32],
+    x0: &[i32],
+    x1: &[i32],
+    wx: &[f32],
+    omwx: &[f32],
+    wy: f32,
+    mean: f32,
+    istd: f32,
+    orow: &mut [f32],
+) {
+    let omwy = 1.0 - wy;
+    for j in 0..orow.len() {
+        let (a, b) = (x0[j] as usize, x1[j] as usize);
+        let top = r0[a] * omwx[j] + r0[b] * wx[j];
+        let bot = r1[a] * omwx[j] + r1[b] * wx[j];
+        let v = top * omwy + bot * wy;
+        orow[j] = (v - mean) * istd;
+    }
+}
+
+/// Lane-parallel in-place normalize: `v = (v − mean)·istd` (the
+/// `ops::normalize` inner loop).  Complete with scalar tail/fallback.
+pub fn normalize_inplace(buf: &mut [f32], mean: f32, istd: f32, level: SimdLevel) {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        match level.min(detect()) {
+            SimdLevel::Avx2 => {
+                // SAFETY: level clamped to detect(); AVX2 runtime-verified.
+                unsafe { x86::normalize_inplace_avx2(buf, mean, istd) };
+                return;
+            }
+            SimdLevel::Sse2 => {
+                x86::normalize_inplace_sse2(buf, mean, istd);
+                return;
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    let _ = level;
+    for v in buf {
+        *v = (*v - mean) * istd;
+    }
+}
+
+/// Lane-parallel normalized copy: `dst = (src − mean)·istd` (the
+/// `ops::normalize_into` inner loop).  Complete with scalar fallback.
+pub fn normalize_copy(src: &[f32], dst: &mut [f32], mean: f32, istd: f32, level: SimdLevel) {
+    assert_eq!(src.len(), dst.len());
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        match level.min(detect()) {
+            SimdLevel::Avx2 => {
+                // SAFETY: level clamped to detect(); AVX2 runtime-verified.
+                unsafe { x86::normalize_copy_avx2(src, dst, mean, istd) };
+                return;
+            }
+            SimdLevel::Sse2 => {
+                x86::normalize_copy_sse2(src, dst, mean, istd);
+                return;
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    let _ = level;
+    for (o, &v) in dst.iter_mut().zip(src) {
+        *o = (v - mean) * istd;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 kernels
+// ---------------------------------------------------------------------------
+
+// Newer toolchains mark the statically-enabled-feature intrinsics
+// (SSE2 on x86_64) safe, which would flag our `unsafe` blocks as
+// unused; older ones require them.  Keep the blocks (and their SAFETY
+// comments, which `dpp audit` checks) and silence the skew.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+#[allow(unused_unsafe)]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 fused dequant+IDCT, 8 lanes per row pass.  Mirrors
+    /// `dequant_idct_block_scalar` operation-for-operation: the DC-only
+    /// test, the zero-row mask, and both matrix passes accumulate in
+    /// the same per-lane order with separate mul+add (no FMA).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_idct8_avx2(
+        coef: &[f32; 64],
+        q: &[f32; 64],
+        c: &[[f32; 8]; 8],
+        block: &mut [f32; 64],
+    ) {
+        // SAFETY: caller runtime-verified AVX2; all loads/stores are
+        // unaligned variants on pointers derived from in-bounds ranges
+        // of the fixed-size argument arrays.
+        unsafe {
+            let zero = _mm256_setzero_ps();
+            let mut rows = [zero; 8];
+            let mut eq = [0i32; 8];
+            for k in 0..8 {
+                rows[k] = _mm256_loadu_ps(coef.as_ptr().add(k * 8));
+                eq[k] = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(rows[k], zero));
+            }
+            // DC-only fast path: every AC equals ±0.0 — exactly when the
+            // scalar kernel's |AC| sum is 0.0 (a round-to-nearest sum of
+            // non-negative f32s cannot round a positive total to zero,
+            // and |±0.0| = 0.0), and ±0.0 == 0.0 matches the scalar
+            // `v == 0.0` tests.
+            if (eq[0] | 1) == 0xFF && eq[1..].iter().all(|&m| m == 0xFF) {
+                let v = coef[0] * q[0] * 0.125;
+                block.fill(v);
+                return;
+            }
+            // Dequant per row, skipping all-zero rows — the same mask
+            // the scalar kernel derives.
+            let mut fq = [zero; 8];
+            let mut row_mask = 0u8;
+            for k in 0..8 {
+                if eq[k] == 0xFF {
+                    continue;
+                }
+                row_mask |= 1 << k;
+                fq[k] = _mm256_mul_ps(rows[k], _mm256_loadu_ps(q.as_ptr().add(k * 8)));
+            }
+            // Pass 1: tmp = Cᵀ·fq — broadcast(c[k][i])·row(k) summed in
+            // ascending k over the mask.
+            let mut tmp = [0f32; 64];
+            for i in 0..8 {
+                let mut acc = zero;
+                for k in 0..8 {
+                    if row_mask & (1 << k) == 0 {
+                        continue;
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(c[k][i]), fq[k]));
+                }
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(i * 8), acc);
+            }
+            // Pass 2: block = tmp·C — broadcast(tmp[i][k])·C-row(k).
+            for i in 0..8 {
+                let mut acc = zero;
+                for k in 0..8 {
+                    acc = _mm256_add_ps(
+                        acc,
+                        _mm256_mul_ps(_mm256_set1_ps(tmp[i * 8 + k]), _mm256_loadu_ps(c[k].as_ptr())),
+                    );
+                }
+                _mm256_storeu_ps(block.as_mut_ptr().add(i * 8), acc);
+            }
+        }
+    }
+
+    /// SSE2 fused dequant+IDCT: the AVX2 kernel with every 8-lane row
+    /// held as two __m128 halves (lanes 0..4 and 4..8); per-lane
+    /// operations and order are unchanged.
+    pub fn dequant_idct8_sse2(
+        coef: &[f32; 64],
+        q: &[f32; 64],
+        c: &[[f32; 8]; 8],
+        block: &mut [f32; 64],
+    ) {
+        // SAFETY: SSE2 is part of the x86-64 baseline ABI; all
+        // loads/stores are unaligned variants on pointers derived from
+        // in-bounds ranges of the fixed-size argument arrays.
+        unsafe {
+            let zero = _mm_setzero_ps();
+            let mut lo = [zero; 8];
+            let mut hi = [zero; 8];
+            let mut eq = [0i32; 8];
+            for k in 0..8 {
+                lo[k] = _mm_loadu_ps(coef.as_ptr().add(k * 8));
+                hi[k] = _mm_loadu_ps(coef.as_ptr().add(k * 8 + 4));
+                eq[k] = _mm_movemask_ps(_mm_cmpeq_ps(lo[k], zero))
+                    | (_mm_movemask_ps(_mm_cmpeq_ps(hi[k], zero)) << 4);
+            }
+            // DC-only fast path — see the AVX2 kernel for why the ±0.0
+            // equality test matches the scalar |AC|-sum check.
+            if (eq[0] | 1) == 0xFF && eq[1..].iter().all(|&m| m == 0xFF) {
+                let v = coef[0] * q[0] * 0.125;
+                block.fill(v);
+                return;
+            }
+            let mut fq_lo = [zero; 8];
+            let mut fq_hi = [zero; 8];
+            let mut row_mask = 0u8;
+            for k in 0..8 {
+                if eq[k] == 0xFF {
+                    continue;
+                }
+                row_mask |= 1 << k;
+                fq_lo[k] = _mm_mul_ps(lo[k], _mm_loadu_ps(q.as_ptr().add(k * 8)));
+                fq_hi[k] = _mm_mul_ps(hi[k], _mm_loadu_ps(q.as_ptr().add(k * 8 + 4)));
+            }
+            let mut tmp = [0f32; 64];
+            for i in 0..8 {
+                let mut alo = zero;
+                let mut ahi = zero;
+                for k in 0..8 {
+                    if row_mask & (1 << k) == 0 {
+                        continue;
+                    }
+                    let a = _mm_set1_ps(c[k][i]);
+                    alo = _mm_add_ps(alo, _mm_mul_ps(a, fq_lo[k]));
+                    ahi = _mm_add_ps(ahi, _mm_mul_ps(a, fq_hi[k]));
+                }
+                _mm_storeu_ps(tmp.as_mut_ptr().add(i * 8), alo);
+                _mm_storeu_ps(tmp.as_mut_ptr().add(i * 8 + 4), ahi);
+            }
+            for i in 0..8 {
+                let mut alo = zero;
+                let mut ahi = zero;
+                for k in 0..8 {
+                    let t = _mm_set1_ps(tmp[i * 8 + k]);
+                    alo = _mm_add_ps(alo, _mm_mul_ps(t, _mm_loadu_ps(c[k].as_ptr())));
+                    ahi = _mm_add_ps(ahi, _mm_mul_ps(t, _mm_loadu_ps(c[k].as_ptr().add(4))));
+                }
+                _mm_storeu_ps(block.as_mut_ptr().add(i * 8), alo);
+                _mm_storeu_ps(block.as_mut_ptr().add(i * 8 + 4), ahi);
+            }
+        }
+    }
+
+    /// 4-point corner IDCT, one __m128 per output row.  Mirrors
+    /// `idct_corner::<4>`: `acc += (c[u][i]·f[u][v])·c[v][j]` with the
+    /// scalar u-major/v-minor accumulation order — hoisting the scalar
+    /// product `c[u][i]·f[u][v]` is exact because the scalar expression
+    /// parses left-associatively to the same two multiplies.
+    pub fn dequant_idct4_sse2(
+        coef: &[f32; 64],
+        q: &[f32; 64],
+        c: &[[f32; 4]; 4],
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), 16, "out must be 4x4");
+        // 4/8 basis rescale, exactly the scalar kernel's `N as f32/8.0`.
+        let s = 0.5f32;
+        let mut f = [[0f32; 4]; 4];
+        for u in 0..4 {
+            for v in 0..4 {
+                f[u][v] = coef[u * 8 + v] * q[u * 8 + v] * s;
+            }
+        }
+        // SAFETY: SSE2 is part of the x86-64 baseline ABI; loads read
+        // whole `[f32; 4]` rows and the store targets `out[i*4..i*4+4]`,
+        // in bounds per the length assert above.
+        unsafe {
+            let crows = [
+                _mm_loadu_ps(c[0].as_ptr()),
+                _mm_loadu_ps(c[1].as_ptr()),
+                _mm_loadu_ps(c[2].as_ptr()),
+                _mm_loadu_ps(c[3].as_ptr()),
+            ];
+            for i in 0..4 {
+                let mut acc = _mm_setzero_ps();
+                for u in 0..4 {
+                    for v in 0..4 {
+                        acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(c[u][i] * f[u][v]), crows[v]));
+                    }
+                }
+                _mm_storeu_ps(out.as_mut_ptr().add(i * 4), acc);
+            }
+        }
+    }
+
+    /// AVX2 fused bilinear+normalize row: gathers the four taps with
+    /// `vgatherdps`, then the scalar loop's exact mul/add sequence,
+    /// 8 output columns per iteration; scalar tail for the remainder.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bilerp_norm_row_avx2(
+        r0: &[f32],
+        r1: &[f32],
+        x0: &[i32],
+        x1: &[i32],
+        wx: &[f32],
+        omwx: &[f32],
+        wy: f32,
+        mean: f32,
+        istd: f32,
+        orow: &mut [f32],
+    ) {
+        let n = orow.len();
+        // SAFETY: caller runtime-verified AVX2.  Gather indices come
+        // from the interpolation tables, whose entries are clamped
+        // in-bounds for the source rows by `augment_fused_view_into`
+        // (x0/x1 < row length); table and output loads/stores stay
+        // inside `..n`, within every slice per the dispatch asserts.
+        unsafe {
+            let wyv = _mm256_set1_ps(wy);
+            let omwyv = _mm256_set1_ps(1.0 - wy);
+            let meanv = _mm256_set1_ps(mean);
+            let istdv = _mm256_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let ix0 = _mm256_loadu_si256(x0.as_ptr().add(j) as *const __m256i);
+                let ix1 = _mm256_loadu_si256(x1.as_ptr().add(j) as *const __m256i);
+                let wxv = _mm256_loadu_ps(wx.as_ptr().add(j));
+                let omwxv = _mm256_loadu_ps(omwx.as_ptr().add(j));
+                let t0 = _mm256_i32gather_ps::<4>(r0.as_ptr(), ix0);
+                let t1 = _mm256_i32gather_ps::<4>(r0.as_ptr(), ix1);
+                let top = _mm256_add_ps(_mm256_mul_ps(t0, omwxv), _mm256_mul_ps(t1, wxv));
+                let b0 = _mm256_i32gather_ps::<4>(r1.as_ptr(), ix0);
+                let b1 = _mm256_i32gather_ps::<4>(r1.as_ptr(), ix1);
+                let bot = _mm256_add_ps(_mm256_mul_ps(b0, omwxv), _mm256_mul_ps(b1, wxv));
+                let v = _mm256_add_ps(_mm256_mul_ps(top, omwyv), _mm256_mul_ps(bot, wyv));
+                let o = _mm256_mul_ps(_mm256_sub_ps(v, meanv), istdv);
+                _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
+                j += 8;
+            }
+            super::bilerp_norm_row_scalar(
+                r0,
+                r1,
+                &x0[j..],
+                &x1[j..],
+                &wx[j..],
+                &omwx[j..],
+                wy,
+                mean,
+                istd,
+                &mut orow[j..],
+            );
+        }
+    }
+
+    /// SSE2 fused bilinear+normalize row: 4 columns per iteration with
+    /// bounds-checked scalar gathers into `_mm_set_ps` lanes; the
+    /// arithmetic sequence is the AVX2/scalar one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bilerp_norm_row_sse2(
+        r0: &[f32],
+        r1: &[f32],
+        x0: &[i32],
+        x1: &[i32],
+        wx: &[f32],
+        omwx: &[f32],
+        wy: f32,
+        mean: f32,
+        istd: f32,
+        orow: &mut [f32],
+    ) {
+        let n = orow.len();
+        // SAFETY: SSE2 is part of the x86-64 baseline ABI; vector
+        // loads/stores stay inside `..n` of their slices, and the taps
+        // use ordinary bounds-checked slice indexing.
+        unsafe {
+            let wyv = _mm_set1_ps(wy);
+            let omwyv = _mm_set1_ps(1.0 - wy);
+            let meanv = _mm_set1_ps(mean);
+            let istdv = _mm_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let g = |row: &[f32], ix: &[i32]| {
+                    _mm_set_ps(
+                        row[ix[j + 3] as usize],
+                        row[ix[j + 2] as usize],
+                        row[ix[j + 1] as usize],
+                        row[ix[j] as usize],
+                    )
+                };
+                let wxv = _mm_loadu_ps(wx.as_ptr().add(j));
+                let omwxv = _mm_loadu_ps(omwx.as_ptr().add(j));
+                let top = _mm_add_ps(_mm_mul_ps(g(r0, x0), omwxv), _mm_mul_ps(g(r0, x1), wxv));
+                let bot = _mm_add_ps(_mm_mul_ps(g(r1, x0), omwxv), _mm_mul_ps(g(r1, x1), wxv));
+                let v = _mm_add_ps(_mm_mul_ps(top, omwyv), _mm_mul_ps(bot, wyv));
+                let o = _mm_mul_ps(_mm_sub_ps(v, meanv), istdv);
+                _mm_storeu_ps(orow.as_mut_ptr().add(j), o);
+                j += 4;
+            }
+            super::bilerp_norm_row_scalar(
+                r0,
+                r1,
+                &x0[j..],
+                &x1[j..],
+                &wx[j..],
+                &omwx[j..],
+                wy,
+                mean,
+                istd,
+                &mut orow[j..],
+            );
+        }
+    }
+
+    /// AVX2 in-place normalize, 8 lanes per iteration + scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn normalize_inplace_avx2(buf: &mut [f32], mean: f32, istd: f32) {
+        let n = buf.len();
+        // SAFETY: caller runtime-verified AVX2; unaligned loads/stores
+        // stay inside `buf[..n]`.
+        unsafe {
+            let meanv = _mm256_set1_ps(mean);
+            let istdv = _mm256_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(buf.as_ptr().add(j));
+                _mm256_storeu_ps(buf.as_mut_ptr().add(j), _mm256_mul_ps(_mm256_sub_ps(v, meanv), istdv));
+                j += 8;
+            }
+            for v in &mut buf[j..] {
+                *v = (*v - mean) * istd;
+            }
+        }
+    }
+
+    /// SSE2 in-place normalize, 4 lanes per iteration + scalar tail.
+    pub fn normalize_inplace_sse2(buf: &mut [f32], mean: f32, istd: f32) {
+        let n = buf.len();
+        // SAFETY: SSE2 is part of the x86-64 baseline ABI; unaligned
+        // loads/stores stay inside `buf[..n]`.
+        unsafe {
+            let meanv = _mm_set1_ps(mean);
+            let istdv = _mm_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let v = _mm_loadu_ps(buf.as_ptr().add(j));
+                _mm_storeu_ps(buf.as_mut_ptr().add(j), _mm_mul_ps(_mm_sub_ps(v, meanv), istdv));
+                j += 4;
+            }
+            for v in &mut buf[j..] {
+                *v = (*v - mean) * istd;
+            }
+        }
+    }
+
+    /// AVX2 normalized copy, 8 lanes per iteration + scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn normalize_copy_avx2(src: &[f32], dst: &mut [f32], mean: f32, istd: f32) {
+        let n = dst.len();
+        // SAFETY: caller runtime-verified AVX2 and asserted equal
+        // lengths; unaligned loads/stores stay inside `..n`.
+        unsafe {
+            let meanv = _mm256_set1_ps(mean);
+            let istdv = _mm256_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(src.as_ptr().add(j));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_mul_ps(_mm256_sub_ps(v, meanv), istdv));
+                j += 8;
+            }
+            for (o, &v) in dst[j..].iter_mut().zip(&src[j..]) {
+                *o = (v - mean) * istd;
+            }
+        }
+    }
+
+    /// SSE2 normalized copy, 4 lanes per iteration + scalar tail.
+    pub fn normalize_copy_sse2(src: &[f32], dst: &mut [f32], mean: f32, istd: f32) {
+        let n = dst.len();
+        // SAFETY: SSE2 is part of the x86-64 baseline ABI; the caller
+        // asserted equal lengths; unaligned loads/stores stay in `..n`.
+        unsafe {
+            let meanv = _mm_set1_ps(mean);
+            let istdv = _mm_set1_ps(istd);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let v = _mm_loadu_ps(src.as_ptr().add(j));
+                _mm_storeu_ps(dst.as_mut_ptr().add(j), _mm_mul_ps(_mm_sub_ps(v, meanv), istdv));
+                j += 4;
+            }
+            for (o, &v) in dst[j..].iter_mut().zip(&src[j..]) {
+                *o = (v - mean) * istd;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every tier at or below `detect()` that has vector lanes.
+    pub fn vector_levels() -> Vec<SimdLevel> {
+        [SimdLevel::Sse2, SimdLevel::Avx2]
+            .into_iter()
+            .filter(|&l| l <= detect())
+            .collect()
+    }
+
+    #[test]
+    fn mode_parse_and_names() {
+        for (s, m) in [("off", SimdMode::Off), ("on", SimdMode::On), ("auto", SimdMode::Auto)] {
+            assert_eq!(SimdMode::parse(s).unwrap(), m);
+            assert_eq!(m.name(), s);
+        }
+        assert!(SimdMode::parse("fast").is_err());
+        assert!(SimdMode::parse("").is_err());
+    }
+
+    #[test]
+    fn mode_resolution_is_clamped_and_off_is_scalar() {
+        assert_eq!(resolve_mode(SimdMode::Off), SimdLevel::Scalar);
+        assert_eq!(resolve_mode(SimdMode::On), detect());
+        assert_eq!(resolve_mode(SimdMode::Auto), detect());
+        // The active level is always executable on this CPU.
+        assert!(active() <= detect());
+    }
+
+    #[test]
+    fn detect_is_scalar_under_miri_and_at_least_sse2_on_x86_64() {
+        if cfg!(miri) || !cfg!(target_arch = "x86_64") {
+            assert_eq!(detect(), SimdLevel::Scalar);
+        } else {
+            assert!(detect() >= SimdLevel::Sse2);
+        }
+        assert!(SimdLevel::Scalar < SimdLevel::Sse2 && SimdLevel::Sse2 < SimdLevel::Avx2);
+    }
+
+    #[test]
+    fn normalize_kernels_bit_identical_across_levels_and_odd_tails() {
+        let mut rng = Rng::new(71);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 56 * 56 + 5] {
+            let src: Vec<f32> = (0..n).map(|_| rng.uniform(-300.0, 300.0) as f32).collect();
+            let (mean, istd) = (123.675f32, 1.0 / 58.395f32);
+            let mut want = vec![0f32; n];
+            normalize_copy(&src, &mut want, mean, istd, SimdLevel::Scalar);
+            for level in vector_levels() {
+                let mut got = vec![0f32; n];
+                normalize_copy(&src, &mut got, mean, istd, level);
+                assert_eq!(want, got, "copy n={n} {level:?}");
+                let mut buf = src.clone();
+                normalize_inplace(&mut buf, mean, istd, level);
+                assert_eq!(want, buf, "inplace n={n} {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bilerp_row_bit_identical_across_levels_and_odd_widths() {
+        let mut rng = Rng::new(72);
+        let vw = 61usize;
+        let r0: Vec<f32> = (0..vw).map(|_| rng.uniform(0.0, 255.0) as f32).collect();
+        let r1: Vec<f32> = (0..vw).map(|_| rng.uniform(0.0, 255.0) as f32).collect();
+        for ow in [1usize, 2, 5, 7, 8, 9, 13, 16, 17, 56] {
+            let mut x0 = Vec::new();
+            let mut x1 = Vec::new();
+            let mut wx = Vec::new();
+            let mut omwx = Vec::new();
+            for _ in 0..ow {
+                let a = rng.gen_range(vw as u64) as i32;
+                x0.push(a);
+                x1.push((a + 1).min(vw as i32 - 1));
+                let f = rng.uniform(0.0, 1.0) as f32;
+                wx.push(f);
+                omwx.push(1.0 - f);
+            }
+            let wy = rng.uniform(0.0, 1.0) as f32;
+            let (mean, istd) = (116.28f32, 1.0 / 57.12f32);
+            let mut want = vec![0f32; ow];
+            bilerp_norm_row(&r0, &r1, &x0, &x1, &wx, &omwx, wy, mean, istd, &mut want, SimdLevel::Scalar);
+            for level in vector_levels() {
+                let mut got = vec![0f32; ow];
+                bilerp_norm_row(&r0, &r1, &x0, &x1, &wx, &omwx, wy, mean, istd, &mut got, level);
+                assert_eq!(want, got, "ow={ow} {level:?}");
+            }
+        }
+    }
+}

@@ -522,6 +522,49 @@ fn slab_pool_run_matches_vec_path_losses_exactly() {
     assert!(on.bytes_alloc_hot > 0);
 }
 
+/// End-to-end A/B for the SIMD kernel layer: `--simd on` and `--simd
+/// off` must produce the exact same loss curve, because every vector
+/// kernel is bit-identical to its scalar reference (same per-lane f32
+/// ops in the same order — see DESIGN.md "SIMD kernels").  Crossed with
+/// the fused-decode, prep-cache, and slab axes so the identity holds in
+/// every kernel mix, not just the default path.  The mode is a
+/// process-global dispatch switch, but a racing parallel test can only
+/// change *which* bit-identical kernel runs, never the output, so the
+/// assertion stays sound under the parallel test harness.
+#[test]
+fn simd_run_matches_scalar_losses_exactly() {
+    use dpp::config::SlabPoolCfg;
+    use dpp::simd::SimdMode;
+    if !have_artifacts() {
+        return;
+    }
+    for (fused, cache_mb, slab) in [
+        (true, 0, SlabPoolCfg::Off),
+        (false, 0, SlabPoolCfg::Auto),
+        (true, 64, SlabPoolCfg::Auto),
+    ] {
+        let mk = |simd: SimdMode| RunConfig {
+            placement: Placement::Cpu,
+            cpu_workers: 1,
+            steps: 3,
+            seed: 11,
+            fused_decode: fused,
+            prep_cache_mb: cache_mb,
+            slab_pool: slab,
+            simd,
+            ..base_cfg()
+        };
+        let on = coordinator::run(&mk(SimdMode::On)).unwrap();
+        let off = coordinator::run(&mk(SimdMode::Off)).unwrap();
+        assert_eq!(
+            on.losses, off.losses,
+            "simd changed the training math (fused={fused} cache={cache_mb} slab={slab:?})"
+        );
+        assert_eq!(on.steps, off.steps);
+        assert_eq!(on.images, off.images);
+    }
+}
+
 #[test]
 fn multi_epoch_run_repeats_the_corpus() {
     if !have_artifacts() {

@@ -1,0 +1,401 @@
+//! Scalar-vs-SIMD bit-identity harness for the vectorized kernel layer
+//! (`src/simd/`): seeded property tests drive every kernel — fused
+//! dequant+IDCT at each fractional scale 8/4/2/1, the fused
+//! bilerp+normalize sampler, the plane normalizers, and the
+//! table-driven entropy decoder — at every ISA tier the host supports,
+//! asserting the outputs are *bit*-identical (`f32::to_bits`, not `==`,
+//! so signed zeros cannot hide a divergence).  Odd widths and
+//! non-multiple-of-lane tails are enumerated exhaustively on top of the
+//! random sweep.  The whole-pipeline loss-curve A/B (`--simd on` vs
+//! `off`) lives in `tests/pipeline_e2e.rs` next to the slab A/B, since
+//! it needs the trained artifacts.
+//!
+//! Under miri `detect()` reports `Scalar`, so the vector tier list is
+//! empty and these tests check only the dispatch plumbing — which is
+//! exactly the part miri *can* validate (the unsafe refill window in
+//! the entropy fast path stays exercised: it is safe Rust + one
+//! `u64::from_le_bytes`, not a vendor intrinsic).
+
+use dpp::codec::dct;
+use dpp::codec::entropy::{EntropyReader, EntropyWriter};
+use dpp::codec::qtable_for_quality;
+use dpp::ops::{self, AugParams, AugScratch};
+use dpp::simd::{self, SimdLevel};
+use dpp::testing::{check, PropConfig};
+use dpp::util::rng::Rng;
+
+/// Vector tiers the host can actually run (empty under miri and on
+/// non-x86-64 targets — the properties then pin scalar==scalar, which
+/// still exercises the dispatchers' fallback arms).
+fn vector_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Sse2, SimdLevel::Avx2]
+        .into_iter()
+        .filter(|&l| l <= simd::detect())
+        .collect()
+}
+
+fn cases(n: usize) -> PropConfig {
+    PropConfig { cases: if cfg!(miri) { n / 8 + 1 } else { n }, ..Default::default() }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Random quantized coefficient block with structure the kernels
+/// special-case: DC-only (fast path), sparse rows (row-mask skip), and
+/// dense (full matrix passes), weighted by the case size.
+fn gen_coef_block(rng: &mut Rng, size: usize) -> [f32; 64] {
+    let mut coef = [0f32; 64];
+    let density = match rng.gen_range(4) {
+        0 => 0,                          // DC-only
+        1 => 1 + rng.gen_range(4),       // sparse: a few ACs
+        _ => 8 + rng.gen_range(1 + size as u64 / 2), // dense-ish
+    };
+    coef[0] = (rng.gen_range(4001) as f32 - 2000.0).trunc();
+    for _ in 0..density {
+        let i = 1 + rng.gen_range(63) as usize;
+        let mag = 1 + rng.gen_range(50) as i64;
+        coef[i] = if rng.bool() { mag as f32 } else { -(mag as f32) };
+    }
+    coef
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 1: fused dequant + IDCT at every fractional scale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_idct_bit_identical_across_levels_and_scales() {
+    let levels = vector_levels();
+    check(
+        "idct-level-identity",
+        cases(96),
+        |rng, size| {
+            let quality = 30 + rng.gen_range(71) as u8;
+            (gen_coef_block(rng, size), quality, rng.gen_range(4) as usize)
+        },
+        |&(coef, quality, scale_log2)| {
+            let q = qtable_for_quality(quality);
+            let n = 8usize >> scale_log2;
+            let mut want = vec![0f32; n * n];
+            dct::dequant_idct_block_scaled_level(&coef, &q, scale_log2, &mut want, SimdLevel::Scalar);
+            levels.iter().all(|&level| {
+                let mut got = vec![f32::NAN; n * n];
+                dct::dequant_idct_block_scaled_level(&coef, &q, scale_log2, &mut got, level);
+                bits_eq(&want, &got)
+            })
+        },
+    );
+}
+
+/// Deterministic sweep: each scale kernel (8/4/2/1-point), dense input
+/// (every coefficient nonzero, so no fast path can mask the vector
+/// code), every available tier.
+#[test]
+fn every_scale_kernel_is_bit_identical_on_dense_blocks() {
+    let q = qtable_for_quality(85);
+    let mut rng = Rng::new(0x51D_1DC7);
+    let mut coef = [0f32; 64];
+    for v in coef.iter_mut() {
+        let mag = 1 + rng.gen_range(50) as i64;
+        *v = if rng.bool() { mag as f32 } else { -(mag as f32) };
+    }
+    for scale_log2 in 0..=3usize {
+        let n = 8 >> scale_log2;
+        let mut want = vec![0f32; n * n];
+        dct::dequant_idct_block_scaled_level(&coef, &q, scale_log2, &mut want, SimdLevel::Scalar);
+        for level in vector_levels() {
+            let mut got = vec![f32::NAN; n * n];
+            dct::dequant_idct_block_scaled_level(&coef, &q, scale_log2, &mut got, level);
+            assert!(
+                bits_eq(&want, &got),
+                "scale 1/{} diverged at {level:?}: {want:?} vs {got:?}",
+                1 << scale_log2
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 2: fused bilinear resize + normalize (the augment sampler)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bilerp_norm_bit_identical_on_random_geometry() {
+    let levels = vector_levels();
+    check(
+        "bilerp-norm-level-identity",
+        cases(64),
+        |rng, size| {
+            let c = 1 + rng.gen_range(3) as usize;
+            let h = 10 + rng.gen_range(6 + size as u64 / 4) as usize;
+            let w = 10 + rng.gen_range(6 + size as u64 / 4) as usize;
+            // A decoded sub-view (vy,vx,vh,vw), as the fused ROI decode
+            // hands the sampler; sometimes the full image.
+            let vy = rng.gen_range(3) as usize;
+            let vx = rng.gen_range(3) as usize;
+            let vh = h - vy - rng.gen_range(3) as usize;
+            let vw = w - vx - rng.gen_range(3) as usize;
+            // Crop window inside the view.
+            let ch = 2 + rng.gen_range(vh as u64 - 1) as usize;
+            let cw = 2 + rng.gen_range(vw as u64 - 1) as usize;
+            let y0 = vy + rng.gen_range((vh - ch + 1) as u64) as usize;
+            let x0 = vx + rng.gen_range((vw - cw + 1) as u64) as usize;
+            // Output sides 1..=40: sub-lane, exact-lane, and ragged-tail
+            // widths for both the 4-lane and 8-lane kernels.
+            let oh = 1 + rng.gen_range(40) as usize;
+            let ow = 1 + rng.gen_range(40) as usize;
+            let flip = rng.bool();
+            let seed = rng.next_u64();
+            (seed, c, (h, w), (vy, vx, vh, vw), (y0, x0, ch, cw, flip), (oh, ow))
+        },
+        |&(seed, c, (h, w), view, (y0, x0, ch, cw, flip), (oh, ow))| {
+            let (_, _, vh, vw) = view;
+            let mut rng = Rng::new(seed);
+            let img: Vec<f32> =
+                (0..c * vh * vw).map(|_| rng.uniform(0.0, 255.0) as f32).collect();
+            let p = AugParams {
+                y0: y0 as u32,
+                x0: x0 as u32,
+                crop_h: ch as u32,
+                crop_w: cw as u32,
+                flip,
+            };
+            let mut scratch = AugScratch::new();
+            let mut want = vec![0f32; c * oh * ow];
+            ops::augment_fused_view_into_level(
+                &img, c, h, w, view, &p, oh, ow, &mut scratch, &mut want, SimdLevel::Scalar,
+            );
+            levels.iter().all(|&level| {
+                let mut got = vec![f32::NAN; c * oh * ow];
+                ops::augment_fused_view_into_level(
+                    &img, c, h, w, view, &p, oh, ow, &mut scratch, &mut got, level,
+                );
+                bits_eq(&want, &got)
+            })
+        },
+    );
+}
+
+/// Exhaustive tail sweep: every output width 1..=33 (sub-lane, one
+/// full vector, vector+ragged-tail for the 4- and 8-lane row kernels),
+/// fixed image, both flip arms.
+#[test]
+fn every_output_width_tail_is_bit_identical() {
+    let widths = if cfg!(miri) { 1..=9usize } else { 1..=33usize };
+    let (c, h, w) = (3usize, 21usize, 19usize);
+    let mut rng = Rng::new(0xB1_1E2F);
+    let img: Vec<f32> = (0..c * h * w).map(|_| rng.uniform(0.0, 255.0) as f32).collect();
+    let view = (0usize, 0usize, h, w);
+    let mut scratch = AugScratch::new();
+    for ow in widths {
+        for flip in [false, true] {
+            let p = AugParams { y0: 1, x0: 2, crop_h: 17, crop_w: 15, flip };
+            let mut want = vec![0f32; c * 7 * ow];
+            ops::augment_fused_view_into_level(
+                &img, c, h, w, view, &p, 7, ow, &mut scratch, &mut want, SimdLevel::Scalar,
+            );
+            for level in vector_levels() {
+                let mut got = vec![f32::NAN; c * 7 * ow];
+                ops::augment_fused_view_into_level(
+                    &img, c, h, w, view, &p, 7, ow, &mut scratch, &mut got, level,
+                );
+                assert!(bits_eq(&want, &got), "ow={ow} flip={flip} diverged at {level:?}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 3: plane normalize (in-place and copying)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_normalize_bit_identical_on_odd_lengths() {
+    let levels = vector_levels();
+    check(
+        "normalize-level-identity",
+        cases(64),
+        |rng, size| (rng.next_u64(), 1 + rng.gen_range(3) as usize, 1 + rng.gen_range(40 + size as u64 * 2) as usize),
+        |&(seed, c, hw)| {
+            let mut rng = Rng::new(seed);
+            let img: Vec<f32> = (0..c * hw).map(|_| rng.uniform(0.0, 255.0) as f32).collect();
+            let mut want = vec![0f32; c * hw];
+            ops::normalize_into_level(&img, c, hw, &mut want, SimdLevel::Scalar);
+            levels.iter().all(|&level| {
+                // Copying form...
+                let mut got = vec![f32::NAN; c * hw];
+                ops::normalize_into_level(&img, c, hw, &mut got, level);
+                // ...and the in-place form must match it exactly.
+                let mut inplace = img.clone();
+                ops::normalize_level(&mut inplace, c, hw, level);
+                bits_eq(&want, &got) && bits_eq(&want, &inplace)
+            })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 4: table-driven entropy decode
+// ---------------------------------------------------------------------------
+
+/// Random quantized block shaped for the entropy coder: zigzag runs,
+/// large multi-byte varint magnitudes, and occasional all-zero blocks
+/// (EOB-only — the shortest symbol the window refill must handle).
+fn gen_entropy_block(rng: &mut Rng) -> [i32; 64] {
+    let mut q = [0i32; 64];
+    if rng.gen_range(8) == 0 {
+        return q; // EOB-only block
+    }
+    q[0] = rng.gen_range(4001) as i32 - 2000;
+    for _ in 0..1 + rng.gen_range(14) {
+        let i = 1 + rng.gen_range(63) as usize;
+        let mag = match rng.gen_range(3) {
+            0 => 1 + rng.gen_range(60) as i32,       // 1-byte varint
+            1 => 64 + rng.gen_range(8000) as i32,    // 2-byte varint
+            _ => 20_000 + rng.gen_range(300_000) as i32, // 3+-byte varint
+        };
+        q[i] = if rng.bool() { mag } else { -mag };
+    }
+    q
+}
+
+#[test]
+fn prop_entropy_fast_and_slow_agree_on_values_positions_and_skips() {
+    check(
+        "entropy-fast-slow-identity",
+        cases(48),
+        |rng, size| (rng.next_u64(), 1 + rng.gen_range(2 + size as u64 / 8) as usize),
+        |&(seed, nblocks)| {
+            let mut rng = Rng::new(seed);
+            let blocks: Vec<[i32; 64]> = (0..nblocks).map(|_| gen_entropy_block(&mut rng)).collect();
+            let mut buf = Vec::new();
+            let mut w = EntropyWriter::new(&mut buf);
+            for b in &blocks {
+                w.write_block(b).unwrap();
+            }
+            w.finish().unwrap();
+
+            // Decode parity: values AND the byte position after every
+            // block (the fast window refill must not over-consume).
+            let mut fast = EntropyReader::with_table_decode(&buf, true);
+            let mut slow = EntropyReader::with_table_decode(&buf, false);
+            for b in &blocks {
+                let (mut qf, mut qs) = ([0i32; 64], [0i32; 64]);
+                fast.read_block(&mut qf).unwrap();
+                slow.read_block(&mut qs).unwrap();
+                if qf != qs || &qf != b || fast.bytes_consumed() != slow.bytes_consumed() {
+                    return false;
+                }
+            }
+            if fast.bytes_consumed() != buf.len() {
+                return false;
+            }
+
+            // Skip parity: same positions without materializing values.
+            let mut fast = EntropyReader::with_table_decode(&buf, true);
+            let mut slow = EntropyReader::with_table_decode(&buf, false);
+            for _ in 0..nblocks {
+                fast.skip_block().unwrap();
+                slow.skip_block().unwrap();
+                if fast.bytes_consumed() != slow.bytes_consumed() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Error parity under every possible truncation: cutting the stream at
+/// each byte offset must make the fast and slow decoders fail (or
+/// succeed) identically — same per-block values, same error text, same
+/// final position.  This walks the window path, the byte-tail path,
+/// and the boundary between them (`WINDOW_BYTES` from the cut).
+#[test]
+fn entropy_fast_and_slow_agree_on_every_truncation() {
+    let nblocks = if cfg!(miri) { 2 } else { 6 };
+    let mut rng = Rng::new(0xE27_0B5);
+    let blocks: Vec<[i32; 64]> = (0..nblocks).map(|_| gen_entropy_block(&mut rng)).collect();
+    let mut buf = Vec::new();
+    let mut w = EntropyWriter::new(&mut buf);
+    for b in &blocks {
+        w.write_block(b).unwrap();
+    }
+    w.finish().unwrap();
+
+    let decode_all = |buf: &[u8], fastpath: bool| -> Result<Vec<[i32; 64]>, (usize, String)> {
+        let mut r = EntropyReader::with_table_decode(buf, fastpath);
+        let mut out = Vec::new();
+        for _ in 0..nblocks {
+            let mut q = [0i32; 64];
+            r.read_block(&mut q).map_err(|e| (r.bytes_consumed(), format!("{e:#}")))?;
+            out.push(q);
+        }
+        Ok(out)
+    };
+    for cut in 0..=buf.len() {
+        let (f, s) = (decode_all(&buf[..cut], true), decode_all(&buf[..cut], false));
+        assert_eq!(f, s, "fast/slow diverged with stream cut at byte {cut}");
+    }
+    // The untruncated stream round-trips on both paths.
+    assert_eq!(decode_all(&buf, true).unwrap(), blocks);
+}
+
+/// Corrupt-token parity: a byte that is neither a run token nor EOB
+/// must fail identically on both paths, at the same position.
+#[test]
+fn entropy_fast_and_slow_reject_bad_tokens_identically() {
+    let mut buf = Vec::new();
+    let mut w = EntropyWriter::new(&mut buf);
+    w.write_block(&{
+        let mut q = [0i32; 64];
+        q[0] = 41;
+        q[1] = -7;
+        q
+    })
+    .unwrap();
+    w.finish().unwrap();
+    // Overwrite the first token with an out-of-range byte; pad so the
+    // corruption sits inside a full 64-bit window (the fast path's hot
+    // arm), not only the byte tail.
+    let mut bad = buf.clone();
+    bad[0] = 0xC0;
+    bad.extend_from_slice(&[0u8; 16]);
+    let run = |fastpath: bool| {
+        let mut r = EntropyReader::with_table_decode(&bad, fastpath);
+        let err = r.read_block(&mut [0i32; 64]).unwrap_err();
+        (r.bytes_consumed(), format!("{err:#}"))
+    };
+    assert_eq!(run(true), run(false));
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch plumbing
+// ---------------------------------------------------------------------------
+
+/// `set_mode` / `active` sequencing.  This is the only test in this
+/// binary that touches the process-global mode (every kernel test above
+/// pins explicit levels), so the assertions cannot race; and because
+/// all tiers are bit-identical, even a hypothetical racing reader in
+/// another test could observe only a speed change, never a value change.
+#[test]
+fn set_mode_sequencing_pins_and_releases_the_active_level() {
+    use dpp::simd::SimdMode;
+    assert!(simd::active() <= simd::detect(), "active level above hardware");
+    assert_eq!(simd::resolve_mode(SimdMode::Off), SimdLevel::Scalar);
+    assert_eq!(simd::resolve_mode(SimdMode::On), simd::detect());
+    assert_eq!(simd::resolve_mode(SimdMode::Auto), simd::detect());
+
+    simd::set_mode(SimdMode::Off);
+    assert_eq!(simd::active(), SimdLevel::Scalar);
+    assert!(!simd::entropy_fast(), "--simd off must pin the slow entropy loop");
+
+    simd::set_mode(SimdMode::On);
+    assert_eq!(simd::active(), simd::detect());
+    assert_eq!(simd::entropy_fast(), simd::detect() != SimdLevel::Scalar);
+
+    simd::set_mode(SimdMode::Auto);
+    assert_eq!(simd::active(), simd::detect());
+}
