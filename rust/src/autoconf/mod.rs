@@ -13,6 +13,10 @@ pub use catalog::{Instance, CATALOG, GCLOUD_GPU_HOUR, GCLOUD_MEM_GB_HOUR, GCLOUD
 
 use crate::config::{Method, Placement};
 use crate::pipeline::prep_cache::PrepCachePolicy;
+use crate::sim::serve::{
+    admissible, max_admissible_jobs, quota_hit_rates, shared_goodputs, standalone_goodput,
+    SharedTier, TenantJob,
+};
 use crate::sim::{analytic_throughput, calib, Scenario};
 use anyhow::{bail, Context, Result};
 
@@ -210,6 +214,81 @@ pub fn auto_vcpus(
     };
     s.validate()?;
     Ok(s.autoscale_workers(1, inst.max_vcpus))
+}
+
+/// One row of the shared-tier occupancy table: the modeled per-job
+/// steady state when `jobs` identical tenants share the serve tier.
+#[derive(Clone, Debug)]
+pub struct ServeTierRow {
+    pub jobs: usize,
+    /// Per-quota-slice steady-state hit rate.
+    pub hit_rate: f64,
+    /// Per-job goodput (items per scheduler tick).
+    pub goodput_ips: f64,
+    /// Fraction of the standalone goodput each tenant keeps.
+    pub retention: f64,
+    /// Whether admission control would accept this occupancy.
+    pub admissible: bool,
+}
+
+/// Occupancy pricing for a shared multi-tenant serve tier: one row per
+/// tenant count plus the admission ceiling.
+#[derive(Clone, Debug)]
+pub struct ServeTierPlan {
+    pub floor: f64,
+    /// Largest tenant count admission control accepts — the number the
+    /// serve engine enforces at join time.
+    pub max_jobs: usize,
+    pub rows: Vec<ServeTierRow>,
+}
+
+/// Price a shared serve tier for `cap` identical tenants: how the
+/// per-job hit rate and goodput degrade as the cache splits into quota
+/// slices and the pool's capacity is shared, and where the admission
+/// ceiling sits for the given goodput floor.
+///
+/// This is the configurator's answer to "how many jobs can this tier
+/// carry?", built on the same closed form ([`crate::sim::serve`]) the
+/// serve engine's admission control uses — the `tests/serve.rs` gate
+/// cross-checks the ceiling against the engine's discrete execution,
+/// and the unit test here pins the two to the same model.
+pub fn plan_serve_tier(tier: &SharedTier, job: &TenantJob, floor: f64, cap: usize) -> ServeTierPlan {
+    let alone = standalone_goodput(tier, job).max(f64::MIN_POSITIVE);
+    let rows = (1..=cap.max(1))
+        .map(|n| {
+            let jobs = vec![*job; n];
+            let g = shared_goodputs(tier, &jobs)[0];
+            ServeTierRow {
+                jobs: n,
+                hit_rate: quota_hit_rates(tier, &jobs)[0],
+                goodput_ips: g,
+                retention: g / alone,
+                admissible: admissible(tier, &jobs, floor),
+            }
+        })
+        .collect();
+    ServeTierPlan { floor, max_jobs: max_admissible_jobs(tier, job, floor, cap), rows }
+}
+
+impl ServeTierPlan {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "shared serve tier (floor: {:.0}% of standalone goodput) max tenants: {}\n",
+            self.floor * 100.0,
+            self.max_jobs
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "  {:>2} job(s)  hit {:.3}  goodput {:>7.1} items/tick  keeps {:>5.1}%{}\n",
+                r.jobs,
+                r.hit_rate,
+                r.goodput_ips,
+                r.retention * 100.0,
+                if r.admissible { "" } else { "  (rejected)" }
+            ));
+        }
+        s
+    }
 }
 
 /// Best configuration for the model under the objective and a $/h budget.
@@ -588,6 +667,44 @@ mod tests {
         // S3 costs only the object-storage rate over EBS-hosted data.
         assert!(s3.price_per_hour - ebs.price_per_hour < 0.01);
         assert!(s3.row().contains("s3:c"), "{}", s3.row());
+    }
+
+    /// Shared-tier pricing: the occupancy table's admissible prefix is
+    /// exactly the admission ceiling, degradation is monotone, and the
+    /// geometry `tests/serve.rs` runs through the engine prices to the
+    /// same ceiling here (5 tenants at a 0.5 floor).
+    #[test]
+    fn serve_tier_plan_prices_occupancy_and_matches_the_admission_ceiling() {
+        let tier = SharedTier {
+            cache_bytes: (4 << 20) as f64,
+            capacity_units: 128.0,
+            hit_cost: 1.0,
+            miss_cost: 8.0,
+            policy: PrepCachePolicy::Minio,
+        };
+        let job = TenantJob { dataset_bytes: (512 << 10) as f64, demand_items: 48.0 };
+        let plan = plan_serve_tier(&tier, &job, 0.5, 8);
+        assert_eq!(plan.max_jobs, 5, "the gate-2 engine geometry must price to 5 tenants");
+        assert_eq!(plan.rows.len(), 8);
+        for row in &plan.rows {
+            assert_eq!(
+                row.admissible,
+                row.jobs <= plan.max_jobs,
+                "row {} disagrees with the ceiling",
+                row.jobs
+            );
+        }
+        // Hit rate and goodput never improve as tenants are added.
+        for w in plan.rows.windows(2) {
+            assert!(w[1].hit_rate <= w[0].hit_rate + 1e-12);
+            assert!(w[1].goodput_ips <= w[0].goodput_ips + 1e-9);
+        }
+        // One tenant keeps everything (demand-bound at 48).
+        assert!((plan.rows[0].retention - 1.0).abs() < 1e-9);
+        assert!((plan.rows[0].goodput_ips - 48.0).abs() < 1e-9);
+        let text = plan.render();
+        assert!(text.contains("max tenants: 5"), "{text}");
+        assert!(text.contains("(rejected)"), "{text}");
     }
 
     #[test]

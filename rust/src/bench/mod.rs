@@ -7,6 +7,7 @@ pub mod chaos;
 pub mod decode;
 pub mod figures;
 pub mod harness;
+pub mod serve;
 pub mod simd;
 pub mod trace;
 pub mod workers;

@@ -1,0 +1,185 @@
+//! `dpp bench serve` — multi-tenant churn smoke (CI gate).
+//!
+//! A four-job scenario runs through the *real* serve engine — registry
+//! quotas, DRR scheduling, admission control, per-job quarantine — with
+//! mid-run churn and seeded faults, twice (quotas on, then off).  Every
+//! gate is counter-based and deterministic (virtual rounds, seeded
+//! draws), so CI asserts behavior, never a wall clock:
+//!
+//! * **isolation** — with quotas on, a 16 MiB aggressor joining mid-run
+//!   cannot evict the small victim's working set: the victim keeps its
+//!   steady-state hit rate; with quotas off the same churn collapses it
+//!   (the A/B that justifies the registry);
+//! * **admission** — the over-demand glutton is rejected by the cost
+//!   model (admitting it would push the aggressor below the goodput
+//!   floor); the well-behaved tenants are not;
+//! * **failure domains** — the faulty job exhausts its per-epoch skip
+//!   budget and fails *alone*; the other tenants complete every epoch
+//!   with clean fault counters.
+//!
+//! Writes the per-job rows as JSON (`BENCH_serve.json`) for the CI
+//! artifact.
+
+use crate::pipeline::prep_cache::PrepCachePolicy;
+use crate::service::engine::{self, JobSpec, ServeReport, ServeScenario};
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// The churn scenario: a cache-resident victim, a mid-run flood
+/// aggressor, a doomed faulty job, and a glutton admission must refuse.
+fn scenario(quotas: bool) -> ServeScenario {
+    let job = |name: &str| JobSpec { name: name.into(), ..JobSpec::default() };
+    ServeScenario {
+        jobs: vec![
+            // 384 KiB working set: fits every quota split this scenario
+            // produces, so with isolation on it should never miss after
+            // epoch one.
+            JobSpec { dataset_items: 48, demand: 16, epochs: 8, ..job("victim") },
+            // 16 MiB >> the 2 MiB cache: pure flood traffic.
+            JobSpec {
+                dataset_items: 2048,
+                demand: 128,
+                epochs: 2,
+                join_round: 4,
+                ..job("aggressor")
+            },
+            // Faults at 90% with no retries and a zero skip budget: the
+            // first unrecovered sample fails the job.
+            JobSpec {
+                dataset_items: 64,
+                demand: 8,
+                epochs: 4,
+                fault_rate: 0.9,
+                ..job("faulty")
+            },
+            // Asks for more than the pool can give without starving the
+            // aggressor below the floor: admission must say no.
+            JobSpec {
+                dataset_items: 8192,
+                demand: 2000,
+                epochs: 1,
+                join_round: 6,
+                ..job("glutton")
+            },
+        ],
+        seed: 42,
+        cache_bytes: 2 << 20,
+        quotas,
+        goodput_floor: 0.6,
+        workers_min: 1,
+        workers_max: 32,
+        policy: PrepCachePolicy::Lru,
+    }
+}
+
+fn job_json(r: &ServeReport) -> Json {
+    Json::arr(r.jobs.iter().map(|j| j.to_json()))
+}
+
+/// Run the churn A/B; optionally write `BENCH_serve.json` to `out`.
+pub fn run_bench(out: Option<&Path>) -> Result<Json> {
+    println!("== serve churn smoke (4 jobs, 2 MiB shared cache, seed 42) ==");
+    let on = engine::run(&scenario(true))?;
+    let off = engine::run(&scenario(false))?;
+    for (label, r) in [("quotas=on", &on), ("quotas=off", &off)] {
+        println!("-- {label} --");
+        r.print_summary();
+    }
+
+    let v_on = on.section("victim").unwrap();
+    let v_off = off.section("victim").unwrap();
+    let a_on = on.section("aggressor").unwrap();
+    let f_on = on.section("faulty").unwrap();
+
+    // Gate 1: isolation — quotas keep the victim's steady-state hit
+    // rate through the aggressor's flood; sharing one pool loses it.
+    ensure!(
+        v_on.status == "done" && v_on.epochs_done == 8,
+        "victim must finish all epochs under quotas, got {:?}",
+        v_on.status
+    );
+    ensure!(
+        v_on.hit_rate >= 0.9,
+        "quotas on: victim steady-state hit rate collapsed to {:.3}",
+        v_on.hit_rate
+    );
+    ensure!(
+        v_off.hit_rate < 0.5 * v_on.hit_rate,
+        "quotas off should demonstrate the collapse ({:.3} vs {:.3})",
+        v_off.hit_rate,
+        v_on.hit_rate
+    );
+
+    // Gate 2: admission — the glutton is rejected up front; the
+    // well-behaved tenants are not.
+    ensure!(
+        on.rejected == vec!["glutton".to_string()],
+        "admission must reject exactly the glutton, got {:?}",
+        on.rejected
+    );
+    ensure!(
+        a_on.status == "done" && a_on.epochs_done == 2,
+        "aggressor was admitted and must complete, got {:?}",
+        a_on.status
+    );
+
+    // Gate 3: failure isolation — the faulty job dies on its own skip
+    // budget; nobody else sees a fault.
+    ensure!(
+        f_on.status.starts_with("failed"),
+        "faulty job must fail its skip budget, got {:?}",
+        f_on.status
+    );
+    ensure!(f_on.faults_injected > 0, "faulty job saw no injected faults — seed drift?");
+    ensure!(
+        v_on.faults_injected == 0 && a_on.faults_injected == 0,
+        "fault counters must stay per-job"
+    );
+
+    // Determinism: the same scenario replays the same report.
+    let replay = engine::run(&scenario(true))?;
+    ensure!(
+        replay.rounds == on.rounds
+            && replay.section("victim").unwrap().hit_rate == v_on.hit_rate,
+        "serve engine must be deterministic per seed"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("seed", Json::num(42.0)),
+        ("rounds_quotas_on", Json::num(on.rounds as f64)),
+        ("rounds_quotas_off", Json::num(off.rounds as f64)),
+        ("victim_hit_rate_quotas_on", Json::num(v_on.hit_rate)),
+        ("victim_hit_rate_quotas_off", Json::num(v_off.hit_rate)),
+        ("rejected", Json::arr(on.rejected.iter().map(|s| Json::str(s)))),
+        ("jobs_quotas_on", job_json(&on)),
+        ("jobs_quotas_off", job_json(&off)),
+    ]);
+    if let Some(path) = out {
+        std::fs::write(path, json.pretty())?;
+        println!("  wrote {}", path.display());
+    }
+    Ok(json)
+}
+
+/// The `dpp bench serve` entry point (mirrors the other bench targets).
+pub fn run(out: Option<&Path>) -> Result<Json> {
+    run_bench(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_gates_hold_without_io() {
+        // The same gates `dpp bench serve` enforces, minus the file.
+        let json = run_bench(None).unwrap();
+        let dump = json.dump();
+        assert!(dump.contains("\"bench\":\"serve\""));
+        for name in ["victim", "aggressor", "faulty", "glutton"] {
+            assert!(dump.contains(name), "{name} row missing");
+        }
+    }
+}

@@ -129,8 +129,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     ensure!(!meta.is_empty(), "empty dataset at {:?}", cfg.data_dir);
 
     let counters = Arc::new(Counters::default());
-    let quarantine =
-        Arc::new(Quarantine::new(cfg.max_skip_rate, meta.len() as u64 * cfg.epochs as u64));
+    // The skip budget is windowed per epoch (one dataset pass), reset on
+    // epoch boundaries by the source thread — a whole-run budget scales
+    // with the epoch count, which is unbounded in serve mode.
+    let quarantine = Arc::new(Quarantine::new(cfg.max_skip_rate, meta.len() as u64));
     // The elastic executor owns the pool geometry; a live-denominator
     // clock keeps cpu_util honest while the pool resizes.
     let exec_cfg = ExecConfig::from_run_config(cfg);
@@ -211,6 +213,12 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         let quarantine = quarantine.clone();
         threads.push(std::thread::Builder::new().name("source".into()).spawn(move || {
             'epochs: for epoch in 0..cfg.epochs as u64 {
+                if epoch > 0 {
+                    // Fresh per-epoch skip budget; workers draining the
+                    // previous epoch's tail make this approximate by one
+                    // in-flight sample each (see Quarantine docs).
+                    quarantine.advance_window();
+                }
                 match cfg.method {
                     Method::Raw => {
                         let sampler = dataset::EpochSampler::new(

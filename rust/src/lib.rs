@@ -102,6 +102,21 @@ SUBCOMMANDS
               delivered read are 1/(1-P))
              [--trace-json PATH] (write the DES's synthetic span
               timeline in the same Chrome trace format as `run --trace`)
+  serve      --scenario FILE (long-lived multi-tenant service: N jobs
+             share one prep cache and one elastic pool; the scenario
+             file lists `name=.. items=.. demand=.. epochs=.. join=..`
+             job lines plus tier settings, `dpp --help` drift-tested)
+             [--goodput-floor F] (default 0.5: admission control — a
+              job is admitted only if the cost model predicts every
+              admitted job keeps >= F x its standalone goodput;
+              otherwise it is rejected loudly, never silently degraded)
+             [--quotas on|off] (default on: per-job byte quotas on the
+              shared prep cache, rebalanced on join/leave — one job's
+              shuffle order cannot evict another's working set; off
+              shares one unpartitioned pool for A/B)
+             [--cache-mb M] [--workers-min A] [--workers-max B]
+             [--prep-cache-policy lru|minio] [--seed S]
+             [--report-json PATH] (per-job sections, schema v4)
   reproduce  --fig 2|3|4|5|6|t1 (same harnesses as `cargo bench`)
   autoconf   --model M [--objective throughput|cost] [--budget $/h]
   bench      decode  [--out BENCH_decode.json] (counter-based decode
@@ -129,6 +144,12 @@ SUBCOMMANDS
              faults complete with <=10% goodput overhead and that a
              retries-off failure replays identically per seed — all
              counter-based, no wall clock)
+  bench      serve [--out BENCH_serve.json] (multi-tenant churn smoke:
+             a 3-job scenario with mid-epoch join/leave and seeded
+             faults through the serve engine; counter-based gates that
+             quotas hold the victim's hit rate, the over-demand job is
+             rejected by admission control, and the faulty job fails
+             alone — deterministic, no wall clock)
   trace      <run.json> (pretty-print the per-stage latency histograms
              and the fetch/prep/compute stall attribution from a report
              saved with `run --report-json`)
@@ -154,6 +175,7 @@ pub mod ops;
 pub mod pipeline;
 pub mod record;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod simd;
 pub mod storage;

@@ -4,9 +4,10 @@
 //!   gen-data    generate the synthetic corpus + record shards
 //!   run         run the real pipeline (optionally training) per config
 //!   sim         run the calibrated testbed simulator for one scenario
+//!   serve       run N jobs as tenants of one shared preprocessing tier
 //!   reproduce   regenerate a paper figure/table (--fig 2|3|4|5|6|t1)
 //!   autoconf    search resource configurations for a model/objective
-//!   bench       microbenches: decode, workers, alloc, trace-overhead, chaos, simd
+//!   bench       microbenches: decode, workers, alloc, trace-overhead, chaos, simd, serve
 //!   trace       pretty-print latency/stall tables from a saved run report
 //!   audit       lint the sources for correctness-convention violations
 //!   inspect     print manifest/artifact info
@@ -30,6 +31,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("gen-data") => gen_data(args),
         Some("run") => run(args),
         Some("sim") => sim(args),
+        Some("serve") => serve(args),
         Some("reproduce") => reproduce(args),
         Some("autoconf") => autoconf(args),
         Some("bench") => bench(args),
@@ -111,6 +113,21 @@ fn sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn serve(args: &Args) -> Result<()> {
+    let cfg = dpp::service::ServeConfig::from_args(args)?;
+    let text = std::fs::read_to_string(&cfg.scenario)
+        .map_err(|e| anyhow::anyhow!("cannot read scenario {:?}: {e}", cfg.scenario))?;
+    let mut sc = dpp::service::engine::ServeScenario::parse(&text)?;
+    cfg.apply_to(&mut sc)?;
+    let report = dpp::service::engine::run(&sc)?;
+    report.print_summary();
+    if let Some(path) = &cfg.report_json {
+        std::fs::write(path, report.to_json().pretty())?;
+        println!("serve report written to {path}");
+    }
+    Ok(())
+}
+
 fn reproduce(args: &Args) -> Result<()> {
     match args.get_or("fig", "") {
         "2" => dpp::bench::figures::fig2(),
@@ -164,8 +181,13 @@ fn bench(args: &Args) -> Result<()> {
             dpp::bench::simd::run(Some(&out))?;
             Ok(())
         }
+        Some("serve") => {
+            let out = PathBuf::from(args.get_or("out", "BENCH_serve.json"));
+            dpp::bench::serve::run(Some(&out))?;
+            Ok(())
+        }
         other => bail!(
-            "bench target must be `decode`, `workers`, `alloc`, `trace-overhead`, `chaos`, or `simd`, got {other:?}"
+            "bench target must be `decode`, `workers`, `alloc`, `trace-overhead`, `chaos`, `simd`, or `serve`, got {other:?}"
         ),
     }
 }

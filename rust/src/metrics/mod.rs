@@ -20,8 +20,9 @@ use std::time::Instant;
 /// added/renamed/removed so saved reports are self-describing (`dpp
 /// trace` prints it).  v1 was the unstamped pre-tracing shape; v2 added
 /// span histograms and stall attribution; v3 added the fault-tolerance
-/// counters (retries, hedges, injected faults, quarantined samples).
-pub const REPORT_SCHEMA_VERSION: u64 = 3;
+/// counters (retries, hedges, injected faults, quarantined samples);
+/// v4 added the multi-tenant serve per-job sections (`jobs`).
+pub const REPORT_SCHEMA_VERSION: u64 = 4;
 
 /// Pipeline-wide event counters (all monotonic).
 #[derive(Debug, Default)]
@@ -390,6 +391,41 @@ impl Default for UtilSampler {
     }
 }
 
+/// One tenant job's report section in serve mode: its own goodput,
+/// cache behavior, and fault counters — the per-job failure domain the
+/// isolation gates assert on.  Single runs carry an empty `jobs` list.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobSection {
+    pub name: String,
+    /// Terminal state: `done`, `left`, `rejected`, or `failed: <why>`.
+    pub status: String,
+    pub epochs_done: u64,
+    /// Steady-state prep-cache hit rate (final completed epoch).
+    pub hit_rate: f64,
+    /// Items per scheduler round in the final completed epoch.
+    pub goodput_ips: f64,
+    pub retries: u64,
+    pub hedges_won: u64,
+    pub faults_injected: u64,
+    pub samples_skipped: u64,
+}
+
+impl JobSection {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("status", Json::str(&self.status)),
+            ("epochs_done", Json::num(self.epochs_done as f64)),
+            ("hit_rate", Json::num(self.hit_rate)),
+            ("goodput_ips", Json::num(self.goodput_ips)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedges_won", Json::num(self.hedges_won as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("samples_skipped", Json::num(self.samples_skipped as f64)),
+        ])
+    }
+}
+
 /// Everything a pipeline run reports (printed and/or JSON-exported).
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -471,6 +507,9 @@ pub struct RunReport {
     /// Per-stage latency histograms from the span tracer, in pipeline
     /// order (empty when the run was not traced).
     pub stage_hists: Vec<(String, LogHist)>,
+    /// Per-job sections in serve mode (schema v4); empty for single
+    /// runs, so v3 consumers that ignore unknown keys keep working.
+    pub jobs: Vec<JobSection>,
 }
 
 /// Render the per-epoch wall times, eliding the middle beyond 8 epochs
@@ -540,6 +579,7 @@ impl RunReport {
                     Json::obj(vec![("stage", Json::str(stage)), ("hist", h.to_json())])
                 })),
             ),
+            ("jobs", Json::arr(self.jobs.iter().map(|j| j.to_json()))),
             (
                 "losses",
                 Json::arr(self.losses.iter().map(|(s, l)| {
@@ -657,6 +697,21 @@ impl RunReport {
                 self.retries,
                 self.hedges_won,
                 self.samples_skipped,
+            );
+        }
+        for j in &self.jobs {
+            println!(
+                "  job {:<12} {:<10} epochs {} hit {:.3} goodput {:.1} \
+                 retries {} hedges {} faults {} skipped {}",
+                j.name,
+                j.status.split(':').next().unwrap_or(&j.status),
+                j.epochs_done,
+                j.hit_rate,
+                j.goodput_ips,
+                j.retries,
+                j.hedges_won,
+                j.faults_injected,
+                j.samples_skipped,
             );
         }
     }
@@ -874,11 +929,22 @@ mod tests {
             faults_injected: 30,
             samples_skipped: 31,
             stage_hists: vec![("decode".to_string(), h)],
+            jobs: vec![JobSection {
+                name: "tenant_a".into(),
+                status: "done".into(),
+                epochs_done: 32,
+                hit_rate: 0.875,
+                goodput_ips: 33.5,
+                retries: 34,
+                hedges_won: 35,
+                faults_injected: 36,
+                samples_skipped: 37,
+            }],
         };
         let j = Json::parse(&r.to_json().dump()).unwrap();
         let keys = j.as_obj().unwrap();
-        // 37 struct fields + schema_version.
-        assert_eq!(keys.len(), 38, "RunReport field not serialized: {:?}", keys.keys());
+        // 38 struct fields + schema_version.
+        assert_eq!(keys.len(), 39, "RunReport field not serialized: {:?}", keys.keys());
         assert_eq!(j.req("schema_version").as_usize(), Some(REPORT_SCHEMA_VERSION as usize));
         // Spot-check the distinctive values land under the right keys.
         assert_eq!(j.req("retries").as_usize(), Some(28));
@@ -897,6 +963,18 @@ mod tests {
         );
         assert_eq!(j.req("bytes_alloc_hot").as_usize(), Some(27));
         assert_eq!(j.req("workers_auto").as_bool(), Some(true));
+        // The serve section round-trips field-for-field.
+        let job = j.req("jobs").idx(0).unwrap();
+        assert_eq!(job.req("name").as_str(), Some("tenant_a"));
+        assert_eq!(job.req("status").as_str(), Some("done"));
+        assert_eq!(job.req("epochs_done").as_usize(), Some(32));
+        assert_eq!(job.req("hit_rate").as_f64(), Some(0.875));
+        assert_eq!(job.req("goodput_ips").as_f64(), Some(33.5));
+        assert_eq!(job.req("retries").as_usize(), Some(34));
+        assert_eq!(job.req("hedges_won").as_usize(), Some(35));
+        assert_eq!(job.req("faults_injected").as_usize(), Some(36));
+        assert_eq!(job.req("samples_skipped").as_usize(), Some(37));
+        assert_eq!(job.as_obj().unwrap().len(), 9, "JobSection field not serialized");
     }
 
     #[test]

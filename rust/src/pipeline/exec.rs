@@ -55,6 +55,88 @@ pub const ADD_STARVE_FRAC: f64 = 0.10;
 /// Per-worker starved/blocked fraction above which one worker is parked
 /// (capacity demonstrably wasted on waiting, not preprocessing).
 pub const PARK_WASTE_FRAC: f64 = 0.25;
+/// Ticks the controller holds the pool size after any resize before it
+/// will resize again (cooldown).  One tick: a fresh interval of signals
+/// must be observed *at the new size* before the next step, without
+/// slowing a sustained ramp by more than 2× — `tests/elastic_exec.rs`
+/// still requires a prep-bound pool to reach `workers_max` in a sub-
+/// second run.
+pub const RESIZE_COOLDOWN_TICKS: u32 = 1;
+/// Threshold multiplier for *reversing* the last resize direction
+/// (hysteresis).  After an add, a park needs `PARK_WASTE_FRAC × 1.5`;
+/// after a park, an add needs `ADD_STARVE_FRAC × 1.5`.  Two out-of-phase
+/// jobs whose demand beats near the thresholds then latch onto one size
+/// instead of oscillating, while a genuinely reversed load (signal well
+/// past threshold) still turns the pool around immediately.
+pub const REVERSE_HYSTERESIS: f64 = 1.5;
+
+/// The hill-climb decision core, split from the controller thread so the
+/// anti-oscillation behavior is testable tick by tick without spawning a
+/// pipeline (`two-tone` test below).  `pub` + `#[doc(hidden)]`: not API.
+///
+/// Plain hill climbing is memoryless: signals that beat across ticks —
+/// two jobs with out-of-phase epochs, a device alternating between
+/// compute- and copy-bound steps — make it add and park on alternate
+/// ticks forever.  Two pieces of memory stop that: a *cooldown* (after a
+/// resize, hold for [`RESIZE_COOLDOWN_TICKS`] ticks so every decision is
+/// based on an interval measured at the current size) and *directional
+/// hysteresis* (reversing the last move needs [`REVERSE_HYSTERESIS`] ×
+/// the normal threshold; continuing in the same direction does not).
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug)]
+pub struct ClimbState {
+    min: usize,
+    max: usize,
+    /// Ticks left to hold after the last resize.
+    cooldown_left: u32,
+    /// Direction of the last resize: +1 add, -1 park, 0 never resized.
+    last_dir: i8,
+}
+
+impl ClimbState {
+    pub fn new(min: usize, max: usize) -> Self {
+        ClimbState { min: min.max(1), max: max.max(min.max(1)), cooldown_left: 0, last_dir: 0 }
+    }
+
+    /// One controller tick: decide the next pool size from this
+    /// interval's starvation fractions.  `out_len`/`out_cap` gate adds —
+    /// a full sample queue means more producers cannot help.
+    pub fn decide(
+        &mut self,
+        cur: usize,
+        batcher_starved: f64,
+        workers_starved: f64,
+        workers_blocked: f64,
+        out_len: usize,
+        out_cap: usize,
+    ) -> usize {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return cur;
+        }
+        // Reversing the previous move needs a stronger signal; moves in
+        // the same direction (or from rest) use the base thresholds, so
+        // a sustained ramp is never dampened — only direction flips are.
+        let park_thresh =
+            PARK_WASTE_FRAC * if self.last_dir > 0 { REVERSE_HYSTERESIS } else { 1.0 };
+        let add_thresh =
+            ADD_STARVE_FRAC * if self.last_dir < 0 { REVERSE_HYSTERESIS } else { 1.0 };
+        // One step per tick, park beats add (when both fire the pool is
+        // mis-phased, and shrinking is the cheap direction to probe from).
+        let next = if workers_starved > park_thresh || workers_blocked > park_thresh {
+            cur.saturating_sub(1).max(self.min)
+        } else if batcher_starved > add_thresh && out_len < out_cap {
+            (cur + 1).min(self.max)
+        } else {
+            cur
+        };
+        if next != cur {
+            self.cooldown_left = RESIZE_COOLDOWN_TICKS;
+            self.last_dir = if next > cur { 1 } else { -1 };
+        }
+        next
+    }
+}
 
 impl ExecConfig {
     /// A fixed pool of `n` workers (the pre-elastic behavior).
@@ -425,6 +507,7 @@ where
             let mut last_work = work_probe.stats();
             let mut last_out = out_probe.stats();
             let mut last_t = Instant::now();
+            let mut climb = ClimbState::new(cfg.workers_min, cfg.workers_max);
             loop {
                 if gate.sleep(cfg.interval_secs) {
                     return;
@@ -443,18 +526,17 @@ where
                 let per = dt * cur as f64;
                 let workers_starved = (work.recv_wait_secs - last_work.recv_wait_secs) / per;
                 let workers_blocked = (out.send_wait_secs - last_out.send_wait_secs) / per;
-                // Hill climb: one step per tick, park beats add (when
-                // both fire the pool is mis-phased, and shrinking is the
-                // cheap direction to probe from).
-                let next = if workers_starved > PARK_WASTE_FRAC
-                    || workers_blocked > PARK_WASTE_FRAC
-                {
-                    cur.saturating_sub(1).max(cfg.workers_min)
-                } else if batcher_starved > ADD_STARVE_FRAC && out.len < out.cap {
-                    (cur + 1).min(cfg.workers_max)
-                } else {
-                    cur
-                };
+                // Hill climb with cooldown + reversal hysteresis — the
+                // memoryful core lives in ClimbState so its
+                // anti-oscillation behavior is unit-tested tick by tick.
+                let next = climb.decide(
+                    cur,
+                    batcher_starved,
+                    workers_starved,
+                    workers_blocked,
+                    out.len,
+                    out.cap,
+                );
                 if next != cur {
                     gate.set_target(next);
                     clock.set_workers(next);
@@ -783,6 +865,96 @@ mod tests {
         assert_eq!(out_rx.recv(), None);
         let out = pool.join();
         assert!(format!("{:#}", out.result.unwrap_err()).contains("skip budget exceeded"));
+    }
+
+    /// Satellite: two out-of-phase jobs whose demand beats against each
+    /// other must not make the controller oscillate.  Synthetic two-tone
+    /// load, driven tick by tick through the decision core: phase A is
+    /// mildly prep-bound (batcher starvation just over threshold),
+    /// phase B mildly device-bound (workers blocked just over
+    /// threshold), alternating every 3 ticks.  A memoryless climber
+    /// resizes nearly every tick; the hysteresis+cooldown climber makes
+    /// one latched ramp and then holds.
+    #[test]
+    fn two_tone_load_has_bounded_resize_count() {
+        let (min, max) = (1usize, 8usize);
+        let ticks = 120;
+        let phase = |t: usize| (t / 3) % 2 == 0; // true = prep-bound tone
+        // Signals just past their thresholds — the beat a shared pool
+        // sees from two jobs with out-of-phase epochs, not a regime
+        // change (those are well past threshold and SHOULD resize).
+        let tone = |prep: bool| if prep { (0.12, 0.0, 0.0) } else { (0.0, 0.0, 0.30) };
+
+        // Memoryless baseline (the pre-satellite decision rule).
+        let mut naive_cur = min;
+        let mut naive_resizes = 0;
+        for t in 0..ticks {
+            let (bs, ws, wb) = tone(phase(t));
+            let next = if ws > PARK_WASTE_FRAC || wb > PARK_WASTE_FRAC {
+                naive_cur.saturating_sub(1).max(min)
+            } else if bs > ADD_STARVE_FRAC {
+                (naive_cur + 1).min(max)
+            } else {
+                naive_cur
+            };
+            if next != naive_cur {
+                naive_resizes += 1;
+                naive_cur = next;
+            }
+        }
+        assert!(naive_resizes > 40, "baseline must thrash on this load: {naive_resizes}");
+
+        let mut climb = ClimbState::new(min, max);
+        let mut cur = min;
+        let mut resizes = 0;
+        for t in 0..ticks {
+            let (bs, ws, wb) = tone(phase(t));
+            let next = climb.decide(cur, bs, ws, wb, 0, 16);
+            if next != cur {
+                resizes += 1;
+                cur = next;
+            }
+        }
+        // One monotone ramp at most (plus a step or two of slack): the
+        // opposing tone never clears the reversal threshold, so the pool
+        // latches instead of beating.
+        assert!(
+            resizes <= (max - min) + 2,
+            "hysteresis controller must not oscillate: {resizes} resizes (baseline {naive_resizes})"
+        );
+    }
+
+    /// Hysteresis must never dampen a sustained one-direction signal:
+    /// a hard-starved pool still ramps min -> max, paying only the
+    /// cooldown tick per step, and a genuine load reversal (signal well
+    /// past the raised threshold) turns the pool around immediately.
+    #[test]
+    fn sustained_signals_still_ramp_and_reverse() {
+        let (min, max) = (1usize, 4usize);
+        let mut climb = ClimbState::new(min, max);
+        let mut cur = min;
+        let mut ticks_to_max = None;
+        for t in 0..32 {
+            cur = climb.decide(cur, 1.0, 0.0, 0.0, 0, 16);
+            if cur == max {
+                ticks_to_max = Some(t + 1);
+                break;
+            }
+        }
+        let t = ticks_to_max.expect("hard-starved pool never reached workers_max");
+        assert!(
+            t as u32 <= (max - min) as u32 * (1 + RESIZE_COOLDOWN_TICKS) + 1,
+            "ramp too slow: {t} ticks"
+        );
+        // Strong reversal: workers fully blocked clears 0.25 * 1.5.
+        let mut parked = cur;
+        for _ in 0..2 * (1 + RESIZE_COOLDOWN_TICKS) {
+            parked = climb.decide(parked, 0.0, 0.0, 1.0, 0, 16);
+        }
+        assert!(parked < max, "strong reversal must still park: stuck at {parked}");
+        // Adds are gated on sample-queue headroom regardless of memory.
+        let mut full = ClimbState::new(1, 4);
+        assert_eq!(full.decide(2, 1.0, 0.0, 0.0, 16, 16), 2, "full out queue must block adds");
     }
 
     #[test]

@@ -6,11 +6,20 @@
 //! epoch for one bad image is the wrong trade — but silently dropping
 //! arbitrarily many is worse (the trained distribution drifts).  The
 //! quarantine holds the middle ground: each bad sample is *skipped and
-//! recorded*, and the total is bounded by `--max-skip-rate` × the
-//! expected sample count.  One skip past the budget fails the run
-//! loudly, naming what was quarantined — with the default budget of
-//! zero, the very first bad sample surfaces (wrapped around its
-//! original cause), so fault-free behavior is unchanged.
+//! recorded*, and the skips are bounded by `--max-skip-rate` × the
+//! expected sample count **per budget window** (an epoch, for the
+//! coordinator; the whole run if the caller never advances the window).
+//! One skip past the window's budget fails the run loudly, naming what
+//! was quarantined — with the default budget of zero, the very first bad
+//! sample surfaces (wrapped around its original cause), so fault-free
+//! behavior is unchanged.
+//!
+//! The window exists for long-lived use (`dpp serve`): a budget derived
+//! once from `dataset × epochs` is unbounded when the epoch count is
+//! open-ended, so a slow trickle of corruption would never trip it.
+//! Calling [`Quarantine::advance_window`] on each epoch boundary resets
+//! the windowed count while the cumulative total (what reports print)
+//! keeps accruing.
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,23 +32,30 @@ const NAMED_CAP: usize = 16;
 
 #[derive(Debug)]
 pub struct Quarantine {
-    /// Max skips tolerated: `floor(max_skip_rate * expected_samples)`.
+    /// Max skips tolerated per window:
+    /// `floor(max_skip_rate * expected_samples)`.
     limit: u64,
     /// The rate the limit came from (for the failure message).
     rate: f64,
-    skipped: AtomicU64,
+    /// Skips charged against the *current* window's budget.
+    skipped_window: AtomicU64,
+    /// Cumulative skips across all windows (telemetry; never resets).
+    skipped_total: AtomicU64,
     names: Mutex<Vec<String>>,
 }
 
 impl Quarantine {
-    /// Budget for a run expected to process `expected_samples` samples
-    /// end to end (dataset size × epochs).  `max_skip_rate` of 0 means
-    /// zero tolerance: the first skip attempt returns its cause.
+    /// Budget for a window expected to process `expected_samples`
+    /// samples (one epoch's dataset size for the coordinator; callers
+    /// that never advance the window get a whole-run budget, the
+    /// pre-windowed behavior).  `max_skip_rate` of 0 means zero
+    /// tolerance: the first skip attempt returns its cause.
     pub fn new(max_skip_rate: f64, expected_samples: u64) -> Self {
         Quarantine {
             limit: (max_skip_rate * expected_samples as f64).floor() as u64,
             rate: max_skip_rate,
-            skipped: AtomicU64::new(0),
+            skipped_window: AtomicU64::new(0),
+            skipped_total: AtomicU64::new(0),
             names: Mutex::new(Vec::new()),
         }
     }
@@ -49,16 +65,32 @@ impl Quarantine {
         Quarantine::new(0.0, 0)
     }
 
-    /// Try to absorb one bad sample.  Within budget: records it and
-    /// returns `Ok(())` — the caller drops the sample and keeps going.
-    /// Over budget: returns `cause` wrapped in a loud budget report that
-    /// names the quarantined samples, for the caller to propagate.
+    /// Start a fresh budget window (called on epoch boundaries): the
+    /// windowed count resets to zero, the cumulative total and the named
+    /// list are kept.  Workers still draining the previous window's tail
+    /// may charge a stale skip to the new window — windowing is
+    /// approximate by one in-flight sample per worker, which a budget
+    /// meant to bound *rates* tolerates.
+    pub fn advance_window(&self) {
+        // ordering: Relaxed — the reset races in-flight `admit` calls by
+        // design (approximate windowing, see above); no data is
+        // published through this store.
+        self.skipped_window.store(0, Ordering::Relaxed);
+    }
+
+    /// Try to absorb one bad sample.  Within the window's budget:
+    /// records it and returns `Ok(())` — the caller drops the sample and
+    /// keeps going.  Over budget: returns `cause` wrapped in a loud
+    /// budget report that names the quarantined samples, for the caller
+    /// to propagate.
     pub fn admit(&self, desc: String, cause: anyhow::Error) -> Result<()> {
         // ordering: Relaxed — the count is a budget check, not a
         // synchronization point; concurrent workers racing the last slot
         // may each see a distinct pre-limit value, and whichever
         // increments past the limit fails the run, which is the intent.
-        let n = self.skipped.fetch_add(1, Ordering::Relaxed) + 1;
+        let n = self.skipped_window.fetch_add(1, Ordering::Relaxed) + 1;
+        // ordering: Relaxed — monotonic telemetry counter.
+        self.skipped_total.fetch_add(1, Ordering::Relaxed);
         {
             // poison: holders only push/read a Vec<String>; no panic
             // can originate under the lock.
@@ -80,10 +112,16 @@ impl Quarantine {
         )))
     }
 
-    /// Samples quarantined so far.
+    /// Samples quarantined so far, across all windows.
     pub fn count(&self) -> u64 {
         // ordering: Relaxed — monotonic telemetry read (see `admit`).
-        self.skipped.load(Ordering::Relaxed)
+        self.skipped_total.load(Ordering::Relaxed)
+    }
+
+    /// Skips charged to the current window (budget headroom probes).
+    pub fn window_count(&self) -> u64 {
+        // ordering: Relaxed — approximate read against a racing reset.
+        self.skipped_window.load(Ordering::Relaxed)
     }
 
     /// Descriptions of the first [`NAMED_CAP`] quarantined samples.
@@ -131,5 +169,34 @@ mod tests {
         }
         assert_eq!(q.count(), 40);
         assert_eq!(q.names().len(), NAMED_CAP);
+    }
+
+    /// Regression for the serve-mode fix: the budget is per window, so
+    /// an epoch that exhausts it fails, while the next epoch (after
+    /// `advance_window`) starts with a clean budget — and the cumulative
+    /// count keeps the whole history.
+    #[test]
+    fn window_resets_on_epoch_boundary_but_total_accrues() {
+        // 2 skips allowed per epoch of 100 samples.
+        let q = Quarantine::new(0.02, 100);
+        q.admit("e0 s0".into(), anyhow!("bad")).unwrap();
+        q.admit("e0 s1".into(), anyhow!("bad")).unwrap();
+        let err = q.admit("e0 s2".into(), anyhow!("bad")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("3 sample(s) quarantined, budget 2"), "{msg}");
+        assert_eq!(q.window_count(), 3);
+
+        // Next epoch: the window resets, so the same trickle is within
+        // budget again; the total never forgets.
+        q.advance_window();
+        assert_eq!(q.window_count(), 0);
+        q.admit("e1 s0".into(), anyhow!("bad")).unwrap();
+        q.admit("e1 s1".into(), anyhow!("bad")).unwrap();
+        assert_eq!(q.window_count(), 2);
+        assert_eq!(q.count(), 5, "cumulative total spans windows");
+
+        // And the refreshed budget still enforces its own cap.
+        let err = q.admit("e1 s2".into(), anyhow!("bad")).unwrap_err();
+        assert!(format!("{err:#}").contains("3 sample(s) quarantined, budget 2"));
     }
 }

@@ -1,0 +1,798 @@
+//! The serve engine: a deterministic, virtual-time execution of N
+//! training jobs sharing one prep cache and one elastic worker pool.
+//!
+//! Time advances in *rounds* (one scheduler tick).  Each round the pool
+//! delivers `workers × WORKER_UNITS` work units, split across the
+//! admitted jobs by deficit round-robin ([`super::drr`]); a cache-hit
+//! item costs [`HIT_COST`] units (augment only), a miss costs
+//! [`MISS_COST`] (read+decode+augment) and inserts into the job's quota
+//! slice.  The worker count follows the PR 4 fixed-point
+//! ([`crate::sim::workers_fixed_point`]) on the aggregate demand, so
+//! the pool grows and shrinks with churn like the elastic executor
+//! does under `--workers auto`.
+//!
+//! The engine deliberately runs the *robustness surfaces* of the real
+//! pipeline rather than mocks: per-job skip budgets are
+//! [`Quarantine`] itself (windowed per epoch via `advance_window`),
+//! quota slices are [`ByteLru`] with `set_budget` rebalancing, quota
+//! accounting is the [`JobRegistry`], and admission is the closed-form
+//! [`crate::sim::serve`] model — so the isolation gates in
+//! `tests/serve.rs` exercise the same code a long-lived `dpp serve`
+//! process runs, without wall-clock time or real image data.
+
+use crate::metrics::JobSection;
+use crate::pipeline::prep_cache::{steady_state_hit_rate, PrepCachePolicy};
+use crate::pipeline::quarantine::Quarantine;
+use crate::sim::serve::{admissible, standalone_goodput, SharedTier, TenantJob};
+use crate::sim::workers_fixed_point;
+use crate::util::bytelru::ByteLru;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Work units one cache-hit item costs (augment only).
+pub const HIT_COST: u64 = 1;
+/// Work units one cache-miss item costs (read + decode + augment).
+pub const MISS_COST: u64 = 8;
+/// Work units one worker delivers per round.
+pub const WORKER_UNITS: u64 = 32;
+/// DRR quantum: one miss's worth, so per-round unfairness is at most
+/// one expensive item.
+const DRR_QUANTUM: u64 = MISS_COST;
+/// Hard stop against scenario bugs (a job that can never finish).
+const MAX_ROUNDS: u64 = 100_000;
+
+/// One tenant job of a serve scenario.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    /// Dataset identity: jobs naming the same dataset share decoded
+    /// samples across slices (the CoorDL cross-job win); an empty
+    /// string means a private dataset (defaults to the job name).
+    pub dataset: String,
+    pub dataset_items: usize,
+    pub bytes_per_item: usize,
+    /// Items per round the job's trainer can consume.
+    pub demand: u64,
+    pub epochs: u64,
+    /// Round at which the job asks to join.
+    pub join_round: u64,
+    /// Round at which the job leaves voluntarily (mid-epoch churn).
+    pub leave_round: Option<u64>,
+    /// Per-item probability of an injected fault (per attempt).
+    pub fault_rate: f64,
+    /// Per-item probability of a straggler read rescued by a hedge.
+    pub straggler_rate: f64,
+    /// Per-epoch skip budget rate (see [`Quarantine`]).
+    pub max_skip_rate: f64,
+    /// Retry attempts after a faulted read.
+    pub retries: u32,
+    /// DRR weight.
+    pub weight: u64,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            name: String::new(),
+            dataset: String::new(),
+            dataset_items: 256,
+            bytes_per_item: 8 << 10,
+            demand: 16,
+            epochs: 2,
+            join_round: 0,
+            leave_round: None,
+            fault_rate: 0.0,
+            straggler_rate: 0.0,
+            max_skip_rate: 0.0,
+            retries: 0,
+            weight: 1,
+        }
+    }
+}
+
+/// A full serve scenario: the shared tier plus its tenants.
+#[derive(Clone, Debug)]
+pub struct ServeScenario {
+    pub jobs: Vec<JobSpec>,
+    pub seed: u64,
+    /// Shared prep-cache budget in bytes.
+    pub cache_bytes: usize,
+    /// Per-job byte quotas on (isolation) or off (one shared pool —
+    /// the collapse mode the isolation gate demonstrates).
+    pub quotas: bool,
+    /// Admission floor: every admitted job must keep at least this
+    /// fraction of its standalone goodput.
+    pub goodput_floor: f64,
+    pub workers_min: usize,
+    pub workers_max: usize,
+    pub policy: PrepCachePolicy,
+}
+
+impl Default for ServeScenario {
+    fn default() -> Self {
+        ServeScenario {
+            jobs: Vec::new(),
+            seed: 42,
+            cache_bytes: 4 << 20,
+            quotas: true,
+            goodput_floor: 0.5,
+            workers_min: 1,
+            workers_max: 8,
+            policy: PrepCachePolicy::Minio,
+        }
+    }
+}
+
+impl ServeScenario {
+    /// Parse the `--scenario` file format: one statement per line,
+    /// `#` starts a comment.  A line containing a `name=` key defines a
+    /// job (keys: `name dataset items item_kb demand epochs join leave
+    /// fault_rate straggler_rate max_skip_rate retries weight`); any
+    /// other non-empty line sets scenario keys (`seed cache_mb quotas
+    /// goodput_floor workers_min workers_max policy`).  Unknown keys
+    /// fail loudly, like the CLI's unknown-flag rejection.
+    pub fn parse(text: &str) -> Result<ServeScenario> {
+        fn num<T: std::str::FromStr>(line: usize, k: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| anyhow!("line {line}: {k} expects a number, got {v:?}"))
+        }
+        fn on_off(line: usize, k: &str, v: &str) -> Result<bool> {
+            match v {
+                "on" | "true" => Ok(true),
+                "off" | "false" => Ok(false),
+                _ => bail!("line {line}: {k} must be on|off, got {v:?}"),
+            }
+        }
+        let mut sc = ServeScenario::default();
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let kvs = line
+                .split_whitespace()
+                .map(|tok| {
+                    tok.split_once('=')
+                        .ok_or_else(|| anyhow!("line {ln}: expected key=value, got {tok:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if kvs.iter().any(|(k, _)| *k == "name") {
+                let mut job = JobSpec::default();
+                for (k, v) in kvs {
+                    match k {
+                        "name" => job.name = v.to_string(),
+                        "dataset" => job.dataset = v.to_string(),
+                        "items" => job.dataset_items = num(ln, k, v)?,
+                        "item_kb" => job.bytes_per_item = num::<usize>(ln, k, v)? << 10,
+                        "demand" => job.demand = num(ln, k, v)?,
+                        "epochs" => job.epochs = num(ln, k, v)?,
+                        "join" => job.join_round = num(ln, k, v)?,
+                        "leave" => job.leave_round = Some(num(ln, k, v)?),
+                        "fault_rate" => job.fault_rate = num(ln, k, v)?,
+                        "straggler_rate" => job.straggler_rate = num(ln, k, v)?,
+                        "max_skip_rate" => job.max_skip_rate = num(ln, k, v)?,
+                        "retries" => job.retries = num(ln, k, v)?,
+                        "weight" => job.weight = num(ln, k, v)?,
+                        other => bail!("line {ln}: unknown job key {other:?}"),
+                    }
+                }
+                sc.jobs.push(job);
+            } else {
+                for (k, v) in kvs {
+                    match k {
+                        "seed" => sc.seed = num(ln, k, v)?,
+                        "cache_mb" => sc.cache_bytes = num::<usize>(ln, k, v)? << 20,
+                        "quotas" => sc.quotas = on_off(ln, k, v)?,
+                        "goodput_floor" => sc.goodput_floor = num(ln, k, v)?,
+                        "workers_min" => sc.workers_min = num(ln, k, v)?,
+                        "workers_max" => sc.workers_max = num(ln, k, v)?,
+                        "policy" => sc.policy = PrepCachePolicy::parse(v)?,
+                        other => bail!("line {ln}: unknown scenario key {other:?}"),
+                    }
+                }
+            }
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            bail!("scenario defines no jobs");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for j in &self.jobs {
+            if j.name.is_empty() {
+                bail!("every job needs a non-empty name");
+            }
+            if !seen.insert(j.name.as_str()) {
+                bail!("duplicate job name {:?}", j.name);
+            }
+            if j.dataset_items == 0 || j.bytes_per_item == 0 {
+                bail!("job {}: items and item_kb must be > 0", j.name);
+            }
+            if j.demand == 0 {
+                bail!("job {}: demand must be > 0", j.name);
+            }
+            if j.epochs == 0 {
+                bail!("job {}: epochs must be >= 1", j.name);
+            }
+            if !(0.0..1.0).contains(&j.fault_rate) {
+                bail!("job {}: fault_rate must be in [0, 1)", j.name);
+            }
+            if !(0.0..1.0).contains(&j.max_skip_rate) {
+                bail!("job {}: max_skip_rate must be in [0, 1)", j.name);
+            }
+        }
+        if !(self.goodput_floor > 0.0 && self.goodput_floor <= 1.0) {
+            bail!("goodput_floor must be in (0, 1], got {}", self.goodput_floor);
+        }
+        if self.workers_min == 0 || self.workers_max < self.workers_min {
+            bail!(
+                "workers_min/workers_max must satisfy 1 <= min <= max, got {}/{}",
+                self.workers_min,
+                self.workers_max
+            );
+        }
+        Ok(())
+    }
+
+    /// The admission model's view of the tier: the pool priced at its
+    /// elastic ceiling (admission asks "can the pool, fully grown,
+    /// carry everyone?" — the fixed-point controller handles how far it
+    /// actually grows).
+    fn tier(&self) -> SharedTier {
+        SharedTier {
+            cache_bytes: self.cache_bytes as f64,
+            capacity_units: (self.workers_max as u64 * WORKER_UNITS) as f64,
+            hit_cost: HIT_COST as f64,
+            miss_cost: MISS_COST as f64,
+            policy: self.policy,
+        }
+    }
+}
+
+fn tenant_of(spec: &JobSpec) -> TenantJob {
+    TenantJob {
+        dataset_bytes: (spec.dataset_items * spec.bytes_per_item) as f64,
+        demand_items: spec.demand as f64,
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Waiting,
+    Running,
+    Done,
+    /// Left voluntarily (churn) before finishing its epochs.
+    Left,
+    Failed,
+    Rejected,
+}
+
+impl Status {
+    fn name(self) -> &'static str {
+        match self {
+            Status::Waiting => "waiting",
+            Status::Running => "running",
+            Status::Done => "done",
+            Status::Left => "left",
+            Status::Failed => "failed",
+            Status::Rejected => "rejected",
+        }
+    }
+
+    fn terminal(self) -> bool {
+        matches!(self, Status::Done | Status::Left | Status::Failed | Status::Rejected)
+    }
+}
+
+struct JobState {
+    spec: JobSpec,
+    id: u64,
+    dataset_idx: usize,
+    status: Status,
+    /// Still holds registry/DRR/slice resources (cleanup pending).
+    enrolled: bool,
+    seed: u64,
+    /// Fault/straggler draw stream (forked off the scenario seed).
+    rng: Rng,
+    order: Vec<u64>,
+    cursor: usize,
+    epoch: u64,
+    epochs_done: u64,
+    epoch_start_round: u64,
+    epoch_items: u64,
+    epoch_hits: u64,
+    epoch_misses: u64,
+    /// Final completed epoch's steady-state stats (what reports carry).
+    last_hit_rate: f64,
+    last_goodput: f64,
+    retries: u64,
+    hedges_won: u64,
+    faults_injected: u64,
+    quarantine: Quarantine,
+    failure: Option<String>,
+}
+
+impl JobState {
+    fn new(spec: JobSpec, id: u64, dataset_idx: usize, seed: u64) -> Self {
+        let quarantine = Quarantine::new(spec.max_skip_rate, spec.dataset_items as u64);
+        JobState {
+            rng: Rng::new(seed).fork(0x0F + id),
+            quarantine,
+            spec,
+            id,
+            dataset_idx,
+            status: Status::Waiting,
+            enrolled: false,
+            seed,
+            order: Vec::new(),
+            cursor: 0,
+            epoch: 0,
+            epochs_done: 0,
+            epoch_start_round: 0,
+            epoch_items: 0,
+            epoch_hits: 0,
+            epoch_misses: 0,
+            last_hit_rate: 0.0,
+            last_goodput: 0.0,
+            retries: 0,
+            hedges_won: 0,
+            faults_injected: 0,
+            failure: None,
+        }
+    }
+
+    fn start_epoch(&mut self, round: u64) {
+        self.order = (0..self.spec.dataset_items as u64).collect();
+        let mut shuffler = Rng::new(self.seed).fork(self.id).fork(self.epoch);
+        shuffler.shuffle(&mut self.order);
+        self.cursor = 0;
+        self.epoch_items = 0;
+        self.epoch_hits = 0;
+        self.epoch_misses = 0;
+        self.epoch_start_round = round;
+    }
+
+    /// Close the current epoch's books; returns whether the job is done.
+    fn finish_epoch(&mut self, round: u64) -> bool {
+        self.epochs_done += 1;
+        let lookups = self.epoch_hits + self.epoch_misses;
+        if lookups > 0 {
+            self.last_hit_rate = self.epoch_hits as f64 / lookups as f64;
+        }
+        let rounds = (round - self.epoch_start_round + 1).max(1);
+        self.last_goodput = self.epoch_items as f64 / rounds as f64;
+        // Fresh per-epoch skip budget (the satellite-1 windowing).
+        self.quarantine.advance_window();
+        if self.epochs_done >= self.spec.epochs {
+            self.status = Status::Done;
+            return true;
+        }
+        self.epoch += 1;
+        self.start_epoch(round);
+        false
+    }
+
+    fn section(&self) -> JobSection {
+        JobSection {
+            name: self.spec.name.clone(),
+            status: match &self.failure {
+                Some(f) => format!("{}: {}", self.status.name(), f),
+                None => self.status.name().to_string(),
+            },
+            epochs_done: self.epochs_done,
+            hit_rate: self.last_hit_rate,
+            goodput_ips: self.last_goodput,
+            retries: self.retries,
+            hedges_won: self.hedges_won,
+            faults_injected: self.faults_injected,
+            samples_skipped: self.quarantine.count(),
+        }
+    }
+}
+
+/// What a serve run reports: the service-level outcome plus one
+/// [`JobSection`] per job (the per-job failure domains the isolation
+/// gates assert on).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub rounds: u64,
+    pub workers_final: usize,
+    pub rejected: Vec<String>,
+    pub jobs: Vec<JobSection>,
+}
+
+impl ServeReport {
+    pub fn section(&self, name: &str) -> Option<&JobSection> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(crate::metrics::REPORT_SCHEMA_VERSION as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("workers_final", Json::num(self.workers_final as f64)),
+            ("rejected", Json::arr(self.rejected.iter().map(|s| Json::str(s)))),
+            ("jobs", Json::arr(self.jobs.iter().map(|j| j.to_json()))),
+        ])
+    }
+
+    pub fn print_summary(&self) {
+        println!(
+            "[serve] {} job(s), {} rejected, {} round(s), {} worker(s) at exit",
+            self.jobs.len(),
+            self.rejected.len(),
+            self.rounds,
+            self.workers_final
+        );
+        for j in &self.jobs {
+            println!(
+                "  {:<12} {:<10} epochs {} hit {:.3} goodput {:.1} it/round \
+                 retries {} hedges {} faults {} skipped {}",
+                j.name,
+                j.status.split(':').next().unwrap_or(&j.status),
+                j.epochs_done,
+                j.hit_rate,
+                j.goodput_ips,
+                j.retries,
+                j.hedges_won,
+                j.faults_injected,
+                j.samples_skipped
+            );
+        }
+    }
+}
+
+/// Run a scenario to completion (every job done, left, failed, or
+/// rejected) and report per-job outcomes.  Deterministic in the
+/// scenario (virtual time, seeded draws): the same input always yields
+/// the same report.
+pub fn run(sc: &ServeScenario) -> Result<ServeReport> {
+    sc.validate()?;
+    let tier = sc.tier();
+    let registry = super::registry::JobRegistry::new(sc.cache_bytes);
+    let mut drr = super::drr::Drr::new(DRR_QUANTUM);
+
+    // Dataset identities (cross-job sharing key): empty = private.
+    let mut dataset_ids: BTreeMap<String, usize> = BTreeMap::new();
+    let mut jobs: Vec<JobState> = Vec::new();
+    for (idx, spec) in sc.jobs.iter().enumerate() {
+        let mut spec = spec.clone();
+        if spec.dataset.is_empty() {
+            spec.dataset = spec.name.clone();
+        }
+        let next = dataset_ids.len();
+        let ds = *dataset_ids.entry(spec.dataset.clone()).or_insert(next);
+        jobs.push(JobState::new(spec, idx as u64, ds, sc.seed));
+    }
+
+    // Quota slices (quotas on) or the one shared pool (quotas off),
+    // keyed by (dataset, sample) so shared datasets alias across jobs.
+    let mut slices: BTreeMap<u64, ByteLru<(usize, u64), ()>> = BTreeMap::new();
+    let mut shared: ByteLru<(usize, u64), ()> =
+        ByteLru::new(if sc.quotas { 0 } else { sc.cache_bytes });
+
+    let mut workers = sc.workers_min;
+    let mut rejected: Vec<String> = Vec::new();
+    let mut round: u64 = 0;
+
+    while round < MAX_ROUNDS {
+        // 1. Voluntary leaves (mid-epoch churn).
+        let mut churn = false;
+        for job in jobs.iter_mut() {
+            if job.status == Status::Running {
+                if let Some(at) = job.spec.leave_round {
+                    if round >= at {
+                        job.status = Status::Left;
+                    }
+                }
+            }
+        }
+
+        // 2. Joins, gated by the admission model over the running set
+        //    plus the candidate.
+        for i in 0..jobs.len() {
+            if jobs[i].status != Status::Waiting || round < jobs[i].spec.join_round {
+                continue;
+            }
+            let mut tenants: Vec<TenantJob> = jobs
+                .iter()
+                .filter(|j| j.status == Status::Running)
+                .map(|j| tenant_of(&j.spec))
+                .collect();
+            tenants.push(tenant_of(&jobs[i].spec));
+            let admitted =
+                registry.join_with(jobs[i].id, |_| admissible(&tier, &tenants, sc.goodput_floor));
+            if admitted {
+                jobs[i].status = Status::Running;
+                jobs[i].enrolled = true;
+                jobs[i].epoch_start_round = round;
+                jobs[i].start_epoch(round);
+                drr.add(jobs[i].id, jobs[i].spec.weight);
+                if sc.quotas {
+                    slices.insert(jobs[i].id, ByteLru::new(0));
+                }
+                churn = true;
+            } else {
+                jobs[i].status = Status::Rejected;
+                rejected.push(jobs[i].spec.name.clone());
+            }
+        }
+
+        // 3. Retire jobs that went terminal while still enrolled, and
+        //    rebalance every surviving slice to its new quota.
+        for job in jobs.iter_mut() {
+            if job.status.terminal() && job.enrolled {
+                registry.leave(job.id);
+                drr.remove(job.id);
+                slices.remove(&job.id);
+                job.enrolled = false;
+                churn = true;
+            }
+        }
+        if churn && sc.quotas {
+            for entry in registry.quotas() {
+                if let Some(slice) = slices.get_mut(&entry.id) {
+                    slice.set_budget(entry.quota);
+                }
+            }
+        }
+
+        if jobs.iter().all(|j| j.status.terminal()) {
+            break;
+        }
+
+        // 4. Elastic pool: the fixed-point worker count for the
+        //    aggregate demand at the closed-form per-slice hit rates.
+        let running: Vec<&JobState> = jobs.iter().filter(|j| j.status == Status::Running).collect();
+        if !running.is_empty() {
+            let n = running.len() as f64;
+            let mut total_units = 0.0;
+            let mut total_demand = 0.0;
+            for j in &running {
+                let slice_bytes = if sc.quotas { tier.cache_bytes / n } else { tier.cache_bytes };
+                let h = steady_state_hit_rate(
+                    sc.policy,
+                    slice_bytes,
+                    (j.spec.dataset_items * j.spec.bytes_per_item) as f64,
+                );
+                let cost = h * tier.hit_cost + (1.0 - h) * tier.miss_cost;
+                total_units += j.spec.demand as f64 * cost;
+                total_demand += j.spec.demand as f64;
+            }
+            let stage_ms = 1000.0 * total_units / (total_demand * WORKER_UNITS as f64);
+            workers = workers_fixed_point(stage_ms, total_demand, sc.workers_min, sc.workers_max);
+        }
+        let capacity = workers as u64 * WORKER_UNITS;
+
+        // 5. Fair-schedule the round's capacity and let each grant
+        //    process items against the shared cache.
+        for job in jobs.iter_mut() {
+            if job.status == Status::Running {
+                let left = (job.spec.dataset_items - job.cursor) as u64;
+                drr.set_pending(job.id, job.spec.demand.min(left) * MISS_COST);
+            }
+        }
+        let grants = drr.schedule(capacity);
+        for (id, units) in grants {
+            let job = &mut jobs[id as usize];
+            if job.status != Status::Running {
+                continue;
+            }
+            let mut budget = units as i64;
+            let mut served: u64 = 0;
+            while budget > 0 && served < job.spec.demand && job.status == Status::Running {
+                let sample = job.order[job.cursor];
+                // Fault plane: draw per attempt; exhausted retries send
+                // the sample to this job's quarantine — and only this
+                // job's (failure isolation).
+                if job.spec.fault_rate > 0.0 && job.rng.f64() < job.spec.fault_rate {
+                    job.faults_injected += 1;
+                    let mut recovered = false;
+                    for _ in 0..job.spec.retries {
+                        job.retries += 1;
+                        if job.rng.f64() >= job.spec.fault_rate {
+                            recovered = true;
+                            break;
+                        }
+                        job.faults_injected += 1;
+                    }
+                    if !recovered {
+                        let desc = format!("{}#e{}s{}", job.spec.name, job.epoch, sample);
+                        let cause =
+                            anyhow!("injected fault after {} attempt(s)", job.spec.retries + 1);
+                        if let Err(e) = job.quarantine.admit(desc, cause) {
+                            job.failure = Some(format!("{e:#}"));
+                            job.status = Status::Failed;
+                            break;
+                        }
+                        // The skipped sample consumed a miss's work but
+                        // yields no goodput item.
+                        budget -= MISS_COST as i64;
+                        job.cursor += 1;
+                        if job.cursor == job.spec.dataset_items {
+                            if job.finish_epoch(round) {
+                                break;
+                            }
+                        }
+                        continue;
+                    }
+                }
+                if job.spec.straggler_rate > 0.0 && job.rng.f64() < job.spec.straggler_rate {
+                    // A hedged duplicate wins the race; counted, not
+                    // charged (the straggler's cost is latency, which
+                    // virtual rounds don't model).
+                    job.hedges_won += 1;
+                }
+                let key = (job.dataset_idx, sample);
+                let size = job.spec.bytes_per_item;
+                let hit = if sc.quotas {
+                    let own = slices.get_mut(&job.id).map_or(false, |s| s.get(&key).is_some());
+                    // CoorDL cross-job sharing: a sibling slice holding
+                    // the same dataset's sample serves the hit.
+                    own || slices
+                        .iter()
+                        .any(|(oid, s)| *oid != job.id && s.peek(&key).is_some())
+                } else {
+                    shared.get(&key).is_some()
+                };
+                if hit {
+                    budget -= HIT_COST as i64;
+                    job.epoch_hits += 1;
+                } else {
+                    budget -= MISS_COST as i64;
+                    job.epoch_misses += 1;
+                    let store = if sc.quotas { slices.get_mut(&job.id) } else { Some(&mut shared) };
+                    if let Some(store) = store {
+                        let fits = store.bytes() + size <= store.budget();
+                        // MinIO admits until full and never evicts; LRU
+                        // always admits and evicts the coldest.
+                        if sc.policy == PrepCachePolicy::Lru || fits {
+                            store.insert(key, (), size);
+                        }
+                    }
+                }
+                served += 1;
+                job.epoch_items += 1;
+                job.cursor += 1;
+                if job.cursor == job.spec.dataset_items && job.finish_epoch(round) {
+                    break;
+                }
+            }
+        }
+        round += 1;
+    }
+
+    if !jobs.iter().all(|j| j.status.terminal()) {
+        bail!("serve engine hit the {MAX_ROUNDS}-round guard with jobs still active");
+    }
+    Ok(ServeReport {
+        rounds: round,
+        workers_final: workers,
+        rejected,
+        jobs: jobs.iter().map(JobState::section).collect(),
+    })
+}
+
+/// Convenience: parse a scenario file and run it.
+pub fn run_file(path: &std::path::Path) -> Result<ServeReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading scenario {}", path.display()))?;
+    run(&ServeScenario::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(name: &str) -> JobSpec {
+        JobSpec { name: name.into(), ..JobSpec::default() }
+    }
+
+    #[test]
+    fn scenario_parser_reads_jobs_and_settings_and_rejects_junk() {
+        let text = "\
+# shared tier
+seed=7 cache_mb=2 quotas=off goodput_floor=0.4
+workers_min=2 workers_max=16 policy=lru
+
+name=alpha items=64 item_kb=4 demand=8 epochs=3 join=0
+name=beta dataset=alpha items=64 item_kb=4 demand=4 epochs=2 join=5 leave=40 \
+fault_rate=0.1 retries=2 max_skip_rate=0.05 weight=2
+";
+        let sc = ServeScenario::parse(text).unwrap();
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.cache_bytes, 2 << 20);
+        assert!(!sc.quotas);
+        assert_eq!(sc.goodput_floor, 0.4);
+        assert_eq!((sc.workers_min, sc.workers_max), (2, 16));
+        assert_eq!(sc.policy, PrepCachePolicy::Lru);
+        assert_eq!(sc.jobs.len(), 2);
+        let beta = &sc.jobs[1];
+        assert_eq!(beta.dataset, "alpha");
+        assert_eq!(beta.leave_round, Some(40));
+        assert_eq!(beta.retries, 2);
+        assert_eq!(beta.weight, 2);
+
+        for bad in [
+            "name=a items=0",                   // zero items
+            "name=a gremlin=1",                 // unknown job key
+            "cache_gb=1\nname=a",               // unknown scenario key
+            "name=a\nname=a",                   // duplicate name
+            "name=a items=ten",                 // malformed number
+            "quotas=maybe\nname=a",             // malformed bool
+            "",                                 // no jobs at all
+        ] {
+            assert!(ServeScenario::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn single_job_runs_all_epochs_and_warms_the_cache() {
+        let sc = ServeScenario {
+            jobs: vec![JobSpec { epochs: 3, ..job("solo") }],
+            ..ServeScenario::default()
+        };
+        let r = run(&sc).unwrap();
+        let s = r.section("solo").unwrap();
+        assert_eq!(s.status, "done");
+        assert_eq!(s.epochs_done, 3);
+        // Dataset (256 × 8 KiB = 2 MiB) fits the 4 MiB cache: after the
+        // cold first epoch, steady state hits everything.
+        assert!(s.hit_rate > 0.99, "steady-state hit rate {}", s.hit_rate);
+        assert!(s.goodput_ips > 0.0);
+        assert_eq!(s.samples_skipped, 0);
+        assert!(r.rejected.is_empty());
+        // Determinism: the same scenario reports identically.
+        let r2 = run(&sc).unwrap();
+        assert_eq!(r2.section("solo").unwrap().hit_rate, s.hit_rate);
+        assert_eq!(r2.rounds, r.rounds);
+    }
+
+    #[test]
+    fn shared_dataset_jobs_hit_each_others_slices() {
+        // Both jobs stream the same dataset; the second joins after the
+        // first has warmed its slice, so its *first* epoch already hits
+        // (the CoorDL cross-job win).
+        let base = JobSpec { dataset: "imagenet_t".into(), epochs: 2, ..JobSpec::default() };
+        let sc = ServeScenario {
+            jobs: vec![
+                JobSpec { join_round: 0, epochs: 4, ..base.clone() }.named("warm"),
+                JobSpec { join_round: 20, ..base }.named("rider"),
+            ],
+            ..ServeScenario::default()
+        };
+        let r = run(&sc).unwrap();
+        let rider = r.section("rider").unwrap();
+        assert_eq!(rider.status, "done");
+        assert!(rider.hit_rate > 0.9, "cross-job sharing missing: {}", rider.hit_rate);
+    }
+
+    #[test]
+    fn voluntary_leave_frees_quota_for_the_survivors() {
+        let sc = ServeScenario {
+            jobs: vec![
+                JobSpec { epochs: 8, ..job("stayer") },
+                JobSpec { epochs: 8, leave_round: Some(4), ..job("churner") },
+            ],
+            ..ServeScenario::default()
+        };
+        let r = run(&sc).unwrap();
+        assert_eq!(r.section("stayer").unwrap().status, "done");
+        let churner = r.section("churner").unwrap();
+        assert_eq!(churner.status, "left");
+        assert!(churner.epochs_done < 8);
+    }
+
+    impl JobSpec {
+        fn named(mut self, name: &str) -> JobSpec {
+            self.name = name.into();
+            self
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Service mode: the long-lived multi-tenant preprocessing service
+//! (`dpp serve --scenario FILE`).
+//!
+//! The single-run coordinator answers "how fast can *one* job train?";
+//! this layer answers "how many jobs can *share* the preprocessing
+//! tier without hurting each other?" — the ROADMAP's north star and
+//! the CoorDL result from Mohan et al. (one dataset feeding many jobs
+//! wants one shared decoded cache), made robust:
+//!
+//! * [`registry`] — membership + per-job byte quotas on the shared
+//!   prep cache, rebalanced atomically on join/leave (hit-rate
+//!   isolation: one job's shuffle order cannot evict another's working
+//!   set);
+//! * [`drr`] — deficit round-robin over the pool's per-tick work
+//!   capacity (fair scheduling: a large-batch job cannot monopolize
+//!   workers);
+//! * [`engine`] — the deterministic virtual-time execution: admission
+//!   control via the closed-form [`crate::sim::serve`] cost model
+//!   (jobs are rejected up front, never silently degraded), per-job
+//!   quarantine budgets windowed per epoch (failure isolation: a job
+//!   exhausting its skip budget fails alone).
+//!
+//! `ServeConfig` holds the CLI surface: `--scenario` names the file,
+//! and every other flag is an *override* of the scenario's own
+//! settings (flags win, so one file serves quota-on/off A/Bs).
+
+pub mod drr;
+pub mod engine;
+pub mod registry;
+
+use crate::pipeline::prep_cache::PrepCachePolicy;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// CLI configuration for `dpp serve`.  Every field but the scenario
+/// path is optional: `None` defers to the scenario file's value (or
+/// the [`engine::ServeScenario`] default).
+#[derive(Clone, Debug, Default)]
+pub struct ServeConfig {
+    pub scenario: PathBuf,
+    pub goodput_floor: Option<f64>,
+    pub quotas: Option<bool>,
+    pub cache_mb: Option<usize>,
+    pub workers_min: Option<usize>,
+    pub workers_max: Option<usize>,
+    pub seed: Option<u64>,
+    pub policy: Option<PrepCachePolicy>,
+    /// Consumed by the `serve` driver (report export), like `run`'s.
+    pub report_json: Option<String>,
+}
+
+impl ServeConfig {
+    /// Every CLI key the `serve` subcommand accepts.  Mirrors
+    /// `RunConfig::accepted_flags`' contract: `from_args` rejects
+    /// anything outside this list, and the help-drift test below
+    /// requires each entry in `dpp::CLI_HELP`.
+    pub fn accepted_flags() -> &'static [&'static str] {
+        &[
+            "scenario",
+            "goodput-floor",
+            "quotas",
+            "cache-mb",
+            "workers-min",
+            "workers-max",
+            "seed",
+            "prep-cache-policy",
+            "report-json",
+        ]
+    }
+
+    /// Build from CLI args.  Unknown keys are rejected up front and
+    /// value-less keys fail loudly — the same typo contract as `run`.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<ServeConfig> {
+        let accepted = Self::accepted_flags();
+        for key in args.options.keys().map(String::as_str) {
+            if !accepted.contains(&key) {
+                bail!("unknown flag --{key} (see `dpp --help` for the serve flags)");
+            }
+        }
+        // Every serve flag takes a value; a bare one means the value
+        // was forgotten.
+        for key in args.flags.iter().map(String::as_str) {
+            if accepted.contains(&key) {
+                bail!("--{key} requires a value");
+            }
+            bail!("unknown flag --{key} (see `dpp --help` for the serve flags)");
+        }
+        let Some(scenario) = args.get("scenario") else {
+            bail!("serve requires --scenario FILE (see `dpp --help`)");
+        };
+        fn num<T: std::str::FromStr>(
+            args: &crate::util::cli::Args,
+            key: &str,
+        ) -> Result<Option<T>> {
+            match args.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .parse()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("--{key}: expected a number, got {v:?}")),
+            }
+        }
+        let quotas = match args.get("quotas") {
+            None => None,
+            Some("on") | Some("true") => Some(true),
+            Some("off") | Some("false") => Some(false),
+            Some(v) => bail!("--quotas must be on|off, got {v}"),
+        };
+        let policy = match args.get("prep-cache-policy") {
+            None => None,
+            Some(v) => Some(PrepCachePolicy::parse(v)?),
+        };
+        let cfg = ServeConfig {
+            scenario: PathBuf::from(scenario),
+            goodput_floor: num(args, "goodput-floor")?,
+            quotas,
+            cache_mb: num(args, "cache-mb")?,
+            workers_min: num(args, "workers-min")?,
+            workers_max: num(args, "workers-max")?,
+            seed: num(args, "seed")?,
+            policy,
+            report_json: args.get("report-json").map(String::from),
+        };
+        if let Some(f) = cfg.goodput_floor {
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("--goodput-floor must be in (0, 1], got {f}");
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Overlay the CLI overrides onto a parsed scenario (flags win),
+    /// then re-validate the combined result.
+    pub fn apply_to(&self, sc: &mut engine::ServeScenario) -> Result<()> {
+        if let Some(f) = self.goodput_floor {
+            sc.goodput_floor = f;
+        }
+        if let Some(q) = self.quotas {
+            sc.quotas = q;
+        }
+        if let Some(mb) = self.cache_mb {
+            sc.cache_bytes = mb << 20;
+        }
+        if let Some(w) = self.workers_min {
+            sc.workers_min = w;
+        }
+        if let Some(w) = self.workers_max {
+            sc.workers_max = w;
+        }
+        if let Some(s) = self.seed {
+            sc.seed = s;
+        }
+        if let Some(p) = self.policy {
+            sc.policy = p;
+        }
+        sc.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn parse(cmd: &str) -> Result<ServeConfig> {
+        ServeConfig::from_args(&Args::parse(cmd.split_whitespace().map(String::from)))
+    }
+
+    #[test]
+    fn serve_flags_parse_and_overlay_the_scenario() {
+        let cfg = parse(
+            "serve --scenario churn.txt --goodput-floor 0.6 --quotas off \
+             --cache-mb 8 --workers-min 2 --workers-max 16 --seed 9 \
+             --prep-cache-policy lru --report-json out.json",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario, PathBuf::from("churn.txt"));
+        assert_eq!(cfg.report_json.as_deref(), Some("out.json"));
+        let mut sc = engine::ServeScenario {
+            jobs: vec![engine::JobSpec { name: "j".into(), ..Default::default() }],
+            ..Default::default()
+        };
+        cfg.apply_to(&mut sc).unwrap();
+        assert_eq!(sc.goodput_floor, 0.6);
+        assert!(!sc.quotas);
+        assert_eq!(sc.cache_bytes, 8 << 20);
+        assert_eq!((sc.workers_min, sc.workers_max), (2, 16));
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.policy, PrepCachePolicy::Lru);
+        // No overrides: the scenario's own values survive.
+        let plain = parse("serve --scenario churn.txt").unwrap();
+        let mut sc2 = sc.clone();
+        plain.apply_to(&mut sc2).unwrap();
+        assert_eq!(sc2.goodput_floor, sc.goodput_floor);
+    }
+
+    #[test]
+    fn serve_rejects_unknown_bare_and_malformed_flags() {
+        assert!(parse("serve").is_err(), "missing --scenario accepted");
+        let err = parse("serve --scenario s.txt --floor 0.5").unwrap_err().to_string();
+        assert!(err.contains("unknown flag"), "{err}");
+        let err = parse("serve --scenario s.txt --quotas").unwrap_err().to_string();
+        assert!(err.contains("requires a value"), "{err}");
+        assert!(parse("serve --scenario s.txt --quotas maybe").is_err());
+        assert!(parse("serve --scenario s.txt --goodput-floor 1.5").is_err());
+        assert!(parse("serve --scenario s.txt --workers-min two").is_err());
+        assert!(parse("serve --scenario s.txt --prep-cache-policy fifo").is_err());
+        // An override that breaks the combined scenario fails at
+        // apply time (min > max).
+        let cfg = parse("serve --scenario s.txt --workers-min 9 --workers-max 2").unwrap();
+        let mut sc = engine::ServeScenario {
+            jobs: vec![engine::JobSpec { name: "j".into(), ..Default::default() }],
+            ..Default::default()
+        };
+        assert!(cfg.apply_to(&mut sc).is_err());
+    }
+
+    /// Serve's help-drift gate, mirroring `RunConfig`'s: every accepted
+    /// serve flag must appear (delimited) in `dpp::CLI_HELP`.
+    #[test]
+    fn every_accepted_serve_flag_is_documented_in_help() {
+        for flag in ServeConfig::accepted_flags() {
+            let documented = [" ", "]", "\n"]
+                .iter()
+                .any(|d| crate::CLI_HELP.contains(&format!("--{flag}{d}")));
+            assert!(documented, "--{flag} accepted by serve but missing from CLI_HELP");
+        }
+    }
+}

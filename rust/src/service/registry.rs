@@ -1,0 +1,213 @@
+//! Job registry: the service's single source of truth for which jobs
+//! are running and how the shared prep-cache budget is split among
+//! them.
+//!
+//! Invariants (model-checked in `tests/loom_models.rs`):
+//!
+//! * **quota conservation** — whenever at least one job is registered,
+//!   the per-job quotas sum to *exactly* the total budget (the
+//!   rebalance distributes the remainder byte-by-byte instead of
+//!   rounding it away), and an empty registry holds zero quota out;
+//! * **atomic join/leave** — admission decision, membership update, and
+//!   quota rebalance happen under one lock, so a racing join and leave
+//!   can never observe (or produce) a half-rebalanced split, lose a
+//!   rebalance, or double-admit an id;
+//! * **the in-flight gauge drains** — every join attempt increments
+//!   [`JobRegistry::in_flight`] on entry and decrements it on exit
+//!   (admitted or not), so a quiesced service always reads zero.
+//!
+//! Sync primitives come from the `util::sync` facade, so the loom
+//! models check the exact code that ships.
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::Mutex;
+
+/// One registered job and its byte quota of the shared cache.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobEntry {
+    pub id: u64,
+    /// Bytes of the shared prep cache this job's slice may hold.
+    pub quota: usize,
+}
+
+/// Registry of admitted jobs with fair byte-quota rebalancing.
+#[derive(Debug)]
+pub struct JobRegistry {
+    total_quota: usize,
+    jobs: Mutex<Vec<JobEntry>>,
+    in_flight: AtomicUsize,
+}
+
+impl JobRegistry {
+    pub fn new(total_quota: usize) -> Self {
+        JobRegistry {
+            total_quota,
+            jobs: Mutex::new(Vec::new()),
+            in_flight: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total cache budget the quotas always sum to (when non-empty).
+    pub fn total_quota(&self) -> usize {
+        self.total_quota
+    }
+
+    /// Attempt to join: `admit` inspects the current membership (under
+    /// the registry lock, so the set it sees is the set the rebalance
+    /// applies to) and returns whether the candidate may enter.  On
+    /// admission the job is registered and every quota is rebalanced
+    /// before the lock drops.  A duplicate id is refused without
+    /// consulting `admit`.
+    pub fn join_with<F>(&self, id: u64, admit: F) -> bool
+    where
+        F: FnOnce(&[JobEntry]) -> bool,
+    {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let admitted = {
+            // poison: holders only mutate the Vec and recompute integer
+            // quotas; no panic can originate under the lock (the admit
+            // closure runs before any mutation, so even a panicking
+            // closure leaves the membership unchanged).
+            let mut jobs = self.jobs.lock().unwrap();
+            if jobs.iter().any(|j| j.id == id) {
+                false
+            } else if admit(&jobs) {
+                jobs.push(JobEntry { id, quota: 0 });
+                Self::rebalance(&mut jobs, self.total_quota);
+                true
+            } else {
+                false
+            }
+        };
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        admitted
+    }
+
+    /// Remove a job and rebalance the survivors' quotas atomically.
+    /// Returns whether the id was present.
+    pub fn leave(&self, id: u64) -> bool {
+        // poison: see `join_with` — Vec ops and integer math only.
+        let mut jobs = self.jobs.lock().unwrap();
+        let before = jobs.len();
+        jobs.retain(|j| j.id != id);
+        let removed = jobs.len() != before;
+        if removed {
+            Self::rebalance(&mut jobs, self.total_quota);
+        }
+        removed
+    }
+
+    /// Even split with the remainder spread one byte at a time over the
+    /// first `total % n` jobs — so the quotas sum to `total` exactly,
+    /// never `total - n + 1` (integer division alone would leak up to
+    /// `n - 1` bytes of budget per rebalance).
+    fn rebalance(jobs: &mut [JobEntry], total: usize) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let base = total / n;
+        let rem = total % n;
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.quota = base + usize::from(i < rem);
+        }
+    }
+
+    /// Snapshot of the current membership and quotas (join order).
+    pub fn quotas(&self) -> Vec<JobEntry> {
+        // poison: see `join_with`.
+        self.jobs.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        // poison: see `join_with`.
+        self.jobs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Join attempts currently inside [`Self::join_with`] — the
+    /// admission gauge the loom model drains to zero.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quota_sum(r: &JobRegistry) -> usize {
+        r.quotas().iter().map(|j| j.quota).sum()
+    }
+
+    #[test]
+    fn join_rebalances_and_conserves_the_budget_exactly() {
+        let r = JobRegistry::new(100);
+        assert!(r.join_with(1, |cur| cur.is_empty()));
+        assert_eq!(r.quotas(), vec![JobEntry { id: 1, quota: 100 }]);
+        assert!(r.join_with(2, |_| true));
+        assert!(r.join_with(3, |_| true));
+        // 100 over 3 jobs: 34 + 33 + 33, never 33 × 3 (a leaked byte).
+        let q: Vec<usize> = r.quotas().iter().map(|j| j.quota).collect();
+        assert_eq!(q, vec![34, 33, 33]);
+        assert_eq!(quota_sum(&r), 100);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn rejection_and_duplicates_leave_the_registry_untouched() {
+        let r = JobRegistry::new(64);
+        assert!(r.join_with(1, |_| true));
+        // The admission closure sees the current membership.
+        assert!(!r.join_with(2, |cur| cur.len() < 1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(quota_sum(&r), 64);
+        // Duplicate ids are refused before the closure runs.
+        assert!(!r.join_with(1, |_| panic!("closure must not run for a duplicate id")));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn leave_rebalances_survivors_and_empty_registry_holds_nothing() {
+        let r = JobRegistry::new(90);
+        for id in 1..=3 {
+            assert!(r.join_with(id, |_| true));
+        }
+        assert!(r.leave(2));
+        let q = r.quotas();
+        assert_eq!(q.len(), 2);
+        assert!(q.iter().all(|j| j.quota == 45));
+        assert!(!r.leave(2), "double-leave must report absence");
+        assert!(r.leave(1));
+        assert!(r.leave(3));
+        assert!(r.is_empty());
+        assert_eq!(quota_sum(&r), 0);
+        assert_eq!(r.total_quota(), 90);
+    }
+
+    #[test]
+    fn quota_conservation_holds_under_churn() {
+        let r = JobRegistry::new(1009); // prime: every split has remainder
+        let mut rng = crate::util::rng::Rng::new(0x5EB5);
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            if rng.bool() {
+                next_id += 1;
+                r.join_with(next_id, |_| true);
+            } else if next_id > 0 {
+                r.leave(1 + rng.gen_range(next_id));
+            }
+            if r.len() > 0 {
+                assert_eq!(quota_sum(&r), 1009);
+            } else {
+                assert_eq!(quota_sum(&r), 0);
+            }
+        }
+        assert_eq!(r.in_flight(), 0);
+    }
+}

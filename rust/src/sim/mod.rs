@@ -11,6 +11,7 @@
 
 pub mod calib;
 pub mod des;
+pub mod serve;
 
 pub use des::{simulate, simulate_traced};
 

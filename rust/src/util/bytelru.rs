@@ -49,6 +49,24 @@ impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
         self.budget
     }
 
+    /// Re-budget in place (quota rebalance on job join/leave in serve
+    /// mode).  Shrinking evicts least-recently-used entries until the
+    /// resident bytes fit the new budget — the accounting invariant
+    /// (`bytes == Σ resident sizes <= budget`) holds on return; growing
+    /// just raises the ceiling and lets future inserts use it.
+    pub fn set_budget(&mut self, new_budget: usize) {
+        self.budget = new_budget;
+        while self.bytes > self.budget {
+            let Some((&victim_tick, _)) = self.by_tick.iter().next() else {
+                break;
+            };
+            let victim = self.by_tick.remove(&victim_tick).expect("index entry");
+            if let Some(e) = self.map.remove(&victim) {
+                self.bytes -= e.size;
+            }
+        }
+    }
+
     /// Exact resident byte count (the invariant the property tests drive).
     pub fn bytes(&self) -> usize {
         self.bytes
@@ -169,6 +187,30 @@ mod tests {
         l.insert(1, 8, 60);
         assert_eq!(l.bytes(), 120);
         assert_eq!(l.peek(&2), Some(&2));
+    }
+
+    #[test]
+    fn set_budget_shrinks_by_evicting_lru_and_grows_for_free() {
+        let mut l: ByteLru<u32, u8> = ByteLru::new(300);
+        l.insert(1, 1, 100);
+        l.insert(2, 2, 100);
+        l.insert(3, 3, 100);
+        assert_eq!(l.get(&1), Some(&1)); // 1 is now most recent
+        // Shrink below residency: LRU victims (2 then 3) go, 1 stays.
+        l.set_budget(150);
+        assert_eq!(l.budget(), 150);
+        assert_eq!(l.bytes(), 100);
+        assert_eq!(l.peek(&1), Some(&1));
+        assert!(l.peek(&2).is_none() && l.peek(&3).is_none());
+        // Growing changes only the ceiling; nothing reappears.
+        l.set_budget(400);
+        assert_eq!(l.len(), 1);
+        l.insert(4, 4, 300);
+        assert_eq!(l.bytes(), 400);
+        // Shrink to zero evicts everything.
+        l.set_budget(0);
+        assert!(l.is_empty());
+        assert_eq!(l.bytes(), 0);
     }
 
     #[test]

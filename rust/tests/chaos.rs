@@ -187,6 +187,79 @@ fn skip_budget_absorbs_corrupt_records_then_fails_naming_them() {
     assert!(msg.contains("checksum mismatch"), "{msg}");
 }
 
+/// Serve-mode churn under seeded faults: while one tenant leaves
+/// mid-run and another joins late, the job that exhausts its per-epoch
+/// skip budget fails alone — the survivor completes every epoch with
+/// the retries/faults counted in its own report section, and the whole
+/// episode replays identically per seed.
+#[test]
+fn serve_churn_with_seeded_faults_isolates_the_failing_tenant() {
+    use dpp::pipeline::prep_cache::PrepCachePolicy;
+    use dpp::service::engine::{run, JobSpec, ServeScenario};
+    let job = |name: &str| JobSpec { name: name.into(), ..JobSpec::default() };
+    let sc = ServeScenario {
+        jobs: vec![
+            JobSpec {
+                dataset_items: 200,
+                demand: 16,
+                epochs: 4,
+                fault_rate: 0.15,
+                retries: 3,
+                max_skip_rate: 0.05,
+                ..job("survivor")
+            },
+            JobSpec {
+                dataset_items: 200,
+                demand: 16,
+                epochs: 8,
+                leave_round: Some(30),
+                ..job("churner")
+            },
+            // Joins mid-run, faults at 90% with one retry and a zero
+            // skip budget: the first unrecovered sample kills it.
+            JobSpec {
+                dataset_items: 64,
+                demand: 8,
+                epochs: 4,
+                join_round: 10,
+                fault_rate: 0.9,
+                retries: 1,
+                ..job("doomed")
+            },
+        ],
+        seed: 7,
+        cache_bytes: 8 << 20,
+        quotas: true,
+        goodput_floor: 0.5,
+        workers_min: 1,
+        workers_max: 16,
+        policy: PrepCachePolicy::Minio,
+    };
+    let r = run(&sc).unwrap();
+
+    let doomed = r.section("doomed").unwrap();
+    assert!(doomed.status.starts_with("failed"), "{:?}", doomed.status);
+    assert!(doomed.status.contains("skip budget exceeded"), "{:?}", doomed.status);
+    assert!(doomed.faults_injected > 0);
+
+    let s = r.section("survivor").unwrap();
+    assert_eq!(s.status, "done", "survivor must outlive the doomed tenant");
+    assert_eq!(s.epochs_done, 4);
+    assert!(s.retries > 0, "15% faults with retries must retry something");
+    assert!(s.faults_injected > 0);
+
+    let c = r.section("churner").unwrap();
+    assert_eq!(c.status, "left");
+    assert!(c.epochs_done < 8, "the churner left before finishing");
+    assert!(r.rejected.is_empty());
+
+    // Churn + faults replay identically per seed.
+    let r2 = run(&sc).unwrap();
+    assert_eq!(r2.rounds, r.rounds);
+    assert_eq!(r2.section("survivor").unwrap().retries, s.retries);
+    assert_eq!(r2.section("doomed").unwrap().status, doomed.status);
+}
+
 // ---------------------------------------------------------------------------
 // Full-coordinator chaos runs (gated on `make artifacts`, like the e2e
 // suite: the device loop needs compiled model artifacts).

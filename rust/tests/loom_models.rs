@@ -24,6 +24,7 @@
 use dpp::metrics::trace::{Stage, Tracer};
 use dpp::pipeline::channel::bounded;
 use dpp::pipeline::exec::Gate;
+use dpp::service::registry::JobRegistry;
 use dpp::util::bytelru::ByteLru;
 use dpp::util::loom::model;
 use dpp::util::slab::{seal, SlabPool};
@@ -296,5 +297,76 @@ fn gate_sleep_always_wakes_for_shutdown() {
         });
         gate.shutdown();
         ctl.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serve-mode job registry: join/leave churn never loses a quota
+// rebalance or double-counts the budget, and the admission gauge
+// (in-flight joins) always drains to zero.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_concurrent_joins_never_lose_a_quota_rebalance() {
+    model(|| {
+        // Prime total: every 2-way split has a remainder byte, so a lost
+        // or half-applied rebalance shows up as a wrong sum.
+        let r = Arc::new(JobRegistry::new(101));
+        let mut handles = Vec::new();
+        for id in 1..=2u64 {
+            let r = Arc::clone(&r);
+            handles.push(thread::spawn(move || r.join_with(id, |_| true)));
+        }
+        for h in handles {
+            assert!(h.join().unwrap(), "both distinct ids must be admitted");
+        }
+        let q = r.quotas();
+        assert_eq!(q.len(), 2);
+        let sum: usize = q.iter().map(|j| j.quota).sum();
+        assert_eq!(sum, 101, "quota conservation broken by racing joins");
+        assert_eq!(r.in_flight(), 0, "admission gauge must drain");
+    });
+}
+
+#[test]
+fn registry_racing_duplicate_joins_admit_exactly_once() {
+    model(|| {
+        let r = Arc::new(JobRegistry::new(64));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let r = Arc::clone(&r);
+            handles.push(thread::spawn(move || r.join_with(7, |_| true)));
+        }
+        let wins: Vec<bool> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(
+            wins.iter().filter(|&&w| w).count(),
+            1,
+            "the same id was admitted twice (or not at all): {wins:?}"
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.quotas()[0].quota, 64);
+        assert_eq!(r.in_flight(), 0);
+    });
+}
+
+#[test]
+fn registry_join_racing_leave_conserves_quota_and_drains_in_flight() {
+    model(|| {
+        let r = Arc::new(JobRegistry::new(97));
+        assert!(r.join_with(1, |_| true));
+        let ra = Arc::clone(&r);
+        let joiner = thread::spawn(move || ra.join_with(2, |_| true));
+        let rb = Arc::clone(&r);
+        let leaver = thread::spawn(move || rb.leave(1));
+        assert!(joiner.join().unwrap());
+        assert!(leaver.join().unwrap());
+        // Whatever the interleaving, exactly job 2 survives and holds
+        // the whole budget — a half-rebalanced split would leave it with
+        // the old 2-way share.
+        let q = r.quotas();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].id, 2);
+        assert_eq!(q[0].quota, 97, "survivor must absorb the leaver's quota");
+        assert_eq!(r.in_flight(), 0);
     });
 }

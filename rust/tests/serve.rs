@@ -1,0 +1,232 @@
+//! Acceptance gates for multi-tenant serve mode (ISSUE 10).
+//!
+//! Three end-to-end gates, each run through the real engine
+//! (`dpp::service::engine`) against the closed-form shared-tier model
+//! (`dpp::sim::serve`):
+//!
+//! 1. **hit-rate isolation** — an aggressor joining mid-epoch cannot
+//!    collapse a victim's steady-state hit rate when per-job quotas are
+//!    on; with quotas off the same churn demonstrates the collapse;
+//! 2. **admission control** — the model's predicted tenant ceiling is
+//!    the engine's observed one: the (N+1)-th job is rejected, and the
+//!    admitted N keep measured goodput within 15% of the floor the
+//!    model promised;
+//! 3. **failure isolation** — a job exhausting its per-epoch skip
+//!    budget under seeded faults fails alone; its co-tenants complete
+//!    every epoch, with their retries/hedges in their own sections.
+
+use dpp::pipeline::prep_cache::PrepCachePolicy;
+use dpp::service::engine::{run, JobSpec, ServeScenario};
+use dpp::sim::serve::{max_admissible_jobs, standalone_goodput, SharedTier, TenantJob};
+
+fn job(name: &str) -> JobSpec {
+    JobSpec { name: name.into(), ..JobSpec::default() }
+}
+
+/// Gate 1 geometry: a 384 KiB victim that fits any quota slice this
+/// scenario produces, plus a 16 MiB aggressor that floods the shared
+/// 2 MiB LRU cache when nothing fences it.
+fn isolation_scenario(quotas: bool) -> ServeScenario {
+    ServeScenario {
+        jobs: vec![
+            JobSpec { dataset_items: 48, demand: 16, epochs: 8, ..job("victim") },
+            JobSpec {
+                dataset_items: 2048,
+                demand: 128,
+                epochs: 2,
+                join_round: 4,
+                ..job("aggressor")
+            },
+        ],
+        seed: 42,
+        cache_bytes: 2 << 20,
+        quotas,
+        goodput_floor: 0.5,
+        workers_min: 1,
+        workers_max: 32,
+        policy: PrepCachePolicy::Lru,
+    }
+}
+
+#[test]
+fn quotas_isolate_a_victims_hit_rate_from_an_aggressor_joining_mid_epoch() {
+    // Baseline: the victim alone holds a perfect steady-state hit rate.
+    let mut solo = isolation_scenario(true);
+    solo.jobs.truncate(1);
+    let h0 = run(&solo).unwrap().section("victim").unwrap().hit_rate;
+    assert!(h0 > 0.99, "solo victim should hit everything, got {h0}");
+
+    // Quotas on: the aggressor joins mid-run, the registry rebalances,
+    // and the victim's slice still covers its working set — at most a
+    // 10% relative dent in its final-epoch hit rate.
+    let on = run(&isolation_scenario(true)).unwrap();
+    let v_on = on.section("victim").unwrap();
+    assert_eq!(v_on.status, "done");
+    assert_eq!(v_on.epochs_done, 8);
+    assert!(
+        v_on.hit_rate >= 0.9 * h0,
+        "quotas on: victim hit rate {} fell more than 10% below solo {h0}",
+        v_on.hit_rate
+    );
+    // The aggressor was admitted, not silently throttled out.
+    assert_eq!(on.section("aggressor").unwrap().status, "done");
+    assert!(on.rejected.is_empty());
+
+    // Quotas off: one shared pool, and the aggressor's flood evicts the
+    // victim's working set between revisits — the collapse the quota
+    // layer exists to prevent.
+    let off = run(&isolation_scenario(false)).unwrap();
+    let v_off = off.section("victim").unwrap();
+    assert_eq!(v_off.status, "done");
+    assert!(
+        v_off.hit_rate < 0.5 * h0,
+        "quotas off should collapse the victim's hit rate, got {} vs solo {h0}",
+        v_off.hit_rate
+    );
+}
+
+/// Gate 2 geometry: six identical jobs against a pool of 128 units and
+/// a 4 MiB MinIO cache.  Standalone each job is demand-bound at 48
+/// items/round; the floor of 0.5 admits exactly five.
+fn admission_scenario(n_jobs: usize) -> ServeScenario {
+    let jobs = (0..n_jobs)
+        .map(|i| JobSpec {
+            dataset_items: 256,
+            bytes_per_item: 2 << 10,
+            demand: 48,
+            epochs: 3,
+            ..job(&format!("tenant_{i}"))
+        })
+        .collect();
+    ServeScenario {
+        jobs,
+        seed: 42,
+        cache_bytes: 4 << 20,
+        quotas: true,
+        goodput_floor: 0.5,
+        workers_min: 1,
+        workers_max: 4,
+        policy: PrepCachePolicy::Minio,
+    }
+}
+
+#[test]
+fn admission_rejects_the_job_the_model_predicts_and_the_floor_holds() {
+    let sc = admission_scenario(6);
+    let tier = SharedTier {
+        cache_bytes: sc.cache_bytes as f64,
+        capacity_units: (sc.workers_max as u64 * dpp::service::engine::WORKER_UNITS) as f64,
+        hit_cost: dpp::service::engine::HIT_COST as f64,
+        miss_cost: dpp::service::engine::MISS_COST as f64,
+        policy: sc.policy,
+    };
+    let tenant = TenantJob {
+        dataset_bytes: (256 * (2 << 10)) as f64,
+        demand_items: 48.0,
+    };
+    // The closed form says five identical tenants fit above the floor
+    // and a sixth does not.
+    let n_star = max_admissible_jobs(&tier, &tenant, sc.goodput_floor, 8);
+    assert_eq!(n_star, 5, "model ceiling moved — retune the gate geometry");
+    let alone = standalone_goodput(&tier, &tenant);
+    assert!((alone - 48.0).abs() < 1e-9, "standalone should be demand-bound at 48");
+
+    // The engine agrees: jobs 0..5 are admitted, the sixth is rejected
+    // by name, loudly.
+    let r = run(&sc).unwrap();
+    assert_eq!(r.rejected, vec!["tenant_5".to_string()]);
+    assert!(r.section("tenant_5").unwrap().status.starts_with("rejected"));
+
+    // And the promise admission made holds in the discrete execution:
+    // every admitted job finishes and its measured steady-state goodput
+    // stays within 15% of the floor the model guaranteed.
+    let floor_ips = sc.goodput_floor * alone;
+    for i in 0..5 {
+        let s = r.section(&format!("tenant_{i}")).unwrap();
+        assert_eq!(s.status, "done", "tenant_{i} did not finish");
+        assert_eq!(s.epochs_done, 3);
+        assert!(
+            s.goodput_ips >= floor_ips * 0.85,
+            "tenant_{i} measured goodput {} fell >15% below the promised floor {floor_ips}",
+            s.goodput_ips
+        );
+    }
+}
+
+#[test]
+fn a_job_exhausting_its_skip_budget_fails_alone() {
+    let sc = ServeScenario {
+        jobs: vec![
+            // Zero skip budget, no retries, 90% faults: dead on the
+            // first unrecovered sample.
+            JobSpec {
+                dataset_items: 64,
+                demand: 8,
+                epochs: 4,
+                fault_rate: 0.9,
+                retries: 0,
+                max_skip_rate: 0.0,
+                ..job("doomed")
+            },
+            // The victims ride out a 20% fault rate with retries and a
+            // 5% per-epoch skip window.
+            JobSpec {
+                dataset_items: 400,
+                demand: 32,
+                epochs: 3,
+                fault_rate: 0.2,
+                retries: 3,
+                max_skip_rate: 0.05,
+                ..job("victim_a")
+            },
+            JobSpec {
+                dataset_items: 400,
+                demand: 32,
+                epochs: 3,
+                fault_rate: 0.2,
+                retries: 3,
+                max_skip_rate: 0.05,
+                ..job("victim_b")
+            },
+        ],
+        seed: 42,
+        cache_bytes: 16 << 20,
+        quotas: true,
+        goodput_floor: 0.5,
+        workers_min: 1,
+        workers_max: 32,
+        policy: PrepCachePolicy::Minio,
+    };
+    let r = run(&sc).unwrap();
+
+    let doomed = r.section("doomed").unwrap();
+    assert!(
+        doomed.status.starts_with("failed"),
+        "doomed job should fail its skip budget, got {:?}",
+        doomed.status
+    );
+    assert!(
+        doomed.status.contains("skip budget exceeded"),
+        "failure must name the budget: {:?}",
+        doomed.status
+    );
+    assert!(doomed.faults_injected > 0);
+
+    // Failure stays in its lane: both victims complete every epoch,
+    // with their retry/fault accounting in their own sections.
+    for name in ["victim_a", "victim_b"] {
+        let s = r.section(name).unwrap();
+        assert_eq!(s.status, "done", "{name} must survive the doomed tenant");
+        assert_eq!(s.epochs_done, 3);
+        assert!(s.retries > 0, "{name} should have retried seeded faults");
+        assert!(s.faults_injected > 0);
+        assert!(
+            s.goodput_ips > 0.0 && s.hit_rate > 0.9,
+            "{name} steady state intact: hit {} goodput {}",
+            s.hit_rate,
+            s.goodput_ips
+        );
+    }
+    // Nothing was rejected — this is failure isolation, not admission.
+    assert!(r.rejected.is_empty());
+}
